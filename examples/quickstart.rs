@@ -1,0 +1,89 @@
+//! Quickstart: load a model's AOT artifacts, schedule it with SparOA's
+//! full stack (predictor -> SAC), run one real inference through PJRT and
+//! print the simulated Jetson timeline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use sparoa::device::DeviceRegistry;
+use sparoa::engine::sim::simulate;
+use sparoa::engine::HybridEngine;
+use sparoa::graph::ModelZoo;
+use sparoa::predictor::ThresholdPredictor;
+use sparoa::runtime::{HostTensor, Runtime};
+use sparoa::scheduler::sac_sched::{SacScheduler, SacSchedulerConfig};
+use sparoa::scheduler::{ScheduleCtx, Scheduler};
+use sparoa::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let art = sparoa::artifacts_dir();
+    anyhow::ensure!(art.join("manifest.json").exists(),
+                    "run `make artifacts` first");
+
+    // 1. Load the model zoo, device profile and PJRT runtime.
+    let zoo = ModelZoo::load(&art)?;
+    let graph = zoo.get("mobilenet_v3_small")?;
+    let reg = DeviceRegistry::load(
+        &sparoa::repo_root().join("config/devices.json"))?;
+    let device = reg.get("agx_orin")?;
+    let runtime = Runtime::new(&art)?;
+    println!("PJRT platform: {}", runtime.platform());
+
+    // 2. Offline phase: threshold predictor + SAC operator scheduler.
+    let predictor = ThresholdPredictor::new(&runtime);
+    let thresholds = predictor.predict_graph(graph)?;
+    println!("predicted thresholds for {} ops", thresholds.len());
+    let mut sac = SacScheduler::new(SacSchedulerConfig {
+        episodes: 30,
+        ..Default::default()
+    });
+    let schedule = sac.schedule(&ScheduleCtx {
+        graph,
+        device,
+        thresholds: Some(&thresholds),
+        batch: 1,
+    });
+    println!(
+        "SAC schedule: {:.0}% of ops on GPU, {} device switches, \
+         trained in {:.1}s",
+        100.0 * schedule.gpu_share(graph),
+        schedule.switch_count(graph),
+        sac.converged_after_s
+    );
+
+    // 3. Simulated Jetson timeline for the schedule.
+    let report = simulate(graph, device, &schedule, &Default::default());
+    let ledger = report.ledger();
+    println!(
+        "simulated on {}: makespan {:.0}us, transfer {:.0}us, \
+         power {:.1}W, energy {:.2}mJ",
+        device.name, report.makespan_us, report.transfer_us,
+        ledger.mean_power_w(device), ledger.energy_mj(device)
+    );
+
+    // 4. Real numerics through PJRT (exec-scale artifacts).
+    let engine = HybridEngine::new(&runtime, graph)?;
+    let compiled = engine.warm_up()?;
+    let mut rng = Rng::new(0);
+    let n: usize = graph.input_shape_exec.iter().product();
+    let input = HostTensor::new(
+        graph.input_shape_exec.clone(),
+        (0..n).map(|_| rng.normal() as f32).collect(),
+    );
+    let result = engine.infer(&input, &schedule)?;
+    println!(
+        "real execution: {} compiled ops, output {:?}, host {:.0}us, \
+         top logit {:.3}",
+        compiled,
+        result.output.shape,
+        result.host_us,
+        result
+            .output
+            .data
+            .iter()
+            .cloned()
+            .fold(f32::NEG_INFINITY, f32::max)
+    );
+    Ok(())
+}

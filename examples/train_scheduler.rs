@@ -1,0 +1,62 @@
+//! SAC scheduler training walkthrough (paper §4 / Fig. 10 companion):
+//! train the agent on MobileNetV2 + AGX Orin, print the convergence
+//! trace, and compare the learned plan against greedy/DP/single-device.
+//!
+//! ```bash
+//! cargo run --release --example train_scheduler
+//! ```
+
+use sparoa::device::DeviceRegistry;
+use sparoa::engine::sim::{simulate, SimOptions};
+use sparoa::graph::ModelZoo;
+use sparoa::scheduler::{
+    dp::DpScheduler, greedy::GreedyScheduler,
+    sac_sched::{SacScheduler, SacSchedulerConfig}, Schedule, ScheduleCtx,
+    Scheduler,
+};
+
+fn main() -> anyhow::Result<()> {
+    let art = sparoa::artifacts_dir();
+    anyhow::ensure!(art.join("manifest.json").exists(),
+                    "run `make artifacts` first");
+    let zoo = ModelZoo::load(&art)?;
+    let graph = zoo.get("mobilenet_v2")?;
+    let reg = DeviceRegistry::load(
+        &sparoa::repo_root().join("config/devices.json"))?;
+    let device = reg.get("agx_orin")?;
+    let ctx = ScheduleCtx { graph, device, thresholds: None, batch: 1 };
+
+    let mut sac = SacScheduler::new(SacSchedulerConfig {
+        episodes: 80,
+        noise: 0.03,
+        ..Default::default()
+    });
+    let plan = sac.schedule(&ctx);
+    println!("SAC convergence trace (episode, eval makespan us, wall s):");
+    for p in sac.trace.iter().step_by(4) {
+        println!("  ep {:3}  {:9.1}us  t={:6.2}s", p.episode,
+                 p.makespan_us, p.wall_s);
+    }
+    println!("converged after {:.1}s\n", sac.converged_after_s);
+
+    // Compare under mild hardware dynamics (paper §6.7's regime).
+    let eval = SimOptions { noise: 0.03, seed: 3, ..Default::default() };
+    let greedy = GreedyScheduler.schedule(&ctx);
+    let dp = DpScheduler::default().schedule(&ctx);
+    for (name, sched) in [
+        ("CPU-only", Schedule::uniform(graph, 0.0, "cpu")),
+        ("GPU-only", Schedule::uniform(graph, 1.0, "gpu")),
+        ("Greedy", greedy),
+        ("DP", dp),
+        ("SAC", plan),
+    ] {
+        let r = simulate(graph, device, &sched, &eval);
+        println!(
+            "{name:10} makespan {:9.0}us  gpu-share {:4.0}%  switches {:3}",
+            r.makespan_us,
+            100.0 * sched.gpu_share(graph),
+            sched.switch_count(graph)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,228 @@
+"""AOT export driver: lowers every exec-scale operator of the five models to
+HLO text, writes weights + topology JSONs, trains and exports the threshold
+predictor, and emits the manifest the rust coordinator loads.
+
+Run once via ``make artifacts``.  Python never runs on the request path.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` rust crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, device_model, interp, model, predictor
+from .graph_ir import KIND_CLASS, Graph, op_callable, signature, zip_scales
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+ART = ROOT / "artifacts"
+
+# Ops that are pure data movement at exec scale: the rust engine applies
+# them natively (reshape of the host buffer) instead of a PJRT call.
+NATIVE_KINDS = {"input", "reshape"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the default HLO printer elides big literals
+    # as `constant({...})`, which would silently drop baked-in weights
+    # (e.g. the trained threshold predictor) from the interchange text.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_op_hlo(op, out_path: pathlib.Path) -> None:
+    """Lower one exec-scale op (inputs + params as parameters) to HLO."""
+    fn = op_callable(op)
+    n_in = len(op.in_shapes)
+
+    def wrapped(*args):
+        ins = list(args[:n_in])
+        ps = list(args[n_in:])
+        return (fn(ins, ps),)
+
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in op.in_shapes]
+    specs += [jax.ShapeDtypeStruct(s, jnp.float32) for s in op.param_shapes]
+    lowered = jax.jit(wrapped).lower(*specs)
+    out_path.write_text(to_hlo_text(lowered))
+
+
+def _numel(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def export_model(name: str, ops_dir: pathlib.Path, exported: dict,
+                 log=print) -> dict:
+    """Build, profile, and export one model.  Returns its topology dict."""
+    ge = model.build(name, "exec")
+    gp = model.build(name, "paper")
+    zip_scales(ge, gp)
+    params = datagen.init_params(ge, seed=hash(name) % 2 ** 16)
+    log(f"[{name}] measuring activation sparsity (exec scale)...")
+    sp_out = interp.measure_sparsity(ge, params, n_inputs=2)
+
+    buf, slices = datagen.flatten_params(params)
+    mdir = ART / "models" / name
+    mdir.mkdir(parents=True, exist_ok=True)
+    buf.tofile(mdir / "weights.bin")
+
+    ops_json = []
+    for oe, op_ in zip(ge.ops, gp.ops):
+        # input sparsity = numel-weighted mean of producers' output sparsity
+        if oe.inputs:
+            tot = sum(_numel(ge.ops[i].out_shape) for i in oe.inputs)
+            sp_in = sum(sp_out[i] * _numel(ge.ops[i].out_shape)
+                        for i in oe.inputs) / max(tot, 1)
+        else:
+            sp_in = 0.0
+        rec = {
+            "id": oe.id, "name": oe.name, "kind": oe.kind,
+            "class": KIND_CLASS[oe.kind], "inputs": oe.inputs,
+            "attrs": oe.attrs,
+            "exec_in_shapes": [list(s) for s in oe.in_shapes],
+            "exec_out_shape": list(oe.out_shape),
+            "paper_in_shapes": [list(s) for s in op_.in_shapes],
+            "paper_out_shape": list(op_.out_shape),
+            "flops_exec": oe.flops, "flops_paper": op_.flops,
+            "bytes_in_paper": 4.0 * sum(_numel(s) for s in op_.in_shapes),
+            "bytes_out_paper": 4.0 * _numel(op_.out_shape),
+            "params_bytes_paper": 4.0 * sum(_numel(s)
+                                            for s in op_.param_shapes),
+            "sparsity_in": float(sp_in), "sparsity_out": float(sp_out[oe.id]),
+            "weights": slices[oe.id],
+            "artifact": None,
+        }
+        if oe.kind not in NATIVE_KINDS:
+            sig = signature(oe)
+            rel = f"ops/{sig}.hlo.txt"
+            if sig not in exported:
+                export_op_hlo(oe, ops_dir / f"{sig}.hlo.txt")
+                exported[sig] = rel
+            rec["artifact"] = rel
+        ops_json.append(rec)
+
+    topo = {
+        "model": name,
+        "input_shape_exec": list(ge.input_shape),
+        "input_shape_paper": list(gp.input_shape),
+        "total_flops_paper": sum(o.flops for o in gp.ops),
+        "total_flops_exec": sum(o.flops for o in ge.ops),
+        "weights_file": "weights.bin",
+        "ops": ops_json,
+    }
+    (mdir / "topology.json").write_text(json.dumps(topo))
+    log(f"[{name}] ops={len(ops_json)} artifacts(new total)={len(exported)}")
+    return topo
+
+
+def export_predictor(topos: list[dict], log=print) -> None:
+    """Train the Transformer-LSTM + baselines, export HLO + dataset."""
+    pdir = ART / "predictor"
+    pdir.mkdir(parents=True, exist_ok=True)
+
+    graphs = []
+    for t in topos:
+        gp = model.build(t["model"], "paper")
+        sp_in = np.array([o["sparsity_in"] for o in t["ops"]])
+        graphs.append((gp, sp_in))
+    feats, labels, classes = predictor.build_dataset(graphs)
+    log(f"[predictor] dataset: {feats.shape[0]} samples")
+    X, Y, M = predictor.to_sequences(feats, labels)
+    n = X.shape[0]
+    rng = np.random.default_rng(3)
+    order = rng.permutation(n)
+    n_tr = int(0.8 * n)
+    tr, te = order[:n_tr], order[n_tr:]
+
+    t0 = time.time()
+    p = predictor.train(X[tr], Y[tr], M[tr], epochs=100, log=log)
+    log(f"[predictor] trained in {time.time() - t0:.0f}s "
+        f"({predictor.param_count(p)} params)")
+    pred = np.asarray(predictor.forward(p, X[te]))
+    acc_s, acc_c = predictor.accuracy(pred, Y[te], M[te])
+    log(f"[predictor] ours: sparsity acc={acc_s:.3f} intensity acc={acc_c:.3f}")
+
+    w_lr = predictor.fit_linear(X[tr], Y[tr], M[tr])
+    pred_lr = predictor.linear_predict(w_lr, X[te])
+    acc_s_lr, acc_c_lr = predictor.accuracy(pred_lr, Y[te], M[te])
+    log(f"[predictor] LR:   sparsity acc={acc_s_lr:.3f} intensity acc={acc_c_lr:.3f}")
+
+    p_cnn = predictor.train_cnn(X[tr], Y[tr], M[tr], log=log)
+    pred_cnn = np.asarray(predictor.cnn_forward(p_cnn, X[te]))
+    acc_s_cnn, acc_c_cnn = predictor.accuracy(pred_cnn, Y[te], M[te])
+    log(f"[predictor] CNN:  sparsity acc={acc_s_cnn:.3f} intensity acc={acc_c_cnn:.3f}")
+
+    # AOT-export forward passes (batch 1 x SEQ_LEN x 6).
+    spec = jax.ShapeDtypeStruct((1, predictor.SEQ_LEN, predictor.N_FEATURES),
+                                jnp.float32)
+    lowered = jax.jit(lambda x: (predictor.forward(p, x),)).lower(spec)
+    (pdir / "thresh_predictor.hlo.txt").write_text(to_hlo_text(lowered))
+    lowered = jax.jit(lambda x: (predictor.cnn_forward(p_cnn, x),)).lower(spec)
+    (pdir / "cnn_predictor.hlo.txt").write_text(to_hlo_text(lowered))
+
+    (pdir / "dataset.json").write_text(json.dumps({
+        "seq_len": predictor.SEQ_LEN,
+        "n_features": predictor.N_FEATURES,
+        "test_x": X[te].reshape(len(te), -1).tolist(),
+        "test_y": Y[te].reshape(len(te), -1).tolist(),
+        "test_mask": M[te].tolist(),
+        "lr_weights": w_lr.T.tolist(),      # (2, 7) rows: [s; c]
+        "accuracy": {
+            "ours": [acc_s, acc_c],
+            "lr": [acc_s_lr, acc_c_lr],
+            "cnn": [acc_s_cnn, acc_c_cnn],
+        },
+        "model_bytes": {
+            "ours": predictor.param_count(p) * 4,
+            "lr": int(w_lr.size) * 4,
+            "cnn": predictor.param_count(p_cnn) * 4,
+        },
+    }))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", nargs="*", default=list(model.MODELS))
+    ap.add_argument("--skip-predictor", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    ART.mkdir(exist_ok=True)
+    ops_dir = ART / "ops"
+    ops_dir.mkdir(exist_ok=True)
+    shutil.copy(ROOT / "config" / "devices.json", ART / "devices.json")
+
+    exported: dict = {}
+    topos = []
+    for name in args.models:
+        topos.append(export_model(name, ops_dir, exported))
+
+    if not args.skip_predictor:
+        export_predictor(topos)
+
+    (ART / "manifest.json").write_text(json.dumps({
+        "models": args.models,
+        "n_op_artifacts": len(exported),
+        "generated_unix": int(t0),
+    }))
+    print(f"artifacts done in {time.time() - t0:.0f}s "
+          f"({len(exported)} unique op HLOs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Synthetic weights and inputs (substitution for ImageNet/COCO pretrained
+models — see DESIGN.md §2).
+
+Weights are He-normal; BatchNorm betas get a per-layer offset drawn from a
+wide range so post-ReLU activation sparsity spans the 0–0.9 band the paper
+observes on real pretrained models (Fig. 2).  The scheduling problem only
+sees (sparsity, intensity, shapes), so this preserves the behaviour that
+matters.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .graph_ir import Graph, Op
+
+
+def init_params(g: Graph, seed: int = 0) -> list[list[np.ndarray]]:
+    """Per-op parameter arrays for one graph.  Returns params[op_id]."""
+    rng = np.random.default_rng(seed)
+    all_params: list[list[np.ndarray]] = []
+    for op in g.ops:
+        ps: list[np.ndarray] = []
+        if op.kind in ("conv2d", "dwconv"):
+            shape = op.param_shapes[0]
+            fan_in = math.prod(shape[:-1]) if op.kind == "conv2d" else \
+                shape[0] * shape[1]
+            w = rng.standard_normal(shape).astype(np.float32)
+            w *= math.sqrt(2.0 / max(fan_in, 1))
+            ps.append(w)
+        elif op.kind == "linear":
+            wshape, bshape = op.param_shapes
+            w = rng.standard_normal(wshape).astype(np.float32)
+            w *= math.sqrt(2.0 / wshape[0])
+            ps.append(w)
+            ps.append(np.zeros(bshape, np.float32))
+        elif op.kind == "batchnorm":
+            c = op.param_shapes[0][0]
+            gamma = rng.uniform(0.6, 1.4, c).astype(np.float32)
+            # Per-layer sparsity knob: shifts the pre-activation
+            # distribution; the following ReLU turns it into activation
+            # sparsity anywhere between ~0.15 and ~0.9.
+            offset = rng.uniform(-1.3, 0.6)
+            beta = (rng.standard_normal(c) * 0.2 + offset).astype(np.float32)
+            mean = np.zeros(c, np.float32)
+            var = np.ones(c, np.float32)
+            ps.extend([gamma, beta, mean, var])
+        elif op.kind == "layernorm":
+            c = op.param_shapes[0][0]
+            ps.append(rng.uniform(0.8, 1.2, c).astype(np.float32))
+            ps.append((rng.standard_normal(c) * 0.1).astype(np.float32))
+        all_params.append(ps)
+    return all_params
+
+
+def flatten_params(all_params: list[list[np.ndarray]]):
+    """Concatenate every op's params into one f32 buffer; return the buffer
+    and per-op slice records [{offset, numel, shape}]."""
+    blobs = []
+    slices: list[list[dict]] = []
+    offset = 0
+    for ps in all_params:
+        recs = []
+        for p in ps:
+            flat = np.ascontiguousarray(p, np.float32).reshape(-1)
+            recs.append({"offset": offset, "numel": int(flat.size),
+                         "shape": list(p.shape)})
+            blobs.append(flat)
+            offset += flat.size
+        slices.append(recs)
+    buf = np.concatenate(blobs) if blobs else np.zeros(0, np.float32)
+    return buf, slices
+
+
+def sample_input(shape, seed: int = 0) -> np.ndarray:
+    """ImageNet-ish normalized image batch: zero-mean unit-var channels."""
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)

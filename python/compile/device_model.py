@@ -1,0 +1,126 @@
+"""Python mirror of the rust heterogeneous device simulator
+(rust/src/device/).  Reads the same config/devices.json and must implement
+the same roofline latency equations — rust/tests/device_parity.rs checks a
+golden table generated from this module.
+
+Used at build time to label ground-truth scheduling thresholds (paper §3.3:
+"one-time, offline exhaustive search on the target hardware"): for each
+operator sample we sweep sparsity / intensity and find the boundary where
+the optimal device flips.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+_CFG = None
+
+
+def load(path: str | None = None) -> dict:
+    global _CFG
+    if _CFG is None:
+        p = pathlib.Path(path or pathlib.Path(__file__).resolve()
+                         .parents[2] / "config" / "devices.json")
+        _CFG = json.loads(p.read_text())
+    return _CFG
+
+
+# GPU effective-bandwidth ramp for small transfers (mirror of
+# rust/src/device/mod.rs GPU_BW_RAMP_*; parity-tested).
+GPU_BW_RAMP_BYTES = 4e6
+GPU_BW_RAMP_FLOOR = 0.12
+
+
+def op_latency_us(dev: dict, proc: str, op_class: str, flops: float,
+                  bytes_moved: float, sparsity: float) -> float:
+    """Roofline latency of one op on one processor, microseconds.
+
+    t = max(eff_flops / rate, bytes / bw_eff) + launch
+    eff_flops = flops * (1 - sparsity * elasticity[class])
+    rate = peak * util[class]  (floored); GPU bandwidth ramps with size.
+    """
+    p = dev[proc]
+    util = p["util"].get(op_class, p["util"]["other"])
+    util = max(util, dev.get("min_util_floor", 0.02))
+    elast = p["sparsity_elasticity"].get(op_class, 0.0)
+    eff = flops * (1.0 - min(max(sparsity, 0.0), 1.0) * elast)
+    t_compute = eff / (p["peak_gflops"] * util * 1e9) * 1e6
+    bw = p["mem_bw_gbps"]
+    if proc == "gpu":
+        ramp = (bytes_moved / GPU_BW_RAMP_BYTES) ** 0.5
+        bw *= min(max(ramp, GPU_BW_RAMP_FLOOR), 1.0)
+    t_mem = bytes_moved / (bw * 1e9) * 1e6
+    return max(t_compute, t_mem) + p["launch_overhead_us"]
+
+
+def transfer_us(dev: dict, bytes_moved: float, pinned: bool = True,
+                overlap: bool = False) -> float:
+    t = dev["transfer"]
+    lat = t["dma_latency_us"] + bytes_moved / (t["dma_bw_gbps"] * 1e9) * 1e6
+    if not pinned:
+        lat *= t["pageable_penalty"]
+    if overlap:
+        lat *= 1.0 - t["async_overlap"]
+    return lat
+
+
+def sparsity_threshold(dev: dict, op_class: str, flops: float,
+                       bytes_moved: float, xfer_bytes: float) -> float:
+    """Sparsity rho* where CPU and GPU placement cost cross (the CPU side
+    gains from sparsity; the GPU side pays a transfer).  Found by bisection;
+    0 means GPU always wins, 1 means CPU always wins."""
+    def diff(rho):
+        cpu = op_latency_us(dev, "cpu", op_class, flops, bytes_moved, rho)
+        gpu = (op_latency_us(dev, "gpu", op_class, flops, bytes_moved, rho)
+               + transfer_us(dev, xfer_bytes))
+        return cpu - gpu
+    lo, hi = 0.0, 1.0
+    if diff(0.0) <= 0.0:
+        return 0.0          # CPU already cheaper with no sparsity
+    if diff(1.0) > 0.0:
+        return 1.0          # GPU cheaper even fully sparse
+    for _ in range(40):
+        mid = 0.5 * (lo + hi)
+        if diff(mid) > 0.0:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+# Intensity thresholds are expressed in normalized log-FLOPs so they live in
+# [0, 1] like the sparsity threshold (predictor output range).
+LOG_FLOPS_MIN, LOG_FLOPS_MAX = 3.0, 12.0
+
+
+def norm_intensity(flops: float) -> float:
+    import math
+    lf = math.log10(max(flops, 1.0))
+    return min(max((lf - LOG_FLOPS_MIN) / (LOG_FLOPS_MAX - LOG_FLOPS_MIN),
+                   0.0), 1.0)
+
+
+def intensity_threshold(dev: dict, op_class: str, flops: float,
+                        bytes_moved: float, sparsity: float,
+                        xfer_bytes: float) -> float:
+    """Normalized intensity I* where the optimal device flips when the op is
+    scaled up/down (bytes scale with flops).  Bisection over scale factor."""
+    def diff(scale):
+        f, bts, xb = flops * scale, bytes_moved * scale, xfer_bytes * scale
+        cpu = op_latency_us(dev, "cpu", op_class, f, bts, sparsity)
+        gpu = (op_latency_us(dev, "gpu", op_class, f, bts, sparsity)
+               + transfer_us(dev, xb))
+        return gpu - cpu    # >0: CPU wins at this scale
+    lo, hi = 1e-4, 1e4
+    if diff(lo) <= 0.0:
+        return norm_intensity(flops * lo)     # GPU wins even when tiny
+    if diff(hi) > 0.0:
+        return norm_intensity(flops * hi)     # CPU wins even when huge
+    llo, lhi = lo, hi
+    for _ in range(60):
+        mid = (llo * lhi) ** 0.5
+        if diff(mid) > 0.0:
+            llo = mid
+        else:
+            lhi = mid
+    return norm_intensity(flops * (llo * lhi) ** 0.5)

@@ -1,0 +1,417 @@
+"""Operator-graph IR shared by the model builders and the AOT exporter.
+
+Each DNN model is built as a flat list of :class:`Op` nodes in topological
+order.  Every model is built **twice** from the same builder code — once at
+*exec* scale (small shapes; these get HLO artifacts and run through PJRT in
+rust) and once at *paper* scale (the shapes from the paper's Table 2; these
+drive the device simulator and every figure reproduction).  The two builds
+must produce identical op sequences; ``zip_scales`` asserts that and merges
+them into the topology JSON the rust side loads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as attn_k
+from .kernels import conv as conv_k
+from .kernels import elementwise as ew_k
+from .kernels import matmul as mm_k
+from .kernels import norm as norm_k
+
+# Op kinds understood by the rust coordinator (rust/src/graph/op.rs must
+# stay in sync).
+KINDS = (
+    "input", "conv2d", "dwconv", "linear", "matmul", "batchnorm",
+    "layernorm", "relu", "relu6", "hardswish", "hardsigmoid", "gelu",
+    "softmax", "attention", "add", "mul", "maxpool", "avgpool",
+    "globalavgpool", "reshape", "roll", "concat", "window_part",
+    "window_rev", "space_to_depth",
+)
+
+# Device-model op classes (keys of util/sparsity_elasticity in devices.json).
+KIND_CLASS = {
+    "conv2d": "conv", "dwconv": "dwconv", "linear": "matmul",
+    "matmul": "matmul", "attention": "attention", "batchnorm": "norm",
+    "layernorm": "norm", "relu": "elementwise", "relu6": "elementwise",
+    "hardswish": "elementwise", "hardsigmoid": "elementwise",
+    "gelu": "elementwise", "softmax": "softmax", "add": "elementwise",
+    "mul": "elementwise", "maxpool": "pool", "avgpool": "pool",
+    "globalavgpool": "pool", "reshape": "other", "roll": "other",
+    "concat": "other", "input": "other", "window_part": "other",
+    "window_rev": "other", "space_to_depth": "other",
+}
+
+
+@dataclasses.dataclass
+class Op:
+    """One operator node (single scale)."""
+    id: int
+    name: str
+    kind: str
+    inputs: list[int]                      # producer op ids
+    attrs: dict[str, Any]
+    in_shapes: list[tuple[int, ...]]
+    out_shape: tuple[int, ...]
+    param_shapes: list[tuple[int, ...]]
+    flops: float = 0.0
+
+
+@dataclasses.dataclass
+class Graph:
+    model: str
+    scale: str                             # "exec" | "paper"
+    input_shape: tuple[int, ...]
+    ops: list[Op] = dataclasses.field(default_factory=list)
+
+
+def _numel(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def flops_for(kind: str, attrs: dict, in_shapes, out_shape,
+              param_shapes) -> float:
+    """Analytic FLOP count per op kind (2*MACs for contractions)."""
+    n_out = _numel(out_shape)
+    n_in = sum(_numel(s) for s in in_shapes)
+    if kind == "conv2d":
+        kh, kw = attrs["kh"], attrs["kw"]
+        cin, cout = attrs["cin"], attrs["cout"]
+        return 2.0 * kh * kw * cin * cout * out_shape[-3] * out_shape[-2] * out_shape[0]
+    if kind == "dwconv":
+        kh, kw = attrs["kh"], attrs["kw"]
+        return 2.0 * kh * kw * n_out
+    if kind in ("linear", "matmul"):
+        k = in_shapes[0][-1]
+        return 2.0 * k * n_out
+    if kind == "attention":
+        b, t, three_c = in_shapes[0]
+        c = three_c // 3
+        return 4.0 * b * t * t * c + 5.0 * b * attrs["heads"] * t * t
+    if kind == "batchnorm":
+        return 2.0 * n_out
+    if kind == "layernorm":
+        return 8.0 * n_out
+    if kind in ("relu", "relu6"):
+        return 1.0 * n_out
+    if kind in ("hardswish", "hardsigmoid"):
+        return 4.0 * n_out
+    if kind == "gelu":
+        return 9.0 * n_out
+    if kind == "softmax":
+        return 5.0 * n_out
+    if kind in ("add", "mul"):
+        return 1.0 * n_out
+    if kind in ("maxpool", "avgpool"):
+        return float(attrs.get("window", 2) ** 2) * n_out
+    if kind == "globalavgpool":
+        return float(n_in)
+    return 0.0  # reshape / roll / concat / input: data movement only
+
+
+class GraphBuilder:
+    """Builds one scale of a model.  Helper methods append ops, compute
+    output shapes as they go, and return the new op id."""
+
+    def __init__(self, model: str, scale: str, input_shape):
+        self.g = Graph(model=model, scale=scale,
+                       input_shape=tuple(input_shape))
+        inp = Op(0, "input", "input", [], {}, [], tuple(input_shape), [])
+        self.g.ops.append(inp)
+
+    def _add(self, name, kind, inputs, attrs, in_shapes, out_shape,
+             param_shapes) -> int:
+        op = Op(len(self.g.ops), name, kind, list(inputs), dict(attrs),
+                [tuple(s) for s in in_shapes], tuple(out_shape),
+                [tuple(s) for s in param_shapes])
+        op.flops = flops_for(kind, attrs, op.in_shapes, op.out_shape,
+                             op.param_shapes)
+        self.g.ops.append(op)
+        return op.id
+
+    def shape(self, op_id: int) -> tuple[int, ...]:
+        return self.g.ops[op_id].out_shape
+
+    # -- builders ----------------------------------------------------------
+    def conv2d(self, x, cout, k, stride=1, padding=None, name="conv"):
+        n, h, w, cin = self.shape(x)
+        if padding is None:
+            padding = k // 2
+        ho = (h + 2 * padding - k) // stride + 1
+        wo = (w + 2 * padding - k) // stride + 1
+        attrs = dict(kh=k, kw=k, stride=stride, padding=padding,
+                     cin=cin, cout=cout)
+        return self._add(name, "conv2d", [x], attrs, [self.shape(x)],
+                         (n, ho, wo, cout), [(k, k, cin, cout)])
+
+    def dwconv(self, x, k, stride=1, padding=None, name="dwconv"):
+        n, h, w, c = self.shape(x)
+        if padding is None:
+            padding = k // 2
+        ho = (h + 2 * padding - k) // stride + 1
+        wo = (w + 2 * padding - k) // stride + 1
+        attrs = dict(kh=k, kw=k, stride=stride, padding=padding, cin=c,
+                     cout=c)
+        return self._add(name, "dwconv", [x], attrs, [self.shape(x)],
+                         (n, ho, wo, c), [(k, k, c)])
+
+    def linear(self, x, dout, name="linear"):
+        s = self.shape(x)
+        k = s[-1]
+        out = s[:-1] + (dout,)
+        return self._add(name, "linear", [x], dict(din=k, dout=dout),
+                         [s], out, [(k, dout), (dout,)])
+
+    def batchnorm(self, x, name="bn"):
+        s = self.shape(x)
+        c = s[-1]
+        return self._add(name, "batchnorm", [x], dict(c=c), [s], s,
+                         [(c,), (c,), (c,), (c,)])
+
+    def layernorm(self, x, name="ln"):
+        s = self.shape(x)
+        c = s[-1]
+        return self._add(name, "layernorm", [x], dict(c=c), [s], s,
+                         [(c,), (c,)])
+
+    def act(self, x, kind, name=None):
+        s = self.shape(x)
+        return self._add(name or kind, kind, [x], {}, [s], s, [])
+
+    def softmax(self, x, name="softmax"):
+        s = self.shape(x)
+        return self._add(name, "softmax", [x], {}, [s], s, [])
+
+    def attention(self, x, heads, name="attn"):
+        """x: (B, T, 3C) packed qkv -> (B, T, C)."""
+        b, t, three_c = self.shape(x)
+        c = three_c // 3
+        return self._add(name, "attention", [x], dict(heads=heads),
+                         [self.shape(x)], (b, t, c), [])
+
+    def add(self, a, b, name="add"):
+        s = self.shape(a)
+        assert s == self.shape(b), (s, self.shape(b), name)
+        return self._add(name, "add", [a, b], {}, [s, s], s, [])
+
+    def mul(self, a, b, name="mul"):
+        """Broadcast multiply: a (N,H,W,C) * b (N,1,1,C) or same-shape."""
+        s = self.shape(a)
+        return self._add(name, "mul", [a, b], {},
+                         [s, self.shape(b)], s, [])
+
+    def maxpool(self, x, window, stride, padding=0, name="maxpool"):
+        n, h, w, c = self.shape(x)
+        ho = (h + 2 * padding - window) // stride + 1
+        wo = (w + 2 * padding - window) // stride + 1
+        return self._add(name, "maxpool", [x],
+                         dict(window=window, stride=stride, padding=padding),
+                         [self.shape(x)], (n, ho, wo, c), [])
+
+    def avgpool(self, x, window, stride, name="avgpool"):
+        n, h, w, c = self.shape(x)
+        ho = (h - window) // stride + 1
+        wo = (w - window) // stride + 1
+        return self._add(name, "avgpool", [x],
+                         dict(window=window, stride=stride),
+                         [self.shape(x)], (n, ho, wo, c), [])
+
+    def globalavgpool(self, x, keepdims=False, name="gap"):
+        n, h, w, c = self.shape(x)
+        out = (n, 1, 1, c) if keepdims else (n, c)
+        return self._add(name, "globalavgpool", [x],
+                         dict(keepdims=int(keepdims)), [self.shape(x)], out, [])
+
+    def reshape(self, x, out_shape, name="reshape"):
+        assert _numel(self.shape(x)) == _numel(out_shape), \
+            (self.shape(x), out_shape, name)
+        return self._add(name, "reshape", [x], {}, [self.shape(x)],
+                         tuple(out_shape), [])
+
+    def roll(self, x, shift_h, shift_w, name="roll"):
+        """Cyclic shift on (B, H, W, C) — Swin shifted windows."""
+        s = self.shape(x)
+        return self._add(name, "roll", [x],
+                         dict(shift_h=shift_h, shift_w=shift_w), [s], s, [])
+
+    def window_part(self, x, win, name="wpart"):
+        """(B, H, W, C) -> (B * H/win * W/win, win*win, C)."""
+        n, h, w, c = self.shape(x)
+        nw = (h // win) * (w // win)
+        return self._add(name, "window_part", [x], dict(win=win),
+                         [self.shape(x)], (n * nw, win * win, c), [])
+
+    def window_rev(self, x, win, h, w, name="wrev"):
+        """(B*nW, win*win, C) -> (B, H, W, C)."""
+        bn, t, c = self.shape(x)
+        nw = (h // win) * (w // win)
+        return self._add(name, "window_rev", [x],
+                         dict(win=win, h=h, w=w), [self.shape(x)],
+                         (bn // nw, h, w, c), [])
+
+    def space_to_depth(self, x, name="s2d"):
+        """(B, H, W, C) -> (B, H/2, W/2, 4C) — Swin patch merging."""
+        n, h, w, c = self.shape(x)
+        return self._add(name, "space_to_depth", [x], {},
+                         [self.shape(x)], (n, h // 2, w // 2, 4 * c), [])
+
+    def concat(self, xs, axis, name="concat"):
+        shapes = [self.shape(x) for x in xs]
+        out = list(shapes[0])
+        out[axis] = sum(s[axis] for s in shapes)
+        return self._add(name, "concat", list(xs), dict(axis=axis),
+                         shapes, tuple(out), [])
+
+
+# ---------------------------------------------------------------------------
+# Per-kind jax callables (exec scale): fn(inputs, params) -> output.
+# These are what get AOT-lowered to HLO artifacts and what the python-side
+# interpreter runs to measure activation sparsity.
+# ---------------------------------------------------------------------------
+
+def _as2d(x):
+    return x.reshape(-1, x.shape[-1])
+
+
+def op_fn(kind: str, attrs: dict) -> Callable:
+    if kind == "conv2d":
+        st, pad = attrs["stride"], attrs["padding"]
+        return lambda ins, ps: conv_k.conv2d(ins[0], ps[0], stride=st,
+                                             padding=pad)
+    if kind == "dwconv":
+        st, pad = attrs["stride"], attrs["padding"]
+        return lambda ins, ps: conv_k.depthwise_conv2d(ins[0], ps[0],
+                                                       stride=st, padding=pad)
+    if kind == "linear":
+        def f(ins, ps):
+            x = ins[0]
+            y = mm_k.linear(_as2d(x), ps[0], ps[1])
+            return y.reshape(x.shape[:-1] + (ps[0].shape[1],))
+        return f
+    if kind == "batchnorm":
+        def f(ins, ps):
+            x = ins[0]
+            y = norm_k.batchnorm(_as2d(x), ps[0], ps[1], ps[2], ps[3])
+            return y.reshape(x.shape)
+        return f
+    if kind == "layernorm":
+        def f(ins, ps):
+            x = ins[0]
+            y = norm_k.layernorm(_as2d(x), ps[0], ps[1])
+            return y.reshape(x.shape)
+        return f
+    if kind in ("relu", "relu6", "hardswish", "hardsigmoid", "gelu"):
+        ew = getattr(ew_k, kind)
+        def f(ins, ps):
+            x = ins[0]
+            return ew(_as2d(x)).reshape(x.shape)
+        return f
+    if kind == "softmax":
+        def f(ins, ps):
+            x = ins[0]
+            return attn_k.softmax(_as2d(x)).reshape(x.shape)
+        return f
+    if kind == "attention":
+        heads = attrs["heads"]
+        def f(ins, ps):
+            x = ins[0]                                   # (B, T, 3C)
+            b, t, three_c = x.shape
+            c = three_c // 3
+            d = c // heads
+            qkv = x.reshape(b, t, 3, heads, d)
+            q = qkv[:, :, 0].transpose(0, 2, 1, 3).reshape(b * heads, t, d)
+            k = qkv[:, :, 1].transpose(0, 2, 1, 3).reshape(b * heads, t, d)
+            v = qkv[:, :, 2].transpose(0, 2, 1, 3).reshape(b * heads, t, d)
+            o = attn_k.attention(q, k, v)                # (B*H, T, d)
+            o = o.reshape(b, heads, t, d).transpose(0, 2, 1, 3)
+            return o.reshape(b, t, c)
+        return f
+    if kind == "add":
+        return lambda ins, ps: ins[0] + ins[1]
+    if kind == "mul":
+        return lambda ins, ps: ins[0] * ins[1]
+    if kind == "maxpool":
+        w, s, p = attrs["window"], attrs["stride"], attrs["padding"]
+        from .kernels import ref as ref_k
+        return lambda ins, ps: ref_k.maxpool2d(ins[0], w, s, p)
+    if kind == "avgpool":
+        w, s = attrs["window"], attrs["stride"]
+        from .kernels import ref as ref_k
+        return lambda ins, ps: ref_k.avgpool2d(ins[0], w, s)
+    if kind == "globalavgpool":
+        keep = bool(attrs.get("keepdims", 0))
+        def f(ins, ps):
+            y = jnp.mean(ins[0], axis=(1, 2), keepdims=keep)
+            return y
+        return f
+    if kind == "reshape":
+        return None  # shape comes from the op record; handled by caller
+    if kind == "roll":
+        sh, sw = attrs["shift_h"], attrs["shift_w"]
+        return lambda ins, ps: jnp.roll(ins[0], (sh, sw), axis=(1, 2))
+    if kind == "concat":
+        ax = attrs["axis"]
+        return lambda ins, ps: jnp.concatenate(ins, axis=ax)
+    if kind == "window_part":
+        win = attrs["win"]
+        def f(ins, ps):
+            x = ins[0]
+            n, h, w, c = x.shape
+            x = x.reshape(n, h // win, win, w // win, win, c)
+            x = x.transpose(0, 1, 3, 2, 4, 5)
+            return x.reshape(-1, win * win, c)
+        return f
+    if kind == "window_rev":
+        win, h, w = attrs["win"], attrs["h"], attrs["w"]
+        def f(ins, ps):
+            x = ins[0]
+            c = x.shape[-1]
+            n = x.shape[0] // ((h // win) * (w // win))
+            x = x.reshape(n, h // win, w // win, win, win, c)
+            x = x.transpose(0, 1, 3, 2, 4, 5)
+            return x.reshape(n, h, w, c)
+        return f
+    if kind == "space_to_depth":
+        def f(ins, ps):
+            x = ins[0]
+            n, h, w, c = x.shape
+            x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+            x = x.transpose(0, 1, 3, 2, 4, 5)
+            return x.reshape(n, h // 2, w // 2, 4 * c)
+        return f
+    raise ValueError(f"no op_fn for kind {kind}")
+
+
+def op_callable(op: Op) -> Callable:
+    """Concrete jax callable for an exec-scale op (reshape resolved here)."""
+    if op.kind == "reshape":
+        out = op.out_shape
+        return lambda ins, ps: ins[0].reshape(out)
+    return op_fn(op.kind, op.attrs)
+
+
+def signature(op: Op) -> str:
+    """Unique artifact signature for an exec-scale op."""
+    key = json.dumps([op.kind, sorted(op.attrs.items()),
+                      op.in_shapes, list(op.out_shape), op.param_shapes],
+                     default=str)
+    h = hashlib.sha1(key.encode()).hexdigest()[:12]
+    return f"{op.kind}_{h}"
+
+
+def zip_scales(exec_g: Graph, paper_g: Graph) -> None:
+    """Assert the two scales describe the same op sequence."""
+    assert len(exec_g.ops) == len(paper_g.ops), \
+        (exec_g.model, len(exec_g.ops), len(paper_g.ops))
+    for a, b in zip(exec_g.ops, paper_g.ops):
+        assert a.kind == b.kind and a.name == b.name and a.inputs == b.inputs, \
+            (exec_g.model, a.id, a.kind, b.kind, a.name, b.name)

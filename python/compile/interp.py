@@ -1,0 +1,51 @@
+"""Exec-scale graph interpreter: runs a model graph op-by-op through the L1
+Pallas kernels (interpret=True) and measures per-op activation sparsity.
+
+This is the build-time profiling pass of SparOA's offline phase: the
+sparsity statistics recorded here are what the threshold predictor and the
+RL scheduler consume (the rust side reads them from topology.json).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .graph_ir import Graph, op_callable
+
+
+def run(g: Graph, params: list[list[np.ndarray]], x: np.ndarray,
+        collect: bool = True):
+    """Execute graph on input x. Returns (final_output, sparsity_out[])"""
+    vals: dict[int, np.ndarray] = {}
+    sparsity = np.zeros(len(g.ops), np.float64)
+    for op in g.ops:
+        if op.kind == "input":
+            out = x
+        else:
+            fn = op_callable(op)
+            ins = [vals[i] for i in op.inputs]
+            out = np.asarray(fn(ins, params[op.id]))
+        assert tuple(out.shape) == op.out_shape, \
+            (g.model, op.name, out.shape, op.out_shape)
+        vals[op.id] = out
+        if collect:
+            sparsity[op.id] = float(np.mean(np.abs(out) < 1e-9))
+        # free dead values
+        last_use = op.id
+        for later in g.ops[op.id + 1:]:
+            if op.id in later.inputs:
+                last_use = later.id
+        if last_use == op.id and op.id != g.ops[-1].id:
+            pass  # small models; keep everything (also used by tests)
+    return vals[g.ops[-1].id], sparsity
+
+
+def measure_sparsity(g: Graph, params, n_inputs: int = 3,
+                     seed: int = 7) -> np.ndarray:
+    """Mean per-op output sparsity over several random inputs."""
+    from . import datagen
+    acc = np.zeros(len(g.ops), np.float64)
+    for i in range(n_inputs):
+        x = datagen.sample_input(g.input_shape, seed=seed + i)
+        _, sp = run(g, params, x, collect=True)
+        acc += sp
+    return acc / n_inputs

@@ -1,0 +1,77 @@
+"""L1 Pallas attention + softmax kernels.
+
+The attention kernel fuses q@k^T -> stable softmax -> @v for one head in a
+single VMEM-resident pass (the sequence lengths of the edge vision models —
+<= 197 tokens at paper scale — fit comfortably, so no online-softmax
+streaming is needed; the whole (T, d) tile is the block).  The grid walks
+the fused batch*heads axis, which is the TPU analogue of assigning one
+(batch, head) to a CUDA threadblock.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiles
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def softmax(x: jax.Array, *, br: int = 128) -> jax.Array:
+    """Row-blocked stable softmax over the last axis of (rows, D)."""
+    rows, d = x.shape
+    br = tiles.pick_block(rows, br)
+    rp = tiles.round_up(rows, br)
+    # Pad with -inf-ish so padded rows don't produce NaNs (they are sliced
+    # away, but interpret-mode still computes them).
+    xp = jnp.pad(x.astype(jnp.float32), ((0, rp - rows), (0, 0)),
+                 constant_values=0.0)
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, d), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:rows]
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[...].astype(jnp.float32)        # (T, d)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Batched fused attention: q,k,v (BH, T, d) -> (BH, T, d)."""
+    bh, t, d = q.shape
+    scale = 1.0 / float(d) ** 0.5
+    kern = functools.partial(_attention_kernel, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((None, t, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, t, d), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, t, d), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), jnp.float32),
+        interpret=True,
+    )(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))

@@ -1,0 +1,118 @@
+"""L1 Pallas convolution kernels.
+
+Standard convolution is expressed as im2col patch extraction followed by the
+sparsity-aware blocked matmul (matmul.sparse_matmul) — the TPU-shaped
+replacement for the paper's implicit-GEMM CUDA kernels: BlockSpec tiles play
+the role threadblock shared-memory staging plays on GPU, and activation
+sparsity (post-ReLU) gates whole MXU tiles instead of scattering rows.
+
+Depthwise convolution gets its own kernel: it is memory-bound (no channel
+reduction), so the kernel keeps a (H, W, cb) channel-block resident in VMEM
+and accumulates the Kh*Kw shifted products over it — one HBM read of the
+input per channel block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mm
+from . import tiles
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int,
+           padding: int) -> jax.Array:
+    """Patch extraction, (N,H,W,C) -> (N*Ho*Wo, Kh*Kw*C).
+
+    Pure data movement (slice + reshape); XLA fuses it into the consumer's
+    HBM->VMEM pipeline, so it is not itself a Pallas kernel.
+    Column order matches HWIO weight layout.
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x.astype(jnp.float32),
+                 [(0, 0), (padding, padding), (padding, padding), (0, 0)])
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xp, (0, i, j, 0),
+                (n, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1))
+            cols.append(patch.reshape(n * ho * wo, c))
+    return jnp.concatenate(cols, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+           padding: int = 0) -> jax.Array:
+    """NHWC conv via im2col + sparse blocked matmul.
+
+    x: (N,H,W,Cin), w: (Kh,Kw,Cin,Cout) -> (N,Ho,Wo,Cout).
+    """
+    n, h, wdt, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (wdt + 2 * padding - kw) // stride + 1
+    cols = im2col(x, kh, kw, stride, padding)            # (N*Ho*Wo, Kh*Kw*Cin)
+    wmat = w.astype(jnp.float32).reshape(kh * kw * cin, cout)
+    out = mm.sparse_matmul(cols, wmat)                   # gated MXU tiles
+    return out.reshape(n, ho, wo, cout)
+
+
+def _dw_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, stride: int,
+               ho: int, wo: int):
+    """Depthwise block: input channel-block (Hp, Wp, cb) resident in VMEM;
+    accumulate the Kh*Kw shifted elementwise products (unrolled at trace
+    time — VPU work, no MXU)."""
+    xv = x_ref[...].astype(jnp.float32)      # (Hp, Wp, cb)
+    wv = w_ref[...].astype(jnp.float32)      # (kh, kw, cb)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xv, (i, j, 0),
+                (i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1,
+                 xv.shape[2]),
+                (stride, stride, 1))
+            acc = acc + patch * wv[i, j][None, None, :]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "cb"))
+def depthwise_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+                     padding: int = 0, cb: int = 32) -> jax.Array:
+    """Depthwise NHWC conv. x: (N,H,W,C), w: (Kh,Kw,C) -> (N,Ho,Wo,C).
+
+    Grid: (N, C/cb); each step owns a full spatial slab of ``cb`` channels.
+    """
+    n, h, wdt, c = x.shape
+    kh, kw, _ = w.shape
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (wdt + 2 * padding - kw) // stride + 1
+    cb = tiles.pick_block(c, cb)
+    cp = tiles.round_up(c, cb)
+    xp = jnp.pad(x.astype(jnp.float32),
+                 [(0, 0), (padding, padding), (padding, padding), (0, cp - c)])
+    wp = jnp.pad(w.astype(jnp.float32), [(0, 0), (0, 0), (0, cp - c)])
+    hp, wp_sp = h + 2 * padding, wdt + 2 * padding
+
+    kern = functools.partial(_dw_kernel, kh=kh, kw=kw, stride=stride,
+                             ho=ho, wo=wo)
+    out = pl.pallas_call(
+        kern,
+        grid=(n, cp // cb),
+        in_specs=[
+            pl.BlockSpec((None, hp, wp_sp, cb),
+                         lambda b, cc: (b, 0, 0, cc)),
+            pl.BlockSpec((kh, kw, cb), lambda b, cc: (0, 0, cc)),
+        ],
+        out_specs=pl.BlockSpec((None, ho, wo, cb), lambda b, cc: (b, 0, 0, cc)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cp), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[..., :c]

@@ -1,0 +1,80 @@
+"""L1 Pallas elementwise activation kernels (ReLU / HardSwish / GELU).
+
+These are the sparsity *producers*: ReLU-family activations zero out a large
+fraction of values, which the downstream sparse matmul/conv kernels gate on.
+Each kernel is a single VPU pass over a row-blocked 2-D view.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiles
+
+
+def _relu_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...].astype(jnp.float32), 0.0)
+
+
+def _hardswish_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = x * jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+def _relu6_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.clip(x_ref[...].astype(jnp.float32), 0.0, 6.0)
+
+
+def _hardsigmoid_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    c = 0.7978845608028654  # sqrt(2/pi)
+    o_ref[...] = 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))
+
+
+def _rowblocked(kernel, x: jax.Array, br: int) -> jax.Array:
+    rows, d = x.shape
+    br = tiles.pick_block(rows, br)
+    rp = tiles.round_up(rows, br)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, rp - rows), (0, 0)))
+    out = pl.pallas_call(
+        kernel,
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, d), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:rows]
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def relu(x: jax.Array, *, br: int = 256) -> jax.Array:
+    return _rowblocked(_relu_kernel, x, br)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def hardswish(x: jax.Array, *, br: int = 256) -> jax.Array:
+    return _rowblocked(_hardswish_kernel, x, br)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def relu6(x: jax.Array, *, br: int = 256) -> jax.Array:
+    return _rowblocked(_relu6_kernel, x, br)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def hardsigmoid(x: jax.Array, *, br: int = 256) -> jax.Array:
+    return _rowblocked(_hardsigmoid_kernel, x, br)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def gelu(x: jax.Array, *, br: int = 256) -> jax.Array:
+    return _rowblocked(_gelu_kernel, x, br)

@@ -1,0 +1,126 @@
+"""L1 Pallas matmul kernels: dense blocked matmul and the sparsity-aware
+block-gated matmul that is SparOA's compute hot-spot.
+
+Hardware adaptation (paper targets Ampere iGPU -> we target TPU-style
+execution, DESIGN.md §Hardware-Adaptation):
+
+* The dense kernel is a classic MXU-blocked matmul: the grid walks (M/bm,
+  N/bn, K/bk) and each step pulls one (bm, bk) x (bk, bn) tile pair into
+  VMEM via BlockSpec and accumulates in f32.
+
+* The *sparse* kernel exploits activation sparsity the way a TPU can:
+  PowerInfer-style GPU kernels scatter/gather individual nonzero rows, which
+  the MXU cannot do.  Instead we gate whole (bm, bk) activation tiles — a
+  tile that is entirely zero contributes nothing, so its MXU pass is
+  predicated away (``pl.when`` on a tile-nonzero flag).  With post-ReLU
+  activation sparsity rho, the expected fraction of skipped MXU passes is
+  ~rho for block-aligned sparsity, which is what the device model's
+  ``sparsity_elasticity`` captures.
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiles
+
+
+def _dense_kernel(x_ref, y_ref, o_ref):
+    """One grid step of the blocked matmul: accumulate x_tile @ y_tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _sparse_kernel(x_ref, y_ref, o_ref):
+    """Block-gated step: skip the MXU pass when the activation tile is all
+    zero.  ``pl.when`` predicates the accumulate, which is the TPU analogue
+    of skipping a threadblock on GPU."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x_tile = x_ref[...].astype(jnp.float32)
+    tile_nonzero = jnp.any(x_tile != 0.0)
+
+    @pl.when(tile_nonzero)
+    def _acc():
+        o_ref[...] += jnp.dot(
+            x_tile, y_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+
+def _blocked_call(kernel, x: jax.Array, y: jax.Array,
+                  bm: int, bn: int, bk: int) -> jax.Array:
+    """Pad to block multiples, run the 3-D grid, slice the result back."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul shape mismatch: {x.shape} @ {y.shape}"
+    mp, np_, kp = (tiles.round_up(m, bm), tiles.round_up(n, bn),
+                   tiles.round_up(k, bk))
+    xpad = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    ypad = jnp.pad(y.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xpad, ypad)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = tiles.BLOCK_M,
+           bn: int = tiles.BLOCK_N, bk: int = tiles.BLOCK_K) -> jax.Array:
+    """Dense blocked Pallas matmul, (M,K) @ (K,N) -> (M,N) f32."""
+    m, k = x.shape
+    _, n = y.shape
+    bm = tiles.pick_block(m, bm)
+    bn = tiles.pick_block(n, bn)
+    bk = tiles.pick_block(k, bk)
+    return _blocked_call(_dense_kernel, x, y, bm, bn, bk)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def sparse_matmul(x: jax.Array, y: jax.Array, *, bm: int = tiles.BLOCK_M,
+                  bn: int = tiles.BLOCK_N,
+                  bk: int = tiles.BLOCK_K) -> jax.Array:
+    """Sparsity-aware block-gated Pallas matmul.
+
+    Numerically identical to :func:`matmul` (zero tiles contribute zero);
+    on real hardware the gated tiles skip their MXU pass entirely.
+    """
+    m, k = x.shape
+    _, n = y.shape
+    bm = tiles.pick_block(m, bm)
+    bn = tiles.pick_block(n, bn)
+    bk = tiles.pick_block(k, bk)
+    return _blocked_call(_sparse_kernel, x, y, bm, bn, bk)
+
+
+@jax.jit
+def linear(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Affine layer on the sparse kernel: sparse_matmul(x, w) + b."""
+    return sparse_matmul(x, w) + b.astype(jnp.float32)

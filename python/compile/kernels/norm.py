@@ -1,0 +1,81 @@
+"""L1 Pallas normalization kernels: LayerNorm and inference BatchNorm.
+
+Both are memory-bound: the tiling keeps a (rows, D) slab in VMEM, computes
+the row statistics on the VPU and writes the normalized slab back — one HBM
+round-trip per element, which is the roofline for these ops.  (This is why
+the device model marks them CPU-friendly: on the GPU they are pure
+launch + bandwidth cost.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiles
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                    # (br, D)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5, *, br: int = 128) -> jax.Array:
+    """LayerNorm over the last axis of a 2-D input (rows, D)."""
+    rows, d = x.shape
+    br = tiles.pick_block(rows, br)
+    rp = tiles.round_up(rows, br)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, rp - rows), (0, 0)))
+    kern = functools.partial(_layernorm_kernel, eps=eps)
+    out = pl.pallas_call(
+        kern,
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, d), jnp.float32),
+        interpret=True,
+    )(xp, gamma.astype(jnp.float32), beta.astype(jnp.float32))
+    return out[:rows]
+
+
+def _batchnorm_kernel(x_ref, scale_ref, shift_ref, o_ref):
+    # scale/shift are precomputed outside: scale = gamma*rsqrt(var+eps),
+    # shift = beta - mean*scale.  The kernel is a pure fused multiply-add.
+    o_ref[...] = (x_ref[...].astype(jnp.float32) * scale_ref[...]
+                  + shift_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def batchnorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              mean: jax.Array, var: jax.Array, eps: float = 1e-5,
+              *, br: int = 256) -> jax.Array:
+    """Inference BatchNorm on a 2-D view (rows, C); channel axis last."""
+    rows, c = x.shape
+    scale = (gamma * jax.lax.rsqrt(var.astype(jnp.float32) + eps))
+    shift = beta - mean * scale
+    br = tiles.pick_block(rows, br)
+    rp = tiles.round_up(rows, br)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, rp - rows), (0, 0)))
+    out = pl.pallas_call(
+        _batchnorm_kernel,
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, c), jnp.float32),
+        interpret=True,
+    )(xp, scale.astype(jnp.float32), shift.astype(jnp.float32))
+    return out[:rows]

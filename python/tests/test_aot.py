@@ -1,0 +1,66 @@
+"""AOT artifact tests: HLO text format, manifest integrity, topology JSON
+schema (what the rust loader depends on)."""
+import json
+import pathlib
+
+import pytest
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(),
+    reason="run `make artifacts` first")
+
+
+def test_manifest_lists_all_models():
+    m = json.loads((ART / "manifest.json").read_text())
+    assert set(m["models"]) == {
+        "resnet18", "mobilenet_v2", "mobilenet_v3_small", "vit_b16",
+        "swin_t"}
+    assert m["n_op_artifacts"] > 100
+
+
+@pytest.mark.parametrize("model", [
+    "resnet18", "mobilenet_v2", "mobilenet_v3_small", "vit_b16", "swin_t"])
+def test_topology_schema(model):
+    t = json.loads((ART / "models" / model / "topology.json").read_text())
+    assert t["model"] == model
+    weights = (ART / "models" / model / t["weights_file"])
+    assert weights.exists()
+    total = 0
+    for o in t["ops"]:
+        for key in ("id", "name", "kind", "class", "inputs",
+                    "exec_out_shape", "flops_paper", "sparsity_in",
+                    "sparsity_out", "weights"):
+            assert key in o, f"{model} op missing {key}"
+        assert 0.0 <= o["sparsity_out"] <= 1.0
+        for w in o["weights"]:
+            total = max(total, w["offset"] + w["numel"])
+        if o["kind"] not in ("input", "reshape"):
+            assert o["artifact"], f"{model}:{o['name']} missing artifact"
+            assert (ART / o["artifact"]).exists()
+    assert total * 4 == weights.stat().st_size
+
+
+def test_hlo_artifacts_are_text_modules():
+    ops = list((ART / "ops").glob("*.hlo.txt"))
+    assert len(ops) > 100
+    for p in ops[:20]:
+        head = p.read_text()[:200]
+        assert "HloModule" in head, f"{p.name} is not HLO text"
+
+
+def test_predictor_artifacts_present():
+    assert (ART / "predictor" / "thresh_predictor.hlo.txt").exists()
+    assert (ART / "predictor" / "cnn_predictor.hlo.txt").exists()
+    ds = json.loads((ART / "predictor" / "dataset.json").read_text())
+    acc = ds["accuracy"]
+    # Table 3 ordering: ours >> cnn >> lr on both outputs.
+    assert acc["ours"][0] > acc["cnn"][0] > acc["lr"][0]
+    assert acc["ours"][0] > 0.85 and acc["ours"][1] > 0.75
+    assert len(ds["lr_weights"]) == 2 and len(ds["lr_weights"][0]) == 7
+
+
+def test_devices_json_copied():
+    d = json.loads((ART / "devices.json").read_text())
+    assert "agx_orin" in d["devices"] and "orin_nano" in d["devices"]

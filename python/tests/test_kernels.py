@@ -1,0 +1,156 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes/sparsity with hypothesis.  This is the core correctness signal for
+the compute layer."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import conv as conv_k
+from compile.kernels import elementwise as ew_k
+from compile.kernels import matmul as mm_k
+from compile.kernels import norm as norm_k
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(mm_k.matmul(x, y), ref.matmul(x, y),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 40),
+       sparsity=st.floats(0.0, 1.0), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_sparse_matmul_matches_dense_ref(m, k, n, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k) * (rng.random((m, k)) > sparsity)
+    y = rand(rng, k, n)
+    np.testing.assert_allclose(mm_k.sparse_matmul(x.astype(np.float32), y),
+                               ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_matmul_all_zero_input():
+    x = np.zeros((33, 17), np.float32)
+    y = np.ones((17, 9), np.float32)
+    out = np.asarray(mm_k.sparse_matmul(x, y))
+    assert np.all(out == 0.0)
+
+
+@given(b=st.integers(1, 2), hw=st.integers(4, 12), cin=st.integers(1, 6),
+       cout=st.integers(1, 8), stride=st.sampled_from([1, 2]),
+       k=st.sampled_from([1, 3]), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_conv2d_matches_ref(b, hw, cin, cout, stride, k, seed):
+    rng = np.random.default_rng(seed)
+    pad = k // 2
+    x = rand(rng, b, hw, hw, cin)
+    w = rand(rng, k, k, cin, cout)
+    np.testing.assert_allclose(
+        conv_k.conv2d(x, w, stride=stride, padding=pad),
+        ref.conv2d(x, w, stride, pad), rtol=1e-3, atol=1e-3)
+
+
+@given(hw=st.integers(4, 12), c=st.integers(1, 10),
+       stride=st.sampled_from([1, 2]), k=st.sampled_from([3, 5]),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_depthwise_conv_matches_ref(hw, c, stride, k, seed):
+    rng = np.random.default_rng(seed)
+    pad = k // 2
+    x = rand(rng, 1, hw, hw, c)
+    w = rand(rng, k, k, c)
+    np.testing.assert_allclose(
+        conv_k.depthwise_conv2d(x, w, stride=stride, padding=pad),
+        ref.depthwise_conv2d(x, w, stride, pad), rtol=1e-3, atol=1e-3)
+
+
+@given(rows=st.integers(1, 200), d=st.integers(2, 96),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_layernorm_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x, g, b = rand(rng, rows, d), rand(rng, d), rand(rng, d)
+    np.testing.assert_allclose(norm_k.layernorm(x, g, b),
+                               ref.layernorm(x, g, b), rtol=1e-3, atol=1e-3)
+
+
+@given(rows=st.integers(1, 200), c=st.integers(1, 64),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_batchnorm_matches_ref(rows, c, seed):
+    rng = np.random.default_rng(seed)
+    x, g, b = rand(rng, rows, c), rand(rng, c), rand(rng, c)
+    mean = rand(rng, c)
+    var = (rng.random(c) + 0.05).astype(np.float32)
+    np.testing.assert_allclose(norm_k.batchnorm(x, g, b, mean, var),
+                               ref.batchnorm(x, g, b, mean, var),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(bh=st.integers(1, 8), t=st.integers(1, 24), d=st.integers(2, 24),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_attention_matches_ref(bh, t, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = rand(rng, bh, t, d), rand(rng, bh, t, d), rand(rng, bh, t, d)
+    want = np.stack([ref.attention(q[i], k[i], v[i]) for i in range(bh)])
+    np.testing.assert_allclose(attn_k.attention(q, k, v), want,
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(rows=st.integers(1, 100), d=st.integers(1, 64),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_softmax_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, rows, d) * 10.0
+    out = np.asarray(attn_k.softmax(x))
+    np.testing.assert_allclose(out, ref.softmax(x), rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(out.sum(-1), 1.0, rtol=1e-4)
+
+
+@pytest.mark.parametrize("name", ["relu", "relu6", "hardswish",
+                                  "hardsigmoid", "gelu"])
+@given(rows=st.integers(1, 120), d=st.integers(1, 80),
+       seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_elementwise_matches_ref(name, rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, rows, d) * 4.0
+    f = getattr(ew_k, name)
+    rf = getattr(ref, name)
+    np.testing.assert_allclose(f(x), rf(x), rtol=1e-4, atol=1e-5)
+
+
+def test_relu_produces_expected_sparsity():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 256, 256)
+    out = np.asarray(ew_k.relu(x))
+    sp = np.mean(out == 0.0)
+    assert 0.45 < sp < 0.55
+
+
+@given(hw=st.integers(4, 10), c=st.integers(1, 6), k=st.sampled_from([3]),
+       stride=st.sampled_from([1, 2]), seed=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_im2col_reconstructs_conv(hw, c, k, stride, seed):
+    rng = np.random.default_rng(seed)
+    cout = 5
+    x = rand(rng, 1, hw, hw, c)
+    w = rand(rng, k, k, c, cout)
+    cols = np.asarray(conv_k.im2col(x, k, k, stride, k // 2))
+    direct = np.asarray(ref.conv2d(x, w, stride, k // 2))
+    via = cols @ w.reshape(-1, cout)
+    np.testing.assert_allclose(via.reshape(direct.shape), direct,
+                               rtol=1e-3, atol=1e-3)

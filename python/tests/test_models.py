@@ -1,0 +1,96 @@
+"""L2 model-graph tests: structure, scale-zip invariants, FLOPs sanity,
+interpreter execution."""
+import math
+
+import numpy as np
+import pytest
+
+from compile import datagen, interp, model
+from compile.graph_ir import KIND_CLASS, KINDS, signature, zip_scales
+
+PAPER_PARAMS_M = {
+    # paper Table 2
+    "resnet18": 11.7,
+    "mobilenet_v2": 3.5,       # paper lists 2.5M for v2 / 3.5M for v3;
+    "mobilenet_v3_small": 2.5,  # the table's two rows are widely agreed to
+    "vit_b16": 86.0,            # be swapped (torchvision: v2=3.5M,
+    "swin_t": 28.0,             # v3-small=2.5M)
+}
+
+
+@pytest.mark.parametrize("name", list(model.MODELS))
+def test_scales_zip(name):
+    ge = model.build(name, "exec")
+    gp = model.build(name, "paper")
+    zip_scales(ge, gp)
+    assert ge.ops[0].kind == "input"
+    for op in ge.ops:
+        for i in op.inputs:
+            assert i < op.id, "topological order violated"
+        assert op.kind in KINDS
+        assert op.kind in KIND_CLASS
+
+
+@pytest.mark.parametrize("name,params_m", PAPER_PARAMS_M.items())
+def test_paper_param_counts(name, params_m):
+    gp = model.build(name, "paper")
+    total = sum(sum(math.prod(s) for s in o.param_shapes) for o in gp.ops)
+    assert abs(total / 1e6 - params_m) / params_m < 0.12, \
+        f"{name}: {total/1e6:.1f}M params vs paper {params_m}M"
+
+
+@pytest.mark.parametrize("name", list(model.MODELS))
+def test_op_counts_in_paper_ballpark(name):
+    # Table 2 lists 53-125 operators; our graphs count each primitive op.
+    gp = model.build(name, "paper")
+    assert 50 <= len(gp.ops) <= 200
+
+
+def test_flops_scale_with_resolution():
+    ge = model.build("resnet18", "exec")
+    gp = model.build("resnet18", "paper")
+    fe = sum(o.flops for o in ge.ops)
+    fp = sum(o.flops for o in gp.ops)
+    assert fp > 50 * fe
+
+
+def test_signatures_unique_per_distinct_shape():
+    g = model.build("mobilenet_v3_small", "exec")
+    convs = [o for o in g.ops if o.kind == "conv2d"]
+    sigs = {signature(o) for o in convs}
+    shapes = {(tuple(o.in_shapes[0]), tuple(o.param_shapes[0]),
+               tuple(sorted(o.attrs.items()))) for o in convs}
+    assert len(sigs) == len(shapes)
+
+
+@pytest.mark.parametrize("name", ["mobilenet_v2", "vit_b16"])
+def test_interpreter_runs_and_measures_sparsity(name):
+    g = model.build(name, "exec")
+    params = datagen.init_params(g, seed=3)
+    x = datagen.sample_input(g.input_shape, seed=0)
+    out, sp = interp.run(g, params, x)
+    assert tuple(out.shape) == g.ops[-1].out_shape
+    assert np.all(np.isfinite(out))
+    assert np.all((sp >= 0) & (sp <= 1))
+    if name == "mobilenet_v2":  # relu6 produces exact zeros
+        assert sp.max() > 0.3
+
+
+def test_weight_flattening_roundtrip():
+    g = model.build("resnet18", "exec")
+    params = datagen.init_params(g, seed=1)
+    buf, slices = datagen.flatten_params(params)
+    for op in g.ops:
+        for rec, p in zip(slices[op.id], params[op.id]):
+            got = buf[rec["offset"]:rec["offset"] + rec["numel"]]
+            np.testing.assert_array_equal(got, p.reshape(-1))
+            assert rec["shape"] == list(p.shape)
+
+
+def test_sparsity_knob_spreads_relu_outputs():
+    g = model.build("resnet18", "exec")
+    params = datagen.init_params(g, seed=5)
+    sp = interp.measure_sparsity(g, params, n_inputs=1)
+    relu_sp = [sp[o.id] for o in g.ops if o.kind == "relu"]
+    assert max(relu_sp) - min(relu_sp) > 0.3, \
+        "BN beta offsets should spread post-ReLU sparsity"

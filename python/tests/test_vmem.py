@@ -1,0 +1,54 @@
+"""L1 structural performance tests: every kernel configuration used by the
+exec- AND paper-scale models fits the VMEM budget with double-buffering,
+and the hot matmul path keeps MXU utilization high at paper scale."""
+import pytest
+
+from compile import model, vmem
+
+
+def test_default_matmul_tile_fits_and_saturates_mxu():
+    e = vmem.matmul_estimate(1024, 512, 1024)
+    assert e.fits_vmem
+    assert e.mxu_utilization == 1.0
+
+
+def test_paper_scale_convs_fit_vmem():
+    g = model.build("resnet18", "paper")
+    for op in g.ops:
+        if op.kind == "conv2d":
+            n, h, w, cin = op.in_shapes[0]
+            a = op.attrs
+            e = vmem.conv_estimate(n, h, w, a["cin"], a["cout"], a["kh"],
+                                   a["kw"], a["stride"], a["padding"])
+            assert e.fits_vmem, f"{op.name}: {e.vmem_bytes} bytes"
+
+
+def test_paper_scale_attention_fits_vmem():
+    for name in ("vit_b16", "swin_t"):
+        g = model.build(name, "paper")
+        for op in g.ops:
+            if op.kind == "attention":
+                b, t, three_c = op.in_shapes[0]
+                d = three_c // 3 // op.attrs["heads"]
+                e = vmem.attention_estimate(t, d)
+                assert e.fits_vmem, f"{name}:{op.name}"
+
+
+def test_heavy_paper_matmuls_keep_mxu_busy():
+    g = model.build("vit_b16", "paper")
+    utils = []
+    for op in g.ops:
+        if op.kind == "linear" and op.flops > 1e8:
+            rows = 1
+            for s in op.in_shapes[0][:-1]:
+                rows *= s
+            e = vmem.matmul_estimate(rows, op.attrs["din"],
+                                     op.attrs["dout"])
+            utils.append(e.mxu_utilization)
+    assert utils and min(utils) > 0.5, utils
+
+
+def test_dwconv_lane_occupancy_reported():
+    e = vmem.dwconv_estimate(56, 56, 96, 3, 3)
+    assert e.fits_vmem
+    assert 0.0 < e.mxu_utilization <= 1.0

@@ -1,0 +1,59 @@
+//! Figure 11: power and energy per inference on AGX Orin.  Paper: SparOA
+//! draws more instantaneous power than single-processor baselines (both
+//! engines active) yet achieves the lowest energy-per-inference —
+//! 7-16% below CoDL — because it finishes so much earlier.
+
+use sparoa::baselines::{Baseline, ALL};
+use sparoa::bench_support::{load_env, Table, MODELS};
+
+fn main() {
+    let Some((zoo, reg)) = load_env() else { return };
+    let dev = reg.get("agx_orin").unwrap();
+    let mut power = Table::new(
+        "Fig.11a — mean power per inference (W, AGX Orin)",
+        &["baseline", "resnet18", "mbv3-s", "mbv2", "vit_b16", "swin_t"],
+    );
+    let mut energy = Table::new(
+        "Fig.11b — energy per inference (mJ, AGX Orin)",
+        &["baseline", "resnet18", "mbv3-s", "mbv2", "vit_b16", "swin_t"],
+    );
+    let mut e = vec![vec![0.0f64; MODELS.len()]; ALL.len()];
+    let mut p = vec![vec![0.0f64; MODELS.len()]; ALL.len()];
+    for (mi, model) in MODELS.iter().enumerate() {
+        let g = zoo.get(model).unwrap();
+        for (bi, b) in ALL.iter().enumerate() {
+            let ep = if *b == Baseline::Sparoa { 40 } else { 0 };
+            let (_, rep) = b.run(g, dev, None, 1, ep);
+            let ledger = rep.ledger();
+            p[bi][mi] = ledger.mean_power_w(dev);
+            e[bi][mi] = ledger.energy_mj(dev);
+        }
+    }
+    for (bi, b) in ALL.iter().enumerate() {
+        let mut prow = vec![b.name().to_string()];
+        let mut erow = vec![b.name().to_string()];
+        for mi in 0..MODELS.len() {
+            prow.push(format!("{:.1}", p[bi][mi]));
+            erow.push(format!("{:.2}", e[bi][mi]));
+        }
+        power.row(prow);
+        energy.row(erow);
+    }
+    power.print();
+    energy.print();
+
+    let idx = |target: Baseline| ALL.iter().position(|b| *b == target)
+        .unwrap();
+    let sparoa = idx(Baseline::Sparoa);
+    let codl = idx(Baseline::CoDl);
+    let savings: Vec<f64> = (0..MODELS.len())
+        .map(|mi| 100.0 * (1.0 - e[sparoa][mi] / e[codl][mi]))
+        .collect();
+    let lo = savings.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = savings.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nEnergy saving vs CoDL: {lo:.0}%..{hi:.0}% (paper 7%..16%); \
+         SparOA power > single-processor baselines but lowest \
+         energy-per-inference."
+    );
+}

@@ -1,0 +1,45 @@
+//! Figure 12: memory usage per baseline on AGX Orin.  Paper: SparOA's
+//! sharded co-execution storage costs ~23.1% more memory than GPU-Only,
+//! comparable to IOS/POS and below CoDL (which replicates more state).
+
+use sparoa::baselines::{Baseline, ALL};
+use sparoa::bench_support::{load_env, Table, MODELS};
+
+fn main() {
+    let Some((zoo, reg)) = load_env() else { return };
+    let dev = reg.get("agx_orin").unwrap();
+    let mut t = Table::new(
+        "Fig.12 — peak memory footprint (MB, AGX Orin)",
+        &["baseline", "resnet18", "mbv3-s", "mbv2", "vit_b16", "swin_t"],
+    );
+    let mut mem = vec![vec![0.0f64; MODELS.len()]; ALL.len()];
+    for (mi, model) in MODELS.iter().enumerate() {
+        let g = zoo.get(model).unwrap();
+        for (bi, b) in ALL.iter().enumerate() {
+            let ep = if *b == Baseline::Sparoa { 30 } else { 0 };
+            let (_, rep) = b.run(g, dev, None, 1, ep);
+            mem[bi][mi] = rep.total_mem_mb();
+        }
+    }
+    for (bi, b) in ALL.iter().enumerate() {
+        let mut row = vec![b.name().to_string()];
+        for mi in 0..MODELS.len() {
+            row.push(format!("{:.0}", mem[bi][mi]));
+        }
+        t.row(row);
+    }
+    t.print();
+    let idx = |target: Baseline| ALL.iter().position(|b| *b == target)
+        .unwrap();
+    let overheads: Vec<f64> = (0..MODELS.len())
+        .map(|mi| {
+            100.0 * (mem[idx(Baseline::Sparoa)][mi]
+                     / mem[idx(Baseline::GpuOnlyPyTorch)][mi] - 1.0)
+        })
+        .collect();
+    let mean = overheads.iter().sum::<f64>() / overheads.len() as f64;
+    println!(
+        "\nSparOA memory overhead vs GPU-Only: mean {mean:.1}% \
+         (paper ~23.1%); should sit below CoDL and near IOS/POS."
+    );
+}

@@ -1,0 +1,60 @@
+//! Figure 2: sparsity x computational-intensity distribution of operators
+//! (MobileNetV3-Small on AGX Orin, batch 1) — the paper's motivating
+//! observation that the two metrics are orthogonal and all four quadrants
+//! are occupied.
+
+use sparoa::bench_support::{load_env, Table};
+use sparoa::profiler::{quadrant_counts, quadrant_profile, Quadrant};
+
+fn main() {
+    let Some((zoo, _)) = load_env() else { return };
+    for model in ["mobilenet_v3_small", "resnet18"] {
+        let g = zoo.get(model).unwrap();
+        let profiles = quadrant_profile(g);
+        let counts = quadrant_counts(&profiles);
+        let mut t = Table::new(
+            &format!("Fig.2 — operator quadrants, {model} (batch 1)"),
+            &["quadrant", "ops", "share", "paper's reading"],
+        );
+        let total: usize = counts.iter().map(|(_, n)| n).sum();
+        for (q, n) in counts {
+            let reading = match q {
+                Quadrant::DenseHeavy => "QI: dense+heavy -> GPU",
+                Quadrant::SparseHeavy => "QII: sparse+heavy (counter-intuitive)",
+                Quadrant::DenseLight => "QIII: dense+light, memory-bound",
+                Quadrant::SparseLight => "QIV: sparse+light -> CPU",
+            };
+            t.row(vec![
+                format!("{q:?}"),
+                n.to_string(),
+                format!("{:.0}%", 100.0 * n as f64 / total as f64),
+                reading.into(),
+            ]);
+        }
+        t.print();
+
+        // Scatter sample: the extreme op of each quadrant.
+        println!("  representative ops:");
+        for target in [
+            Quadrant::DenseHeavy,
+            Quadrant::SparseHeavy,
+            Quadrant::DenseLight,
+            Quadrant::SparseLight,
+        ] {
+            if let Some(p) = profiles
+                .iter()
+                .filter(|p| p.quadrant == target)
+                .max_by(|a, b| a.flops.partial_cmp(&b.flops).unwrap())
+            {
+                println!(
+                    "    {:?}: {} (kind {}, rho={:.2}, I={:.2e} FLOPs)",
+                    target, p.name, p.kind, p.sparsity, p.flops
+                );
+            }
+        }
+    }
+    println!(
+        "\nExpected shape (paper Fig.2): all four quadrants populated — \
+         sparsity and intensity are independent scheduling dimensions."
+    );
+}

@@ -1,0 +1,82 @@
+//! Figure 5: inference-latency comparison of SparOA against all baselines
+//! on the five models and both devices.  Paper headline numbers to match
+//! in *shape*: up to 50.7x over CPU-Only (MobileNetV3 on AGX), 1.22-1.31x
+//! over the SOTA compiler/co-execution baselines, 1.24-11.43x on Nano.
+
+use sparoa::baselines::{Baseline, ALL};
+use sparoa::bench_support::{load_env, Table, DEVICES, MODELS};
+
+fn main() {
+    let Some((zoo, reg)) = load_env() else { return };
+    let episodes = std::env::var("SPAROA_EPISODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+
+    let mut speedup_sota: Vec<f64> = Vec::new();
+    let mut speedup_cpu: Vec<f64> = Vec::new();
+    for device in DEVICES {
+        let dev = reg.get(device).unwrap();
+        let mut t = Table::new(
+            &format!("Fig.5 — latency on {device} (us, batch 1)"),
+            &["baseline", "resnet18", "mbv3-s", "mbv2", "vit_b16",
+              "swin_t"],
+        );
+        // latency[baseline][model]
+        let mut lat = vec![vec![0.0f64; MODELS.len()]; ALL.len()];
+        for (mi, model) in MODELS.iter().enumerate() {
+            let g = zoo.get(model).unwrap();
+            for (bi, b) in ALL.iter().enumerate() {
+                let ep = if *b == Baseline::Sparoa { episodes } else { 0 };
+                let (_, rep) = b.run(g, dev, None, 1, ep);
+                lat[bi][mi] = rep.makespan_us;
+            }
+        }
+        let sparoa_idx = ALL
+            .iter()
+            .position(|b| *b == Baseline::Sparoa)
+            .unwrap();
+        for (bi, b) in ALL.iter().enumerate() {
+            let mut row = vec![b.name().to_string()];
+            for mi in 0..MODELS.len() {
+                row.push(format!("{:.0}", lat[bi][mi]));
+            }
+            t.row(row);
+        }
+        t.print();
+
+        let mut s = Table::new(
+            &format!("Fig.5 — speedup of SparOA vs baseline ({device})"),
+            &["baseline", "resnet18", "mbv3-s", "mbv2", "vit_b16",
+              "swin_t"],
+        );
+        for (bi, b) in ALL.iter().enumerate() {
+            if bi == sparoa_idx {
+                continue;
+            }
+            let mut row = vec![b.name().to_string()];
+            for mi in 0..MODELS.len() {
+                let x = lat[bi][mi] / lat[sparoa_idx][mi];
+                row.push(format!("{x:.2}x"));
+                if matches!(b, Baseline::TensorRt | Baseline::Tvm
+                            | Baseline::Ios | Baseline::Pos
+                            | Baseline::CoDl) {
+                    speedup_sota.push(x);
+                }
+                if *b == Baseline::CpuOnly && device == "agx_orin" {
+                    speedup_cpu.push(x);
+                }
+            }
+            s.row(row);
+        }
+        s.print();
+    }
+    let mean_sota =
+        speedup_sota.iter().sum::<f64>() / speedup_sota.len() as f64;
+    let max_cpu = speedup_cpu.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "\nHeadline vs paper: mean speedup over SOTA \
+         compilers/co-execution = {mean_sota:.2}x (paper 1.22-1.31x); \
+         max over CPU-Only on AGX = {max_cpu:.1}x (paper 50.7x)."
+    );
+}

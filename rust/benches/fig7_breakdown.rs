@@ -1,0 +1,47 @@
+//! Figure 7: latency breakdown (compute / data transfer / other) for
+//! static SparOA (w/o RL, synchronous transfers) vs full SparOA.  Paper:
+//! the RL + async path cuts data-transfer latency by 14.1-20.8%.
+
+use sparoa::baselines::Baseline;
+use sparoa::bench_support::{load_env, Table, MODELS};
+use sparoa::profiler::breakdown;
+
+fn main() {
+    let Some((zoo, reg)) = load_env() else { return };
+    let dev = reg.get("agx_orin").unwrap();
+    let mut t = Table::new(
+        "Fig.7 — latency breakdown, static SparOA vs SparOA (AGX, us)",
+        &["model", "variant", "compute", "transfer", "launch+other",
+          "total"],
+    );
+    let mut reductions = Vec::new();
+    for model in MODELS {
+        let g = zoo.get(model).unwrap();
+        let (_, static_rep) =
+            Baseline::SparoaNoRl.run(g, dev, None, 1, 0);
+        let (_, full_rep) = Baseline::Sparoa.run(g, dev, None, 1, 40);
+        for (name, rep) in [("static", &static_rep), ("SparOA", &full_rep)] {
+            let b = breakdown(rep);
+            t.row(vec![
+                model.into(),
+                name.into(),
+                format!("{:.0}", b.compute_us),
+                format!("{:.0}", b.transfer_us),
+                format!("{:.0}", b.launch_us + b.other_us),
+                format!("{:.0}", b.makespan_us),
+            ]);
+        }
+        if static_rep.transfer_us > 0.0 {
+            reductions.push(
+                100.0 * (1.0 - full_rep.transfer_us
+                         / static_rep.transfer_us));
+        }
+    }
+    t.print();
+    let lo = reductions.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = reductions.iter().cloned().fold(0.0, f64::max);
+    println!(
+        "\nTransfer-latency reduction from async + RL: {lo:.1}%..{hi:.1}% \
+         (paper: 14.1%..20.8%)."
+    );
+}

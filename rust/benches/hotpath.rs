@@ -1,0 +1,109 @@
+//! Hot-path micro-benchmarks (the §Perf harness): per-op scheduling +
+//! dispatch cost, simulator throughput, SAC step cost, batcher step,
+//! JSON parse, and real PJRT op execution.  The SPAROA_DISPATCH_US
+//! constant in the device simulator must stay honest against the
+//! `engine dispatch decision` line below.
+
+use sparoa::bench_support::{bench, load_env};
+use sparoa::device::Proc;
+use sparoa::engine::sim::{op_cost_us, simulate, SimOptions};
+use sparoa::graph::OpClass;
+use sparoa::rl::env::SchedulingEnv;
+use sparoa::rl::replay::Transition;
+use sparoa::rl::sac::{Sac, SacConfig};
+use sparoa::runtime::{HostTensor, Runtime};
+use sparoa::scheduler::{greedy::GreedyScheduler, Schedule, ScheduleCtx,
+                        Scheduler};
+use sparoa::util::rng::Rng;
+
+fn main() {
+    let Some((zoo, reg)) = load_env() else { return };
+    let g = zoo.get("mobilenet_v3_small").unwrap();
+    let dev = reg.get("agx_orin").unwrap();
+    let opts = SimOptions::default();
+    let mut results = Vec::new();
+
+    // 1. Pure per-op cost evaluation (the innermost scheduling primitive).
+    results.push(bench("op_cost_us (single op)", 1000, 200000, || {
+        std::hint::black_box(op_cost_us(
+            dev, Proc::Gpu, OpClass::Conv, 1e7, 1e6, 0.4, &opts));
+    }));
+
+    // 2. Whole-model simulation (one inference on the virtual timeline).
+    let sched = Schedule::uniform(g, 1.0, "gpu");
+    results.push(bench("simulate() mobilenet_v3 (156 ops)", 20, 400, || {
+        std::hint::black_box(simulate(g, dev, &sched, &opts));
+    }));
+
+    // 3. Greedy full-model schedule.
+    let ctx = ScheduleCtx { graph: g, device: dev, thresholds: None,
+                            batch: 1 };
+    results.push(bench("greedy schedule (full model)", 10, 200, || {
+        std::hint::black_box(GreedyScheduler.schedule(&ctx));
+    }));
+
+    // 4. RL environment step + SAC action.
+    let mut env = SchedulingEnv::new(g, dev, 0.0, 1, 1);
+    let mut sac = Sac::new(SacConfig::default());
+    results.push(bench("env.step + sac.act (per op)", 200, 20000, || {
+        if env.done() {
+            env.reset(1);
+        }
+        let s = env.observe();
+        let a = sac.act(&s);
+        std::hint::black_box(env.step(a));
+    }));
+
+    // 5. SAC gradient update (batch 64).
+    for i in 0..256 {
+        sac.remember(Transition {
+            state: vec![0.1; 7],
+            action: (i % 10) as f64 / 10.0,
+            reward: -0.1,
+            next_state: vec![0.1; 7],
+            done: false,
+        });
+    }
+    results.push(bench("sac.update (batch 64)", 5, 100, || {
+        std::hint::black_box(sac.update());
+    }));
+
+    // 6. JSON parse of a topology file.
+    let topo = std::fs::read_to_string(
+        sparoa::artifacts_dir()
+            .join("models/mobilenet_v3_small/topology.json"))
+        .unwrap();
+    results.push(bench("json parse topology (156 ops)", 5, 100, || {
+        std::hint::black_box(sparoa::util::json::parse(&topo).unwrap());
+    }));
+
+    // 7. Real PJRT op execution (first conv of mobilenet).
+    let rt = Runtime::new(&sparoa::artifacts_dir()).unwrap();
+    let ws = sparoa::runtime::WeightStore::load(&g.weights_path).unwrap();
+    let conv = g.ops.iter()
+        .find(|o| o.kind == sparoa::graph::OpKind::Conv2d).unwrap();
+    let mut rng = Rng::new(1);
+    let n: usize = conv.exec_in_shapes[0].iter().product();
+    let mut args = vec![HostTensor::new(
+        conv.exec_in_shapes[0].clone(),
+        (0..n).map(|_| rng.normal() as f32).collect())];
+    args.extend(ws.op_params(conv).unwrap());
+    let artifact = conv.artifact.clone().unwrap();
+    rt.execute(&artifact, &args).unwrap(); // compile outside the loop
+    results.push(bench("pjrt execute (stem conv)", 5, 200, || {
+        std::hint::black_box(rt.execute(&artifact, &args).unwrap());
+    }));
+
+    println!("\n=== hotpath micro-benchmarks ===");
+    for r in &results {
+        println!("{}", r.report());
+    }
+    // Honesty check for the simulator's dispatch constant.
+    let decision = &results[3];
+    println!(
+        "\nper-op decision+dispatch = {:.2}us (simulator assumes \
+         SPAROA_DISPATCH_US = {}us)",
+        decision.mean_us,
+        sparoa::engine::sim::SPAROA_DISPATCH_US
+    );
+}

@@ -1,0 +1,184 @@
+//! Bench + test harness substrate (the vendored crate set has neither
+//! criterion nor proptest):
+//!
+//! * [`bench`] — wall-clock micro-benchmark with warm-up, mean/p50/p95.
+//! * [`Table`] — aligned console tables for the figure reproductions.
+//! * [`prop`] — a small property-testing loop over seeded random inputs.
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Load the model zoo + device registry for benches/examples; None (with a
+/// message) when `make artifacts` hasn't run.
+pub fn load_env() -> Option<(crate::graph::ModelZoo,
+                             crate::device::DeviceRegistry)> {
+    let art = crate::artifacts_dir();
+    if !art.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return None;
+    }
+    Some((
+        crate::graph::ModelZoo::load(&art).expect("loading model zoo"),
+        crate::device::DeviceRegistry::load(
+            &crate::repo_root().join("config/devices.json"))
+            .expect("loading device registry"),
+    ))
+}
+
+/// The five evaluation models in the paper's Table 2 order.
+pub const MODELS: [&str; 5] = [
+    "resnet18",
+    "mobilenet_v3_small",
+    "mobilenet_v2",
+    "vit_b16",
+    "swin_t",
+];
+
+pub const DEVICES: [&str; 2] = ["agx_orin", "orin_nano"];
+
+/// Timing result of a [`bench`] run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>10.2} us/iter (p50 {:>10.2}, p95 {:>10.2}, n={})",
+            self.name, self.mean_us, self.p50_us, self.p95_us, self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warm-up calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                         mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: stats::mean(&samples),
+        p50_us: stats::percentile(&samples, 50.0),
+        p95_us: stats::percentile(&samples, 95.0),
+    }
+}
+
+/// Aligned console table builder for figure/table reproductions.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                s.push_str(&format!("{:>width$}  ", c, width = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w + 2))
+                .collect::<String>()
+        );
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+/// Property-testing loop: runs `prop` against `cases` random inputs drawn
+/// by `gen`; on failure, reports the failing seed/case for reproduction.
+pub mod prop {
+    use super::Rng;
+
+    pub fn check<T, G, P>(name: &str, cases: usize, seed: u64,
+                          mut gen: G, mut prop: P)
+    where
+        G: FnMut(&mut Rng) -> T,
+        P: FnMut(&T) -> Result<(), String>,
+        T: std::fmt::Debug,
+    {
+        let mut rng = Rng::new(seed);
+        for case in 0..cases {
+            let input = gen(&mut rng);
+            if let Err(msg) = prop(&input) {
+                panic!(
+                    "property `{name}` failed at case {case} (seed {seed}):\n\
+                     input: {input:?}\n{msg}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, 20, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_us >= 0.0 && r.p95_us >= r.p50_us * 0.5);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new("t", &["a", "bb"]);
+        t.row(vec!["1".into(), "2222".into()]);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn prop_reports_failure() {
+        prop::check("fails", 10, 1, |r| r.below(100),
+                    |&x| if x < 1000 { Err(format!("x={x}")) } else { Ok(()) });
+    }
+
+    #[test]
+    fn prop_passes_good_property() {
+        prop::check("u64-below", 200, 2, |r| r.below(7),
+                    |&x| if x < 7 { Ok(()) } else { Err("oob".into()) });
+    }
+}

@@ -1,0 +1,124 @@
+//! Typed configuration system: paths + engine/scheduler knobs, loadable
+//! from a JSON file with CLI overrides (the launcher in main.rs).
+
+use crate::util::json::{self, Value};
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Top-level runtime configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// artifacts directory (AOT outputs).
+    pub artifacts: PathBuf,
+    /// device profile id (key in devices.json).
+    pub device: String,
+    /// model name (key in artifacts/models).
+    pub model: String,
+    /// scheduling policy: sac | greedy | dp | threshold | <baseline>.
+    pub policy: String,
+    /// batch size (0 = let Alg. 2 pick).
+    pub batch: usize,
+    /// SAC training episodes.
+    pub episodes: usize,
+    /// hardware-dynamics noise amplitude.
+    pub noise: f64,
+    /// serving: request rate (req/s) and count for `serve`.
+    pub request_rate: f64,
+    pub num_requests: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts: crate::artifacts_dir(),
+            device: "agx_orin".into(),
+            model: "mobilenet_v3_small".into(),
+            policy: "sac".into(),
+            batch: 1,
+            episodes: 60,
+            noise: 0.03,
+            request_rate: 50.0,
+            num_requests: 200,
+            seed: 1,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file, falling back to defaults per field.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing config: {e}"))?;
+        Ok(Self::from_json(&v))
+    }
+
+    pub fn from_json(v: &Value) -> Self {
+        let d = Config::default();
+        Config {
+            artifacts: v
+                .get("artifacts")
+                .as_str()
+                .map(PathBuf::from)
+                .unwrap_or(d.artifacts),
+            device: v.get("device").as_str().unwrap_or(&d.device).into(),
+            model: v.get("model").as_str().unwrap_or(&d.model).into(),
+            policy: v.get("policy").as_str().unwrap_or(&d.policy).into(),
+            batch: v.get("batch").as_usize().unwrap_or(d.batch),
+            episodes: v.get("episodes").as_usize().unwrap_or(d.episodes),
+            noise: v.get("noise").as_f64().unwrap_or(d.noise),
+            request_rate: v
+                .get("request_rate")
+                .as_f64()
+                .unwrap_or(d.request_rate),
+            num_requests: v
+                .get("num_requests")
+                .as_usize()
+                .unwrap_or(d.num_requests),
+            seed: v.get("seed").as_f64().map(|x| x as u64).unwrap_or(d.seed),
+        }
+    }
+
+    /// Apply `--key=value` style overrides.
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "artifacts" => self.artifacts = PathBuf::from(value),
+            "device" => self.device = value.into(),
+            "model" => self.model = value.into(),
+            "policy" => self.policy = value.into(),
+            "batch" => self.batch = value.parse()?,
+            "episodes" => self.episodes = value.parse()?,
+            "noise" => self.noise = value.parse()?,
+            "request_rate" => self.request_rate = value.parse()?,
+            "num_requests" => self.num_requests = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            other => anyhow::bail!("unknown config key `{other}`"),
+        }
+        Ok(())
+    }
+
+    pub fn devices_json(&self) -> PathBuf {
+        self.artifacts.join("devices.json")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_and_overrides() {
+        let v = json::parse(
+            r#"{"model": "vit_b16", "batch": 4, "noise": 0.1}"#).unwrap();
+        let mut c = Config::from_json(&v);
+        assert_eq!(c.model, "vit_b16");
+        assert_eq!(c.batch, 4);
+        assert!((c.noise - 0.1).abs() < 1e-12);
+        assert_eq!(c.device, "agx_orin"); // default preserved
+        c.apply_override("device", "orin_nano").unwrap();
+        assert_eq!(c.device, "orin_nano");
+        assert!(c.apply_override("bogus", "1").is_err());
+        assert!(c.apply_override("batch", "not_a_number").is_err());
+    }
+}

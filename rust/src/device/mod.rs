@@ -1,0 +1,392 @@
+//! Heterogeneous device substrate: the calibrated Jetson CPU/GPU roofline
+//! simulator (substitution for the physical Orin boards — DESIGN.md §2).
+//!
+//! Mirrors python/compile/device_model.py exactly; `rust/tests/` checks
+//! parity against a golden table.  All latencies are microseconds.
+
+use crate::graph::OpClass;
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which processor an operator (or fraction of it) runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Proc {
+    Cpu,
+    Gpu,
+}
+
+impl Proc {
+    pub fn name(self) -> &'static str {
+        match self {
+            Proc::Cpu => "cpu",
+            Proc::Gpu => "gpu",
+        }
+    }
+    pub fn other(self) -> Proc {
+        match self {
+            Proc::Cpu => Proc::Gpu,
+            Proc::Gpu => Proc::Cpu,
+        }
+    }
+}
+
+/// Per-processor roofline parameters.
+#[derive(Debug, Clone)]
+pub struct ProcModel {
+    pub peak_gflops: f64,
+    pub mem_bw_gbps: f64,
+    pub launch_overhead_us: f64,
+    pub util: BTreeMap<String, f64>,
+    pub sparsity_elasticity: BTreeMap<String, f64>,
+    pub power_static_w: f64,
+    pub power_dyn_w: f64,
+}
+
+impl ProcModel {
+    fn from_json(v: &Value) -> Result<Self> {
+        let map = |key: &str| -> BTreeMap<String, f64> {
+            v.get(key)
+                .as_obj()
+                .map(|o| {
+                    o.iter()
+                        .filter_map(|(k, x)| x.as_f64().map(|f| (k.clone(), f)))
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        Ok(ProcModel {
+            peak_gflops: v.f64_of("peak_gflops"),
+            mem_bw_gbps: v.f64_of("mem_bw_gbps"),
+            launch_overhead_us: v.f64_of("launch_overhead_us"),
+            util: map("util"),
+            sparsity_elasticity: map("sparsity_elasticity"),
+            power_static_w: v.f64_of("power_static_w"),
+            power_dyn_w: v.f64_of("power_dyn_w"),
+        })
+    }
+}
+
+/// GPU effective-bandwidth ramp: transfers below this size run below peak
+/// DRAM bandwidth (kernel ramp-up, partial bursts).  Mirrored in
+/// python/compile/device_model.py — the parity test pins both.
+pub const GPU_BW_RAMP_BYTES: f64 = 4e6;
+pub const GPU_BW_RAMP_FLOOR: f64 = 0.12;
+
+/// Transfer-path parameters (pinned DMA + async streams).
+#[derive(Debug, Clone)]
+pub struct TransferModel {
+    pub dma_bw_gbps: f64,
+    pub dma_latency_us: f64,
+    pub pageable_penalty: f64,
+    pub async_overlap: f64,
+}
+
+/// One edge device (Orin Nano / AGX Orin) profile.
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub id: String,
+    pub name: String,
+    pub cpu: ProcModel,
+    pub gpu: ProcModel,
+    pub transfer: TransferModel,
+    pub soc_static_w: f64,
+    pub gpu_mem_capacity_mb: f64,
+    pub min_util_floor: f64,
+}
+
+impl DeviceModel {
+    pub fn proc(&self, p: Proc) -> &ProcModel {
+        match p {
+            Proc::Cpu => &self.cpu,
+            Proc::Gpu => &self.gpu,
+        }
+    }
+
+    /// Roofline latency of one op on one processor (microseconds).
+    ///
+    /// `t = max(eff_flops / rate, bytes / bw) + launch`
+    /// `eff_flops = flops * (1 - sparsity * elasticity[class])`
+    pub fn op_latency_us(
+        &self,
+        proc: Proc,
+        class: OpClass,
+        flops: f64,
+        bytes_moved: f64,
+        sparsity: f64,
+    ) -> f64 {
+        let (t_compute, t_mem, launch) =
+            self.op_cost_parts_us(proc, class, flops, bytes_moved, sparsity);
+        t_compute.max(t_mem) + launch
+    }
+
+    /// Roofline components: (compute_us, mem_us, launch_us).
+    pub fn op_cost_parts_us(
+        &self,
+        proc: Proc,
+        class: OpClass,
+        flops: f64,
+        bytes_moved: f64,
+        sparsity: f64,
+    ) -> (f64, f64, f64) {
+        let p = self.proc(proc);
+        let key = class.key();
+        let util = p
+            .util
+            .get(key)
+            .or_else(|| p.util.get("other"))
+            .copied()
+            .unwrap_or(0.3)
+            .max(self.min_util_floor);
+        let elast = p.sparsity_elasticity.get(key).copied().unwrap_or(0.0);
+        let eff = flops * (1.0 - sparsity.clamp(0.0, 1.0) * elast);
+        let t_compute = eff / (p.peak_gflops * util * 1e9) * 1e6;
+        // GPU DMA engines need large transfers to reach peak bandwidth;
+        // small tensors see a ramp (CPU caches make it a non-issue there).
+        let bw_eff = match proc {
+            Proc::Gpu => {
+                let ramp = (bytes_moved / GPU_BW_RAMP_BYTES)
+                    .powf(0.5)
+                    .clamp(GPU_BW_RAMP_FLOOR, 1.0);
+                p.mem_bw_gbps * ramp
+            }
+            Proc::Cpu => p.mem_bw_gbps,
+        };
+        let t_mem = bytes_moved / (bw_eff * 1e9) * 1e6;
+        (t_compute, t_mem, p.launch_overhead_us)
+    }
+
+    /// CPU<->GPU transfer latency (microseconds).
+    pub fn transfer_us(&self, bytes: f64, pinned: bool, overlap: bool) -> f64 {
+        let t = &self.transfer;
+        let mut lat = t.dma_latency_us + bytes / (t.dma_bw_gbps * 1e9) * 1e6;
+        if !pinned {
+            lat *= t.pageable_penalty;
+        }
+        if overlap {
+            lat *= 1.0 - t.async_overlap;
+        }
+        lat
+    }
+}
+
+/// All device profiles from devices.json.
+pub struct DeviceRegistry {
+    pub devices: BTreeMap<String, DeviceModel>,
+}
+
+impl DeviceRegistry {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing devices.json: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut devices = BTreeMap::new();
+        for (id, d) in v.get("devices").as_obj().context("devices")? {
+            let t = d.get("transfer");
+            devices.insert(
+                id.clone(),
+                DeviceModel {
+                    id: id.clone(),
+                    name: d.str_of("name").to_string(),
+                    cpu: ProcModel::from_json(d.get("cpu"))?,
+                    gpu: ProcModel::from_json(d.get("gpu"))?,
+                    transfer: TransferModel {
+                        dma_bw_gbps: t.f64_of("dma_bw_gbps"),
+                        dma_latency_us: t.f64_of("dma_latency_us"),
+                        pageable_penalty: t.f64_of("pageable_penalty"),
+                        async_overlap: t.f64_of("async_overlap"),
+                    },
+                    soc_static_w: d.f64_of("soc_static_w"),
+                    gpu_mem_capacity_mb: d.f64_of("gpu_mem_capacity_mb"),
+                    min_util_floor: d.f64_of("min_util_floor"),
+                },
+            );
+        }
+        Ok(DeviceRegistry { devices })
+    }
+
+    pub fn get(&self, id: &str) -> Result<&DeviceModel> {
+        self.devices
+            .get(id)
+            .with_context(|| format!("device `{id}` not in devices.json"))
+    }
+}
+
+/// Dynamic hardware state (paper Eq. 7's M_gpu / M_cpu / O_switch terms).
+///
+/// Evolves as ops are dispatched: GPU memory fills with resident
+/// activations/weights, CPU load tracks an EMA of recent CPU work, and
+/// contention adds stochastic jitter (the "hardware dynamics" of the MDP
+/// transition model, §4.1).
+#[derive(Debug, Clone)]
+pub struct HardwareState {
+    /// GPU memory in use, MB.
+    pub gpu_mem_mb: f64,
+    /// GPU memory capacity, MB.
+    pub gpu_cap_mb: f64,
+    /// CPU load level in [0, 1].
+    pub cpu_load: f64,
+    /// Count of device switches so far in the episode.
+    pub switches: u32,
+    /// Last placement (for switch-overhead accounting).
+    pub last_proc: Option<Proc>,
+    rng: Rng,
+    /// Contention noise amplitude (0 disables stochastic dynamics).
+    pub noise: f64,
+}
+
+impl HardwareState {
+    pub fn new(dev: &DeviceModel, seed: u64, noise: f64) -> Self {
+        HardwareState {
+            gpu_mem_mb: 0.15 * dev.gpu_mem_capacity_mb, // framework baseline
+            gpu_cap_mb: dev.gpu_mem_capacity_mb,
+            cpu_load: 0.1,
+            switches: 0,
+            last_proc: None,
+            rng: Rng::new(seed),
+            noise,
+        }
+    }
+
+    /// Normalized GPU memory pressure in [0, 1].
+    pub fn gpu_pressure(&self) -> f64 {
+        (self.gpu_mem_mb / self.gpu_cap_mb).clamp(0.0, 1.0)
+    }
+
+    /// Latency multiplier from contention: GPU slows superlinearly as
+    /// memory pressure approaches capacity; CPU slows with load.
+    pub fn contention_factor(&mut self, proc: Proc) -> f64 {
+        let base = match proc {
+            Proc::Gpu => {
+                let p = self.gpu_pressure();
+                if p > 0.8 {
+                    1.0 + 3.0 * (p - 0.8)
+                } else {
+                    1.0
+                }
+            }
+            Proc::Cpu => 1.0 + 0.5 * self.cpu_load,
+        };
+        let jitter = 1.0 + self.noise * self.rng.normal().clamp(-2.5, 2.5);
+        base * jitter.max(0.5)
+    }
+
+    /// Account an op dispatched to `proc` with the given working set.
+    pub fn dispatch(&mut self, proc: Proc, bytes_out: f64, params_bytes: f64) {
+        if let Some(last) = self.last_proc {
+            if last != proc {
+                self.switches += 1;
+            }
+        }
+        self.last_proc = Some(proc);
+        match proc {
+            Proc::Gpu => {
+                self.gpu_mem_mb += (bytes_out + params_bytes) / 1e6;
+                // resident set decays as earlier activations are freed
+                self.gpu_mem_mb = self.gpu_mem_mb.min(self.gpu_cap_mb);
+                self.cpu_load *= 0.97;
+            }
+            Proc::Cpu => {
+                self.cpu_load = (self.cpu_load * 0.9 + 0.1).min(1.0);
+                self.gpu_mem_mb *= 0.995; // GPU allocator reclaims
+            }
+        }
+    }
+
+    /// Free activation memory after consumers are done (simplified decay).
+    pub fn release(&mut self, bytes: f64) {
+        self.gpu_mem_mb = (self.gpu_mem_mb - bytes / 1e6).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn test_registry() -> DeviceRegistry {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        DeviceRegistry::load(&root.join("config/devices.json")).unwrap()
+    }
+
+    #[test]
+    fn loads_profiles() {
+        let reg = test_registry();
+        let agx = reg.get("agx_orin").unwrap();
+        assert_eq!(agx.name, "NVIDIA Jetson AGX Orin");
+        assert!(agx.gpu.peak_gflops > agx.cpu.peak_gflops);
+        assert!(reg.get("orin_nano").is_ok());
+        assert!(reg.get("nonexistent").is_err());
+    }
+
+    #[test]
+    fn gpu_wins_heavy_dense_cpu_wins_light() {
+        let reg = test_registry();
+        let d = reg.get("agx_orin").unwrap();
+        // Heavy dense conv: GPU strictly faster.
+        let gpu = d.op_latency_us(Proc::Gpu, OpClass::Conv, 2e9, 1e7, 0.0);
+        let cpu = d.op_latency_us(Proc::Cpu, OpClass::Conv, 2e9, 1e7, 0.0);
+        assert!(gpu < cpu, "gpu {gpu} vs cpu {cpu}");
+        // Tiny norm op: CPU faster (GPU pays launch overhead).
+        let gpu = d.op_latency_us(Proc::Gpu, OpClass::Norm, 1e4, 1e4, 0.0);
+        let cpu = d.op_latency_us(Proc::Cpu, OpClass::Norm, 1e4, 1e4, 0.0);
+        assert!(cpu < gpu, "cpu {cpu} vs gpu {gpu}");
+    }
+
+    #[test]
+    fn sparsity_helps_cpu_more() {
+        let reg = test_registry();
+        let d = reg.get("agx_orin").unwrap();
+        let cpu_dense = d.op_latency_us(Proc::Cpu, OpClass::Conv, 1e9, 1e5, 0.0);
+        let cpu_sparse = d.op_latency_us(Proc::Cpu, OpClass::Conv, 1e9, 1e5, 0.8);
+        let gpu_dense = d.op_latency_us(Proc::Gpu, OpClass::Conv, 1e9, 1e5, 0.0);
+        let gpu_sparse = d.op_latency_us(Proc::Gpu, OpClass::Conv, 1e9, 1e5, 0.8);
+        let cpu_gain = cpu_dense / cpu_sparse;
+        let gpu_gain = gpu_dense / gpu_sparse;
+        assert!(cpu_gain > 2.0, "cpu gain {cpu_gain}");
+        assert!(gpu_gain < 1.3, "gpu gain {gpu_gain}");
+    }
+
+    #[test]
+    fn transfer_modes() {
+        let reg = test_registry();
+        let d = reg.get("agx_orin").unwrap();
+        let sync = d.transfer_us(1e6, true, false);
+        let pageable = d.transfer_us(1e6, false, false);
+        let overlapped = d.transfer_us(1e6, true, true);
+        assert!(pageable > 2.0 * sync);
+        assert!(overlapped < 0.3 * sync);
+    }
+
+    #[test]
+    fn hardware_state_evolves() {
+        let reg = test_registry();
+        let d = reg.get("orin_nano").unwrap();
+        let mut hs = HardwareState::new(d, 1, 0.0);
+        let m0 = hs.gpu_mem_mb;
+        hs.dispatch(Proc::Gpu, 50e6, 10e6);
+        assert!(hs.gpu_mem_mb > m0);
+        hs.dispatch(Proc::Cpu, 1e6, 0.0);
+        assert_eq!(hs.switches, 1);
+        assert!(hs.cpu_load > 0.1);
+        hs.release(20e6);
+        assert!(hs.gpu_mem_mb < m0 + 60.0);
+    }
+
+    #[test]
+    fn contention_kicks_in_near_capacity() {
+        let reg = test_registry();
+        let d = reg.get("orin_nano").unwrap();
+        let mut hs = HardwareState::new(d, 1, 0.0);
+        hs.gpu_mem_mb = 0.95 * hs.gpu_cap_mb;
+        assert!(hs.contention_factor(Proc::Gpu) > 1.2);
+        hs.gpu_mem_mb = 0.1 * hs.gpu_cap_mb;
+        assert!((hs.contention_factor(Proc::Gpu) - 1.0).abs() < 1e-9);
+    }
+}

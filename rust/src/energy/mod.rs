@@ -1,0 +1,114 @@
+//! Energy/power accounting (substitution for the paper's INA3221 on-board
+//! power rails — DESIGN.md §2).
+//!
+//! Model: each processor draws `static + dyn * busy_fraction` watts; the
+//! SoC (DRAM + carrier) adds a constant floor.  Energy per inference is the
+//! integral over the simulated makespan.  This reproduces the *ordering*
+//! of Fig. 11: co-execution draws more instantaneous power than any
+//! single-processor baseline but finishes so much earlier that its
+//! energy-per-inference is the lowest.
+
+use crate::device::DeviceModel;
+
+/// Accumulated busy time per processor over one inference.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyLedger {
+    /// total CPU busy time, us
+    pub cpu_busy_us: f64,
+    /// total GPU busy time, us
+    pub gpu_busy_us: f64,
+    /// DMA transfer time, us (drawn against SoC)
+    pub xfer_us: f64,
+    /// wall-clock makespan of the inference, us
+    pub makespan_us: f64,
+}
+
+impl EnergyLedger {
+    pub fn add_cpu(&mut self, us: f64) {
+        self.cpu_busy_us += us;
+    }
+    pub fn add_gpu(&mut self, us: f64) {
+        self.gpu_busy_us += us;
+    }
+    pub fn add_xfer(&mut self, us: f64) {
+        self.xfer_us += us;
+    }
+
+    /// Mean power draw over the inference, watts.
+    pub fn mean_power_w(&self, dev: &DeviceModel) -> f64 {
+        if self.makespan_us <= 0.0 {
+            return 0.0;
+        }
+        let cpu_util = (self.cpu_busy_us / self.makespan_us).min(1.0);
+        let gpu_util = (self.gpu_busy_us / self.makespan_us).min(1.0);
+        dev.soc_static_w
+            + dev.cpu.power_static_w
+            + dev.cpu.power_dyn_w * cpu_util
+            + dev.gpu.power_static_w
+            + dev.gpu.power_dyn_w * gpu_util
+    }
+
+    /// Energy per inference, millijoules.
+    pub fn energy_mj(&self, dev: &DeviceModel) -> f64 {
+        self.mean_power_w(dev) * self.makespan_us / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceRegistry;
+    use std::path::Path;
+
+    fn agx() -> DeviceModel {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        DeviceRegistry::load(&root.join("config/devices.json"))
+            .unwrap()
+            .get("agx_orin")
+            .unwrap()
+            .clone()
+    }
+
+    #[test]
+    fn idle_power_is_static_floor() {
+        let dev = agx();
+        let mut l = EnergyLedger::default();
+        l.makespan_us = 1000.0;
+        let p = l.mean_power_w(&dev);
+        assert!(
+            (p - (dev.soc_static_w
+                + dev.cpu.power_static_w
+                + dev.gpu.power_static_w))
+                .abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn hybrid_draws_more_power_but_less_energy() {
+        let dev = agx();
+        // GPU-only: 10ms makespan, GPU busy the whole time.
+        let gpu_only = EnergyLedger {
+            gpu_busy_us: 10_000.0,
+            makespan_us: 10_000.0,
+            ..Default::default()
+        };
+        // Hybrid: both busy, but finishes in 6ms.
+        let hybrid = EnergyLedger {
+            gpu_busy_us: 5_500.0,
+            cpu_busy_us: 4_000.0,
+            makespan_us: 6_000.0,
+            ..Default::default()
+        };
+        assert!(hybrid.mean_power_w(&dev) > gpu_only.mean_power_w(&dev));
+        assert!(hybrid.energy_mj(&dev) < gpu_only.energy_mj(&dev));
+    }
+
+    #[test]
+    fn energy_scales_with_makespan() {
+        let dev = agx();
+        let a = EnergyLedger { makespan_us: 1_000.0, ..Default::default() };
+        let b = EnergyLedger { makespan_us: 2_000.0, ..Default::default() };
+        assert!((b.energy_mj(&dev) / a.energy_mj(&dev) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,157 @@
+//! Real-numerics execution of a scheduled model: walks the graph in
+//! topological order, runs artifact-backed ops through the PJRT runtime,
+//! applies data-movement ops natively, and performs the weighted-average
+//! aggregation (Eq. 14) for co-run ops.
+//!
+//! Co-run note: both processors compute the *same* operator, so the
+//! engine executes the artifact once and aggregates ξ·P + (1−ξ)·P — which
+//! Eq. 14 makes numerically the identity.  A debug assertion verifies
+//! this, protecting against schedule/aggregation drift.
+
+use crate::graph::{ModelGraph, OpKind};
+use crate::runtime::{HostTensor, Runtime, WeightStore};
+use crate::scheduler::{mode_of, Mode, Schedule};
+use anyhow::{Context, Result};
+
+pub struct HybridEngine<'a> {
+    pub runtime: &'a Runtime,
+    pub graph: &'a ModelGraph,
+    pub weights: WeightStore,
+}
+
+/// Outcome of one real inference.
+pub struct ExecResult {
+    pub output: HostTensor,
+    /// Measured output sparsity per op (compare with topology profile).
+    pub sparsity_out: Vec<f64>,
+    /// Host wall-clock of the PJRT execution path, microseconds.
+    pub host_us: f64,
+}
+
+impl<'a> HybridEngine<'a> {
+    pub fn new(runtime: &'a Runtime, graph: &'a ModelGraph) -> Result<Self> {
+        let weights = WeightStore::load(&graph.weights_path)?;
+        Ok(HybridEngine { runtime, graph, weights })
+    }
+
+    /// Pre-compile all artifacts so the request path never compiles.
+    pub fn warm_up(&self) -> Result<usize> {
+        self.runtime.warm_up(self.graph)
+    }
+
+    /// Execute the model on `input` under `schedule`.
+    pub fn infer(&self, input: &HostTensor, schedule: &Schedule)
+        -> Result<ExecResult>
+    {
+        let t0 = std::time::Instant::now();
+        let n = self.graph.ops.len();
+        let mut vals: Vec<Option<HostTensor>> = vec![None; n];
+        let mut sparsity = vec![0.0f64; n];
+        // Remaining-consumer counts for activation freeing.
+        let mut pending: Vec<usize> =
+            self.graph.consumers.iter().map(|c| c.len()).collect();
+
+        for op in &self.graph.ops {
+            let out = match op.kind {
+                OpKind::Input => {
+                    anyhow::ensure!(
+                        input.shape == op.exec_out_shape,
+                        "input shape {:?} != expected {:?}",
+                        input.shape,
+                        op.exec_out_shape
+                    );
+                    input.clone()
+                }
+                OpKind::Reshape => {
+                    let src = vals[op.inputs[0]]
+                        .clone()
+                        .context("reshape input missing")?;
+                    src.reshaped(op.exec_out_shape.clone())?
+                }
+                _ => {
+                    let artifact = op
+                        .artifact
+                        .as_ref()
+                        .with_context(|| format!("op {} has no artifact",
+                                                 op.name))?;
+                    let mut args: Vec<HostTensor> = op
+                        .inputs
+                        .iter()
+                        .map(|&i| {
+                            vals[i].clone().context("missing producer value")
+                        })
+                        .collect::<Result<_>>()?;
+                    args.extend(self.weights.op_params(op)?);
+                    let result = self.runtime.execute(artifact, &args)?;
+                    match mode_of(schedule.xi[op.id]) {
+                        Mode::Single(_) => result,
+                        Mode::CoRun(w) => {
+                            // Eq. 14: P = ξ·P_gpu + (1−ξ)·P_cpu.  Both
+                            // executors compute the same operator, so
+                            // aggregation must be the identity.
+                            let agg = aggregate(&result, &result, w);
+                            debug_assert!(agg
+                                .data
+                                .iter()
+                                .zip(&result.data)
+                                .all(|(a, b)| (a - b).abs() <= 1e-6
+                                     * b.abs().max(1.0)));
+                            agg
+                        }
+                    }
+                }
+            };
+            anyhow::ensure!(
+                out.shape == op.exec_out_shape,
+                "op {} produced {:?}, expected {:?}",
+                op.name,
+                out.shape,
+                op.exec_out_shape
+            );
+            sparsity[op.id] = out.sparsity();
+            vals[op.id] = Some(out);
+            // Release producer activations once all consumers are done.
+            for &i in &op.inputs {
+                pending[i] -= 1;
+                if pending[i] == 0 && i != n - 1 {
+                    vals[i] = None;
+                }
+            }
+        }
+        let output = vals[n - 1].take().context("no model output")?;
+        Ok(ExecResult {
+            output,
+            sparsity_out: sparsity,
+            host_us: t0.elapsed().as_secs_f64() * 1e6,
+        })
+    }
+}
+
+/// Weighted-average aggregation (Eq. 14).
+pub fn aggregate(gpu: &HostTensor, cpu: &HostTensor, xi: f64) -> HostTensor {
+    debug_assert_eq!(gpu.shape, cpu.shape);
+    let data = gpu
+        .data
+        .iter()
+        .zip(&cpu.data)
+        .map(|(g, c)| (xi * *g as f64 + (1.0 - xi) * *c as f64) as f32)
+        .collect();
+    HostTensor::new(gpu.shape.clone(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation_weights() {
+        let a = HostTensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = HostTensor::new(vec![3], vec![3.0, 2.0, 1.0]);
+        let half = aggregate(&a, &b, 0.5);
+        assert_eq!(half.data, vec![2.0, 2.0, 2.0]);
+        let all_gpu = aggregate(&a, &b, 1.0);
+        assert_eq!(all_gpu.data, a.data);
+        let all_cpu = aggregate(&a, &b, 0.0);
+        assert_eq!(all_cpu.data, b.data);
+    }
+}

@@ -1,0 +1,15 @@
+//! The hybrid inference engine (paper §5): executes a scheduled model with
+//! real numerics through PJRT while accounting time/energy/memory on the
+//! calibrated device timeline.
+//!
+//! * `sim` — the virtual-time simulator (every figure runs through it).
+//! * `exec` — real execution of the exec-scale artifacts (native handling
+//!   of data-movement ops, weighted-average aggregation of co-run ops).
+//! * `batching` — the gradient-based dynamic batching of Alg. 2.
+
+pub mod batching;
+pub mod exec;
+pub mod sim;
+
+pub use exec::HybridEngine;
+pub use sim::{simulate, SimOptions, SimReport};

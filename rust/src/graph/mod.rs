@@ -1,0 +1,361 @@
+//! Operator-graph IR: the rust-side mirror of python/compile/graph_ir.py.
+//!
+//! A [`ModelGraph`] is loaded from `artifacts/models/<name>/topology.json`
+//! and carries, per operator: kind/class, dependencies, exec-scale shapes
+//! (for PJRT execution), paper-scale FLOPs/bytes (for the device
+//! simulator), measured activation sparsity, HLO artifact reference and
+//! weight slices.
+
+use crate::util::json::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Operator kind — must stay in sync with `graph_ir.KINDS`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Input,
+    Conv2d,
+    DwConv,
+    Linear,
+    MatMul,
+    BatchNorm,
+    LayerNorm,
+    Relu,
+    Relu6,
+    HardSwish,
+    HardSigmoid,
+    Gelu,
+    Softmax,
+    Attention,
+    Add,
+    Mul,
+    MaxPool,
+    AvgPool,
+    GlobalAvgPool,
+    Reshape,
+    Roll,
+    Concat,
+    WindowPart,
+    WindowRev,
+    SpaceToDepth,
+}
+
+impl OpKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "input" => Self::Input,
+            "conv2d" => Self::Conv2d,
+            "dwconv" => Self::DwConv,
+            "linear" => Self::Linear,
+            "matmul" => Self::MatMul,
+            "batchnorm" => Self::BatchNorm,
+            "layernorm" => Self::LayerNorm,
+            "relu" => Self::Relu,
+            "relu6" => Self::Relu6,
+            "hardswish" => Self::HardSwish,
+            "hardsigmoid" => Self::HardSigmoid,
+            "gelu" => Self::Gelu,
+            "softmax" => Self::Softmax,
+            "attention" => Self::Attention,
+            "add" => Self::Add,
+            "mul" => Self::Mul,
+            "maxpool" => Self::MaxPool,
+            "avgpool" => Self::AvgPool,
+            "globalavgpool" => Self::GlobalAvgPool,
+            "reshape" => Self::Reshape,
+            "roll" => Self::Roll,
+            "concat" => Self::Concat,
+            "window_part" => Self::WindowPart,
+            "window_rev" => Self::WindowRev,
+            "space_to_depth" => Self::SpaceToDepth,
+            other => bail!("unknown op kind `{other}`"),
+        })
+    }
+
+    /// True for ops the engine applies natively (pure data movement on the
+    /// host buffer) instead of via a PJRT executable.
+    pub fn is_native(self) -> bool {
+        matches!(self, Self::Input | Self::Reshape)
+    }
+}
+
+/// Device-model op class (keys in devices.json `util` tables).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    MatMul,
+    Conv,
+    DwConv,
+    Attention,
+    Norm,
+    Elementwise,
+    Pool,
+    Softmax,
+    Other,
+}
+
+impl OpClass {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "matmul" => Self::MatMul,
+            "conv" => Self::Conv,
+            "dwconv" => Self::DwConv,
+            "attention" => Self::Attention,
+            "norm" => Self::Norm,
+            "elementwise" => Self::Elementwise,
+            "pool" => Self::Pool,
+            "softmax" => Self::Softmax,
+            "other" => Self::Other,
+            other => bail!("unknown op class `{other}`"),
+        })
+    }
+    pub fn key(self) -> &'static str {
+        match self {
+            Self::MatMul => "matmul",
+            Self::Conv => "conv",
+            Self::DwConv => "dwconv",
+            Self::Attention => "attention",
+            Self::Norm => "norm",
+            Self::Elementwise => "elementwise",
+            Self::Pool => "pool",
+            Self::Softmax => "softmax",
+            Self::Other => "other",
+        }
+    }
+    /// True when the op is worth dispatching to an accelerator at all —
+    /// data-movement ops always run where their input lives.
+    pub fn schedulable(self) -> bool {
+        !matches!(self, Self::Other)
+    }
+}
+
+/// One weight slice into the model's `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct WeightSlice {
+    pub offset: usize,
+    pub numel: usize,
+    pub shape: Vec<usize>,
+}
+
+/// One operator node.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: usize,
+    pub name: String,
+    pub kind: OpKind,
+    pub class: OpClass,
+    pub inputs: Vec<usize>,
+    pub exec_in_shapes: Vec<Vec<usize>>,
+    pub exec_out_shape: Vec<usize>,
+    pub paper_out_shape: Vec<usize>,
+    pub flops_exec: f64,
+    pub flops_paper: f64,
+    pub bytes_in_paper: f64,
+    pub bytes_out_paper: f64,
+    pub params_bytes_paper: f64,
+    /// Activation sparsity of this op's *input* (what scheduling keys on).
+    pub sparsity_in: f64,
+    /// Activation sparsity of this op's output (producers feed consumers).
+    pub sparsity_out: f64,
+    pub weights: Vec<WeightSlice>,
+    /// Relative path of the HLO artifact (None for native ops).
+    pub artifact: Option<String>,
+}
+
+impl Op {
+    /// Bytes this op moves at paper scale (inputs + outputs + params).
+    pub fn bytes_moved_paper(&self) -> f64 {
+        self.bytes_in_paper + self.bytes_out_paper + self.params_bytes_paper
+    }
+    pub fn out_numel_exec(&self) -> usize {
+        self.exec_out_shape.iter().product()
+    }
+}
+
+/// A loaded model topology.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub model: String,
+    pub input_shape_exec: Vec<usize>,
+    pub input_shape_paper: Vec<usize>,
+    pub total_flops_paper: f64,
+    pub weights_path: PathBuf,
+    pub ops: Vec<Op>,
+    /// consumers[i] = ops that read op i's output.
+    pub consumers: Vec<Vec<usize>>,
+}
+
+impl ModelGraph {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("topology.json"))
+            .with_context(|| format!("reading {}", dir.display()))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing topology.json: {e}"))?;
+        Self::from_json(&v, dir)
+    }
+
+    pub fn from_json(v: &Value, dir: &Path) -> Result<Self> {
+        let mut ops = Vec::new();
+        for o in v.get("ops").as_arr().context("ops array")? {
+            let weights = o
+                .get("weights")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|w| WeightSlice {
+                    offset: w.f64_of("offset") as usize,
+                    numel: w.f64_of("numel") as usize,
+                    shape: w.get("shape").vec_usize(),
+                })
+                .collect();
+            ops.push(Op {
+                id: o.f64_of("id") as usize,
+                name: o.str_of("name").to_string(),
+                kind: OpKind::parse(o.str_of("kind"))?,
+                class: OpClass::parse(o.str_of("class"))?,
+                inputs: o.get("inputs").vec_usize(),
+                exec_in_shapes: o
+                    .get("exec_in_shapes")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|s| s.vec_usize())
+                    .collect(),
+                exec_out_shape: o.get("exec_out_shape").vec_usize(),
+                paper_out_shape: o.get("paper_out_shape").vec_usize(),
+                flops_exec: o.f64_of("flops_exec"),
+                flops_paper: o.f64_of("flops_paper"),
+                bytes_in_paper: o.f64_of("bytes_in_paper"),
+                bytes_out_paper: o.f64_of("bytes_out_paper"),
+                params_bytes_paper: o.f64_of("params_bytes_paper"),
+                sparsity_in: o.f64_of("sparsity_in"),
+                sparsity_out: o.f64_of("sparsity_out"),
+                weights,
+                artifact: o.get("artifact").as_str().map(|s| s.to_string()),
+            });
+        }
+        let n = ops.len();
+        let mut consumers = vec![Vec::new(); n];
+        for op in &ops {
+            for &i in &op.inputs {
+                consumers[i].push(op.id);
+            }
+        }
+        Ok(ModelGraph {
+            model: v.str_of("model").to_string(),
+            input_shape_exec: v.get("input_shape_exec").vec_usize(),
+            input_shape_paper: v.get("input_shape_paper").vec_usize(),
+            total_flops_paper: v.f64_of("total_flops_paper"),
+            weights_path: dir.join(v.str_of("weights_file")),
+            ops,
+            consumers,
+        })
+    }
+
+    /// Validate topological order and dependency sanity.
+    pub fn validate(&self) -> Result<()> {
+        for op in &self.ops {
+            for &i in &op.inputs {
+                if i >= op.id {
+                    bail!("op {} depends on later op {}", op.id, i);
+                }
+            }
+            if op.id != 0 && op.inputs.is_empty() && op.kind != OpKind::Input {
+                bail!("op {} ({}) has no inputs", op.id, op.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Ops eligible for CPU/GPU placement decisions.
+    pub fn schedulable_ops(&self) -> impl Iterator<Item = &Op> {
+        self.ops.iter().filter(|o| o.class.schedulable())
+    }
+}
+
+/// Registry of all models under `artifacts/models`.
+pub struct ModelZoo {
+    pub root: PathBuf,
+    pub graphs: BTreeMap<String, ModelGraph>,
+}
+
+impl ModelZoo {
+    pub fn load(artifacts: &Path) -> Result<Self> {
+        let mut graphs = BTreeMap::new();
+        let dir = artifacts.join("models");
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+        {
+            let entry = entry?;
+            if entry.file_type()?.is_dir() {
+                let g = ModelGraph::load(&entry.path())?;
+                g.validate()?;
+                graphs.insert(g.model.clone(), g);
+            }
+        }
+        Ok(ModelZoo { root: artifacts.to_path_buf(), graphs })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModelGraph> {
+        self.graphs
+            .get(name)
+            .with_context(|| format!("model `{name}` not in artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_topology() -> Value {
+        json::parse(
+            r#"{
+              "model": "tiny", "input_shape_exec": [1,4,4,3],
+              "input_shape_paper": [1,8,8,3], "total_flops_paper": 100.0,
+              "weights_file": "weights.bin",
+              "ops": [
+                {"id":0,"name":"input","kind":"input","class":"other",
+                 "inputs":[],"exec_in_shapes":[],"exec_out_shape":[1,4,4,3],
+                 "paper_in_shapes":[],"paper_out_shape":[1,8,8,3],
+                 "flops_exec":0,"flops_paper":0,"bytes_in_paper":0,
+                 "bytes_out_paper":768,"params_bytes_paper":0,
+                 "sparsity_in":0,"sparsity_out":0,"weights":[],
+                 "artifact":null},
+                {"id":1,"name":"c1","kind":"conv2d","class":"conv",
+                 "inputs":[0],"exec_in_shapes":[[1,4,4,3]],
+                 "exec_out_shape":[1,4,4,8],
+                 "paper_in_shapes":[[1,8,8,3]],"paper_out_shape":[1,8,8,8],
+                 "flops_exec":100,"flops_paper":1000,"bytes_in_paper":768,
+                 "bytes_out_paper":2048,"params_bytes_paper":864,
+                 "sparsity_in":0.0,"sparsity_out":0.1,
+                 "weights":[{"offset":0,"numel":216,"shape":[3,3,3,8]}],
+                 "artifact":"ops/x.hlo.txt"}
+              ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let g =
+            ModelGraph::from_json(&tiny_topology(), Path::new("/tmp")).unwrap();
+        g.validate().unwrap();
+        assert_eq!(g.ops.len(), 2);
+        assert_eq!(g.ops[1].kind, OpKind::Conv2d);
+        assert_eq!(g.consumers[0], vec![1]);
+        assert_eq!(g.ops[1].weights[0].numel, 216);
+        assert!(g.ops[1].class.schedulable());
+        assert!(!g.ops[0].class.schedulable());
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for s in [
+            "conv2d", "dwconv", "linear", "batchnorm", "layernorm", "relu",
+            "attention", "window_part", "space_to_depth",
+        ] {
+            OpKind::parse(s).unwrap();
+        }
+        assert!(OpKind::parse("bogus").is_err());
+    }
+}

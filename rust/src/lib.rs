@@ -1,0 +1,43 @@
+//! # SparOA
+//!
+//! Reproduction of *"SparOA: Sparse and Operator-aware Hybrid Scheduling
+//! for Edge DNN Inference"* (Zhang, Liu, Mottola, 2025) as a three-layer
+//! Rust + JAX + Pallas stack.  See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for the paper-vs-measured record.
+//!
+//! Layer map:
+//! * L1/L2 (build-time python): Pallas kernels + JAX operator graphs,
+//!   AOT-lowered to HLO text artifacts.
+//! * L3 (this crate): the SparOA coordinator — threshold predictor client,
+//!   SAC operator scheduler, hybrid inference engine, heterogeneous device
+//!   simulator, all eleven baselines, energy/memory accounting, and the
+//!   serving front-end.
+
+pub mod baselines;
+pub mod bench_support;
+pub mod config;
+pub mod device;
+pub mod energy;
+pub mod engine;
+pub mod graph;
+pub mod nn;
+pub mod predictor;
+pub mod profiler;
+pub mod rl;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Repository root (build-time) — used by tests/benches/examples to find
+/// `artifacts/` and `config/` without needing a CLI flag.
+pub fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Default artifacts directory.
+pub fn artifacts_dir() -> PathBuf {
+    repo_root().join("artifacts")
+}

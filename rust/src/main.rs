@@ -1,0 +1,283 @@
+//! `sparoa` — the SparOA coordinator CLI / launcher.
+//!
+//! Subcommands:
+//!   profile    — Fig. 2 quadrant profile of a model
+//!   infer      — one scheduled inference (simulated timeline + real PJRT)
+//!   serve      — serve a Poisson request stream with dynamic batching
+//!   train      — train the SAC scheduler, print the convergence trace
+//!   compare    — run all baselines on one model/device (Fig. 5 row)
+//!   predict    — query the threshold predictor for a model
+//!
+//! Flags are `--key=value` overrides of the config (see config/mod.rs),
+//! plus `--config=<file.json>`.
+
+use anyhow::{bail, Context, Result};
+use sparoa::baselines::{Baseline, ALL};
+use sparoa::bench_support::Table;
+use sparoa::config::Config;
+use sparoa::device::DeviceRegistry;
+use sparoa::engine::sim::{simulate, SimOptions};
+use sparoa::engine::HybridEngine;
+use sparoa::graph::ModelZoo;
+use sparoa::predictor::ThresholdPredictor;
+use sparoa::profiler;
+use sparoa::runtime::{HostTensor, Runtime};
+use sparoa::scheduler::sac_sched::{SacScheduler, SacSchedulerConfig};
+use sparoa::scheduler::{Schedule, ScheduleCtx, Scheduler};
+use sparoa::server::{run_batching_sim, BatchPolicy};
+use sparoa::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_args() -> Result<(String, Config)> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd = String::new();
+    let mut cfg = Config::default();
+    for a in &args {
+        if let Some(rest) = a.strip_prefix("--") {
+            let (k, v) = rest
+                .split_once('=')
+                .with_context(|| format!("flag `{a}` needs =value"))?;
+            if k == "config" {
+                cfg = Config::from_file(std::path::Path::new(v))?;
+            } else {
+                cfg.apply_override(k, v)?;
+            }
+        } else if cmd.is_empty() {
+            cmd = a.clone();
+        } else {
+            bail!("unexpected argument `{a}`");
+        }
+    }
+    if cmd.is_empty() {
+        cmd = "help".into();
+    }
+    Ok((cmd, cfg))
+}
+
+fn run() -> Result<()> {
+    let (cmd, cfg) = parse_args()?;
+    match cmd.as_str() {
+        "profile" => profile(&cfg),
+        "infer" => infer(&cfg),
+        "serve" => serve(&cfg),
+        "train" => train(&cfg),
+        "compare" => compare(&cfg),
+        "predict" => predict(&cfg),
+        "help" | "-h" | "--help" => {
+            println!(
+                "sparoa <profile|infer|serve|train|compare|predict> \
+                 [--model=..] [--device=..] [--policy=..] [--batch=N] \
+                 [--episodes=N] [--request_rate=R] [--num_requests=N] \
+                 [--config=file.json]"
+            );
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `sparoa help`)"),
+    }
+}
+
+fn load(cfg: &Config) -> Result<(ModelZoo, DeviceRegistry)> {
+    let zoo = ModelZoo::load(&cfg.artifacts)?;
+    let reg = DeviceRegistry::load(&cfg.devices_json())?;
+    Ok((zoo, reg))
+}
+
+fn profile(cfg: &Config) -> Result<()> {
+    let (zoo, _) = load(cfg)?;
+    let g = zoo.get(&cfg.model)?;
+    let profiles = profiler::quadrant_profile(g);
+    let counts = profiler::quadrant_counts(&profiles);
+    let mut t = Table::new(
+        &format!("Fig.2 quadrant profile — {}", cfg.model),
+        &["quadrant", "ops", "meaning"],
+    );
+    for (q, n) in counts {
+        let meaning = match q {
+            profiler::Quadrant::DenseHeavy => "dense+heavy -> GPU",
+            profiler::Quadrant::SparseHeavy => "sparse+heavy (QII!)",
+            profiler::Quadrant::DenseLight => "dense+light (QIII)",
+            profiler::Quadrant::SparseLight => "sparse+light -> CPU",
+        };
+        t.row(vec![format!("{q:?}"), n.to_string(), meaning.into()]);
+    }
+    t.print();
+    println!("\n  op-level scatter (sparsity, FLOPs):");
+    for p in profiles.iter().take(20) {
+        println!("    {:28} rho={:.2} I={:.2e} {:?}",
+                 p.name, p.sparsity, p.flops, p.quadrant);
+    }
+    if profiles.len() > 20 {
+        println!("    ... {} more ops", profiles.len() - 20);
+    }
+    Ok(())
+}
+
+fn make_schedule(cfg: &Config, zoo: &ModelZoo, reg: &DeviceRegistry)
+    -> Result<(Schedule, SimOptions)>
+{
+    let g = zoo.get(&cfg.model)?;
+    let dev = reg.get(&cfg.device)?;
+    let b = match cfg.policy.as_str() {
+        "sac" | "sparoa" => Baseline::Sparoa,
+        "greedy" => Baseline::SparoaGreedy,
+        "dp" => Baseline::SparoaDp,
+        "threshold" | "static" => Baseline::SparoaNoRl,
+        "cpu" => Baseline::CpuOnly,
+        "gpu" | "pytorch" => Baseline::GpuOnlyPyTorch,
+        "tensorrt" => Baseline::TensorRt,
+        "tvm" => Baseline::Tvm,
+        "ios" => Baseline::Ios,
+        "pos" => Baseline::Pos,
+        "codl" => Baseline::CoDl,
+        "tensorflow" => Baseline::TensorFlow,
+        other => bail!("unknown policy `{other}`"),
+    };
+    let sched = b.schedule(g, dev, None, cfg.batch.max(1), cfg.episodes);
+    Ok((sched, b.options(cfg.batch.max(1), cfg.seed)))
+}
+
+fn infer(cfg: &Config) -> Result<()> {
+    let (zoo, reg) = load(cfg)?;
+    let g = zoo.get(&cfg.model)?;
+    let dev = reg.get(&cfg.device)?;
+    let (sched, opts) = make_schedule(cfg, &zoo, &reg)?;
+    let rep = simulate(g, dev, &sched, &opts);
+    println!(
+        "model={} device={} policy={} batch={}",
+        cfg.model, cfg.device, sched.policy, opts.batch
+    );
+    println!(
+        "  simulated: makespan={:.1}us cpu_busy={:.1}us gpu_busy={:.1}us \
+         transfer={:.1}us switches={} peak_gpu_mem={:.1}MB",
+        rep.makespan_us, rep.cpu_busy_us, rep.gpu_busy_us, rep.transfer_us,
+        rep.switches, rep.peak_gpu_mem_mb
+    );
+    let ledger = rep.ledger();
+    println!(
+        "  power={:.2}W energy={:.2}mJ/inference",
+        ledger.mean_power_w(dev),
+        ledger.energy_mj(dev)
+    );
+    // Real numerics through PJRT.
+    let rt = Runtime::new(&cfg.artifacts)?;
+    let engine = HybridEngine::new(&rt, g)?;
+    let n = engine.warm_up()?;
+    let mut rng = Rng::new(cfg.seed);
+    let numel: usize = g.input_shape_exec.iter().product();
+    let input = HostTensor::new(
+        g.input_shape_exec.clone(),
+        (0..numel).map(|_| rng.normal() as f32).collect(),
+    );
+    let out = engine.infer(&input, &sched)?;
+    println!(
+        "  real exec: {} artifacts, output shape {:?}, host time {:.0}us",
+        n, out.output.shape, out.host_us
+    );
+    Ok(())
+}
+
+fn serve(cfg: &Config) -> Result<()> {
+    let (zoo, reg) = load(cfg)?;
+    let g = zoo.get(&cfg.model)?;
+    let dev = reg.get(&cfg.device)?;
+    let (sched, opts) = make_schedule(cfg, &zoo, &reg)?;
+    let reqs = sparoa::server::batcher::poisson_stream(
+        cfg.num_requests, cfg.request_rate, cfg.seed);
+    let mut t = Table::new(
+        &format!("serving — {} on {} ({} req @ {:.0}/s)",
+                 cfg.model, cfg.device, cfg.num_requests, cfg.request_rate),
+        &["policy", "mean lat", "p99 lat", "throughput", "overhead%"],
+    );
+    for (name, policy) in [
+        ("fixed-32",
+         BatchPolicy::Fixed { size: 32, timeout_us: 20_000.0 }),
+        ("sparoa-dynamic",
+         BatchPolicy::Dynamic { max: 64, optimizer_cost_us: 30.0 }),
+    ] {
+        let rep = run_batching_sim(g, dev, &sched, &opts, &reqs, &policy);
+        t.row(vec![
+            name.into(),
+            format!("{:.1}us", rep.mean_latency_us),
+            format!("{:.1}us", rep.p99_latency_us),
+            format!("{:.1} rps", rep.throughput_rps),
+            format!("{:.1}%", rep.overhead_pct()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn train(cfg: &Config) -> Result<()> {
+    let (zoo, reg) = load(cfg)?;
+    let g = zoo.get(&cfg.model)?;
+    let dev = reg.get(&cfg.device)?;
+    let mut s = SacScheduler::new(SacSchedulerConfig {
+        episodes: cfg.episodes,
+        noise: cfg.noise,
+        ..Default::default()
+    });
+    let plan = s.schedule(&ScheduleCtx {
+        graph: g, device: dev, thresholds: None, batch: cfg.batch.max(1),
+    });
+    println!("SAC convergence on {} / {}:", cfg.model, cfg.device);
+    for p in &s.trace {
+        println!("  ep {:3}  makespan {:9.1} us  t={:6.2}s",
+                 p.episode, p.makespan_us, p.wall_s);
+    }
+    println!("converged after {:.2}s; gpu share {:.1}%; switches {}",
+             s.converged_after_s, 100.0 * plan.gpu_share(g),
+             plan.switch_count(g));
+    Ok(())
+}
+
+fn compare(cfg: &Config) -> Result<()> {
+    let (zoo, reg) = load(cfg)?;
+    let g = zoo.get(&cfg.model)?;
+    let dev = reg.get(&cfg.device)?;
+    let mut t = Table::new(
+        &format!("Fig.5 latency — {} on {}", cfg.model, cfg.device),
+        &["baseline", "latency (us)", "speedup vs SparOA", "gpu share"],
+    );
+    let mut results = Vec::new();
+    for b in ALL {
+        let episodes = if b == Baseline::Sparoa { cfg.episodes } else { 0 };
+        let (sched, rep) = b.run(g, dev, None, cfg.batch.max(1), episodes);
+        results.push((b, sched, rep));
+    }
+    let sparoa_lat = results
+        .iter()
+        .find(|(b, _, _)| *b == Baseline::Sparoa)
+        .unwrap()
+        .2
+        .makespan_us;
+    for (b, sched, rep) in &results {
+        t.row(vec![
+            b.name().into(),
+            format!("{:.1}", rep.makespan_us),
+            format!("{:.2}x", rep.makespan_us / sparoa_lat),
+            format!("{:.0}%", 100.0 * sched.gpu_share(g)),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn predict(cfg: &Config) -> Result<()> {
+    let (zoo, _) = load(cfg)?;
+    let g = zoo.get(&cfg.model)?;
+    let rt = Runtime::new(&cfg.artifacts)?;
+    let pred = ThresholdPredictor::new(&rt);
+    let th = pred.predict_graph(g)?;
+    println!("threshold predictions for {} (first 24 ops):", cfg.model);
+    for (op, (s, c)) in g.ops.iter().zip(&th).take(24) {
+        println!("  {:28} rho={:.2} -> s*={:.2} c*={:.2}",
+                 op.name, op.sparsity_in, s, c);
+    }
+    Ok(())
+}

@@ -1,0 +1,390 @@
+//! Neural-network substrate: a dependency-free MLP with manual
+//! backpropagation and Adam, sized for the SAC agent's policy/Q networks.
+//!
+//! No autograd tape — each [`Mlp`] caches its forward activations and
+//! implements the exact backward pass for its own architecture
+//! (dense + activation stacks).  This keeps the hot training loop
+//! allocation-light and trivially auditable.
+
+use crate::util::rng::Rng;
+
+/// Activation for hidden layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Relu,
+    Tanh,
+    Identity,
+}
+
+impl Act {
+    fn apply(self, x: f64) -> f64 {
+        match self {
+            Act::Relu => x.max(0.0),
+            Act::Tanh => x.tanh(),
+            Act::Identity => x,
+        }
+    }
+    /// derivative as a function of the activation *output* y.
+    fn dydx_from_y(self, y: f64) -> f64 {
+        match self {
+            Act::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Act::Tanh => 1.0 - y * y,
+            Act::Identity => 1.0,
+        }
+    }
+}
+
+/// One dense layer, row-major weights (din x dout).
+#[derive(Debug, Clone)]
+pub struct Dense {
+    pub din: usize,
+    pub dout: usize,
+    pub w: Vec<f64>,
+    pub b: Vec<f64>,
+    pub act: Act,
+}
+
+impl Dense {
+    fn new(din: usize, dout: usize, act: Act, rng: &mut Rng) -> Self {
+        let scale = (2.0 / din as f64).sqrt()
+            * if act == Act::Tanh { 0.7 } else { 1.0 };
+        Dense {
+            din,
+            dout,
+            w: (0..din * dout).map(|_| rng.normal() * scale).collect(),
+            b: vec![0.0; dout],
+            act,
+        }
+    }
+}
+
+/// Forward cache for one MLP evaluation (batch of B rows).
+#[derive(Debug, Clone, Default)]
+pub struct Cache {
+    /// activations per layer boundary: acts[0] = input, acts[L] = output.
+    pub acts: Vec<Vec<f64>>,
+    pub batch: usize,
+}
+
+/// Gradients matching an [`Mlp`]'s parameters.
+#[derive(Debug, Clone)]
+pub struct Grads {
+    pub dw: Vec<Vec<f64>>,
+    pub db: Vec<Vec<f64>>,
+}
+
+impl Grads {
+    pub fn zeros_like(mlp: &Mlp) -> Self {
+        Grads {
+            dw: mlp.layers.iter().map(|l| vec![0.0; l.w.len()]).collect(),
+            db: mlp.layers.iter().map(|l| vec![0.0; l.b.len()]).collect(),
+        }
+    }
+    pub fn scale(&mut self, s: f64) {
+        for g in self.dw.iter_mut().flatten() {
+            *g *= s;
+        }
+        for g in self.db.iter_mut().flatten() {
+            *g *= s;
+        }
+    }
+    pub fn add(&mut self, other: &Grads) {
+        for (a, b) in self.dw.iter_mut().zip(&other.dw) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+        for (a, b) in self.db.iter_mut().zip(&other.db) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
+}
+
+/// A plain multilayer perceptron.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub layers: Vec<Dense>,
+}
+
+impl Mlp {
+    /// `dims = [din, h1, ..., dout]`; hidden layers use `hidden_act`, the
+    /// output layer is linear.
+    pub fn new(dims: &[usize], hidden_act: Act, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        for i in 0..dims.len() - 1 {
+            let act = if i + 2 == dims.len() {
+                Act::Identity
+            } else {
+                hidden_act
+            };
+            layers.push(Dense::new(dims[i], dims[i + 1], act, &mut rng));
+        }
+        Mlp { layers }
+    }
+
+    pub fn din(&self) -> usize {
+        self.layers[0].din
+    }
+    pub fn dout(&self) -> usize {
+        self.layers.last().unwrap().dout
+    }
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len() + l.b.len()).sum()
+    }
+
+    /// Forward for a batch (rows of length din). Returns output + cache.
+    pub fn forward(&self, x: &[f64], batch: usize) -> (Vec<f64>, Cache) {
+        debug_assert_eq!(x.len(), batch * self.din());
+        let mut cache =
+            Cache { acts: Vec::with_capacity(self.layers.len() + 1), batch };
+        cache.acts.push(x.to_vec());
+        for l in &self.layers {
+            let cur = cache.acts.last().unwrap();
+            let mut out = vec![0.0; batch * l.dout];
+            for bi in 0..batch {
+                let xi = &cur[bi * l.din..(bi + 1) * l.din];
+                let oi = &mut out[bi * l.dout..(bi + 1) * l.dout];
+                oi.copy_from_slice(&l.b);
+                for (i, &xv) in xi.iter().enumerate() {
+                    let wrow = &l.w[i * l.dout..(i + 1) * l.dout];
+                    for (o, &wv) in oi.iter_mut().zip(wrow) {
+                        *o += xv * wv;
+                    }
+                }
+                for o in oi.iter_mut() {
+                    *o = l.act.apply(*o);
+                }
+            }
+            cache.acts.push(out);
+        }
+        // one clone of the (small) output row; intermediate activations
+        // are moved into the cache rather than cloned (§Perf).
+        (cache.acts.last().unwrap().clone(), cache)
+    }
+
+    /// Convenience: forward one row.
+    pub fn infer(&self, x: &[f64]) -> Vec<f64> {
+        self.forward(x, 1).0
+    }
+
+    /// Backward: given dL/dy for the output batch, returns (grads, dL/dx).
+    pub fn backward(&self, cache: &Cache, dy: &[f64]) -> (Grads, Vec<f64>) {
+        let batch = cache.batch;
+        let mut grads = Grads::zeros_like(self);
+        let mut delta = dy.to_vec();
+        for (li, l) in self.layers.iter().enumerate().rev() {
+            let y = &cache.acts[li + 1];
+            let x = &cache.acts[li];
+            for (d, &yv) in delta.iter_mut().zip(y.iter()) {
+                *d *= l.act.dydx_from_y(yv);
+            }
+            let mut dx = vec![0.0; batch * l.din];
+            for bi in 0..batch {
+                let xi = &x[bi * l.din..(bi + 1) * l.din];
+                let di = &delta[bi * l.dout..(bi + 1) * l.dout];
+                for (j, &dj) in di.iter().enumerate() {
+                    grads.db[li][j] += dj;
+                }
+                for (i, &xv) in xi.iter().enumerate() {
+                    let row = &mut grads.dw[li][i * l.dout..(i + 1) * l.dout];
+                    for (j, &dj) in di.iter().enumerate() {
+                        row[j] += xv * dj;
+                    }
+                }
+                let dxi = &mut dx[bi * l.din..(bi + 1) * l.din];
+                for (i, dxv) in dxi.iter_mut().enumerate() {
+                    let wrow = &l.w[i * l.dout..(i + 1) * l.dout];
+                    let mut acc = 0.0;
+                    for (j, &dj) in di.iter().enumerate() {
+                        acc += wrow[j] * dj;
+                    }
+                    *dxv = acc;
+                }
+            }
+            delta = dx;
+        }
+        (grads, delta)
+    }
+
+    /// In-place Polyak update toward `src`: self = tau*src + (1-tau)*self.
+    pub fn polyak_from(&mut self, src: &Mlp, tau: f64) {
+        for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
+            for (a, b) in dst.w.iter_mut().zip(&s.w) {
+                *a = tau * b + (1.0 - tau) * *a;
+            }
+            for (a, b) in dst.b.iter_mut().zip(&s.b) {
+                *a = tau * b + (1.0 - tau) * *a;
+            }
+        }
+    }
+}
+
+/// Adam optimizer state for one MLP.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    m: Grads,
+    v: Grads,
+    t: u64,
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+impl Adam {
+    pub fn new(mlp: &Mlp, lr: f64) -> Self {
+        Adam {
+            m: Grads::zeros_like(mlp),
+            v: Grads::zeros_like(mlp),
+            t: 0,
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+
+    pub fn step(&mut self, mlp: &mut Mlp, grads: &Grads) {
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for li in 0..mlp.layers.len() {
+            for (i, g) in grads.dw[li].iter().enumerate() {
+                let m = &mut self.m.dw[li][i];
+                let v = &mut self.v.dw[li][i];
+                *m = self.beta1 * *m + (1.0 - self.beta1) * g;
+                *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
+                mlp.layers[li].w[i] -=
+                    self.lr * (*m / bc1) / ((*v / bc2).sqrt() + self.eps);
+            }
+            for (i, g) in grads.db[li].iter().enumerate() {
+                let m = &mut self.m.db[li][i];
+                let v = &mut self.v.db[li][i];
+                *m = self.beta1 * *m + (1.0 - self.beta1) * g;
+                *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
+                mlp.layers[li].b[i] -=
+                    self.lr * (*m / bc1) / ((*v / bc2).sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Finite-difference check of the manual backward pass.
+    #[test]
+    fn gradients_match_finite_difference() {
+        let mlp = Mlp::new(&[3, 5, 2], Act::Tanh, 42);
+        let x = [0.3, -0.7, 1.2];
+        let target = [0.5, -0.25];
+        let loss = |m: &Mlp| {
+            let y = m.infer(&x);
+            y.iter()
+                .zip(&target)
+                .map(|(a, b)| 0.5 * (a - b) * (a - b))
+                .sum::<f64>()
+        };
+        let (y, cache) = mlp.forward(&x, 1);
+        let dy: Vec<f64> = y.iter().zip(&target).map(|(a, b)| a - b).collect();
+        let (grads, _) = mlp.backward(&cache, &dy);
+
+        let eps = 1e-6;
+        for li in 0..mlp.layers.len() {
+            for wi in 0..mlp.layers[li].w.len() {
+                let mut mp = mlp.clone();
+                mp.layers[li].w[wi] += eps;
+                let mut mm = mlp.clone();
+                mm.layers[li].w[wi] -= eps;
+                let fd = (loss(&mp) - loss(&mm)) / (2.0 * eps);
+                let an = grads.dw[li][wi];
+                assert!(
+                    (fd - an).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "layer {li} w[{wi}]: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn input_gradient_matches_finite_difference() {
+        let mlp = Mlp::new(&[4, 6, 1], Act::Relu, 7);
+        let x = [0.1, 0.9, -0.4, 0.2];
+        let f = |x: &[f64]| mlp.infer(x)[0];
+        let (_, cache) = mlp.forward(&x, 1);
+        let (_, dx) = mlp.backward(&cache, &[1.0]);
+        let eps = 1e-6;
+        for i in 0..x.len() {
+            let mut xp = x;
+            xp[i] += eps;
+            let mut xm = x;
+            xm[i] -= eps;
+            let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!(
+                (fd - dx[i]).abs() < 1e-5 * (1.0 + fd.abs()),
+                "dx[{i}]: fd={fd} analytic={}",
+                dx[i]
+            );
+        }
+    }
+
+    #[test]
+    fn batch_forward_matches_single() {
+        let mlp = Mlp::new(&[3, 4, 2], Act::Relu, 5);
+        let a = [0.1, 0.2, 0.3];
+        let b = [-0.5, 0.4, 0.9];
+        let batched: Vec<f64> = a.iter().chain(b.iter()).copied().collect();
+        let (y, _) = mlp.forward(&batched, 2);
+        let ya = mlp.infer(&a);
+        let yb = mlp.infer(&b);
+        assert_eq!(&y[0..2], ya.as_slice());
+        assert_eq!(&y[2..4], yb.as_slice());
+    }
+
+    #[test]
+    fn adam_fits_xor() {
+        let mut mlp = Mlp::new(&[2, 16, 1], Act::Tanh, 3);
+        let mut opt = Adam::new(&mlp, 0.01);
+        let data = [
+            ([0.0, 0.0], 0.0),
+            ([0.0, 1.0], 1.0),
+            ([1.0, 0.0], 1.0),
+            ([1.0, 1.0], 0.0),
+        ];
+        for _ in 0..2000 {
+            let mut total = Grads::zeros_like(&mlp);
+            for (x, t) in &data {
+                let (y, cache) = mlp.forward(x, 1);
+                let (g, _) = mlp.backward(&cache, &[y[0] - t]);
+                total.add(&g);
+            }
+            total.scale(0.25);
+            opt.step(&mut mlp, &total);
+        }
+        for (x, t) in &data {
+            let y = mlp.infer(x)[0];
+            assert!((y - t).abs() < 0.1, "xor({x:?}) = {y}, want {t}");
+        }
+    }
+
+    #[test]
+    fn polyak_moves_toward_source() {
+        let mut a = Mlp::new(&[2, 2], Act::Identity, 1);
+        let b = Mlp::new(&[2, 2], Act::Identity, 2);
+        let before = a.layers[0].w[0];
+        a.polyak_from(&b, 0.5);
+        let after = a.layers[0].w[0];
+        let expect = 0.5 * before + 0.5 * b.layers[0].w[0];
+        assert!((after - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,254 @@
+//! Threshold-predictor client (paper §3) + the Table 3 accuracy harness.
+//!
+//! The trained Transformer-LSTM forward pass is an AOT HLO artifact
+//! (`artifacts/predictor/thresh_predictor.hlo.txt`) queried through PJRT
+//! during the *offline* scheduling phase — never on the request path.  The
+//! LR baseline runs natively (a 7x2 affine map); the CNN baseline is a
+//! second HLO artifact.
+
+use crate::graph::ModelGraph;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub const SEQ_LEN: usize = 32;
+pub const N_FEATURES: usize = 6;
+
+/// Feature vector for one op (mirror of predictor.op_features in python).
+pub fn op_features(op: &crate::graph::Op) -> [f32; N_FEATURES] {
+    let s = op
+        .exec_in_shapes
+        .first()
+        .cloned()
+        .unwrap_or_else(|| op.exec_out_shape.clone());
+    // Use PAPER-scale shapes for b/c/h/w features (what training saw).
+    let ps = &op.paper_out_shape;
+    let (b, h, w, c) = match ps.len() {
+        4 => (ps[0], ps[1], ps[2], ps[3]),
+        3 => (ps[0], ps[1], 1, ps[2]),
+        2 => (ps[0], 1, 1, ps[1]),
+        _ => (1, 1, 1, s.iter().product()),
+    };
+    let intensity = {
+        let lf = (op.flops_paper.max(1.0)).log10();
+        ((lf - 3.0) / 9.0).clamp(0.0, 1.0)
+    };
+    [
+        op.sparsity_in as f32,
+        intensity as f32,
+        ((b.max(1) as f64).log2() / 8.0) as f32,
+        ((c as f64 / 1024.0).min(2.0)) as f32,
+        ((h as f64 / 256.0).min(2.0)) as f32,
+        ((w as f64 / 256.0).min(2.0)) as f32,
+    ]
+}
+
+/// The Transformer-LSTM predictor behind its HLO artifact.
+pub struct ThresholdPredictor<'a> {
+    runtime: &'a Runtime,
+    artifact: String,
+}
+
+impl<'a> ThresholdPredictor<'a> {
+    pub fn new(runtime: &'a Runtime) -> Self {
+        ThresholdPredictor {
+            runtime,
+            artifact: "predictor/thresh_predictor.hlo.txt".into(),
+        }
+    }
+
+    pub fn with_artifact(runtime: &'a Runtime, artifact: &str) -> Self {
+        ThresholdPredictor { runtime, artifact: artifact.into() }
+    }
+
+    /// Predict (s*, c*) for a window of feature rows (<= SEQ_LEN).
+    pub fn predict_window(&self, rows: &[[f32; N_FEATURES]])
+        -> Result<Vec<(f64, f64)>>
+    {
+        anyhow::ensure!(rows.len() <= SEQ_LEN, "window too long");
+        let mut data = vec![0.0f32; SEQ_LEN * N_FEATURES];
+        for (i, r) in rows.iter().enumerate() {
+            data[i * N_FEATURES..(i + 1) * N_FEATURES].copy_from_slice(r);
+        }
+        let x = HostTensor::new(vec![1, SEQ_LEN, N_FEATURES], data);
+        let out = self.runtime.execute(&self.artifact, &[x])?;
+        anyhow::ensure!(out.shape == vec![1, SEQ_LEN, 2],
+                        "bad predictor output {:?}", out.shape);
+        Ok((0..rows.len())
+            .map(|i| (out.data[i * 2] as f64, out.data[i * 2 + 1] as f64))
+            .collect())
+    }
+
+    /// Predict thresholds for every op of a model (windowed).
+    pub fn predict_graph(&self, graph: &ModelGraph)
+        -> Result<Vec<(f64, f64)>>
+    {
+        let feats: Vec<[f32; N_FEATURES]> =
+            graph.ops.iter().map(op_features).collect();
+        let mut out = Vec::with_capacity(feats.len());
+        for chunk in feats.chunks(SEQ_LEN) {
+            out.extend(self.predict_window(chunk)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Native linear-regression baseline (Table 3 row "LR").
+pub struct LinearPredictor {
+    /// rows: [s; c], each of length N_FEATURES + 1 (bias last).
+    pub w: [[f64; N_FEATURES + 1]; 2],
+}
+
+impl LinearPredictor {
+    pub fn predict(&self, x: &[f32; N_FEATURES]) -> (f64, f64) {
+        let mut out = [0.0f64; 2];
+        for (o, row) in out.iter_mut().zip(&self.w) {
+            *o = row[N_FEATURES];
+            for i in 0..N_FEATURES {
+                *o += row[i] * x[i] as f64;
+            }
+        }
+        (out[0], out[1])
+    }
+}
+
+/// The exported predictor evaluation dataset + frozen baselines.
+pub struct PredictorDataset {
+    pub seq_len: usize,
+    /// test sequences: (x [T x F], y [T x 2], mask [T])
+    pub sequences: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+    pub lr: LinearPredictor,
+    /// accuracies recorded at training time (python side), for parity
+    /// checks: ours/lr/cnn -> (sparsity_acc, intensity_acc).
+    pub trained_accuracy: Vec<(String, f64, f64)>,
+    pub model_bytes: Vec<(String, f64)>,
+}
+
+impl PredictorDataset {
+    pub fn load(artifacts: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(
+            artifacts.join("predictor/dataset.json"))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("dataset.json: {e}"))?;
+        let seq_len = v.f64_of("seq_len") as usize;
+        let xs = v.get("test_x").as_arr().context("test_x")?;
+        let ys = v.get("test_y").as_arr().context("test_y")?;
+        let ms = v.get("test_mask").as_arr().context("test_mask")?;
+        let mut sequences = Vec::new();
+        for i in 0..xs.len() {
+            let x: Vec<f32> =
+                xs[i].vec_f64().iter().map(|&f| f as f32).collect();
+            let y: Vec<f32> =
+                ys[i].vec_f64().iter().map(|&f| f as f32).collect();
+            let m: Vec<f32> =
+                ms[i].vec_f64().iter().map(|&f| f as f32).collect();
+            sequences.push((x, y, m));
+        }
+        let lrw = v.get("lr_weights");
+        let mut w = [[0.0; N_FEATURES + 1]; 2];
+        for (r, row) in w.iter_mut().enumerate() {
+            let vals = lrw.idx(r).vec_f64();
+            anyhow::ensure!(vals.len() == N_FEATURES + 1, "lr weights shape");
+            row.copy_from_slice(&vals);
+        }
+        let acc = |k: &str| -> (f64, f64) {
+            let a = v.get("accuracy").get(k).vec_f64();
+            (a[0], a[1])
+        };
+        let trained_accuracy = ["ours", "lr", "cnn"]
+            .iter()
+            .map(|k| {
+                let (s, c) = acc(k);
+                (k.to_string(), s, c)
+            })
+            .collect();
+        let model_bytes = ["ours", "lr", "cnn"]
+            .iter()
+            .map(|k| {
+                (k.to_string(), v.get("model_bytes").f64_of(k))
+            })
+            .collect();
+        Ok(PredictorDataset {
+            seq_len,
+            sequences,
+            lr: LinearPredictor { w },
+            trained_accuracy,
+            model_bytes,
+        })
+    }
+}
+
+/// ±tol accuracy of predictions vs labels over masked positions.
+pub fn accuracy(pred: &[(f64, f64)], y: &[f32], mask: &[f32], tol: f64)
+    -> (f64, f64)
+{
+    let mut ok = [0.0f64; 2];
+    let mut total = 0.0f64;
+    for (i, p) in pred.iter().enumerate() {
+        if mask[i] <= 0.0 {
+            continue;
+        }
+        total += 1.0;
+        if (p.0 - y[i * 2] as f64).abs() < tol {
+            ok[0] += 1.0;
+        }
+        if (p.1 - y[i * 2 + 1] as f64).abs() < tol {
+            ok[1] += 1.0;
+        }
+    }
+    (ok[0] / total.max(1.0), ok[1] / total.max(1.0))
+}
+
+/// Run one predictor over the whole test set; returns (s_acc, c_acc).
+pub fn evaluate<F>(ds: &PredictorDataset, mut f: F) -> (f64, f64)
+where
+    F: FnMut(&[f32]) -> Vec<(f64, f64)>,
+{
+    let mut s_ok = 0.0;
+    let mut c_ok = 0.0;
+    let mut total = 0.0f64;
+    for (x, y, m) in &ds.sequences {
+        let pred = f(x);
+        for (i, p) in pred.iter().enumerate() {
+            if m[i] <= 0.0 {
+                continue;
+            }
+            total += 1.0;
+            if (p.0 - y[i * 2] as f64).abs() < 0.1 {
+                s_ok += 1.0;
+            }
+            if (p.1 - y[i * 2 + 1] as f64).abs() < 0.1 {
+                c_ok += 1.0;
+            }
+        }
+    }
+    (s_ok / total.max(1.0), c_ok / total.max(1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_predictor_affine() {
+        let mut w = [[0.0; N_FEATURES + 1]; 2];
+        w[0][0] = 2.0;
+        w[0][N_FEATURES] = 0.5; // bias
+        w[1][1] = -1.0;
+        let lr = LinearPredictor { w };
+        let (s, c) = lr.predict(&[0.25, 0.5, 0.0, 0.0, 0.0, 0.0]);
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!((c + 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_counts_within_tolerance() {
+        let pred = vec![(0.5, 0.5), (0.0, 1.0)];
+        let y = vec![0.55, 0.39, 0.0, 1.0];
+        let mask = vec![1.0, 1.0];
+        let (s, c) = accuracy(&pred, &y, &mask, 0.1);
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!((c - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,345 @@
+//! The operator-scheduling MDP (paper §4.1).
+//!
+//! State  S = {ρ, I, N_in, N_out, M_gpu, M_cpu, O_switch}   (Eq. 7)
+//! Action A ∈ [0, 1]: GPU allocation ratio ξ                (Eq. 8)
+//! Reward r = −(λ1·L + λ2·(M_gpu + M_cpu) + λ3·O_switch)    (Eq. 9)
+//!
+//! The environment walks a model graph's ops in topological order and
+//! maintains the same two-processor virtual timeline as engine::sim (an
+//! integration test asserts the totals agree), including the stochastic
+//! hardware dynamics (contention jitter, memory pressure) that make the
+//! learned policy beat static DP plans.
+
+use crate::device::{DeviceModel, HardwareState, Proc};
+use crate::engine::sim::{op_cost_us, SimOptions};
+use crate::graph::ModelGraph;
+use crate::scheduler::{mode_of, Mode};
+
+pub const STATE_DIM: usize = 7;
+
+/// Reward weights λ1..λ3 (latency in ms, memory normalized, switches).
+#[derive(Debug, Clone)]
+pub struct RewardWeights {
+    pub lambda_latency: f64,
+    pub lambda_memory: f64,
+    pub lambda_switch: f64,
+}
+
+impl Default for RewardWeights {
+    fn default() -> Self {
+        // Latency is expressed in ms; memory/switch penalties are kept an
+        // order of magnitude below a typical per-op latency delta so the
+        // agent optimizes makespan first (paper: lambda balances goals).
+        RewardWeights {
+            lambda_latency: 1.0,
+            lambda_memory: 0.002,
+            lambda_switch: 0.002,
+        }
+    }
+}
+
+pub struct SchedulingEnv<'a> {
+    pub graph: &'a ModelGraph,
+    pub device: &'a DeviceModel,
+    pub weights: RewardWeights,
+    /// Engine options the policy is trained against (SparOA engine).
+    pub opts: SimOptions,
+    pub noise: f64,
+    pub batch: usize,
+    // timeline state
+    cursor: usize,
+    cpu_free: f64,
+    gpu_free: f64,
+    finish: Vec<f64>,
+    placed: Vec<Proc>,
+    hw: HardwareState,
+    seed: u64,
+    /// ξ chosen per op (filled as the episode progresses).
+    pub xi: Vec<f64>,
+}
+
+impl<'a> SchedulingEnv<'a> {
+    pub fn new(
+        graph: &'a ModelGraph,
+        device: &'a DeviceModel,
+        noise: f64,
+        batch: usize,
+        seed: u64,
+    ) -> Self {
+        let n = graph.ops.len();
+        let mut env = SchedulingEnv {
+            graph,
+            device,
+            weights: RewardWeights::default(),
+            opts: SimOptions { noise, batch, seed, ..Default::default() },
+            noise,
+            batch,
+            cursor: 0,
+            cpu_free: 0.0,
+            gpu_free: 0.0,
+            finish: vec![0.0; n],
+            placed: vec![Proc::Cpu; n],
+            hw: HardwareState::new(device, seed, noise),
+            seed,
+            xi: vec![0.0; n],
+        };
+        env.skip_unschedulable();
+        env
+    }
+
+    pub fn reset(&mut self, seed: u64) {
+        let n = self.graph.ops.len();
+        self.cursor = 0;
+        self.cpu_free = 0.0;
+        self.gpu_free = 0.0;
+        self.finish = vec![0.0; n];
+        self.placed = vec![Proc::Cpu; n];
+        self.seed = seed;
+        self.hw = HardwareState::new(self.device, seed, self.noise);
+        self.xi = vec![0.0; n];
+        self.skip_unschedulable();
+    }
+
+    /// Advance past ops that are not scheduling decisions (they execute on
+    /// their producer's device with negligible cost contributions handled
+    /// at dispatch of the consumer).
+    fn skip_unschedulable(&mut self) {
+        while self.cursor < self.graph.ops.len()
+            && !self.graph.ops[self.cursor].class.schedulable()
+        {
+            let op = &self.graph.ops[self.cursor];
+            let p = op
+                .inputs
+                .first()
+                .map(|&i| self.placed[i])
+                .unwrap_or(Proc::Cpu);
+            self.placed[op.id] = p;
+            self.finish[op.id] = op
+                .inputs
+                .iter()
+                .map(|&i| self.finish[i])
+                .fold(0.0, f64::max);
+            self.cursor += 1;
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.cursor >= self.graph.ops.len()
+    }
+
+    /// Op id of the pending scheduling decision.
+    pub fn cursor_op(&self) -> usize {
+        self.cursor
+    }
+
+    /// Current makespan of the partial schedule, us.
+    pub fn makespan_us(&self) -> f64 {
+        self.cpu_free.max(self.gpu_free)
+    }
+
+    /// Observation for the op at the cursor (Eq. 7), normalized.
+    pub fn observe(&self) -> [f64; STATE_DIM] {
+        let op = &self.graph.ops[self.cursor];
+        let n_in: usize = op
+            .exec_in_shapes
+            .first()
+            .map(|s| s.iter().product())
+            .unwrap_or(0);
+        let n_out = op.out_numel_exec();
+        let intensity = {
+            let lf = op.flops_paper.max(1.0).log10();
+            ((lf - 3.0) / 9.0).clamp(0.0, 1.0)
+        };
+        let switch_pending = match self.hw.last_proc {
+            Some(Proc::Gpu) => 0.0, // staying on GPU is free
+            Some(Proc::Cpu) => 1.0,
+            None => 0.5,
+        };
+        [
+            op.sparsity_in,
+            intensity,
+            (n_in as f64 / 1e6).min(2.0),
+            (n_out as f64 / 1e6).min(2.0),
+            self.hw.gpu_pressure(),
+            self.hw.cpu_load,
+            switch_pending,
+        ]
+    }
+
+    /// Place the current op with ratio ξ; returns (reward, done).
+    pub fn step(&mut self, xi: f64) -> (f64, bool) {
+        let before = self.makespan_us();
+        let op_id = self.cursor;
+        let xi = xi.clamp(0.0, 1.0);
+        self.xi[op_id] = xi;
+        let op = &self.graph.ops[op_id];
+        let batch = self.batch.max(1) as f64;
+        let flops = op.flops_paper * batch;
+        let bytes = op.bytes_moved_paper() * batch;
+
+        let switches_before = self.hw.switches;
+        match mode_of(xi) {
+            Mode::Single(proc) => {
+                let (base, _) = op_cost_us(
+                    self.device, proc, op.class, flops, bytes,
+                    op.sparsity_in, &self.opts);
+                let lat = base * self.hw.contention_factor(proc);
+                let mut ready: f64 = 0.0;
+                for &i in &op.inputs {
+                    let mut t = self.finish[i];
+                    if self.placed[i] != proc
+                        && self.graph.ops[i].bytes_out_paper > 0.0
+                    {
+                        t += self.device.transfer_us(
+                            self.graph.ops[i].bytes_out_paper * batch,
+                            true,
+                            true,
+                        );
+                    }
+                    ready = ready.max(t);
+                }
+                let free = match proc {
+                    Proc::Cpu => self.cpu_free,
+                    Proc::Gpu => self.gpu_free,
+                };
+                let end = ready.max(free) + lat;
+                match proc {
+                    Proc::Cpu => self.cpu_free = end,
+                    Proc::Gpu => self.gpu_free = end,
+                }
+                self.finish[op_id] = end;
+                self.placed[op_id] = proc;
+                self.hw.dispatch(proc, op.bytes_out_paper * batch,
+                                 op.params_bytes_paper);
+            }
+            Mode::CoRun(_) => {
+                let lat_c = op_cost_us(self.device, Proc::Cpu, op.class,
+                                       flops, bytes, op.sparsity_in,
+                                       &self.opts).0
+                    * self.hw.contention_factor(Proc::Cpu);
+                let lat_g = op_cost_us(self.device, Proc::Gpu, op.class,
+                                       flops, bytes, op.sparsity_in,
+                                       &self.opts).0
+                    * self.hw.contention_factor(Proc::Gpu);
+                let mut rc: f64 = 0.0;
+                let mut rg: f64 = 0.0;
+                for &i in &op.inputs {
+                    let t = self.finish[i];
+                    let x = self.device.transfer_us(
+                        self.graph.ops[i].bytes_out_paper * batch, true, true);
+                    rc = rc.max(if self.placed[i] != Proc::Cpu { t + x } else { t });
+                    rg = rg.max(if self.placed[i] != Proc::Gpu { t + x } else { t });
+                }
+                let ec = rc.max(self.cpu_free) + lat_c;
+                let eg = rg.max(self.gpu_free) + lat_g;
+                self.cpu_free = ec;
+                self.gpu_free = eg;
+                let xfer = self.device.transfer_us(
+                    op.bytes_out_paper * batch, true, true);
+                self.finish[op_id] = ec.max(eg) + xfer + 4.0;
+                self.placed[op_id] = Proc::Gpu;
+                self.hw.dispatch(Proc::Gpu, op.bytes_out_paper * batch,
+                                 op.params_bytes_paper);
+            }
+        }
+        let switched = (self.hw.switches - switches_before) as f64;
+        self.cursor += 1;
+        self.skip_unschedulable();
+
+        let delta_ms = (self.makespan_us() - before) / 1e3;
+        let mem_pen = self.hw.gpu_pressure() + self.hw.cpu_load;
+        let r = -(self.weights.lambda_latency * delta_ms
+            + self.weights.lambda_memory * mem_pen
+            + self.weights.lambda_switch * switched);
+        (r, self.done())
+    }
+
+    /// Play out a full fixed schedule; returns final makespan (us).
+    pub fn rollout(&mut self, xi: &[f64], seed: u64) -> f64 {
+        self.reset(seed);
+        while !self.done() {
+            let id = self.cursor;
+            self.step(xi[id]);
+        }
+        self.makespan_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceRegistry;
+    use crate::graph::ModelZoo;
+
+    fn setup() -> Option<(ModelZoo, DeviceRegistry)> {
+        let art = crate::artifacts_dir();
+        if !art.join("manifest.json").exists() {
+            return None;
+        }
+        Some((
+            ModelZoo::load(&art).unwrap(),
+            DeviceRegistry::load(
+                &crate::repo_root().join("config/devices.json"))
+                .unwrap(),
+        ))
+    }
+
+    #[test]
+    fn env_timeline_matches_simulator() {
+        let Some((zoo, reg)) = setup() else { return };
+        for model in ["resnet18", "mobilenet_v3_small"] {
+            let g = zoo.get(model).unwrap();
+            let dev = reg.get("agx_orin").unwrap();
+            for xi_val in [0.0, 1.0] {
+                let sched = crate::scheduler::Schedule::uniform(g, xi_val, "t");
+                let sim = crate::engine::sim::simulate(
+                    g, dev, &sched, &crate::engine::sim::SimOptions {
+                        noise: 0.0,
+                        ..Default::default()
+                    });
+                let mut env = SchedulingEnv::new(g, dev, 0.0, 1, 1);
+                let m = env.rollout(&sched.xi, 1);
+                let rel = (m - sim.makespan_us).abs() / sim.makespan_us;
+                assert!(rel < 0.05,
+                        "{model} xi={xi_val}: env {m} vs sim {}",
+                        sim.makespan_us);
+            }
+        }
+    }
+
+    #[test]
+    fn rewards_penalize_latency() {
+        let Some((zoo, reg)) = setup() else { return };
+        let g = zoo.get("vit_b16").unwrap();
+        let dev = reg.get("agx_orin").unwrap();
+        let mut env = SchedulingEnv::new(g, dev, 0.0, 1, 1);
+        // All-CPU episode reward must be far worse than all-GPU.
+        let mut r_cpu = 0.0;
+        env.reset(1);
+        while !env.done() {
+            r_cpu += env.step(0.0).0;
+        }
+        let mut r_gpu = 0.0;
+        env.reset(1);
+        while !env.done() {
+            r_gpu += env.step(1.0).0;
+        }
+        assert!(r_gpu > r_cpu, "gpu {r_gpu} vs cpu {r_cpu}");
+    }
+
+    #[test]
+    fn observation_in_range() {
+        let Some((zoo, reg)) = setup() else { return };
+        let g = zoo.get("swin_t").unwrap();
+        let dev = reg.get("orin_nano").unwrap();
+        let mut env = SchedulingEnv::new(g, dev, 0.01, 1, 3);
+        while !env.done() {
+            let s = env.observe();
+            for (i, v) in s.iter().enumerate() {
+                assert!(v.is_finite() && *v >= 0.0 && *v <= 2.0,
+                        "state[{i}] = {v}");
+            }
+            env.step(0.7);
+        }
+    }
+}

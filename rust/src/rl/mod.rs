@@ -1,0 +1,11 @@
+//! Reinforcement-learning substrate for the SparOA operator scheduler:
+//! the scheduling MDP environment (paper §4.1) and a from-scratch Soft
+//! Actor-Critic implementation (paper §4.2) on the `nn` substrate.
+
+pub mod env;
+pub mod replay;
+pub mod sac;
+
+pub use env::{SchedulingEnv, STATE_DIM};
+pub use replay::ReplayBuffer;
+pub use sac::{Sac, SacConfig};

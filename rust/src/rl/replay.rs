@@ -1,0 +1,84 @@
+//! Bounded replay buffer for SAC (paper Alg. 1 line 19).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub state: Vec<f64>,
+    pub action: f64,
+    pub reward: f64,
+    pub next_state: Vec<f64>,
+    pub done: bool,
+}
+
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    capacity: usize,
+    head: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        ReplayBuffer { buf: Vec::with_capacity(capacity), capacity, head: 0 }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.head] = t;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn sample<'a>(&'a self, n: usize, rng: &mut Rng) -> Vec<&'a Transition> {
+        (0..n).map(|_| &self.buf[rng.below(self.buf.len())]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(r: f64) -> Transition {
+        Transition {
+            state: vec![0.0; 7],
+            action: 0.5,
+            reward: r,
+            next_state: vec![0.0; 7],
+            done: false,
+        }
+    }
+
+    #[test]
+    fn bounded_and_overwrites_oldest() {
+        let mut b = ReplayBuffer::new(4);
+        for i in 0..10 {
+            b.push(t(i as f64));
+        }
+        assert_eq!(b.len(), 4);
+        let rewards: Vec<f64> = b.buf.iter().map(|x| x.reward).collect();
+        // after 10 pushes into cap 4, contents are {8,9,6,7} in ring order
+        assert!(rewards.iter().all(|&r| r >= 6.0));
+    }
+
+    #[test]
+    fn sampling_uniform() {
+        let mut b = ReplayBuffer::new(100);
+        for i in 0..100 {
+            b.push(t(i as f64));
+        }
+        let mut rng = Rng::new(3);
+        let s = b.sample(1000, &mut rng);
+        let mean: f64 =
+            s.iter().map(|x| x.reward).sum::<f64>() / s.len() as f64;
+        assert!((mean - 49.5).abs() < 5.0, "mean {mean}");
+    }
+}

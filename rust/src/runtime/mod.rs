@@ -1,0 +1,258 @@
+//! PJRT runtime bridge: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the `xla` crate's CPU
+//! client.  This is the only place rust touches XLA; everything above works
+//! with [`HostTensor`]s.
+//!
+//! Design notes:
+//! * Interchange is HLO **text** (xla_extension 0.5.1 rejects jax>=0.5
+//!   serialized protos — 64-bit instruction ids).
+//! * Executables are compiled lazily and cached per artifact path; a model
+//!   warm-up compiles everything up front so the request path never pays
+//!   compile latency.
+//! * Weight stores are read once from `weights.bin` (f32 little-endian)
+//!   and sliced per op.
+
+use crate::graph::{ModelGraph, Op};
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A host-resident f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data }
+    }
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+    /// Fraction of exact zeros (activation sparsity, paper Eq. 1).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|x| x.abs() < 1e-9).count();
+        zeros as f64 / self.data.len() as f64
+    }
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Self> {
+        if shape.iter().product::<usize>() != self.data.len() {
+            bail!("reshape {:?} -> {:?} changes element count", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+}
+
+/// Per-model weight buffer (contents of weights.bin).
+pub struct WeightStore {
+    buf: Vec<f32>,
+}
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("weights.bin length not a multiple of 4");
+        }
+        let buf = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(WeightStore { buf })
+    }
+
+    /// Tensors for one op's weight slices.
+    pub fn op_params(&self, op: &Op) -> Result<Vec<HostTensor>> {
+        op.weights
+            .iter()
+            .map(|w| {
+                let end = w.offset + w.numel;
+                if end > self.buf.len() {
+                    bail!("weight slice out of range for op {}", op.name);
+                }
+                Ok(HostTensor::new(
+                    w.shape.clone(),
+                    self.buf[w.offset..end].to_vec(),
+                ))
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// PJRT client + compiled-executable cache.
+///
+/// Not `Sync`: the engine owns one `Runtime` on its execution thread (the
+/// scheduling layers never touch XLA directly).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_root: PathBuf,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_root: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            artifacts_root: artifacts_root.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact path
+    /// relative to the artifacts root.
+    fn ensure_compiled(&self, artifact: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(artifact) {
+            return Ok(());
+        }
+        let path = self.artifacts_root.join(artifact);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf8")?,
+        )
+        .map_err(|e| {
+            anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {artifact}: {e:?}"))?;
+        self.cache.borrow_mut().insert(artifact.to_string(), exe);
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Pre-compile every artifact a model needs (warm-up path).
+    pub fn warm_up(&self, graph: &ModelGraph) -> Result<usize> {
+        let mut n = 0;
+        for op in &graph.ops {
+            if let Some(a) = &op.artifact {
+                self.ensure_compiled(a)?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Execute one artifact with the given arguments (inputs ++ params).
+    pub fn execute(
+        &self,
+        artifact: &str,
+        args: &[HostTensor],
+    ) -> Result<HostTensor> {
+        self.ensure_compiled(artifact)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(artifact).unwrap();
+
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> =
+                    t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {artifact}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let shape = out
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("result shape: {e:?}"))?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("result to_vec: {e:?}"))?;
+        Ok(HostTensor::new(dims, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_sparsity_and_reshape() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0, 1.0, 0.0, 2.0, 0.0, 3.0]);
+        assert!((t.sparsity() - 0.5).abs() < 1e-12);
+        let r = t.clone().reshaped(vec![3, 2]).unwrap();
+        assert_eq!(r.shape, vec![3, 2]);
+        assert!(t.clone().reshaped(vec![4]).is_err());
+    }
+
+    #[test]
+    fn weight_store_slicing() {
+        let dir = std::env::temp_dir().join("sparoa_ws_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("weights.bin");
+        let vals: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let ws = WeightStore::load(&path).unwrap();
+        assert_eq!(ws.len(), 6);
+        let op = Op {
+            id: 1,
+            name: "t".into(),
+            kind: crate::graph::OpKind::Linear,
+            class: crate::graph::OpClass::MatMul,
+            inputs: vec![0],
+            exec_in_shapes: vec![vec![1, 2]],
+            exec_out_shape: vec![1, 3],
+            paper_out_shape: vec![1, 3],
+            flops_exec: 0.0,
+            flops_paper: 0.0,
+            bytes_in_paper: 0.0,
+            bytes_out_paper: 0.0,
+            params_bytes_paper: 0.0,
+            sparsity_in: 0.0,
+            sparsity_out: 0.0,
+            weights: vec![
+                crate::graph::WeightSlice { offset: 0, numel: 4, shape: vec![2, 2] },
+                crate::graph::WeightSlice { offset: 4, numel: 2, shape: vec![2] },
+            ],
+            artifact: None,
+        };
+        let ps = ws.op_params(&op).unwrap();
+        assert_eq!(ps[0].data, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(ps[1].data, vec![4.0, 5.0]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Dynamic-programming scheduling baseline ("SparOA with DP", Fig. 6/10).
+//!
+//! Exact DP over the op sequence with the *previous placement* as state:
+//! `cost[i][d] = min over d' of cost[i-1][d'] + switch(d', d) + lat(i, d)`.
+//! This is optimal for a chain under a *static* cost model — which is
+//! precisely its weakness (paper §6.7): it plans against nominal latencies
+//! and cannot react to memory pressure or contention, so SAC beats it at
+//! runtime even though DP searches exhaustively (and takes far longer on
+//! big graphs; we reproduce the cost by sweeping a latency-noise ensemble).
+
+use crate::device::Proc;
+use crate::scheduler::{Schedule, ScheduleCtx, Scheduler};
+
+pub struct DpScheduler {
+    /// Ensemble size: DP re-plans over this many jittered cost tables and
+    /// keeps the best — reproducing the paper's "exhaustive search" cost
+    /// profile (39-415 s at their scale).
+    pub ensemble: usize,
+}
+
+impl Default for DpScheduler {
+    fn default() -> Self {
+        DpScheduler { ensemble: 24 }
+    }
+}
+
+impl Scheduler for DpScheduler {
+    fn name(&self) -> &str {
+        "dp"
+    }
+
+    fn schedule(&mut self, ctx: &ScheduleCtx) -> Schedule {
+        let mut best: Option<(f64, Schedule)> = None;
+        for e in 0..self.ensemble.max(1) {
+            let plan = self.plan_once(ctx, e as u64);
+            let opts = crate::engine::sim::SimOptions::default();
+            let r = crate::engine::sim::simulate(ctx.graph, ctx.device,
+                                                 &plan, &opts);
+            if best.as_ref().map(|(m, _)| r.makespan_us < *m).unwrap_or(true)
+            {
+                best = Some((r.makespan_us, plan));
+            }
+        }
+        best.unwrap().1
+    }
+}
+
+impl DpScheduler {
+    fn plan_once(&self, ctx: &ScheduleCtx, seed: u64) -> Schedule {
+        use crate::util::rng::Rng;
+        let g = ctx.graph;
+        let dev = ctx.device;
+        let batch = ctx.batch.max(1) as f64;
+        let mut rng = Rng::new(seed * 7919 + 13);
+        // Jitter factor per (op, proc): models the nominal-vs-actual gap
+        // the static plan cannot see (zero jitter for ensemble member 0).
+        let amp = if seed == 0 { 0.0 } else { 0.06 };
+
+        // Collect the schedulable chain.
+        let chain: Vec<&crate::graph::Op> = g.schedulable_ops().collect();
+        let n = chain.len();
+        if n == 0 {
+            return Schedule::uniform(g, 1.0, "dp");
+        }
+        let opts = crate::engine::sim::SimOptions {
+            batch: ctx.batch, ..Default::default()
+        };
+        let lat = |op: &crate::graph::Op, p: Proc, rng: &mut Rng| -> f64 {
+            let (l, _) = crate::engine::sim::op_cost_us(
+                dev, p, op.class, op.flops_paper * batch,
+                op.bytes_moved_paper() * batch, op.sparsity_in, &opts);
+            l * (1.0 + amp * rng.normal())
+        };
+        let xfer = |op: &crate::graph::Op| -> f64 {
+            dev.transfer_us(op.bytes_out_paper * batch, true, true)
+        };
+
+        // DP tables.
+        let mut cost = vec![[0.0f64; 2]; n];
+        let mut back = vec![[0usize; 2]; n];
+        cost[0] = [lat(chain[0], Proc::Cpu, &mut rng),
+                   lat(chain[0], Proc::Gpu, &mut rng)];
+        for i in 1..n {
+            let lc = lat(chain[i], Proc::Cpu, &mut rng);
+            let lg = lat(chain[i], Proc::Gpu, &mut rng);
+            let x = xfer(chain[i - 1]);
+            for (d, l) in [(0usize, lc), (1usize, lg)] {
+                let stay = cost[i - 1][d] + l;
+                let switch = cost[i - 1][1 - d] + x + l;
+                if stay <= switch {
+                    cost[i][d] = stay;
+                    back[i][d] = d;
+                } else {
+                    cost[i][d] = switch;
+                    back[i][d] = 1 - d;
+                }
+            }
+        }
+        // Trace back.
+        let mut d = if cost[n - 1][0] <= cost[n - 1][1] { 0 } else { 1 };
+        let mut devs = vec![0usize; n];
+        for i in (0..n).rev() {
+            devs[i] = d;
+            d = back[i][d];
+        }
+        let mut xi = vec![0.0; g.ops.len()];
+        for (k, op) in chain.iter().enumerate() {
+            xi[op.id] = devs[k] as f64;
+        }
+        // Data-movement ops follow their producers.
+        for op in &g.ops {
+            if !op.class.schedulable() {
+                xi[op.id] = op.inputs.first().map(|&i| xi[i]).unwrap_or(1.0);
+            }
+        }
+        Schedule { xi, policy: "dp".into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceRegistry;
+    use crate::engine::sim::{simulate, SimOptions};
+    use crate::graph::ModelZoo;
+
+    #[test]
+    fn dp_not_worse_than_single_device_under_static_costs() {
+        let art = crate::artifacts_dir();
+        if !art.join("manifest.json").exists() {
+            return;
+        }
+        let zoo = ModelZoo::load(&art).unwrap();
+        let reg = DeviceRegistry::load(
+            &crate::repo_root().join("config/devices.json")).unwrap();
+        for model in ["resnet18", "vit_b16"] {
+            let g = zoo.get(model).unwrap();
+            let dev = reg.get("agx_orin").unwrap();
+            let mut dp = DpScheduler { ensemble: 1 };
+            let plan = dp.schedule(&ScheduleCtx {
+                graph: g, device: dev, thresholds: None, batch: 1,
+            });
+            let opts = SimOptions::default();
+            let r = simulate(g, dev, &plan, &opts);
+            let cpu = simulate(g, dev, &Schedule::uniform(g, 0.0, "c"), &opts);
+            let gpu = simulate(g, dev, &Schedule::uniform(g, 1.0, "g"), &opts);
+            assert!(r.makespan_us <= cpu.makespan_us.min(gpu.makespan_us)
+                * 1.05, "{model}: dp {} cpu {} gpu {}",
+                r.makespan_us, cpu.makespan_us, gpu.makespan_us);
+        }
+    }
+}

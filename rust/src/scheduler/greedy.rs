@@ -1,0 +1,110 @@
+//! Greedy scheduling baseline ("SparOA with Greedy", Fig. 6/10).
+//!
+//! Walks the ops in topological order and assigns each to whichever
+//! processor minimizes that op's *immediate* completion time (compute +
+//! any cross-device input transfer), with no lookahead and no awareness of
+//! dynamic hardware state.  Converges almost instantly (paper: 0.04-0.24s)
+//! but leaves 20%+ latency on the table versus SAC.
+
+use crate::device::Proc;
+use crate::scheduler::{Schedule, ScheduleCtx, Scheduler};
+
+pub struct GreedyScheduler;
+
+impl Scheduler for GreedyScheduler {
+    fn name(&self) -> &str {
+        "greedy"
+    }
+
+    fn schedule(&mut self, ctx: &ScheduleCtx) -> Schedule {
+        let g = ctx.graph;
+        let dev = ctx.device;
+        let batch = ctx.batch.max(1) as f64;
+        let mut xi = vec![0.0; g.ops.len()];
+        let mut placed = vec![Proc::Cpu; g.ops.len()];
+        let mut cpu_free = 0.0f64;
+        let mut gpu_free = 0.0f64;
+        let mut finish = vec![0.0f64; g.ops.len()];
+
+        for op in &g.ops {
+            if !op.class.schedulable() {
+                let p = op.inputs.first().map(|&i| placed[i])
+                    .unwrap_or(Proc::Cpu);
+                placed[op.id] = p;
+                xi[op.id] = if p == Proc::Gpu { 1.0 } else { 0.0 };
+                finish[op.id] = op.inputs.iter().map(|&i| finish[i])
+                    .fold(0.0, f64::max);
+                continue;
+            }
+            let flops = op.flops_paper * batch;
+            let bytes = op.bytes_moved_paper() * batch;
+            let opts = crate::engine::sim::SimOptions {
+                batch: ctx.batch, ..Default::default()
+            };
+            let mut best = (f64::INFINITY, Proc::Cpu, 0.0);
+            for proc in [Proc::Cpu, Proc::Gpu] {
+                let (lat, _) = crate::engine::sim::op_cost_us(
+                    dev, proc, op.class, flops, bytes, op.sparsity_in,
+                    &opts);
+                let mut ready: f64 = 0.0;
+                for &i in &op.inputs {
+                    let mut t = finish[i];
+                    if placed[i] != proc && g.ops[i].bytes_out_paper > 0.0 {
+                        t += dev.transfer_us(
+                            g.ops[i].bytes_out_paper * batch, true, true);
+                    }
+                    ready = ready.max(t);
+                }
+                let free = match proc {
+                    Proc::Cpu => cpu_free,
+                    Proc::Gpu => gpu_free,
+                };
+                let end = ready.max(free) + lat;
+                if end < best.0 {
+                    best = (end, proc, lat);
+                }
+            }
+            let (end, proc, _) = best;
+            match proc {
+                Proc::Cpu => cpu_free = end,
+                Proc::Gpu => gpu_free = end,
+            }
+            placed[op.id] = proc;
+            finish[op.id] = end;
+            xi[op.id] = if proc == Proc::Gpu { 1.0 } else { 0.0 };
+        }
+        Schedule { xi, policy: "greedy".into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceRegistry;
+    use crate::graph::ModelZoo;
+
+    #[test]
+    fn greedy_beats_both_single_device_plans() {
+        let art = crate::artifacts_dir();
+        if !art.join("manifest.json").exists() {
+            return;
+        }
+        let zoo = ModelZoo::load(&art).unwrap();
+        let reg = DeviceRegistry::load(
+            &crate::repo_root().join("config/devices.json")).unwrap();
+        let g = zoo.get("mobilenet_v3_small").unwrap();
+        let dev = reg.get("agx_orin").unwrap();
+        let mut sched = GreedyScheduler;
+        let plan = sched.schedule(&ScheduleCtx {
+            graph: g, device: dev, thresholds: None, batch: 1,
+        });
+        let opts = crate::engine::sim::SimOptions::default();
+        let greedy = crate::engine::sim::simulate(g, dev, &plan, &opts);
+        let cpu = crate::engine::sim::simulate(
+            g, dev, &Schedule::uniform(g, 0.0, "cpu"), &opts);
+        let gpu = crate::engine::sim::simulate(
+            g, dev, &Schedule::uniform(g, 1.0, "gpu"), &opts);
+        assert!(greedy.makespan_us <= cpu.makespan_us * 1.001);
+        assert!(greedy.makespan_us <= gpu.makespan_us * 1.001);
+    }
+}

@@ -1,0 +1,133 @@
+//! Operator scheduling: the shared [`Schedule`] representation, the
+//! [`Scheduler`] trait every policy implements, and the concrete SparOA
+//! policies (static-threshold, greedy, dynamic-programming, SAC).
+//!
+//! The paper's action space (§4.1) is a continuous ratio ξ ∈ [0,1] per
+//! operator: 0 = CPU, 1 = GPU, interior = co-execute on both with
+//! weighted-average aggregation (Eq. 14).
+
+pub mod dp;
+pub mod greedy;
+pub mod sac_sched;
+pub mod threshold;
+
+use crate::device::{DeviceModel, Proc};
+use crate::graph::ModelGraph;
+
+/// Per-op placement ratio ξ (GPU share).
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// xi[i] for op i; data-movement ops inherit their producer's device.
+    pub xi: Vec<f64>,
+    /// Human-readable provenance (policy name) for reports.
+    pub policy: String,
+}
+
+/// Interior band that triggers true co-execution (paper Alg. 1 line 10).
+/// Kept narrow so co-running is a deliberate policy choice rather than the
+/// default of an untrained agent (ξ starts near 0.5).
+pub const CO_RUN_LO: f64 = 0.45;
+pub const CO_RUN_HI: f64 = 0.55;
+
+/// Execution mode an ξ value implies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    Single(Proc),
+    /// Co-execute on both; payload is the GPU aggregation weight ξ.
+    CoRun(f64),
+}
+
+pub fn mode_of(xi: f64) -> Mode {
+    if xi <= CO_RUN_LO {
+        Mode::Single(Proc::Cpu)
+    } else if xi >= CO_RUN_HI {
+        Mode::Single(Proc::Gpu)
+    } else {
+        Mode::CoRun(xi)
+    }
+}
+
+/// Primary device of an ξ (for load-share accounting, Fig. 6).
+pub fn primary_proc(xi: f64) -> Proc {
+    if xi >= 0.5 {
+        Proc::Gpu
+    } else {
+        Proc::Cpu
+    }
+}
+
+impl Schedule {
+    pub fn uniform(graph: &ModelGraph, xi: f64, policy: &str) -> Self {
+        Schedule { xi: vec![xi; graph.ops.len()], policy: policy.into() }
+    }
+
+    /// Fraction of schedulable ops whose primary device is the GPU.
+    pub fn gpu_share(&self, graph: &ModelGraph) -> f64 {
+        let mut total = 0usize;
+        let mut gpu = 0usize;
+        for op in graph.schedulable_ops() {
+            total += 1;
+            if primary_proc(self.xi[op.id]) == Proc::Gpu {
+                gpu += 1;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            gpu as f64 / total as f64
+        }
+    }
+
+    /// Number of adjacent-op device switches (O_switch proxy).
+    pub fn switch_count(&self, graph: &ModelGraph) -> usize {
+        let mut last: Option<Proc> = None;
+        let mut n = 0;
+        for op in graph.schedulable_ops() {
+            let p = primary_proc(self.xi[op.id]);
+            if let Some(l) = last {
+                if l != p {
+                    n += 1;
+                }
+            }
+            last = Some(p);
+        }
+        n
+    }
+}
+
+/// Context handed to scheduling policies.
+pub struct ScheduleCtx<'a> {
+    pub graph: &'a ModelGraph,
+    pub device: &'a DeviceModel,
+    /// Per-op predicted thresholds (from the threshold predictor); index by
+    /// op id.  None for policies that do not use the predictor.
+    pub thresholds: Option<&'a [(f64, f64)]>,
+    /// Batch size the schedule is computed for.
+    pub batch: usize,
+}
+
+/// A scheduling policy.
+pub trait Scheduler {
+    fn name(&self) -> &str;
+    fn schedule(&mut self, ctx: &ScheduleCtx) -> Schedule;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_bands() {
+        assert_eq!(mode_of(0.0), Mode::Single(Proc::Cpu));
+        assert_eq!(mode_of(0.44), Mode::Single(Proc::Cpu));
+        assert_eq!(mode_of(0.5), Mode::CoRun(0.5));
+        assert_eq!(mode_of(0.56), Mode::Single(Proc::Gpu));
+        assert_eq!(mode_of(1.0), Mode::Single(Proc::Gpu));
+    }
+
+    #[test]
+    fn primary_rounds() {
+        assert_eq!(primary_proc(0.49), Proc::Cpu);
+        assert_eq!(primary_proc(0.51), Proc::Gpu);
+    }
+}

@@ -1,0 +1,76 @@
+//! Static threshold scheduling — "SparOA w/o RL" (Fig. 7) and the
+//! +Predictor ablation stage (Fig. 9).
+//!
+//! Uses the threshold predictor's per-op (s*, c*): an op goes to the CPU
+//! when its sparsity exceeds s* while its normalized intensity stays below
+//! c* (high-sparsity/low-intensity quadrant); everything else goes to the
+//! GPU.  The plan is fixed up front — no adaptation to hardware state —
+//! and the engine runs it with synchronous (non-overlapped) transfers,
+//! which is what Fig. 7's breakdown compares against.
+
+use crate::scheduler::{Schedule, ScheduleCtx, Scheduler};
+
+/// Fallback fixed thresholds when no predictor output is available
+/// (the "hand-designed rule" strawman from paper §3).
+pub const FIXED_SPARSITY_THRESHOLD: f64 = 0.5;
+pub const FIXED_INTENSITY_THRESHOLD: f64 = 0.55;
+
+pub struct ThresholdScheduler;
+
+impl Scheduler for ThresholdScheduler {
+    fn name(&self) -> &str {
+        "static-threshold"
+    }
+
+    fn schedule(&mut self, ctx: &ScheduleCtx) -> Schedule {
+        let g = ctx.graph;
+        let mut xi = vec![1.0; g.ops.len()];
+        for op in &g.ops {
+            if !op.class.schedulable() {
+                xi[op.id] =
+                    op.inputs.first().map(|&i| xi[i]).unwrap_or(1.0);
+                continue;
+            }
+            let (s_thr, c_thr) = ctx
+                .thresholds
+                .map(|t| t[op.id])
+                .unwrap_or((FIXED_SPARSITY_THRESHOLD,
+                            FIXED_INTENSITY_THRESHOLD));
+            let intensity = {
+                let lf = op.flops_paper.max(1.0).log10();
+                ((lf - 3.0) / 9.0).clamp(0.0, 1.0)
+            };
+            let cpu_friendly =
+                op.sparsity_in > s_thr && intensity < c_thr;
+            xi[op.id] = if cpu_friendly { 0.0 } else { 1.0 };
+        }
+        Schedule { xi, policy: "static-threshold".into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceRegistry;
+    use crate::graph::ModelZoo;
+
+    #[test]
+    fn threshold_splits_work_across_devices() {
+        let art = crate::artifacts_dir();
+        if !art.join("manifest.json").exists() {
+            return;
+        }
+        let zoo = ModelZoo::load(&art).unwrap();
+        let reg = DeviceRegistry::load(
+            &crate::repo_root().join("config/devices.json")).unwrap();
+        let g = zoo.get("mobilenet_v3_small").unwrap();
+        let dev = reg.get("agx_orin").unwrap();
+        let mut s = ThresholdScheduler;
+        let plan = s.schedule(&ScheduleCtx {
+            graph: g, device: dev, thresholds: None, batch: 1,
+        });
+        let share = plan.gpu_share(g);
+        assert!(share > 0.2 && share < 1.0,
+                "expected a mixed plan, gpu share {share}");
+    }
+}

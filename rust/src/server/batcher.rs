@@ -1,0 +1,216 @@
+//! Request batching over a virtual-time arrival stream.
+//!
+//! Two policies:
+//! * `Fixed` — frameworks with static batch sizes: wait until `size`
+//!   requests arrive or `timeout_us` passes, then pad to `size`.  Padding
+//!   slots burn compute; the wait and the padding are both *batching
+//!   overhead* (Fig. 8 reports them at 15.4–28.7% for static frameworks).
+//! * `Dynamic` — SparOA: take whatever the queue holds (bounded by the
+//!   Alg. 2 optimum), no padding, plus a small optimizer cost per batch.
+
+use crate::device::DeviceModel;
+use crate::engine::sim::{simulate, SimOptions};
+use crate::graph::ModelGraph;
+use crate::scheduler::Schedule;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub arrival_us: f64,
+}
+
+/// Poisson arrival stream at `rate` req/s.
+pub fn poisson_stream(n: usize, rate_per_s: f64, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|id| {
+            t += rng.exponential(rate_per_s) * 1e6;
+            Request { id, arrival_us: t }
+        })
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+pub enum BatchPolicy {
+    /// Pad to `size`; flush on `timeout_us`.
+    Fixed { size: usize, timeout_us: f64 },
+    /// Take min(queue, max) — SparOA's dynamic batching (Alg. 2 optimum).
+    Dynamic { max: usize, optimizer_cost_us: f64 },
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct BatchingReport {
+    pub n_requests: usize,
+    pub n_batches: usize,
+    /// pure inference time attributable to real requests, us
+    pub inference_us: f64,
+    /// padding waste + assembly wait + optimizer cost, us
+    pub overhead_us: f64,
+    pub mean_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+}
+
+impl BatchingReport {
+    /// Fig. 8's Y-axis: overhead share of end-to-end time.
+    pub fn overhead_pct(&self) -> f64 {
+        100.0 * self.overhead_us / (self.overhead_us + self.inference_us)
+    }
+}
+
+/// Virtual-time batching simulation of one policy.
+pub fn run_batching_sim(
+    graph: &ModelGraph,
+    dev: &DeviceModel,
+    sched: &Schedule,
+    opts: &SimOptions,
+    requests: &[Request],
+    policy: &BatchPolicy,
+) -> BatchingReport {
+    let mut now = 0.0f64;
+    let mut i = 0usize;
+    let mut latencies = Vec::with_capacity(requests.len());
+    let mut rep = BatchingReport { n_requests: requests.len(),
+                                   ..Default::default() };
+    let mut batch_sizes = Vec::new();
+
+    // Per-batch-size inference latency cache.
+    let mut lat_cache: std::collections::HashMap<usize, f64> =
+        std::collections::HashMap::new();
+    let mut lat_of = |b: usize| -> f64 {
+        *lat_cache.entry(b).or_insert_with(|| {
+            let mut o = opts.clone();
+            o.batch = b;
+            simulate(graph, dev, sched, &o).makespan_us
+        })
+    };
+
+    while i < requests.len() {
+        // Engine idle: jump to next arrival if queue empty.
+        now = now.max(requests[i].arrival_us);
+        // Queue contents at `now`.
+        let mut take = 0usize;
+        while i + take < requests.len()
+            && requests[i + take].arrival_us <= now
+        {
+            take += 1;
+        }
+        let (exec_size, real, wait_extra, policy_cost) = match policy {
+            BatchPolicy::Fixed { size, timeout_us } => {
+                // Wait for `size` arrivals or the timeout.
+                let deadline = now + timeout_us;
+                let mut k = take;
+                while i + k < requests.len()
+                    && requests[i + k].arrival_us <= deadline
+                    && k < *size
+                {
+                    k += 1;
+                }
+                let ready_at = if k >= *size {
+                    requests[i + k - 1].arrival_us.max(now)
+                } else {
+                    deadline
+                };
+                (*size, k.min(*size), ready_at - now, 0.0)
+            }
+            BatchPolicy::Dynamic { max, optimizer_cost_us } => {
+                let k = take.clamp(1, *max);
+                (k, k, 0.0, *optimizer_cost_us)
+            }
+        };
+        now += wait_extra + policy_cost;
+        let lat = lat_of(exec_size);
+        let finish = now + lat;
+        // Overhead attribution: padding slots + wait + optimizer cost.
+        let pad_frac =
+            (exec_size - real) as f64 / exec_size as f64;
+        rep.overhead_us += lat * pad_frac + wait_extra + policy_cost;
+        rep.inference_us += lat * (1.0 - pad_frac);
+        for r in &requests[i..i + real] {
+            latencies.push(finish - r.arrival_us);
+        }
+        batch_sizes.push(real);
+        rep.n_batches += 1;
+        i += real;
+        now = finish;
+    }
+
+    rep.mean_latency_us = crate::util::stats::mean(&latencies);
+    rep.p99_latency_us = crate::util::stats::percentile(&latencies, 99.0);
+    rep.throughput_rps = requests.len() as f64 / (now / 1e6);
+    rep.mean_batch = crate::util::stats::mean(
+        &batch_sizes.iter().map(|&b| b as f64).collect::<Vec<_>>());
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceRegistry;
+    use crate::graph::ModelZoo;
+
+    #[test]
+    fn poisson_interarrivals_mean() {
+        let reqs = poisson_stream(5000, 100.0, 3);
+        let mean_gap = reqs.last().unwrap().arrival_us / 5000.0;
+        assert!((mean_gap - 10_000.0).abs() < 1_000.0, "gap {mean_gap}");
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_us >= w[0].arrival_us);
+        }
+    }
+
+    #[test]
+    fn dynamic_batching_has_lower_overhead_than_fixed() {
+        let art = crate::artifacts_dir();
+        if !art.join("manifest.json").exists() {
+            return;
+        }
+        let zoo = ModelZoo::load(&art).unwrap();
+        let reg = DeviceRegistry::load(
+            &crate::repo_root().join("config/devices.json")).unwrap();
+        let g = zoo.get("mobilenet_v3_small").unwrap();
+        let dev = reg.get("agx_orin").unwrap();
+        let sched = Schedule::uniform(g, 1.0, "gpu");
+        let opts = SimOptions::default();
+        let reqs = poisson_stream(400, 300.0, 7);
+        let fixed = run_batching_sim(g, dev, &sched, &opts, &reqs,
+            &BatchPolicy::Fixed { size: 32, timeout_us: 20_000.0 });
+        let dynamic = run_batching_sim(g, dev, &sched, &opts, &reqs,
+            &BatchPolicy::Dynamic { max: 64, optimizer_cost_us: 30.0 });
+        assert!(dynamic.overhead_pct() < fixed.overhead_pct(),
+                "dyn {:.1}% vs fixed {:.1}%", dynamic.overhead_pct(),
+                fixed.overhead_pct());
+        assert_eq!(
+            fixed.n_requests,
+            dynamic.n_requests
+        );
+    }
+
+    #[test]
+    fn all_requests_served_exactly_once() {
+        let art = crate::artifacts_dir();
+        if !art.join("manifest.json").exists() {
+            return;
+        }
+        let zoo = ModelZoo::load(&art).unwrap();
+        let reg = DeviceRegistry::load(
+            &crate::repo_root().join("config/devices.json")).unwrap();
+        let g = zoo.get("resnet18").unwrap();
+        let dev = reg.get("orin_nano").unwrap();
+        let sched = Schedule::uniform(g, 1.0, "gpu");
+        let reqs = poisson_stream(137, 80.0, 5);
+        for policy in [
+            BatchPolicy::Fixed { size: 8, timeout_us: 10_000.0 },
+            BatchPolicy::Dynamic { max: 16, optimizer_cost_us: 20.0 },
+        ] {
+            let rep = run_batching_sim(g, dev, &sched,
+                &SimOptions::default(), &reqs, &policy);
+            assert_eq!(rep.n_requests, 137);
+            assert!(rep.mean_latency_us > 0.0);
+            assert!(rep.throughput_rps > 0.0);
+        }
+    }
+}

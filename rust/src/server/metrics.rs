@@ -1,0 +1,87 @@
+//! Serving metrics: latency distribution, throughput, SLO attainment.
+
+use crate::util::stats;
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeMetrics {
+    latencies_us: Vec<f64>,
+    start: Option<std::time::Instant>,
+    elapsed_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        ServeMetrics { start: Some(std::time::Instant::now()),
+                       ..Default::default() }
+    }
+
+    pub fn record(&mut self, latency_us: f64) {
+        self.latencies_us.push(latency_us);
+    }
+
+    pub fn finish(&mut self) {
+        if let Some(s) = self.start.take() {
+            self.elapsed_s = s.elapsed().as_secs_f64();
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies_us.len()
+    }
+    pub fn mean_us(&self) -> f64 {
+        stats::mean(&self.latencies_us)
+    }
+    pub fn p50_us(&self) -> f64 {
+        stats::percentile(&self.latencies_us, 50.0)
+    }
+    pub fn p99_us(&self) -> f64 {
+        stats::percentile(&self.latencies_us, 99.0)
+    }
+    pub fn throughput_rps(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.count() as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+    /// Fraction of requests within `slo_us`.
+    pub fn slo_attainment(&self, slo_us: f64) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.latencies_us.iter().filter(|&&l| l <= slo_us).count() as f64
+            / self.latencies_us.len() as f64
+    }
+
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} mean={:.1}us p50={:.1}us p99={:.1}us \
+             throughput={:.1} req/s",
+            self.count(),
+            self.mean_us(),
+            self.p50_us(),
+            self.p99_us(),
+            self.throughput_rps()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_aggregate() {
+        let mut m = ServeMetrics::new();
+        for i in 1..=100 {
+            m.record(i as f64 * 100.0);
+        }
+        m.finish();
+        assert_eq!(m.count(), 100);
+        assert!((m.mean_us() - 5050.0).abs() < 1.0);
+        assert!((m.p50_us() - 5050.0).abs() < 110.0);
+        assert!(m.p99_us() >= 9800.0);
+        assert!((m.slo_attainment(5000.0) - 0.5).abs() < 0.02);
+        assert!(m.throughput_rps() > 0.0);
+    }
+}

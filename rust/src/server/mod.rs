@@ -1,0 +1,9 @@
+//! Serving front-end: request generation, queueing, dynamic batching and
+//! latency/throughput metrics — the online half of SparOA (§5), and the
+//! substrate for the Fig. 8 batching-overhead reproduction.
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{BatchPolicy, BatchingReport, Request, run_batching_sim};
+pub use metrics::ServeMetrics;

@@ -1,0 +1,5 @@
+//! Dependency-free substrates: JSON, RNG, timing/stats helpers.
+
+pub mod json;
+pub mod rng;
+pub mod stats;

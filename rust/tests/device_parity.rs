@@ -1,0 +1,119 @@
+//! Parity between the rust device simulator and its python mirror
+//! (python/compile/device_model.py), which labels the predictor's ground
+//! truth.  Drift between the two would silently invalidate Table 3.
+//!
+//! Requires `python` on PATH (skips cleanly otherwise).
+
+use sparoa::device::{DeviceRegistry, Proc};
+use sparoa::graph::OpClass;
+
+fn python_latencies(cases: &[(&str, &str, f64, f64, f64)]) -> Option<Vec<f64>> {
+    let mut script = String::from(
+        "import sys, json\n\
+         sys.path.insert(0, 'python')\n\
+         from compile import device_model as dm\n\
+         cfg = dm.load('config/devices.json')\n\
+         out = []\n",
+    );
+    for (dev, class, flops, bytes, sp) in cases {
+        script.push_str(&format!(
+            "out.append(dm.op_latency_us(cfg['devices']['{dev}'], 'cpu', \
+             '{class}', {flops}, {bytes}, {sp}))\n\
+             out.append(dm.op_latency_us(cfg['devices']['{dev}'], 'gpu', \
+             '{class}', {flops}, {bytes}, {sp}))\n"
+        ));
+    }
+    script.push_str("print(json.dumps(out))\n");
+    let out = std::process::Command::new("python")
+        .arg("-c")
+        .arg(&script)
+        .current_dir(sparoa::repo_root())
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        eprintln!(
+            "python mirror failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        return None;
+    }
+    let text = String::from_utf8(out.stdout).ok()?;
+    let v = sparoa::util::json::parse(text.trim()).ok()?;
+    Some(v.vec_f64())
+}
+
+#[test]
+fn roofline_matches_python_mirror() {
+    let cases: Vec<(&str, &str, f64, f64, f64)> = vec![
+        ("agx_orin", "conv", 2e9, 1e7, 0.0),
+        ("agx_orin", "conv", 2e9, 1e7, 0.7),
+        ("agx_orin", "matmul", 5e8, 4e6, 0.3),
+        ("agx_orin", "norm", 1e5, 8e5, 0.0),
+        ("agx_orin", "elementwise", 5e4, 4e5, 0.9),
+        ("orin_nano", "dwconv", 1e8, 2e6, 0.5),
+        ("orin_nano", "attention", 3e9, 5e7, 0.1),
+        ("orin_nano", "pool", 1e6, 1e6, 0.0),
+        ("orin_nano", "softmax", 2e6, 1.5e6, 0.0),
+    ];
+    let Some(py) = python_latencies(&cases) else {
+        eprintln!("python unavailable; skipping parity test");
+        return;
+    };
+    let reg =
+        DeviceRegistry::load(&sparoa::repo_root().join("config/devices.json"))
+            .unwrap();
+    for (i, (dev, class, flops, bytes, sp)) in cases.iter().enumerate() {
+        let d = reg.get(dev).unwrap();
+        let class = OpClass::parse(class).unwrap();
+        for (j, proc) in [Proc::Cpu, Proc::Gpu].into_iter().enumerate() {
+            let rust = d.op_latency_us(proc, class, *flops, *bytes, *sp);
+            let python = py[i * 2 + j];
+            let rel = (rust - python).abs() / python.max(1e-9);
+            assert!(
+                rel < 1e-9,
+                "case {i} {dev}/{class:?}/{proc:?}: rust={rust} py={python}"
+            );
+        }
+    }
+}
+
+#[test]
+fn transfer_matches_python_mirror() {
+    let script = "import sys, json\n\
+        sys.path.insert(0, 'python')\n\
+        from compile import device_model as dm\n\
+        cfg = dm.load('config/devices.json')\n\
+        d = cfg['devices']['agx_orin']\n\
+        print(json.dumps([dm.transfer_us(d, 1e6), \
+                          dm.transfer_us(d, 1e6, pinned=False), \
+                          dm.transfer_us(d, 1e6, overlap=True)]))\n";
+    let Ok(out) = std::process::Command::new("python")
+        .arg("-c")
+        .arg(script)
+        .current_dir(sparoa::repo_root())
+        .output()
+    else {
+        return;
+    };
+    if !out.status.success() {
+        eprintln!("python mirror unavailable; skipping");
+        return;
+    }
+    let py = sparoa::util::json::parse(
+        String::from_utf8(out.stdout).unwrap().trim(),
+    )
+    .unwrap()
+    .vec_f64();
+    let reg =
+        DeviceRegistry::load(&sparoa::repo_root().join("config/devices.json"))
+            .unwrap();
+    let d = reg.get("agx_orin").unwrap();
+    let rust = [
+        d.transfer_us(1e6, true, false),
+        d.transfer_us(1e6, false, false),
+        d.transfer_us(1e6, true, true),
+    ];
+    for (r, p) in rust.iter().zip(&py) {
+        assert!((r - p).abs() / p < 1e-9, "rust {r} vs py {p}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Table 3 integration: the AOT Transformer-LSTM predictor behind PJRT
+//! beats the LR and CNN baselines on the held-out threshold dataset, and
+//! its accuracy matches what the python training loop recorded.
+
+use sparoa::predictor::{
+    accuracy, LinearPredictor, PredictorDataset, ThresholdPredictor,
+    N_FEATURES, SEQ_LEN,
+};
+use sparoa::runtime::{HostTensor, Runtime};
+
+fn setup() -> Option<(PredictorDataset, Runtime)> {
+    let art = sparoa::artifacts_dir();
+    if !art.join("predictor/dataset.json").exists() {
+        eprintln!("predictor artifacts missing; skipping");
+        return None;
+    }
+    Some((
+        PredictorDataset::load(&art).unwrap(),
+        Runtime::new(&art).unwrap(),
+    ))
+}
+
+fn eval_hlo(rt: &Runtime, artifact: &str, ds: &PredictorDataset)
+    -> (f64, f64)
+{
+    let pred = ThresholdPredictor::with_artifact(rt, artifact);
+    let mut s_acc = 0.0;
+    let mut c_acc = 0.0;
+    let mut n = 0.0;
+    for (x, y, m) in &ds.sequences {
+        let rows: Vec<[f32; N_FEATURES]> = (0..SEQ_LEN)
+            .map(|i| {
+                let mut r = [0f32; N_FEATURES];
+                r.copy_from_slice(&x[i * N_FEATURES..(i + 1) * N_FEATURES]);
+                r
+            })
+            .collect();
+        let p = pred.predict_window(&rows).unwrap();
+        let (s, c) = accuracy(&p, y, m, 0.1);
+        let w = m.iter().sum::<f32>() as f64;
+        s_acc += s * w;
+        c_acc += c * w;
+        n += w;
+    }
+    (s_acc / n, c_acc / n)
+}
+
+#[test]
+fn transformer_lstm_beats_baselines_on_test_set() {
+    let Some((ds, rt)) = setup() else { return };
+    let (ours_s, ours_c) =
+        eval_hlo(&rt, "predictor/thresh_predictor.hlo.txt", &ds);
+    let (cnn_s, cnn_c) = eval_hlo(&rt, "predictor/cnn_predictor.hlo.txt", &ds);
+
+    // LR natively.
+    let mut lr_s = 0.0;
+    let mut lr_c = 0.0;
+    let mut n = 0.0;
+    for (x, y, m) in &ds.sequences {
+        let preds: Vec<(f64, f64)> = (0..SEQ_LEN)
+            .map(|i| {
+                let mut r = [0f32; N_FEATURES];
+                r.copy_from_slice(&x[i * N_FEATURES..(i + 1) * N_FEATURES]);
+                ds.lr.predict(&r)
+            })
+            .collect();
+        let (s, c) = accuracy(&preds, y, m, 0.1);
+        let w = m.iter().sum::<f32>() as f64;
+        lr_s += s * w;
+        lr_c += c * w;
+        n += w;
+    }
+    lr_s /= n;
+    lr_c /= n;
+
+    println!("Table 3: ours=({ours_s:.3},{ours_c:.3}) \
+              cnn=({cnn_s:.3},{cnn_c:.3}) lr=({lr_s:.3},{lr_c:.3})");
+    assert!(ours_s > cnn_s && cnn_s > lr_s,
+            "sparsity ordering: {ours_s} / {cnn_s} / {lr_s}");
+    assert!(ours_c > lr_c, "intensity: ours {ours_c} vs lr {lr_c}");
+    assert!(ours_s > 0.85, "ours sparsity accuracy {ours_s}");
+    assert!(ours_c > 0.75, "ours intensity accuracy {ours_c}");
+}
+
+#[test]
+fn hlo_accuracy_matches_training_record() {
+    let Some((ds, rt)) = setup() else { return };
+    let (ours_s, ours_c) =
+        eval_hlo(&rt, "predictor/thresh_predictor.hlo.txt", &ds);
+    let rec = ds
+        .trained_accuracy
+        .iter()
+        .find(|(k, _, _)| k == "ours")
+        .unwrap();
+    assert!((ours_s - rec.1).abs() < 0.02,
+            "rust-side {ours_s} vs python-side {}", rec.1);
+    assert!((ours_c - rec.2).abs() < 0.02,
+            "rust-side {ours_c} vs python-side {}", rec.2);
+}
+
+#[test]
+fn predictions_stay_in_unit_interval() {
+    let Some((_, rt)) = setup() else { return };
+    let pred = ThresholdPredictor::new(&rt);
+    let rows: Vec<[f32; N_FEATURES]> = (0..SEQ_LEN)
+        .map(|i| {
+            let f = i as f32 / SEQ_LEN as f32;
+            [f, 1.0 - f, 0.5, 2.0 * f, f, 1.0]
+        })
+        .collect();
+    for (s, c) in pred.predict_window(&rows).unwrap() {
+        assert!((0.0..=1.0).contains(&s) && (0.0..=1.0).contains(&c));
+    }
+}
+
+#[test]
+fn linear_predictor_loads_sane_weights() {
+    let Some((ds, _)) = setup() else { return };
+    let LinearPredictor { w } = ds.lr;
+    for row in &w {
+        for v in row {
+            assert!(v.is_finite());
+        }
+    }
+}

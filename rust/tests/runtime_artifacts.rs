@@ -1,0 +1,86 @@
+//! Integration: PJRT runtime loads and executes real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run (skips cleanly otherwise).
+
+use sparoa::graph::{ModelZoo, OpKind};
+use sparoa::runtime::{HostTensor, Runtime, WeightStore};
+use sparoa::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    sparoa::artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn executes_first_conv_of_mobilenet() {
+    if !artifacts_ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let zoo = ModelZoo::load(&sparoa::artifacts_dir()).unwrap();
+    let g = zoo.get("mobilenet_v3_small").unwrap();
+    let ws = WeightStore::load(&g.weights_path).unwrap();
+    let rt = Runtime::new(&sparoa::artifacts_dir()).unwrap();
+
+    let conv = g
+        .ops
+        .iter()
+        .find(|o| o.kind == OpKind::Conv2d)
+        .expect("model has a conv");
+    let mut rng = Rng::new(1);
+    let x = HostTensor::new(
+        conv.exec_in_shapes[0].clone(),
+        (0..conv.exec_in_shapes[0].iter().product::<usize>())
+            .map(|_| rng.normal() as f32)
+            .collect(),
+    );
+    let mut args = vec![x];
+    args.extend(ws.op_params(conv).unwrap());
+    let out = rt
+        .execute(conv.artifact.as_ref().unwrap(), &args)
+        .unwrap();
+    assert_eq!(out.shape, conv.exec_out_shape);
+    assert!(out.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn relu_artifact_matches_native() {
+    if !artifacts_ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let zoo = ModelZoo::load(&sparoa::artifacts_dir()).unwrap();
+    let g = zoo.get("resnet18").unwrap();
+    let rt = Runtime::new(&sparoa::artifacts_dir()).unwrap();
+    let relu = g
+        .ops
+        .iter()
+        .find(|o| o.kind == OpKind::Relu)
+        .expect("model has a relu");
+    let n: usize = relu.exec_in_shapes[0].iter().product();
+    let mut rng = Rng::new(2);
+    let x = HostTensor::new(
+        relu.exec_in_shapes[0].clone(),
+        (0..n).map(|_| rng.normal() as f32).collect(),
+    );
+    let out = rt.execute(relu.artifact.as_ref().unwrap(), &[x.clone()]).unwrap();
+    for (o, i) in out.data.iter().zip(&x.data) {
+        assert_eq!(*o, i.max(0.0));
+    }
+    // ReLU on zero-mean noise: ~half the outputs are exactly zero.
+    assert!(out.sparsity() > 0.4 && out.sparsity() < 0.6);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    if !artifacts_ready() {
+        return;
+    }
+    let zoo = ModelZoo::load(&sparoa::artifacts_dir()).unwrap();
+    let g = zoo.get("resnet18").unwrap();
+    let rt = Runtime::new(&sparoa::artifacts_dir()).unwrap();
+    let n = rt.warm_up(g).unwrap();
+    assert!(n > 50, "resnet18 should have >50 artifact-backed ops, got {n}");
+    let cached = rt.cached();
+    rt.warm_up(g).unwrap();
+    assert_eq!(rt.cached(), cached, "second warm-up must not recompile");
+}

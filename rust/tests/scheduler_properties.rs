@@ -1,0 +1,212 @@
+//! Property-based tests on coordinator invariants (bench_support::prop —
+//! the vendored crate set has no proptest; same seeded-generation model).
+
+use sparoa::bench_support::prop;
+use sparoa::device::DeviceRegistry;
+use sparoa::engine::sim::{simulate, SimOptions};
+use sparoa::graph::ModelZoo;
+use sparoa::scheduler::{
+    dp::DpScheduler, greedy::GreedyScheduler, primary_proc,
+    threshold::ThresholdScheduler, Schedule, ScheduleCtx, Scheduler,
+};
+use sparoa::util::rng::Rng;
+
+fn setup() -> Option<(ModelZoo, DeviceRegistry)> {
+    let art = sparoa::artifacts_dir();
+    if !art.join("manifest.json").exists() {
+        eprintln!("artifacts missing; skipping");
+        return None;
+    }
+    Some((
+        ModelZoo::load(&art).unwrap(),
+        DeviceRegistry::load(&sparoa::repo_root().join("config/devices.json"))
+            .unwrap(),
+    ))
+}
+
+/// Random schedule generator over a model's ops.
+fn random_schedule(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.f64()).collect()
+}
+
+#[test]
+fn prop_simulation_invariants_under_random_schedules() {
+    let Some((zoo, reg)) = setup() else { return };
+    let models: Vec<&str> = zoo.graphs.keys().map(|s| s.as_str()).collect();
+    prop::check(
+        "sim-invariants",
+        60,
+        42,
+        |rng| {
+            let m = models[rng.below(models.len())].to_string();
+            let n = zoo.get(&m).unwrap().ops.len();
+            let dev = if rng.below(2) == 0 { "agx_orin" } else { "orin_nano" };
+            (m, dev.to_string(), random_schedule(rng, n),
+             1 + rng.below(16))
+        },
+        |(m, dev, xi, batch)| {
+            let g = zoo.get(m).unwrap();
+            let d = reg.get(dev).unwrap();
+            let sched = Schedule { xi: xi.clone(), policy: "rand".into() };
+            let r = simulate(g, d, &sched,
+                             &SimOptions { batch: *batch,
+                                           ..Default::default() });
+            if !(r.makespan_us > 0.0) {
+                return Err(format!("non-positive makespan {}", r.makespan_us));
+            }
+            let parts = r.cpu_busy_us + r.gpu_busy_us + r.transfer_us
+                + r.aggregation_us;
+            if r.makespan_us > parts + 1e-6 {
+                return Err(format!(
+                    "makespan {} exceeds busy sum {parts}", r.makespan_us));
+            }
+            for v in [r.cpu_busy_us, r.gpu_busy_us, r.transfer_us,
+                      r.launch_us, r.aggregation_us, r.peak_gpu_mem_mb] {
+                if !(v >= 0.0) || !v.is_finite() {
+                    return Err(format!("negative/NaN component {v}"));
+                }
+            }
+            // per-op timings are causally ordered and within the makespan
+            for t in &r.timings {
+                if t.finish_us < t.start_us
+                    || t.finish_us > r.makespan_us + 1e-6
+                {
+                    return Err(format!("op {} timing out of range", t.op));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_schedulers_emit_valid_ratios() {
+    let Some((zoo, reg)) = setup() else { return };
+    let models: Vec<&str> = zoo.graphs.keys().map(|s| s.as_str()).collect();
+    prop::check(
+        "valid-ratios",
+        12,
+        7,
+        |rng| {
+            (models[rng.below(models.len())].to_string(),
+             1 + rng.below(8))
+        },
+        |(m, batch)| {
+            let g = zoo.get(m).unwrap();
+            let dev = reg.get("agx_orin").unwrap();
+            let ctx = ScheduleCtx { graph: g, device: dev,
+                                    thresholds: None, batch: *batch };
+            for plan in [
+                GreedyScheduler.schedule(&ctx),
+                DpScheduler { ensemble: 2 }.schedule(&ctx),
+                ThresholdScheduler.schedule(&ctx),
+            ] {
+                if plan.xi.len() != g.ops.len() {
+                    return Err("wrong schedule length".into());
+                }
+                for (i, &x) in plan.xi.iter().enumerate() {
+                    if !(0.0..=1.0).contains(&x) {
+                        return Err(format!("xi[{i}]={x} out of range"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dp_no_worse_than_greedy_or_single_device() {
+    let Some((zoo, reg)) = setup() else { return };
+    let models: Vec<&str> = zoo.graphs.keys().map(|s| s.as_str()).collect();
+    prop::check(
+        "dp-quality",
+        10,
+        11,
+        |rng| {
+            (models[rng.below(models.len())].to_string(),
+             if rng.below(2) == 0 { "agx_orin" } else { "orin_nano" }
+                 .to_string())
+        },
+        |(m, dev)| {
+            let g = zoo.get(m).unwrap();
+            let d = reg.get(dev).unwrap();
+            let ctx = ScheduleCtx { graph: g, device: d, thresholds: None,
+                                    batch: 1 };
+            let opts = SimOptions::default();
+            let dp = simulate(g, d, &DpScheduler { ensemble: 4 }
+                              .schedule(&ctx), &opts).makespan_us;
+            let cpu = simulate(g, d, &Schedule::uniform(g, 0.0, "c"),
+                               &opts).makespan_us;
+            let gpu = simulate(g, d, &Schedule::uniform(g, 1.0, "g"),
+                               &opts).makespan_us;
+            if dp > cpu.min(gpu) * 1.05 {
+                return Err(format!(
+                    "dp {dp} worse than best single device {}",
+                    cpu.min(gpu)));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gpu_share_and_switches_consistent() {
+    let Some((zoo, _reg)) = setup() else { return };
+    let g = zoo.get("resnet18").unwrap();
+    prop::check(
+        "share-switches",
+        100,
+        3,
+        |rng| random_schedule(rng, g.ops.len()),
+        |xi| {
+            let s = Schedule { xi: xi.clone(), policy: "r".into() };
+            let share = s.gpu_share(g);
+            if !(0.0..=1.0).contains(&share) {
+                return Err(format!("share {share}"));
+            }
+            let n_sched = g.schedulable_ops().count();
+            let gpu_count = g
+                .schedulable_ops()
+                .filter(|o| primary_proc(xi[o.id]) == sparoa::device::Proc::Gpu)
+                .count();
+            if (share - gpu_count as f64 / n_sched as f64).abs() > 1e-9 {
+                return Err("share mismatch".into());
+            }
+            if s.switch_count(g) >= n_sched {
+                return Err("more switches than ops".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sparsity_never_hurts_in_simulator() {
+    // With sparse-aware kernels on, higher input sparsity can only lower
+    // (or keep) each op's simulated cost -> whole-model makespan is
+    // monotone non-increasing in a global sparsity boost.
+    let Some((zoo, reg)) = setup() else { return };
+    let g = zoo.get("mobilenet_v2").unwrap();
+    let dev = reg.get("agx_orin").unwrap();
+    prop::check(
+        "sparsity-monotone",
+        30,
+        9,
+        |rng| random_schedule(rng, g.ops.len()),
+        |xi| {
+            let sched = Schedule { xi: xi.clone(), policy: "r".into() };
+            let base = simulate(g, dev, &sched, &SimOptions::default());
+            let off = simulate(g, dev, &sched, &SimOptions {
+                sparsity_aware: false,
+                ..Default::default()
+            });
+            if base.makespan_us > off.makespan_us * 1.0001 {
+                return Err(format!(
+                    "sparsity-aware slower: {} vs {}",
+                    base.makespan_us, off.makespan_us));
+            }
+            Ok(())
+        },
+    );
+}
