@@ -1,38 +1,34 @@
 //! Operator profiling walkthrough (paper §2 / Fig. 2): measure activation
-//! sparsity with *real* PJRT execution, combine with analytic intensity,
-//! and print the quadrant analysis that motivates SparOA.
+//! sparsity with *real* PJRT execution through an [`sparoa::api::Session`],
+//! combine with analytic intensity, and print the quadrant analysis that
+//! motivates SparOA.
 //!
 //! ```bash
 //! cargo run --release --example profile_operators
 //! ```
 
-use sparoa::engine::HybridEngine;
-use sparoa::graph::ModelZoo;
+use sparoa::api::{BackendChoice, SessionBuilder};
 use sparoa::profiler::{quadrant_counts, quadrant_profile};
-use sparoa::runtime::{HostTensor, Runtime};
-use sparoa::scheduler::Schedule;
-use sparoa::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let art = sparoa::artifacts_dir();
     anyhow::ensure!(art.join("manifest.json").exists(),
                     "run `make artifacts` first");
-    let zoo = ModelZoo::load(&art)?;
-    let graph = zoo.get("mobilenet_v3_small")?;
-    let runtime = Runtime::new(&art)?;
-    let engine = HybridEngine::new(&runtime, graph)?;
+    let session = SessionBuilder::new()
+        .model("mobilenet_v3_small")
+        .policy("gpu")
+        .backend(BackendChoice::Pjrt)
+        .build()?;
 
     // Fresh sparsity measurement through the real execution path.
-    let mut rng = Rng::new(99);
-    let n: usize = graph.input_shape_exec.iter().product();
-    let input = HostTensor::new(
-        graph.input_shape_exec.clone(),
-        (0..n).map(|_| rng.normal() as f32).collect(),
-    );
-    let res = engine.infer(&input, &Schedule::uniform(graph, 1.0, "gpu"))?;
+    let report = session.infer_input(&session.random_input(99))?;
+    let measured = report
+        .measured_sparsity
+        .as_ref()
+        .expect("pjrt reports measured sparsity");
 
     println!("fresh vs build-time sparsity (ReLU-family ops):");
-    for op in &graph.ops {
+    for op in &session.graph().ops {
         if matches!(op.kind,
                     sparoa::graph::OpKind::Relu
                         | sparoa::graph::OpKind::Relu6)
@@ -40,12 +36,12 @@ fn main() -> anyhow::Result<()> {
         {
             println!(
                 "  {:32} measured {:.2}  profiled {:.2}",
-                op.name, res.sparsity_out[op.id], op.sparsity_out
+                op.name, measured[op.id], op.sparsity_out
             );
         }
     }
 
-    let profiles = quadrant_profile(graph);
+    let profiles = quadrant_profile(session.graph());
     println!("\nquadrant counts (sparsity cut 0.4):");
     for (q, count) in quadrant_counts(&profiles) {
         println!("  {q:?}: {count}");

@@ -1,85 +1,58 @@
-//! Quickstart: load a model's AOT artifacts, schedule it with SparOA's
-//! full stack (predictor -> SAC), run one real inference through PJRT and
-//! print the simulated Jetson timeline.
+//! Quickstart: build one SparOA [`sparoa::api::Session`] — model, device,
+//! threshold predictor, SAC scheduler and the PJRT backend — then run a
+//! real inference and read the unified report (simulated Jetson timeline
+//! + real numerics in one place).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use sparoa::device::DeviceRegistry;
-use sparoa::engine::sim::simulate;
-use sparoa::engine::HybridEngine;
-use sparoa::graph::ModelZoo;
-use sparoa::predictor::ThresholdPredictor;
-use sparoa::runtime::{HostTensor, Runtime};
-use sparoa::scheduler::sac_sched::{SacScheduler, SacSchedulerConfig};
-use sparoa::scheduler::{ScheduleCtx, Scheduler};
-use sparoa::util::rng::Rng;
+use sparoa::api::{BackendChoice, SessionBuilder};
 
 fn main() -> anyhow::Result<()> {
     let art = sparoa::artifacts_dir();
     anyhow::ensure!(art.join("manifest.json").exists(),
                     "run `make artifacts` first");
 
-    // 1. Load the model zoo, device profile and PJRT runtime.
-    let zoo = ModelZoo::load(&art)?;
-    let graph = zoo.get("mobilenet_v3_small")?;
-    let reg = DeviceRegistry::load(
-        &sparoa::repo_root().join("config/devices.json"))?;
-    let device = reg.get("agx_orin")?;
-    let runtime = Runtime::new(&art)?;
-    println!("PJRT platform: {}", runtime.platform());
-
-    // 2. Offline phase: threshold predictor + SAC operator scheduler.
-    let predictor = ThresholdPredictor::new(&runtime);
-    let thresholds = predictor.predict_graph(graph)?;
-    println!("predicted thresholds for {} ops", thresholds.len());
-    let mut sac = SacScheduler::new(SacSchedulerConfig {
-        episodes: 30,
-        ..Default::default()
-    });
-    let schedule = sac.schedule(&ScheduleCtx {
-        graph,
-        device,
-        thresholds: Some(&thresholds),
-        batch: 1,
-    });
+    // One builder call wires the whole offline phase: model zoo + device
+    // profile + threshold predictor + SAC operator scheduler + PJRT.
+    let session = SessionBuilder::new()
+        .model("mobilenet_v3_small")
+        .device("agx_orin")
+        .policy("sac")
+        .episodes(30)
+        .use_predictor(true)
+        .backend(BackendChoice::Pjrt)
+        .build()?;
     println!(
-        "SAC schedule: {:.0}% of ops on GPU, {} device switches, \
-         trained in {:.1}s",
-        100.0 * schedule.gpu_share(graph),
-        schedule.switch_count(graph),
-        sac.converged_after_s
+        "session ready: backend={} compiled={} predictor thresholds={}",
+        session.backend_name(),
+        session.compiled(),
+        session.thresholds().map(|t| t.len()).unwrap_or(0)
+    );
+    println!(
+        "SAC schedule: {:.0}% of ops on GPU, {} device switches",
+        100.0 * session.schedule().gpu_share(session.graph()),
+        session.schedule().switch_count(session.graph())
     );
 
-    // 3. Simulated Jetson timeline for the schedule.
-    let report = simulate(graph, device, &schedule, &Default::default());
+    // One real inference; the report carries both the calibrated virtual
+    // timeline and the PJRT numerics.
+    let report = session.infer_input(&session.random_input(0))?;
     let ledger = report.ledger();
     println!(
         "simulated on {}: makespan {:.0}us, transfer {:.0}us, \
          power {:.1}W, energy {:.2}mJ",
-        device.name, report.makespan_us, report.transfer_us,
-        ledger.mean_power_w(device), ledger.energy_mj(device)
+        session.device().name, report.makespan_us, report.transfer_us,
+        ledger.mean_power_w(session.device()),
+        ledger.energy_mj(session.device())
     );
-
-    // 4. Real numerics through PJRT (exec-scale artifacts).
-    let engine = HybridEngine::new(&runtime, graph)?;
-    let compiled = engine.warm_up()?;
-    let mut rng = Rng::new(0);
-    let n: usize = graph.input_shape_exec.iter().product();
-    let input = HostTensor::new(
-        graph.input_shape_exec.clone(),
-        (0..n).map(|_| rng.normal() as f32).collect(),
-    );
-    let result = engine.infer(&input, &schedule)?;
+    let output = report.output.as_ref().expect("pjrt returns numerics");
     println!(
-        "real execution: {} compiled ops, output {:?}, host {:.0}us, \
-         top logit {:.3}",
-        compiled,
-        result.output.shape,
-        result.host_us,
-        result
-            .output
+        "real execution: output {:?}, host {:.0}us, top logit {:.3}",
+        output.shape,
+        report.host_us.unwrap_or(0.0),
+        output
             .data
             .iter()
             .cloned()

@@ -1,7 +1,8 @@
-//! End-to-end serving driver (DESIGN.md §6): load MobileNetV3-Small, build
-//! the full SparOA schedule, then serve a Poisson stream of requests —
-//! every request's numerics run through PJRT while the dynamic batcher
-//! and the calibrated Jetson timeline account latency/throughput/energy.
+//! End-to-end serving driver (DESIGN.md §6): build the full SparOA
+//! session for MobileNetV3-Small, then serve a Poisson stream of
+//! requests — the dynamic batcher and the calibrated Jetson timeline
+//! account latency/throughput/energy, and every real request's numerics
+//! run through the same session's PJRT backend.
 //!
 //! ```bash
 //! cargo run --release --example serve_requests
@@ -9,44 +10,34 @@
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
-use sparoa::device::DeviceRegistry;
+use sparoa::api::{BackendChoice, SessionBuilder};
 use sparoa::engine::batching::{optimize_batch, BatchConstraints};
-use sparoa::engine::sim::SimOptions;
-use sparoa::engine::HybridEngine;
-use sparoa::graph::ModelZoo;
-use sparoa::runtime::{HostTensor, Runtime};
-use sparoa::scheduler::sac_sched::{SacScheduler, SacSchedulerConfig};
-use sparoa::scheduler::{ScheduleCtx, Scheduler};
-use sparoa::server::{
-    batcher::poisson_stream, run_batching_sim, BatchPolicy, ServeMetrics,
-};
-use sparoa::util::rng::Rng;
+use sparoa::server::{batcher::poisson_stream, BatchPolicy, ServeMetrics};
 
 fn main() -> anyhow::Result<()> {
     let art = sparoa::artifacts_dir();
     anyhow::ensure!(art.join("manifest.json").exists(),
                     "run `make artifacts` first");
-    let zoo = ModelZoo::load(&art)?;
-    let graph = zoo.get("mobilenet_v3_small")?;
-    let reg = DeviceRegistry::load(
-        &sparoa::repo_root().join("config/devices.json"))?;
-    let device = reg.get("agx_orin")?;
-    let runtime = Runtime::new(&art)?;
 
-    // Offline: schedule + Alg.2 batch optimum.
-    let mut sac = SacScheduler::new(SacSchedulerConfig {
-        episodes: 30,
-        ..Default::default()
-    });
-    let schedule = sac.schedule(&ScheduleCtx {
-        graph, device, thresholds: None, batch: 1,
-    });
-    let opts = SimOptions::default();
-    let plan = optimize_batch(graph, device, &schedule, &opts, 8,
-                              &BatchConstraints {
-                                  mem_limit_mb: device.gpu_mem_capacity_mb,
-                                  ..Default::default()
-                              });
+    // Offline: one session owns graph + device + SAC schedule + PJRT.
+    let session = SessionBuilder::new()
+        .model("mobilenet_v3_small")
+        .device("agx_orin")
+        .policy("sac")
+        .episodes(30)
+        .backend(BackendChoice::Pjrt)
+        .build()?;
+    let plan = optimize_batch(
+        session.graph(),
+        session.device(),
+        session.schedule(),
+        session.options(),
+        8,
+        &BatchConstraints {
+            mem_limit_mb: session.device().gpu_mem_capacity_mb,
+            ..Default::default()
+        },
+    );
     println!("Alg.2 optimal batch: {} ({:.0}us/item)", plan.batch,
              plan.per_item_us);
 
@@ -62,8 +53,7 @@ fn main() -> anyhow::Result<()> {
          BatchPolicy::Dynamic { max: plan.batch.max(1),
                                 optimizer_cost_us: 30.0 }),
     ] {
-        let rep = run_batching_sim(graph, device, &schedule, &opts,
-                                   &requests, &policy);
+        let rep = session.serve(&requests, &policy)?;
         println!(
             "[sim]  {name:28} mean {:8.0}us  p99 {:8.0}us  \
              {:6.1} req/s  batching overhead {:4.1}%",
@@ -73,36 +63,34 @@ fn main() -> anyhow::Result<()> {
     }
 
     // (b) Real numerics: every request executes through PJRT.
-    let engine = HybridEngine::new(&runtime, graph)?;
-    let compiled = engine.warm_up()?;
-    println!("[real] warm-up compiled {compiled} executables");
+    println!("[real] warm-up compiled {} executables", session.compiled());
     let mut metrics = ServeMetrics::new();
-    let mut rng = Rng::new(7);
-    let n: usize = graph.input_shape_exec.iter().product();
     let mut checksum = 0.0f64;
-    for _ in 0..n_requests {
-        let input = HostTensor::new(
-            graph.input_shape_exec.clone(),
-            (0..n).map(|_| rng.normal() as f32).collect(),
-        );
+    let mut last_rep = None;
+    for seed in 0..n_requests as u64 {
+        let input = session.random_input(seed);
         let t0 = std::time::Instant::now();
-        let out = engine.infer(&input, &schedule)?;
+        let rep = session.infer_input(&input)?;
         metrics.record(t0.elapsed().as_secs_f64() * 1e6);
-        checksum += out.output.data[0] as f64;
+        checksum +=
+            rep.output.as_ref().expect("pjrt returns numerics").data[0]
+                as f64;
+        last_rep = Some(rep);
     }
     metrics.finish();
     println!("[real] {}", metrics.summary("pjrt-exec"));
     println!("[real] checksum {checksum:.3} (all outputs finite)");
 
-    // (c) Simulated Jetson energy for the serving episode.
-    let rep = sparoa::engine::sim::simulate(graph, device, &schedule, &opts);
+    // (c) Simulated Jetson energy for the serving episode (the unified
+    // report already carries the calibrated timeline — no extra run).
+    let rep = last_rep.expect("served at least one request");
     let ledger = rep.ledger();
     println!(
         "[sim]  per-inference on {}: {:.0}us, {:.1}W, {:.2}mJ",
-        device.name,
+        session.device().name,
         rep.makespan_us,
-        ledger.mean_power_w(device),
-        ledger.energy_mj(device)
+        ledger.mean_power_w(session.device()),
+        ledger.energy_mj(session.device())
     );
     Ok(())
 }

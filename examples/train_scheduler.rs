@@ -1,14 +1,15 @@
 //! SAC scheduler training walkthrough (paper §4 / Fig. 10 companion):
 //! train the agent on MobileNetV2 + AGX Orin, print the convergence
-//! trace, and compare the learned plan against greedy/DP/single-device.
+//! trace, and compare the learned plan against greedy/DP/single-device —
+//! every evaluation runs through one simulator-backed
+//! [`sparoa::api::Session`] with the candidate schedule swapped in.
 //!
 //! ```bash
 //! cargo run --release --example train_scheduler
 //! ```
 
-use sparoa::device::DeviceRegistry;
-use sparoa::engine::sim::{simulate, SimOptions};
-use sparoa::graph::ModelZoo;
+use sparoa::api::{BackendChoice, SessionBuilder};
+use sparoa::engine::sim::SimOptions;
 use sparoa::scheduler::{
     dp::DpScheduler, greedy::GreedyScheduler,
     sac_sched::{SacScheduler, SacSchedulerConfig}, Schedule, ScheduleCtx,
@@ -19,13 +20,23 @@ fn main() -> anyhow::Result<()> {
     let art = sparoa::artifacts_dir();
     anyhow::ensure!(art.join("manifest.json").exists(),
                     "run `make artifacts` first");
-    let zoo = ModelZoo::load(&art)?;
-    let graph = zoo.get("mobilenet_v2")?;
-    let reg = DeviceRegistry::load(
-        &sparoa::repo_root().join("config/devices.json"))?;
-    let device = reg.get("agx_orin")?;
-    let ctx = ScheduleCtx { graph, device, thresholds: None, batch: 1 };
+    // One sim-backed session owns the graph + device for the whole study;
+    // candidate schedules are swapped in via set_schedule.
+    let mut session = SessionBuilder::new()
+        .model("mobilenet_v2")
+        .device("agx_orin")
+        .policy("threshold")
+        .backend(BackendChoice::Sim)
+        // Evaluate under mild hardware dynamics (paper §6.7's regime).
+        .options(SimOptions { noise: 0.03, seed: 3, ..Default::default() })
+        .build()?;
 
+    let ctx = ScheduleCtx {
+        graph: session.graph(),
+        device: session.device(),
+        thresholds: None,
+        batch: 1,
+    };
     let mut sac = SacScheduler::new(SacSchedulerConfig {
         episodes: 80,
         noise: 0.03,
@@ -39,23 +50,26 @@ fn main() -> anyhow::Result<()> {
     }
     println!("converged after {:.1}s\n", sac.converged_after_s);
 
-    // Compare under mild hardware dynamics (paper §6.7's regime).
-    let eval = SimOptions { noise: 0.03, seed: 3, ..Default::default() };
     let greedy = GreedyScheduler.schedule(&ctx);
     let dp = DpScheduler::default().schedule(&ctx);
+    let cpu = Schedule::uniform(session.graph(), 0.0, "cpu");
+    let gpu = Schedule::uniform(session.graph(), 1.0, "gpu");
     for (name, sched) in [
-        ("CPU-only", Schedule::uniform(graph, 0.0, "cpu")),
-        ("GPU-only", Schedule::uniform(graph, 1.0, "gpu")),
+        ("CPU-only", cpu),
+        ("GPU-only", gpu),
         ("Greedy", greedy),
         ("DP", dp),
         ("SAC", plan),
     ] {
-        let r = simulate(graph, device, &sched, &eval);
+        let gpu_share = sched.gpu_share(session.graph());
+        let switches = sched.switch_count(session.graph());
+        session.set_schedule(sched);
+        let r = session.infer()?;
         println!(
             "{name:10} makespan {:9.0}us  gpu-share {:4.0}%  switches {:3}",
             r.makespan_us,
-            100.0 * sched.gpu_share(graph),
-            sched.switch_count(graph)
+            100.0 * gpu_share,
+            switches
         );
     }
     Ok(())

@@ -1,0 +1,225 @@
+//! [`ExecutionBackend`] — the pluggable execution substrate behind a
+//! [`crate::api::Session`].
+//!
+//! Two first-class implementations ship with the crate:
+//! * [`SimBackend`] — the virtual-time simulator over the calibrated
+//!   device models (`engine::sim`); every figure/baseline runs here.
+//! * [`PjrtBackend`] — real numerics through the PJRT runtime
+//!   (`engine::exec`), owned and `Send`, with per-model executable and
+//!   weight-parameter caches so the request hot path neither compiles nor
+//!   re-slices `weights.bin`.
+//!
+//! Both return the unified [`InferenceReport`]; the real backend also
+//! replays the schedule on the simulated timeline so its latency/energy
+//! breakdown is directly comparable to a simulated run (the parity test in
+//! `tests/api_parity.rs` diffs the two).
+
+use crate::api::report::InferenceReport;
+use crate::device::DeviceModel;
+use crate::engine::exec::{execute_graph, OpParams};
+use crate::engine::sim::{simulate, SimOptions};
+use crate::graph::ModelGraph;
+use crate::runtime::{HostTensor, Runtime, WeightStore};
+use crate::scheduler::Schedule;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// One execution request: everything a backend needs to run (or replay)
+/// a scheduled inference.
+pub struct ExecuteRequest<'a> {
+    pub graph: &'a ModelGraph,
+    pub device: &'a DeviceModel,
+    pub schedule: &'a Schedule,
+    pub options: &'a SimOptions,
+    /// Input tensors, one per batch item.  Backends that only account time
+    /// ignore these; numerics backends synthesize a seeded random input
+    /// when the slice is empty (`options.seed`).
+    pub inputs: &'a [HostTensor],
+}
+
+/// Which execution substrate a [`crate::api::SessionBuilder`] should
+/// construct.
+pub enum BackendChoice {
+    /// Virtual-time simulator ([`SimBackend`]).
+    Sim,
+    /// Real numerics through PJRT ([`PjrtBackend`]).
+    Pjrt,
+    /// Bring your own backend (sharding, remote executors, ...).
+    Custom(Box<dyn ExecutionBackend>),
+}
+
+/// An interchangeable execution substrate for the hybrid engine (§5).
+///
+/// `Send` so a `Session` (or a serving thread pool) can own a boxed
+/// backend and move it across threads.
+pub trait ExecutionBackend: Send {
+    /// Short stable identifier ("sim", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// Prepare per-model state (compile artifacts, cache weights).
+    /// Returns the number of compiled executables, 0 when nothing to do.
+    fn warm_up(&self, _graph: &ModelGraph) -> Result<usize> {
+        Ok(0)
+    }
+
+    /// Run one (possibly batched) inference and report it.
+    fn execute(&self, req: &ExecuteRequest) -> Result<InferenceReport>;
+}
+
+/// Virtual-time simulation backend (wraps [`crate::engine::sim`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimBackend;
+
+impl ExecutionBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn execute(&self, req: &ExecuteRequest) -> Result<InferenceReport> {
+        let rep = simulate(req.graph, req.device, req.schedule, req.options);
+        Ok(InferenceReport::from_sim(
+            self.name(),
+            req.schedule,
+            req.options.batch.max(1),
+            rep,
+        ))
+    }
+}
+
+/// Real-numerics backend over the PJRT runtime (wraps
+/// [`crate::engine::exec`]).
+///
+/// Owns its [`Runtime`] outright (no borrowed lifetimes): the executable
+/// cache already lives behind a mutex inside the runtime, and the per-op
+/// parameter tensors are resolved once per model into an [`OpParams`]
+/// table shared via `Arc` — repeated `execute` calls clone neither
+/// executables nor weights.
+pub struct PjrtBackend {
+    runtime: Runtime,
+    params: Mutex<HashMap<String, Arc<OpParams>>>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_root: &Path) -> Result<Self> {
+        Ok(PjrtBackend {
+            runtime: Runtime::new(artifacts_root)?,
+            params: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The underlying PJRT runtime (e.g. for the threshold predictor).
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Per-model parameter cache: built on first use (or at warm-up).
+    fn params_for(&self, graph: &ModelGraph) -> Result<Arc<OpParams>> {
+        let mut cache = self.params.lock().unwrap();
+        if let Some(p) = cache.get(&graph.model) {
+            return Ok(p.clone());
+        }
+        let weights = WeightStore::load(&graph.weights_path)?;
+        let params = Arc::new(OpParams::build(graph, &weights)?);
+        cache.insert(graph.model.clone(), params.clone());
+        Ok(params)
+    }
+
+    fn synth_input(graph: &ModelGraph, seed: u64) -> HostTensor {
+        HostTensor::random_normal(&graph.input_shape_exec, seed)
+    }
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn warm_up(&self, graph: &ModelGraph) -> Result<usize> {
+        self.params_for(graph)?;
+        self.runtime.warm_up(graph)
+    }
+
+    fn execute(&self, req: &ExecuteRequest) -> Result<InferenceReport> {
+        let params = self.params_for(req.graph)?;
+        // No inputs supplied: synthesize one per batch item so the real
+        // host_us covers the same work the simulated timeline accounts.
+        let synthesized: Vec<HostTensor>;
+        let inputs: &[HostTensor] = if req.inputs.is_empty() {
+            synthesized = (0..req.options.batch.max(1) as u64)
+                .map(|i| Self::synth_input(req.graph, req.options.seed + i))
+                .collect();
+            &synthesized
+        } else {
+            req.inputs
+        };
+
+        let mut host_us = 0.0;
+        let mut last = None;
+        for input in inputs {
+            let res = execute_graph(
+                &self.runtime, req.graph, &params, input, req.schedule,
+            )?;
+            host_us += res.host_us;
+            last = Some(res);
+        }
+        let last = last.context("no inputs executed")?;
+
+        // Shared calibrated timeline: the real path reports the same
+        // virtual-time breakdown a simulated run would (DESIGN.md §5).
+        let sim =
+            simulate(req.graph, req.device, req.schedule, req.options);
+        let mut rep = InferenceReport::from_sim(
+            self.name(),
+            req.schedule,
+            req.options.batch.max(1).max(inputs.len()),
+            sim,
+        );
+        rep.host_us = Some(host_us);
+        rep.output = Some(last.output);
+        rep.measured_sparsity = Some(last.sparsity_out);
+        Ok(rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceRegistry;
+    use crate::graph::ModelZoo;
+
+    fn setup() -> Option<(ModelZoo, DeviceRegistry)> {
+        let art = crate::artifacts_dir();
+        if !art.join("manifest.json").exists() {
+            return None;
+        }
+        Some((
+            ModelZoo::load(&art).unwrap(),
+            DeviceRegistry::load(
+                &crate::repo_root().join("config/devices.json")).unwrap(),
+        ))
+    }
+
+    #[test]
+    fn sim_backend_reports_unified_shape() {
+        let Some((zoo, reg)) = setup() else { return };
+        let g = zoo.get("mobilenet_v2").unwrap();
+        let dev = reg.get("agx_orin").unwrap();
+        let sched = Schedule::uniform(g, 1.0, "gpu");
+        let opts = SimOptions::default();
+        let rep = SimBackend
+            .execute(&ExecuteRequest {
+                graph: g,
+                device: dev,
+                schedule: &sched,
+                options: &opts,
+                inputs: &[],
+            })
+            .unwrap();
+        assert_eq!(rep.backend, "sim");
+        assert_eq!(rep.policy, "gpu");
+        assert!(rep.makespan_us > 0.0);
+        assert!(rep.output.is_none());
+    }
+}

@@ -1,0 +1,72 @@
+//! The crate's primary public surface: an owned [`Session`] over a
+//! pluggable [`ExecutionBackend`].
+//!
+//! The paper's hybrid inference engine (§5) is *one* engine with
+//! interchangeable execution substrates.  This module is that seam:
+//!
+//! * [`ExecutionBackend`] — trait over `execute(graph, schedule, input)
+//!   -> InferenceReport`.
+//! * [`SimBackend`] — the virtual-time simulator (figures, baselines,
+//!   serving studies).
+//! * [`PjrtBackend`] — real numerics through the PJRT runtime, owned and
+//!   `Send`, with executable + weight-parameter caches.
+//! * [`Session`] / [`SessionBuilder`] — owns model, device, schedule,
+//!   options and backend; exposes `infer()`, `infer_batch()` and
+//!   `serve()`.
+//! * [`InferenceReport`] — one report type for simulated and real runs,
+//!   so the two can be diffed in a single parity test.
+//!
+//! # Quickstart
+//!
+//! ```no_run
+//! use sparoa::api::{BackendChoice, SessionBuilder};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // Simulated timeline (no artifacts executed):
+//! let session = SessionBuilder::new()
+//!     .model("mobilenet_v3_small")
+//!     .device("agx_orin")
+//!     .policy("sac")
+//!     .episodes(30)
+//!     .backend(BackendChoice::Sim)
+//!     .build()?;
+//! let report = session.infer()?;
+//! println!("{}", report.summary());
+//!
+//! // Real numerics through PJRT on the same configuration:
+//! let real = SessionBuilder::new()
+//!     .model("mobilenet_v3_small")
+//!     .schedule(session.schedule().clone())
+//!     .backend(BackendChoice::Pjrt)
+//!     .build()?;
+//! let rep = real.infer_input(&real.random_input(0))?;
+//! println!("output {:?}", rep.output.unwrap().shape);
+//! # Ok(()) }
+//! ```
+//!
+//! Serving goes through the same session:
+//!
+//! ```no_run
+//! use sparoa::api::SessionBuilder;
+//! use sparoa::server::{batcher::poisson_stream, BatchPolicy};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let session = SessionBuilder::new().build()?;
+//! let stream = poisson_stream(200, 150.0, 42);
+//! let rep = session.serve(&stream, &BatchPolicy::Dynamic {
+//!     max: 64, optimizer_cost_us: 30.0 })?;
+//! println!("p99 {:.0}us at {:.0} rps", rep.p99_latency_us,
+//!          rep.throughput_rps);
+//! # Ok(()) }
+//! ```
+
+pub mod backend;
+pub mod report;
+pub mod session;
+
+pub use backend::{
+    BackendChoice, ExecuteRequest, ExecutionBackend, PjrtBackend,
+    SimBackend,
+};
+pub use report::InferenceReport;
+pub use session::{Session, SessionBuilder};

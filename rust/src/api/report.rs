@@ -1,0 +1,140 @@
+//! The unified [`InferenceReport`] every execution backend returns.
+//!
+//! Simulated and real runs produce the *same* type: the virtual-time
+//! latency/energy/memory breakdown is always present (the real path shares
+//! the calibrated timeline, DESIGN.md §5), while numerics-only fields
+//! (`output`, `measured_sparsity`, `host_us`) are `Some` only for backends
+//! that actually execute the model.  This is what lets a single parity
+//! test diff a `SimBackend` run against a `PjrtBackend` run.
+
+use crate::device::Proc;
+use crate::energy::EnergyLedger;
+use crate::engine::sim::{OpTiming, SimReport};
+use crate::runtime::HostTensor;
+use crate::scheduler::Schedule;
+
+/// Unified result of one inference, regardless of execution substrate.
+#[derive(Debug, Clone, Default)]
+pub struct InferenceReport {
+    /// Backend that produced the report ("sim", "pjrt", ...).
+    pub backend: String,
+    /// Schedule provenance: the policy that produced the placement.
+    pub policy: String,
+    /// Batch size the report accounts for.
+    pub batch: usize,
+    // --- virtual-time latency breakdown (calibrated device timeline) ---
+    pub makespan_us: f64,
+    pub cpu_busy_us: f64,
+    pub gpu_busy_us: f64,
+    pub transfer_us: f64,
+    pub launch_us: f64,
+    pub aggregation_us: f64,
+    pub switches: u32,
+    pub timings: Vec<OpTiming>,
+    // --- memory accounting ---
+    pub peak_gpu_mem_mb: f64,
+    pub cpu_mem_mb: f64,
+    // --- real-execution extras (None on simulate-only backends) ---
+    /// Host wall-clock of the real execution path, microseconds.
+    pub host_us: Option<f64>,
+    /// Model output tensor.
+    pub output: Option<HostTensor>,
+    /// Measured per-op output sparsity (paper Eq. 1) from real numerics.
+    pub measured_sparsity: Option<Vec<f64>>,
+}
+
+impl InferenceReport {
+    /// Lift a simulator report into the unified shape.
+    pub fn from_sim(
+        backend: &str,
+        schedule: &Schedule,
+        batch: usize,
+        rep: SimReport,
+    ) -> Self {
+        InferenceReport {
+            backend: backend.into(),
+            policy: schedule.policy.clone(),
+            batch,
+            makespan_us: rep.makespan_us,
+            cpu_busy_us: rep.cpu_busy_us,
+            gpu_busy_us: rep.gpu_busy_us,
+            transfer_us: rep.transfer_us,
+            launch_us: rep.launch_us,
+            aggregation_us: rep.aggregation_us,
+            switches: rep.switches,
+            timings: rep.timings,
+            peak_gpu_mem_mb: rep.peak_gpu_mem_mb,
+            cpu_mem_mb: rep.cpu_mem_mb,
+            host_us: None,
+            output: None,
+            measured_sparsity: None,
+        }
+    }
+
+    /// Energy ledger over the virtual-time breakdown (Fig. 11 accounting).
+    pub fn ledger(&self) -> EnergyLedger {
+        EnergyLedger {
+            cpu_busy_us: self.cpu_busy_us,
+            gpu_busy_us: self.gpu_busy_us,
+            xfer_us: self.transfer_us,
+            makespan_us: self.makespan_us,
+        }
+    }
+
+    /// Total memory footprint (weights on each device + peak activations).
+    pub fn total_mem_mb(&self) -> f64 {
+        self.peak_gpu_mem_mb + self.cpu_mem_mb
+    }
+
+    /// Busy time of one processor timeline.
+    pub fn busy_us(&self, proc: Proc) -> f64 {
+        match proc {
+            Proc::Cpu => self.cpu_busy_us,
+            Proc::Gpu => self.gpu_busy_us,
+        }
+    }
+
+    /// One-line human summary for CLI/examples.
+    pub fn summary(&self) -> String {
+        let real = match self.host_us {
+            Some(us) => format!(" host={us:.0}us"),
+            None => String::new(),
+        };
+        format!(
+            "[{}] policy={} batch={} makespan={:.1}us cpu={:.1}us \
+             gpu={:.1}us transfer={:.1}us switches={} peak_gpu_mem={:.1}MB{}",
+            self.backend, self.policy, self.batch, self.makespan_us,
+            self.cpu_busy_us, self.gpu_busy_us, self.transfer_us,
+            self.switches, self.peak_gpu_mem_mb, real
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_lift_preserves_breakdown_and_provenance() {
+        let rep = SimReport {
+            makespan_us: 100.0,
+            cpu_busy_us: 40.0,
+            gpu_busy_us: 55.0,
+            transfer_us: 5.0,
+            ..Default::default()
+        };
+        let sched = Schedule {
+            xi: vec![1.0; 3],
+            policy: "unit-test".into(),
+        };
+        let r = InferenceReport::from_sim("sim", &sched, 2, rep);
+        assert_eq!(r.backend, "sim");
+        assert_eq!(r.policy, "unit-test");
+        assert_eq!(r.batch, 2);
+        assert!((r.makespan_us - 100.0).abs() < 1e-12);
+        assert!(r.output.is_none() && r.host_us.is_none());
+        let ledger = r.ledger();
+        assert!((ledger.cpu_busy_us - 40.0).abs() < 1e-12);
+        assert!((ledger.xfer_us - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,424 @@
+//! [`Session`] — the owned, thread-safe entry point to the SparOA engine.
+//!
+//! A session bundles everything one model needs to run — graph, device
+//! profile, schedule, engine options and an execution backend — behind a
+//! builder, so CLI subcommands, the server, examples and tests stop
+//! hand-assembling graph + device + predictor + scheduler + options.
+//!
+//! ```text
+//! SessionBuilder::new()
+//!     .model("mobilenet_v3_small")
+//!     .device("agx_orin")
+//!     .policy("sac")
+//!     .backend(BackendChoice::Sim)
+//!     .build()?
+//!     .infer()?
+//! ```
+
+use crate::api::backend::{
+    BackendChoice, ExecuteRequest, ExecutionBackend,
+};
+use crate::api::report::InferenceReport;
+use crate::baselines::Baseline;
+use crate::config::Config;
+use crate::device::{DeviceModel, DeviceRegistry};
+use crate::engine::sim::SimOptions;
+use crate::graph::{ModelGraph, ModelZoo};
+use crate::predictor::ThresholdPredictor;
+use crate::runtime::HostTensor;
+use crate::scheduler::Schedule;
+use crate::server::batcher::{
+    run_batching, BatchPolicy, BatchingReport, Request,
+};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Builder for [`Session`]: model + device + policy + batch + backend.
+///
+/// Defaults mirror [`Config::default`]; every knob is optional.
+pub struct SessionBuilder {
+    artifacts: PathBuf,
+    devices_json: Option<PathBuf>,
+    model: String,
+    device: String,
+    policy: String,
+    batch: usize,
+    episodes: usize,
+    seed: u64,
+    use_predictor: bool,
+    warm: bool,
+    schedule: Option<Schedule>,
+    options: Option<SimOptions>,
+    backend: BackendChoice,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        let cfg = Config::default();
+        SessionBuilder {
+            artifacts: cfg.artifacts,
+            devices_json: None,
+            model: cfg.model,
+            device: cfg.device,
+            policy: cfg.policy,
+            batch: cfg.batch.max(1),
+            episodes: cfg.episodes,
+            seed: cfg.seed,
+            use_predictor: false,
+            warm: true,
+            schedule: None,
+            options: None,
+            backend: BackendChoice::Sim,
+        }
+    }
+}
+
+impl SessionBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seed every field from a [`Config`] (the CLI path).  The config's
+    /// `backend` string selects the execution substrate; `"both"` maps to
+    /// the simulator (the CLI layers its own real pass on top).
+    pub fn from_config(cfg: &Config) -> Self {
+        let backend = match cfg.backend.as_str() {
+            "pjrt" => BackendChoice::Pjrt,
+            _ => BackendChoice::Sim,
+        };
+        SessionBuilder {
+            artifacts: cfg.artifacts.clone(),
+            devices_json: None,
+            model: cfg.model.clone(),
+            device: cfg.device.clone(),
+            policy: cfg.policy.clone(),
+            batch: cfg.batch.max(1),
+            episodes: cfg.episodes,
+            seed: cfg.seed,
+            use_predictor: false,
+            warm: true,
+            schedule: None,
+            options: None,
+            backend,
+        }
+    }
+
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+    pub fn devices_json(mut self, path: impl Into<PathBuf>) -> Self {
+        self.devices_json = Some(path.into());
+        self
+    }
+    pub fn model(mut self, name: &str) -> Self {
+        self.model = name.into();
+        self
+    }
+    pub fn device(mut self, id: &str) -> Self {
+        self.device = id.into();
+        self
+    }
+    /// Scheduling policy name (see [`Baseline::from_name`]).
+    pub fn policy(mut self, name: &str) -> Self {
+        self.policy = name.into();
+        self
+    }
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch.max(1);
+        self
+    }
+    /// SAC training episodes (policies that learn).
+    pub fn episodes(mut self, episodes: usize) -> Self {
+        self.episodes = episodes;
+        self
+    }
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+    /// Query the threshold predictor during build (PJRT backends only)
+    /// and hand its per-op thresholds to the scheduling policy.
+    pub fn use_predictor(mut self, yes: bool) -> Self {
+        self.use_predictor = yes;
+        self
+    }
+    /// Warm the backend up at build (compile all artifacts, cache
+    /// weights).  On by default; disable for sessions that only need
+    /// metadata (e.g. predictor queries) — execution still works, paying
+    /// lazy compilation on first use instead.
+    pub fn warm(mut self, yes: bool) -> Self {
+        self.warm = yes;
+        self
+    }
+    /// Use this exact schedule instead of running the policy.
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.schedule = Some(schedule);
+        self
+    }
+    /// Override the engine options (baseline knobs, noise, batch...).
+    pub fn options(mut self, options: SimOptions) -> Self {
+        self.options = Some(options);
+        self
+    }
+    pub fn backend(mut self, backend: BackendChoice) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Load the model + device, resolve the backend, run the scheduling
+    /// policy and warm everything up.
+    pub fn build(self) -> Result<Session> {
+        let zoo = ModelZoo::load(&self.artifacts)?;
+        let graph = zoo.get(&self.model)?.clone();
+        let device = load_device(
+            &self.artifacts, self.devices_json.as_deref(), &self.device)?;
+
+        // Resolve the backend first: the predictor runs through it.
+        anyhow::ensure!(
+            !self.use_predictor
+                || matches!(self.backend, BackendChoice::Pjrt),
+            "use_predictor requires the PJRT backend (the threshold \
+             predictor is an HLO artifact queried through the runtime)"
+        );
+        let (backend, thresholds): (Box<dyn ExecutionBackend>, _) =
+            match self.backend {
+                BackendChoice::Sim => {
+                    (Box::new(crate::api::backend::SimBackend), None)
+                }
+                BackendChoice::Pjrt => {
+                    let be = crate::api::backend::PjrtBackend::new(
+                        &self.artifacts)?;
+                    let th = if self.use_predictor {
+                        let pred = ThresholdPredictor::new(be.runtime());
+                        Some(pred.predict_graph(&graph)?)
+                    } else {
+                        None
+                    };
+                    (Box::new(be), th)
+                }
+                BackendChoice::Custom(be) => (be, None),
+            };
+
+        let baseline = Baseline::from_name(&self.policy)
+            .with_context(|| format!("unknown policy `{}`", self.policy))?;
+        let schedule = match self.schedule {
+            Some(s) => {
+                anyhow::ensure!(
+                    s.xi.len() == graph.ops.len(),
+                    "schedule has {} entries for a {}-op graph",
+                    s.xi.len(),
+                    graph.ops.len()
+                );
+                s
+            }
+            None => baseline.schedule(
+                &graph,
+                &device,
+                thresholds.as_deref(),
+                self.batch,
+                self.episodes,
+            ),
+        };
+        let options = self
+            .options
+            .unwrap_or_else(|| baseline.options(self.batch, self.seed));
+
+        let compiled =
+            if self.warm { backend.warm_up(&graph)? } else { 0 };
+        Ok(Session {
+            graph,
+            device,
+            schedule,
+            options,
+            thresholds,
+            backend,
+            compiled,
+        })
+    }
+}
+
+/// Device registry lookup with the conventional fallbacks: an explicit
+/// path, then `artifacts/devices.json` (copied there by `make artifacts`),
+/// then `config/devices.json` at the repo root.
+fn load_device(
+    artifacts: &std::path::Path,
+    explicit: Option<&std::path::Path>,
+    id: &str,
+) -> Result<DeviceModel> {
+    let path = match explicit {
+        Some(p) => p.to_path_buf(),
+        None => {
+            let in_artifacts = artifacts.join("devices.json");
+            if in_artifacts.exists() {
+                in_artifacts
+            } else {
+                crate::repo_root().join("config/devices.json")
+            }
+        }
+    };
+    let reg = DeviceRegistry::load(&path)?;
+    Ok(reg.get(id)?.clone())
+}
+
+/// An owned inference session: one model, one device profile, one
+/// schedule, one execution backend.  `Send`, no borrowed lifetimes —
+/// a server can move it onto its worker thread.
+pub struct Session {
+    graph: ModelGraph,
+    device: DeviceModel,
+    schedule: Schedule,
+    options: SimOptions,
+    thresholds: Option<Vec<(f64, f64)>>,
+    backend: Box<dyn ExecutionBackend>,
+    compiled: usize,
+}
+
+impl Session {
+    pub fn graph(&self) -> &ModelGraph {
+        &self.graph
+    }
+    pub fn device(&self) -> &DeviceModel {
+        &self.device
+    }
+    pub fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+    pub fn options(&self) -> &SimOptions {
+        &self.options
+    }
+    /// Predicted per-op thresholds, when built with `use_predictor`.
+    pub fn thresholds(&self) -> Option<&[(f64, f64)]> {
+        self.thresholds.as_deref()
+    }
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+    /// Executables compiled at warm-up (0 for simulate-only backends).
+    pub fn compiled(&self) -> usize {
+        self.compiled
+    }
+    /// Swap in a new schedule (e.g. after re-training the policy online).
+    pub fn set_schedule(&mut self, schedule: Schedule) {
+        self.schedule = schedule;
+    }
+    pub fn set_options(&mut self, options: SimOptions) {
+        self.options = options;
+    }
+
+    /// A seeded standard-normal input of the model's exec shape.
+    pub fn random_input(&self, seed: u64) -> HostTensor {
+        HostTensor::random_normal(&self.graph.input_shape_exec, seed)
+    }
+
+    /// One inference at the session's batch size.  Numerics backends
+    /// synthesize a seeded input; use [`Session::infer_input`] for real
+    /// data.
+    pub fn infer(&self) -> Result<InferenceReport> {
+        self.execute(&[], &self.options)
+    }
+
+    /// One inference on a caller-provided input tensor.
+    pub fn infer_input(&self, input: &HostTensor) -> Result<InferenceReport> {
+        self.execute(std::slice::from_ref(input), &self.options)
+    }
+
+    /// One batched inference over `inputs` (batch = `inputs.len()`).
+    pub fn infer_batch(
+        &self,
+        inputs: &[HostTensor],
+    ) -> Result<InferenceReport> {
+        anyhow::ensure!(!inputs.is_empty(), "infer_batch needs >= 1 input");
+        let mut opts = self.options.clone();
+        opts.batch = inputs.len();
+        self.execute(inputs, &opts)
+    }
+
+    fn execute(
+        &self,
+        inputs: &[HostTensor],
+        options: &SimOptions,
+    ) -> Result<InferenceReport> {
+        self.backend.execute(&ExecuteRequest {
+            graph: &self.graph,
+            device: &self.device,
+            schedule: &self.schedule,
+            options,
+            inputs,
+        })
+    }
+
+    /// Serve a virtual-time request stream under a batching policy
+    /// (Fig. 8 path).  Per-batch latency comes from the calibrated
+    /// simulator timeline regardless of this session's backend — serving
+    /// accounting is virtual time; use [`Session::infer_input`] per
+    /// request for real numerics (see examples/serve_requests.rs).
+    /// Pass a backend explicitly via
+    /// [`crate::server::batcher::run_batching`] to time batches on a
+    /// different substrate.
+    pub fn serve(
+        &self,
+        requests: &[Request],
+        policy: &BatchPolicy,
+    ) -> Result<BatchingReport> {
+        run_batching(
+            &crate::api::backend::SimBackend,
+            &self.graph,
+            &self.device,
+            &self.schedule,
+            &self.options,
+            requests,
+            policy,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_session_builds_and_infers() {
+        let art = crate::artifacts_dir();
+        if !art.join("manifest.json").exists() {
+            return;
+        }
+        let session = SessionBuilder::new()
+            .model("mobilenet_v3_small")
+            .device("agx_orin")
+            .policy("greedy")
+            .backend(BackendChoice::Sim)
+            .build()
+            .unwrap();
+        let rep = session.infer().unwrap();
+        assert_eq!(rep.backend, "sim");
+        assert!(rep.makespan_us > 0.0);
+        let batched = session
+            .infer_batch(&[
+                session.random_input(1),
+                session.random_input(2),
+            ])
+            .unwrap();
+        assert_eq!(batched.batch, 2);
+        assert!(batched.makespan_us > rep.makespan_us);
+    }
+
+    #[test]
+    fn schedule_override_skips_policy() {
+        let art = crate::artifacts_dir();
+        if !art.join("manifest.json").exists() {
+            return;
+        }
+        let zoo = ModelZoo::load(&art).unwrap();
+        let g = zoo.get("resnet18").unwrap();
+        let session = SessionBuilder::new()
+            .model("resnet18")
+            .schedule(Schedule::uniform(g, 0.0, "cpu-pin"))
+            .build()
+            .unwrap();
+        assert_eq!(session.schedule().policy, "cpu-pin");
+        let rep = session.infer().unwrap();
+        assert_eq!(rep.policy, "cpu-pin");
+        assert!(rep.gpu_busy_us == 0.0);
+    }
+}

@@ -7,8 +7,9 @@
 //! Knobs per framework (fusion, tuned kernels, multi-stream, data path)
 //! follow each system's published design.
 
+use crate::api::{ExecuteRequest, ExecutionBackend, InferenceReport, SimBackend};
 use crate::device::DeviceModel;
-use crate::engine::sim::{simulate, SimOptions, SimReport};
+use crate::engine::sim::SimOptions;
 use crate::graph::{ModelGraph, OpClass};
 use crate::scheduler::{
     dp::DpScheduler, greedy::GreedyScheduler, sac_sched::SacScheduler,
@@ -48,6 +49,29 @@ pub const ALL: [Baseline; 12] = [
 ];
 
 impl Baseline {
+    /// Resolve a policy/baseline name as used by the CLI and
+    /// `api::SessionBuilder::policy` (accepts both the short policy
+    /// aliases and the display names).
+    pub fn from_name(name: &str) -> Option<Baseline> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "sac" | "sparoa" => Baseline::Sparoa,
+            "greedy" | "sparoa-greedy" => Baseline::SparoaGreedy,
+            "dp" | "sparoa-dp" => Baseline::SparoaDp,
+            "threshold" | "static" | "sparoa w/o rl" => Baseline::SparoaNoRl,
+            "cpu" | "cpu-only" => Baseline::CpuOnly,
+            "gpu" | "pytorch" | "gpu-only (pytorch)" => {
+                Baseline::GpuOnlyPyTorch
+            }
+            "tensorrt" => Baseline::TensorRt,
+            "tvm" => Baseline::Tvm,
+            "ios" => Baseline::Ios,
+            "pos" => Baseline::Pos,
+            "codl" => Baseline::CoDl,
+            "tensorflow" => Baseline::TensorFlow,
+            _ => return None,
+        })
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             Baseline::CpuOnly => "CPU-Only",
@@ -191,7 +215,8 @@ impl Baseline {
         }
     }
 
-    /// Run the baseline end-to-end on the simulator.
+    /// Run the baseline end-to-end through the unified execution API
+    /// (virtual-time backend — the figures compare policies).
     pub fn run(
         self,
         graph: &ModelGraph,
@@ -199,10 +224,18 @@ impl Baseline {
         thresholds: Option<&[(f64, f64)]>,
         batch: usize,
         episodes: usize,
-    ) -> (Schedule, SimReport) {
+    ) -> (Schedule, InferenceReport) {
         let sched = self.schedule(graph, dev, thresholds, batch, episodes);
         let opts = self.options(batch, 1);
-        let report = simulate(graph, dev, &sched, &opts);
+        let report = SimBackend
+            .execute(&ExecuteRequest {
+                graph,
+                device: dev,
+                schedule: &sched,
+                options: &opts,
+                inputs: &[],
+            })
+            .expect("sim backend is infallible");
         (sched, report)
     }
 }

@@ -26,6 +26,10 @@ pub struct Config {
     pub request_rate: f64,
     pub num_requests: usize,
     pub seed: u64,
+    /// execution backend: sim | pjrt | both (infer runs sim then real).
+    pub backend: String,
+    /// verbose output (per-op timelines in `infer`); bare `--verbose`.
+    pub verbose: bool,
 }
 
 impl Default for Config {
@@ -41,6 +45,11 @@ impl Default for Config {
             request_rate: 50.0,
             num_requests: 200,
             seed: 1,
+            // Real PJRT execution needs the `pjrt` cargo feature; the
+            // stub-runtime build defaults to simulator-only.
+            backend: if cfg!(feature = "pjrt") { "both" } else { "sim" }
+                .into(),
+            verbose: false,
         }
     }
 }
@@ -51,12 +60,19 @@ impl Config {
         let text = std::fs::read_to_string(path)?;
         let v = json::parse(&text)
             .map_err(|e| anyhow::anyhow!("parsing config: {e}"))?;
-        Ok(Self::from_json(&v))
+        Self::from_json(&v)
     }
 
-    pub fn from_json(v: &Value) -> Self {
+    /// Build from parsed JSON; rejects invalid enum-like values (same
+    /// rules as [`Config::apply_override`]).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        if let Some(b) = v.get("backend").as_str() {
+            if !matches!(b, "sim" | "pjrt" | "both") {
+                anyhow::bail!("backend must be sim|pjrt|both, got `{b}`");
+            }
+        }
         let d = Config::default();
-        Config {
+        Ok(Config {
             artifacts: v
                 .get("artifacts")
                 .as_str()
@@ -77,7 +93,12 @@ impl Config {
                 .as_usize()
                 .unwrap_or(d.num_requests),
             seed: v.get("seed").as_f64().map(|x| x as u64).unwrap_or(d.seed),
-        }
+            backend: v.get("backend").as_str().unwrap_or(&d.backend).into(),
+            verbose: v
+                .get("verbose")
+                .as_bool()
+                .unwrap_or(d.verbose),
+        })
     }
 
     /// Apply `--key=value` style overrides.
@@ -93,6 +114,13 @@ impl Config {
             "request_rate" => self.request_rate = value.parse()?,
             "num_requests" => self.num_requests = value.parse()?,
             "seed" => self.seed = value.parse()?,
+            "backend" => match value {
+                "sim" | "pjrt" | "both" => self.backend = value.into(),
+                other => {
+                    anyhow::bail!("backend must be sim|pjrt|both, got `{other}`")
+                }
+            },
+            "verbose" => self.verbose = parse_bool(value)?,
             other => anyhow::bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -100,6 +128,15 @@ impl Config {
 
     pub fn devices_json(&self) -> PathBuf {
         self.artifacts.join("devices.json")
+    }
+}
+
+/// Boolean flag values: bare `--flag` arrives as "true" from the CLI.
+fn parse_bool(value: &str) -> Result<bool> {
+    match value {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        other => anyhow::bail!("expected a boolean, got `{other}`"),
     }
 }
 
@@ -111,7 +148,7 @@ mod tests {
     fn json_and_overrides() {
         let v = json::parse(
             r#"{"model": "vit_b16", "batch": 4, "noise": 0.1}"#).unwrap();
-        let mut c = Config::from_json(&v);
+        let mut c = Config::from_json(&v).unwrap();
         assert_eq!(c.model, "vit_b16");
         assert_eq!(c.batch, 4);
         assert!((c.noise - 0.1).abs() < 1e-12);
@@ -120,5 +157,26 @@ mod tests {
         assert_eq!(c.device, "orin_nano");
         assert!(c.apply_override("bogus", "1").is_err());
         assert!(c.apply_override("batch", "not_a_number").is_err());
+    }
+
+    #[test]
+    fn backend_and_bool_overrides() {
+        let mut c = Config::default();
+        let expect = if cfg!(feature = "pjrt") { "both" } else { "sim" };
+        assert_eq!(c.backend, expect);
+        assert!(!c.verbose);
+        c.apply_override("backend", "sim").unwrap();
+        assert_eq!(c.backend, "sim");
+        assert!(c.apply_override("backend", "cuda").is_err());
+        c.apply_override("verbose", "true").unwrap(); // bare `--verbose`
+        assert!(c.verbose);
+        c.apply_override("verbose", "off").unwrap();
+        assert!(!c.verbose);
+        assert!(c.apply_override("verbose", "maybe").is_err());
+        // Config files get the same backend validation as the CLI.
+        let bad = json::parse(r#"{"backend": "cuda"}"#).unwrap();
+        assert!(Config::from_json(&bad).is_err());
+        let good = json::parse(r#"{"backend": "sim"}"#).unwrap();
+        assert_eq!(Config::from_json(&good).unwrap().backend, "sim");
     }
 }

@@ -6,10 +6,15 @@
 //! * `exec` — real execution of the exec-scale artifacts (native handling
 //!   of data-movement ops, weighted-average aggregation of co-run ops).
 //! * `batching` — the gradient-based dynamic batching of Alg. 2.
+//!
+//! These are implementation details of the public [`crate::api`] layer:
+//! `api::SimBackend` wraps `sim::simulate` and `api::PjrtBackend` wraps
+//! `exec::execute_graph`; new code should construct an `api::Session`
+//! rather than calling either path directly.
 
 pub mod batching;
 pub mod exec;
 pub mod sim;
 
-pub use exec::HybridEngine;
+pub use exec::{execute_graph, HybridEngine, OpParams};
 pub use sim::{simulate, SimOptions, SimReport};

@@ -8,11 +8,60 @@
 //! Layer map:
 //! * L1/L2 (build-time python): Pallas kernels + JAX operator graphs,
 //!   AOT-lowered to HLO text artifacts.
-//! * L3 (this crate): the SparOA coordinator — threshold predictor client,
-//!   SAC operator scheduler, hybrid inference engine, heterogeneous device
-//!   simulator, all eleven baselines, energy/memory accounting, and the
-//!   serving front-end.
+//! * L3 (this crate): the SparOA coordinator, organized around one seam —
+//!   [`api`], the owned [`api::Session`] over a pluggable
+//!   [`api::ExecutionBackend`]:
+//!     * `api`        — **primary public surface**: `SessionBuilder` →
+//!                      `Session::{infer, infer_batch, serve}`, the
+//!                      `ExecutionBackend` trait with `SimBackend` /
+//!                      `PjrtBackend`, and the unified `InferenceReport`.
+//!     * `engine`     — execution internals behind the backends: the
+//!                      virtual-time simulator, the real PJRT graph
+//!                      walker, and Alg. 2 dynamic batching.
+//!     * `scheduler`  — placement policies (threshold, greedy, DP, SAC)
+//!                      over the shared `Schedule` representation.
+//!     * `predictor`  — the Transformer-LSTM threshold predictor client.
+//!     * `rl`         — the SAC learner + virtual-time RL environment.
+//!     * `baselines`  — the paper's eleven comparison systems as policy +
+//!                      engine-options pairs run through the same API.
+//!     * `server`     — request streams, batching policies and serving
+//!                      metrics (the online half of §5).
+//!     * `runtime`    — the PJRT bridge (optional `pjrt` cargo feature)
+//!                      and host tensors / weight stores.
+//!     * `device`/`energy`/`graph`/`profiler` — calibrated device models,
+//!                      energy ledger, model graphs, quadrant profiling.
+//!     * `config`/`bench_support`/`util` — CLI config, bench/test
+//!                      substrate, vendored-free helpers.
+//!
+//! # Quickstart
+//!
+//! Build a session, run one inference, serve a stream — every consumer
+//! (CLI, server, benches, examples) goes through this same path:
+//!
+//! ```no_run
+//! use sparoa::api::{BackendChoice, SessionBuilder};
+//! use sparoa::server::{batcher::poisson_stream, BatchPolicy};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let session = SessionBuilder::new()
+//!     .model("mobilenet_v3_small")
+//!     .device("agx_orin")
+//!     .policy("sac")           // threshold | greedy | dp | sac | ...
+//!     .episodes(30)
+//!     .backend(BackendChoice::Sim)  // or BackendChoice::Pjrt
+//!     .build()?;
+//!
+//! let report = session.infer()?;          // unified InferenceReport
+//! println!("{}", report.summary());
+//!
+//! let stream = poisson_stream(200, 150.0, 42);
+//! let served = session.serve(&stream, &BatchPolicy::Dynamic {
+//!     max: 64, optimizer_cost_us: 30.0 })?;
+//! println!("p99 {:.0}us", served.p99_latency_us);
+//! # Ok(()) }
+//! ```
 
+pub mod api;
 pub mod baselines;
 pub mod bench_support;
 pub mod config;
@@ -28,6 +77,11 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod util;
+
+pub use api::{
+    BackendChoice, ExecutionBackend, InferenceReport, Session,
+    SessionBuilder,
+};
 
 use std::path::PathBuf;
 

@@ -9,23 +9,23 @@
 //!   predict    — query the threshold predictor for a model
 //!
 //! Flags are `--key=value` overrides of the config (see config/mod.rs),
-//! plus `--config=<file.json>`.
+//! `--key` alone for booleans (e.g. `--verbose`), plus
+//! `--config=<file.json>`.  `sparoa help <cmd>` prints per-subcommand
+//! usage.
+//!
+//! Every subcommand that runs the engine goes through
+//! [`sparoa::api::SessionBuilder`] — the CLI owns no engine wiring.
 
 use anyhow::{bail, Context, Result};
+use sparoa::api::{BackendChoice, SessionBuilder};
 use sparoa::baselines::{Baseline, ALL};
 use sparoa::bench_support::Table;
 use sparoa::config::Config;
-use sparoa::device::DeviceRegistry;
-use sparoa::engine::sim::{simulate, SimOptions};
-use sparoa::engine::HybridEngine;
 use sparoa::graph::ModelZoo;
-use sparoa::predictor::ThresholdPredictor;
 use sparoa::profiler;
-use sparoa::runtime::{HostTensor, Runtime};
 use sparoa::scheduler::sac_sched::{SacScheduler, SacSchedulerConfig};
-use sparoa::scheduler::{Schedule, ScheduleCtx, Scheduler};
-use sparoa::server::{run_batching_sim, BatchPolicy};
-use sparoa::util::rng::Rng;
+use sparoa::scheduler::{ScheduleCtx, Scheduler};
+use sparoa::server::{batcher::poisson_stream, BatchPolicy};
 
 fn main() {
     if let Err(e) = run() {
@@ -34,34 +34,98 @@ fn main() {
     }
 }
 
-fn parse_args() -> Result<(String, Config)> {
+const SUBCOMMANDS: [&str; 6] =
+    ["profile", "infer", "serve", "train", "compare", "predict"];
+
+fn usage(cmd: &str) -> String {
+    let common = "--model=NAME --device=ID --artifacts=DIR --seed=N";
+    match cmd {
+        "profile" => format!(
+            "sparoa profile [{common}]\n  \
+             Print the Fig. 2 sparsity/intensity quadrant profile."
+        ),
+        "infer" => format!(
+            "sparoa infer [{common}] [--policy=sac|greedy|dp|threshold|...] \
+             [--batch=N] [--episodes=N] [--backend=sim|pjrt|both] \
+             [--verbose]\n  \
+             One scheduled inference: simulated timeline, energy, and \
+             (backend!=sim) real PJRT numerics."
+        ),
+        "serve" => format!(
+            "sparoa serve [{common}] [--policy=..] [--request_rate=R] \
+             [--num_requests=N]\n  \
+             Serve a Poisson stream under fixed vs dynamic batching."
+        ),
+        "train" => format!(
+            "sparoa train [{common}] [--episodes=N] [--noise=X] \
+             [--batch=N]\n  \
+             Train the SAC scheduler and print the convergence trace."
+        ),
+        "compare" => format!(
+            "sparoa compare [{common}] [--batch=N] [--episodes=N]\n  \
+             Run all eleven baselines + SparOA on one model/device."
+        ),
+        "predict" => format!(
+            "sparoa predict [{common}]\n  \
+             Query the threshold predictor (requires PJRT artifacts)."
+        ),
+        _ => format!(
+            "sparoa <{}> [--key=value ...] [--key] [--config=file.json]\n\
+             Run `sparoa help <cmd>` for per-subcommand usage.",
+            SUBCOMMANDS.join("|")
+        ),
+    }
+}
+
+/// Parse CLI args: one subcommand (plus an optional help topic),
+/// `--key=value` config overrides, and bare `--flag` booleans.
+fn parse_args() -> Result<(String, Option<String>, Config)> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let mut cmd = String::new();
+    let mut positional = Vec::new();
     let mut cfg = Config::default();
+    // Flags that may appear bare (`--flag` == `--flag=true`).
+    const BOOL_FLAGS: [&str; 1] = ["verbose"];
     for a in &args {
         if let Some(rest) = a.strip_prefix("--") {
-            let (k, v) = rest
-                .split_once('=')
-                .with_context(|| format!("flag `{a}` needs =value"))?;
+            // `--key=value`, or a bare boolean `--flag` (=true).
+            let (k, v) = match rest.split_once('=') {
+                Some((k, v)) => (k, v),
+                None if rest == "help" || rest == "h" => {
+                    positional.insert(0, "help".to_string());
+                    continue;
+                }
+                None if BOOL_FLAGS.contains(&rest) => (rest, "true"),
+                None => bail!("flag `{a}` needs =value"),
+            };
             if k == "config" {
+                anyhow::ensure!(v != "true",
+                                "flag `--config` needs =file.json");
                 cfg = Config::from_file(std::path::Path::new(v))?;
             } else {
-                cfg.apply_override(k, v)?;
+                cfg.apply_override(k, v)
+                    .with_context(|| format!("bad flag `{a}`"))?;
             }
-        } else if cmd.is_empty() {
-            cmd = a.clone();
         } else {
-            bail!("unexpected argument `{a}`");
+            positional.push(a.clone());
         }
     }
-    if cmd.is_empty() {
-        cmd = "help".into();
+    let cmd = positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "help".to_string());
+    let topic = positional.get(1).cloned();
+    if cmd != "help" && topic.is_some() {
+        bail!(
+            "unexpected argument `{}`\n{}",
+            topic.unwrap(),
+            usage(&cmd)
+        );
     }
-    Ok((cmd, cfg))
+    Ok((cmd, topic, cfg))
 }
 
 fn run() -> Result<()> {
-    let (cmd, cfg) = parse_args()?;
+    let (cmd, topic, cfg) = parse_args()?;
     match cmd.as_str() {
         "profile" => profile(&cfg),
         "infer" => infer(&cfg),
@@ -69,27 +133,24 @@ fn run() -> Result<()> {
         "train" => train(&cfg),
         "compare" => compare(&cfg),
         "predict" => predict(&cfg),
-        "help" | "-h" | "--help" => {
-            println!(
-                "sparoa <profile|infer|serve|train|compare|predict> \
-                 [--model=..] [--device=..] [--policy=..] [--batch=N] \
-                 [--episodes=N] [--request_rate=R] [--num_requests=N] \
-                 [--config=file.json]"
-            );
+        "help" | "-h" => {
+            match topic {
+                Some(t) if SUBCOMMANDS.contains(&t.as_str()) => {
+                    println!("{}", usage(&t));
+                }
+                Some(t) => {
+                    bail!("unknown command `{t}`\n{}", usage(""));
+                }
+                None => println!("{}", usage("")),
+            }
             Ok(())
         }
         other => bail!("unknown command `{other}` (try `sparoa help`)"),
     }
 }
 
-fn load(cfg: &Config) -> Result<(ModelZoo, DeviceRegistry)> {
-    let zoo = ModelZoo::load(&cfg.artifacts)?;
-    let reg = DeviceRegistry::load(&cfg.devices_json())?;
-    Ok((zoo, reg))
-}
-
 fn profile(cfg: &Config) -> Result<()> {
-    let (zoo, _) = load(cfg)?;
+    let zoo = ModelZoo::load(&cfg.artifacts)?;
     let g = zoo.get(&cfg.model)?;
     let profiles = profiler::quadrant_profile(g);
     let counts = profiler::quadrant_counts(&profiles);
@@ -118,39 +179,15 @@ fn profile(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
-fn make_schedule(cfg: &Config, zoo: &ModelZoo, reg: &DeviceRegistry)
-    -> Result<(Schedule, SimOptions)>
-{
-    let g = zoo.get(&cfg.model)?;
-    let dev = reg.get(&cfg.device)?;
-    let b = match cfg.policy.as_str() {
-        "sac" | "sparoa" => Baseline::Sparoa,
-        "greedy" => Baseline::SparoaGreedy,
-        "dp" => Baseline::SparoaDp,
-        "threshold" | "static" => Baseline::SparoaNoRl,
-        "cpu" => Baseline::CpuOnly,
-        "gpu" | "pytorch" => Baseline::GpuOnlyPyTorch,
-        "tensorrt" => Baseline::TensorRt,
-        "tvm" => Baseline::Tvm,
-        "ios" => Baseline::Ios,
-        "pos" => Baseline::Pos,
-        "codl" => Baseline::CoDl,
-        "tensorflow" => Baseline::TensorFlow,
-        other => bail!("unknown policy `{other}`"),
-    };
-    let sched = b.schedule(g, dev, None, cfg.batch.max(1), cfg.episodes);
-    Ok((sched, b.options(cfg.batch.max(1), cfg.seed)))
-}
-
 fn infer(cfg: &Config) -> Result<()> {
-    let (zoo, reg) = load(cfg)?;
-    let g = zoo.get(&cfg.model)?;
-    let dev = reg.get(&cfg.device)?;
-    let (sched, opts) = make_schedule(cfg, &zoo, &reg)?;
-    let rep = simulate(g, dev, &sched, &opts);
+    // Simulated timeline first (also trains/derives the schedule).
+    let sim = SessionBuilder::from_config(cfg)
+        .backend(BackendChoice::Sim)
+        .build()?;
+    let rep = sim.infer()?;
     println!(
         "model={} device={} policy={} batch={}",
-        cfg.model, cfg.device, sched.policy, opts.batch
+        cfg.model, cfg.device, rep.policy, rep.batch
     );
     println!(
         "  simulated: makespan={:.1}us cpu_busy={:.1}us gpu_busy={:.1}us \
@@ -161,34 +198,40 @@ fn infer(cfg: &Config) -> Result<()> {
     let ledger = rep.ledger();
     println!(
         "  power={:.2}W energy={:.2}mJ/inference",
-        ledger.mean_power_w(dev),
-        ledger.energy_mj(dev)
+        ledger.mean_power_w(sim.device()),
+        ledger.energy_mj(sim.device())
     );
-    // Real numerics through PJRT.
-    let rt = Runtime::new(&cfg.artifacts)?;
-    let engine = HybridEngine::new(&rt, g)?;
-    let n = engine.warm_up()?;
-    let mut rng = Rng::new(cfg.seed);
-    let numel: usize = g.input_shape_exec.iter().product();
-    let input = HostTensor::new(
-        g.input_shape_exec.clone(),
-        (0..numel).map(|_| rng.normal() as f32).collect(),
-    );
-    let out = engine.infer(&input, &sched)?;
-    println!(
-        "  real exec: {} artifacts, output shape {:?}, host time {:.0}us",
-        n, out.output.shape, out.host_us
-    );
+    if cfg.verbose {
+        println!("  per-op timeline (first 32):");
+        for t in rep.timings.iter().take(32) {
+            println!(
+                "    op {:4} {:?}  start {:9.1}us  finish {:9.1}us",
+                t.op, t.proc, t.start_us, t.finish_us
+            );
+        }
+    }
+    if cfg.backend != "sim" {
+        // Real numerics through PJRT, reusing the schedule just computed.
+        let real = SessionBuilder::from_config(cfg)
+            .schedule(sim.schedule().clone())
+            .backend(BackendChoice::Pjrt)
+            .build()?;
+        let rrep = real.infer_input(&real.random_input(cfg.seed))?;
+        println!(
+            "  real exec: {} artifacts, output shape {:?}, host time {:.0}us",
+            real.compiled(),
+            rrep.output.map(|o| o.shape).unwrap_or_default(),
+            rrep.host_us.unwrap_or(0.0)
+        );
+    }
     Ok(())
 }
 
 fn serve(cfg: &Config) -> Result<()> {
-    let (zoo, reg) = load(cfg)?;
-    let g = zoo.get(&cfg.model)?;
-    let dev = reg.get(&cfg.device)?;
-    let (sched, opts) = make_schedule(cfg, &zoo, &reg)?;
-    let reqs = sparoa::server::batcher::poisson_stream(
-        cfg.num_requests, cfg.request_rate, cfg.seed);
+    let session = SessionBuilder::from_config(cfg)
+        .backend(BackendChoice::Sim)
+        .build()?;
+    let reqs = poisson_stream(cfg.num_requests, cfg.request_rate, cfg.seed);
     let mut t = Table::new(
         &format!("serving — {} on {} ({} req @ {:.0}/s)",
                  cfg.model, cfg.device, cfg.num_requests, cfg.request_rate),
@@ -200,7 +243,7 @@ fn serve(cfg: &Config) -> Result<()> {
         ("sparoa-dynamic",
          BatchPolicy::Dynamic { max: 64, optimizer_cost_us: 30.0 }),
     ] {
-        let rep = run_batching_sim(g, dev, &sched, &opts, &reqs, &policy);
+        let rep = session.serve(&reqs, &policy)?;
         t.row(vec![
             name.into(),
             format!("{:.1}us", rep.mean_latency_us),
@@ -214,32 +257,45 @@ fn serve(cfg: &Config) -> Result<()> {
 }
 
 fn train(cfg: &Config) -> Result<()> {
-    let (zoo, reg) = load(cfg)?;
-    let g = zoo.get(&cfg.model)?;
-    let dev = reg.get(&cfg.device)?;
+    // A cheap static session provides the owned graph/device pair; the
+    // trained plan is then swapped in and evaluated through the same API.
+    let mut session = SessionBuilder::from_config(cfg)
+        .policy("threshold")
+        .backend(BackendChoice::Sim)
+        .build()?;
     let mut s = SacScheduler::new(SacSchedulerConfig {
         episodes: cfg.episodes,
         noise: cfg.noise,
         ..Default::default()
     });
     let plan = s.schedule(&ScheduleCtx {
-        graph: g, device: dev, thresholds: None, batch: cfg.batch.max(1),
+        graph: session.graph(),
+        device: session.device(),
+        thresholds: session.thresholds(),
+        batch: cfg.batch.max(1),
     });
     println!("SAC convergence on {} / {}:", cfg.model, cfg.device);
     for p in &s.trace {
         println!("  ep {:3}  makespan {:9.1} us  t={:6.2}s",
                  p.episode, p.makespan_us, p.wall_s);
     }
-    println!("converged after {:.2}s; gpu share {:.1}%; switches {}",
-             s.converged_after_s, 100.0 * plan.gpu_share(g),
-             plan.switch_count(g));
+    let gpu_share = plan.gpu_share(session.graph());
+    let switches = plan.switch_count(session.graph());
+    session.set_schedule(plan);
+    let rep = session.infer()?;
+    println!("converged after {:.2}s; gpu share {:.1}%; switches {}; \
+              eval makespan {:.1}us",
+             s.converged_after_s, 100.0 * gpu_share, switches,
+             rep.makespan_us);
     Ok(())
 }
 
 fn compare(cfg: &Config) -> Result<()> {
-    let (zoo, reg) = load(cfg)?;
-    let g = zoo.get(&cfg.model)?;
-    let dev = reg.get(&cfg.device)?;
+    let session = SessionBuilder::from_config(cfg)
+        .policy("threshold")
+        .backend(BackendChoice::Sim)
+        .build()?;
+    let (g, dev) = (session.graph(), session.device());
     let mut t = Table::new(
         &format!("Fig.5 latency — {} on {}", cfg.model, cfg.device),
         &["baseline", "latency (us)", "speedup vs SparOA", "gpu share"],
@@ -269,13 +325,17 @@ fn compare(cfg: &Config) -> Result<()> {
 }
 
 fn predict(cfg: &Config) -> Result<()> {
-    let (zoo, _) = load(cfg)?;
-    let g = zoo.get(&cfg.model)?;
-    let rt = Runtime::new(&cfg.artifacts)?;
-    let pred = ThresholdPredictor::new(&rt);
-    let th = pred.predict_graph(g)?;
+    let session = SessionBuilder::from_config(cfg)
+        .policy("threshold")
+        .backend(BackendChoice::Pjrt)
+        .use_predictor(true)
+        .warm(false) // thresholds only; skip compiling every artifact
+        .build()?;
+    let th = session
+        .thresholds()
+        .context("predictor returned no thresholds")?;
     println!("threshold predictions for {} (first 24 ops):", cfg.model);
-    for (op, (s, c)) in g.ops.iter().zip(&th).take(24) {
+    for (op, (s, c)) in session.graph().ops.iter().zip(th).take(24) {
         println!("  {:28} rho={:.2} -> s*={:.2} c*={:.2}",
                  op.name, op.sparsity_in, s, c);
     }

@@ -2,7 +2,7 @@
 //! analysis of paper §2 / Fig. 2, plus latency-breakdown summaries used by
 //! Fig. 7.
 
-use crate::engine::sim::SimReport;
+use crate::api::InferenceReport;
 use crate::graph::ModelGraph;
 
 /// Fig. 2 quadrants (thresholds from the paper's discussion:
@@ -90,7 +90,7 @@ pub struct Breakdown {
     pub makespan_us: f64,
 }
 
-pub fn breakdown(report: &SimReport) -> Breakdown {
+pub fn breakdown(report: &InferenceReport) -> Breakdown {
     let busy = report.cpu_busy_us + report.gpu_busy_us;
     let compute = (busy - report.launch_us).max(0.0);
     let other = (report.makespan_us
@@ -130,7 +130,7 @@ mod tests {
 
     #[test]
     fn breakdown_sums_sensibly() {
-        let r = SimReport {
+        let r = InferenceReport {
             makespan_us: 100.0,
             cpu_busy_us: 30.0,
             gpu_busy_us: 50.0,

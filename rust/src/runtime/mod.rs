@@ -8,15 +8,18 @@
 //!   serialized protos — 64-bit instruction ids).
 //! * Executables are compiled lazily and cached per artifact path; a model
 //!   warm-up compiles everything up front so the request path never pays
-//!   compile latency.
+//!   compile latency.  The cache sits behind a `Mutex` so a `Runtime` can
+//!   be owned by a `Send` execution backend (api::PjrtBackend).
 //! * Weight stores are read once from `weights.bin` (f32 little-endian)
-//!   and sliced per op.
+//!   and sliced per op; hot-path callers resolve slices once via
+//!   [`crate::engine::exec::OpParams`] instead of re-slicing per request.
+//! * The `xla` dependency is optional (`pjrt` cargo feature).  Without it
+//!   a stub `Runtime` with the same API is compiled whose `execute`
+//!   returns an error — the simulator-side stack stays fully usable.
 
 use crate::graph::{ModelGraph, Op};
 use anyhow::{bail, Context, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 /// A host-resident f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -52,6 +55,16 @@ impl HostTensor {
         self.shape = shape;
         Ok(self)
     }
+    /// Seeded standard-normal tensor (the conventional synthetic input —
+    /// one definition so sessions and backends stay bit-identical).
+    pub fn random_normal(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut rng = crate::util::rng::Rng::new(seed);
+        HostTensor::new(
+            shape.to_vec(),
+            (0..n).map(|_| rng.normal() as f32).collect(),
+        )
+    }
 }
 
 /// Per-model weight buffer (contents of weights.bin).
@@ -74,6 +87,10 @@ impl WeightStore {
     }
 
     /// Tensors for one op's weight slices.
+    ///
+    /// This allocates a fresh copy of every slice — fine for one-off use,
+    /// but request paths should resolve all ops once into an
+    /// [`crate::engine::exec::OpParams`] and borrow from it instead.
     pub fn op_params(&self, op: &Op) -> Result<Vec<HostTensor>> {
         op.weights
             .iter()
@@ -98,112 +115,199 @@ impl WeightStore {
     }
 }
 
-/// PJRT client + compiled-executable cache.
-///
-/// Not `Sync`: the engine owns one `Runtime` on its execution thread (the
-/// scheduling layers never touch XLA directly).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts_root: PathBuf,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
+#[cfg(feature = "pjrt")]
+mod client {
+    use super::*;
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::sync::Mutex;
 
-impl Runtime {
-    pub fn new(artifacts_root: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            artifacts_root: artifacts_root.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-        })
+    /// PJRT client + compiled-executable cache.
+    ///
+    /// Owned and `Send`: the executable cache is behind a `Mutex`, so an
+    /// execution backend may own the runtime outright and move across
+    /// threads.  Execution itself is serialized per runtime (the lock is
+    /// held across `execute`), matching the single-executor engine model.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        artifacts_root: PathBuf,
+        cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    // SAFETY: the xla handles are not declared Send (FFI pointers, and
+    // executables keep internal references to their client), but a
+    // `Runtime` owns the *entire* client + executable graph as one unit:
+    // no handle or clone ever escapes this struct (`execute_refs` returns
+    // plain `HostTensor`s), so moving a `Runtime` moves every reference
+    // together onto the new thread, and the `Mutex` serializes all PJRT
+    // calls.  Cross-thread *sharing* is still forbidden (no `Sync`).
+    unsafe impl Send for Runtime {}
 
-    /// Compile (or fetch cached) the executable for an artifact path
-    /// relative to the artifacts root.
-    fn ensure_compiled(&self, artifact: &str) -> Result<()> {
-        if self.cache.borrow().contains_key(artifact) {
-            return Ok(());
-        }
-        let path = self.artifacts_root.join(artifact);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf8")?,
-        )
-        .map_err(|e| {
-            anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display())
-        })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {artifact}: {e:?}"))?;
-        self.cache.borrow_mut().insert(artifact.to_string(), exe);
-        Ok(())
-    }
-
-    /// Number of compiled executables currently cached.
-    pub fn cached(&self) -> usize {
-        self.cache.borrow().len()
-    }
-
-    /// Pre-compile every artifact a model needs (warm-up path).
-    pub fn warm_up(&self, graph: &ModelGraph) -> Result<usize> {
-        let mut n = 0;
-        for op in &graph.ops {
-            if let Some(a) = &op.artifact {
-                self.ensure_compiled(a)?;
-                n += 1;
-            }
-        }
-        Ok(n)
-    }
-
-    /// Execute one artifact with the given arguments (inputs ++ params).
-    pub fn execute(
-        &self,
-        artifact: &str,
-        args: &[HostTensor],
-    ) -> Result<HostTensor> {
-        self.ensure_compiled(artifact)?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(artifact).unwrap();
-
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|t| {
-                let dims: Vec<i64> =
-                    t.shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(&t.data)
-                    .reshape(&dims)
-                    .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))
+    impl Runtime {
+        pub fn new(artifacts_root: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Runtime {
+                client,
+                artifacts_root: artifacts_root.to_path_buf(),
+                cache: Mutex::new(HashMap::new()),
             })
-            .collect::<Result<_>>()?;
+        }
 
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {artifact}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = lit
-            .to_tuple1()
-            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
-        let shape = out
-            .array_shape()
-            .map_err(|e| anyhow::anyhow!("result shape: {e:?}"))?;
-        let dims: Vec<usize> =
-            shape.dims().iter().map(|&d| d as usize).collect();
-        let data = out
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("result to_vec: {e:?}"))?;
-        Ok(HostTensor::new(dims, data))
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch cached) the executable for an artifact path
+        /// relative to the artifacts root.
+        fn ensure_compiled(&self, artifact: &str) -> Result<()> {
+            if self.cache.lock().unwrap().contains_key(artifact) {
+                return Ok(());
+            }
+            let path = self.artifacts_root.join(artifact);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf8")?,
+            )
+            .map_err(|e| {
+                anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display())
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {artifact}: {e:?}"))?;
+            self.cache.lock().unwrap().insert(artifact.to_string(), exe);
+            Ok(())
+        }
+
+        /// Number of compiled executables currently cached.
+        pub fn cached(&self) -> usize {
+            self.cache.lock().unwrap().len()
+        }
+
+        /// Pre-compile every artifact a model needs (warm-up path).
+        pub fn warm_up(&self, graph: &ModelGraph) -> Result<usize> {
+            let mut n = 0;
+            for op in &graph.ops {
+                if let Some(a) = &op.artifact {
+                    self.ensure_compiled(a)?;
+                    n += 1;
+                }
+            }
+            Ok(n)
+        }
+
+        /// Execute one artifact with the given arguments (inputs ++ params).
+        pub fn execute(
+            &self,
+            artifact: &str,
+            args: &[HostTensor],
+        ) -> Result<HostTensor> {
+            let refs: Vec<&HostTensor> = args.iter().collect();
+            self.execute_refs(artifact, &refs)
+        }
+
+        /// Borrowing variant of [`execute`]: the request hot path passes
+        /// cached param tensors by reference instead of cloning them.
+        pub fn execute_refs(
+            &self,
+            artifact: &str,
+            args: &[&HostTensor],
+        ) -> Result<HostTensor> {
+            self.ensure_compiled(artifact)?;
+            let cache = self.cache.lock().unwrap();
+            let exe = cache.get(artifact).unwrap();
+
+            let literals: Vec<xla::Literal> = args
+                .iter()
+                .map(|t| {
+                    let dims: Vec<i64> =
+                        t.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))
+                })
+                .collect::<Result<_>>()?;
+
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow::anyhow!("execute {artifact}: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = lit
+                .to_tuple1()
+                .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+            let shape = out
+                .array_shape()
+                .map_err(|e| anyhow::anyhow!("result shape: {e:?}"))?;
+            let dims: Vec<usize> =
+                shape.dims().iter().map(|&d| d as usize).collect();
+            let data = out
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("result to_vec: {e:?}"))?;
+            Ok(HostTensor::new(dims, data))
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod client {
+    use super::*;
+    use std::path::PathBuf;
+
+    /// Stub runtime compiled when the `pjrt` cargo feature (the `xla`
+    /// crate) is absent.  Loading succeeds so simulator-only sessions can
+    /// be built uniformly; any attempt to execute an artifact errors.
+    pub struct Runtime {
+        #[allow(dead_code)]
+        artifacts_root: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn new(artifacts_root: &Path) -> Result<Self> {
+            Ok(Runtime { artifacts_root: artifacts_root.to_path_buf() })
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (built without the `pjrt` feature)".into()
+        }
+
+        pub fn cached(&self) -> usize {
+            0
+        }
+
+        pub fn warm_up(&self, graph: &ModelGraph) -> Result<usize> {
+            if graph.ops.iter().any(|op| op.artifact.is_some()) {
+                bail!(
+                    "model `{}` needs PJRT execution but sparoa was built \
+                     without the `pjrt` feature",
+                    graph.model
+                );
+            }
+            Ok(0)
+        }
+
+        pub fn execute(
+            &self,
+            artifact: &str,
+            _args: &[HostTensor],
+        ) -> Result<HostTensor> {
+            bail!("cannot execute `{artifact}`: built without `pjrt` feature");
+        }
+
+        pub fn execute_refs(
+            &self,
+            artifact: &str,
+            _args: &[&HostTensor],
+        ) -> Result<HostTensor> {
+            bail!("cannot execute `{artifact}`: built without `pjrt` feature");
+        }
+    }
+}
+
+pub use client::Runtime;
 
 #[cfg(test)]
 mod tests {

@@ -8,11 +8,13 @@
 //! * `Dynamic` — SparOA: take whatever the queue holds (bounded by the
 //!   Alg. 2 optimum), no padding, plus a small optimizer cost per batch.
 
+use crate::api::{ExecuteRequest, ExecutionBackend, SimBackend};
 use crate::device::DeviceModel;
-use crate::engine::sim::{simulate, SimOptions};
+use crate::engine::sim::SimOptions;
 use crate::graph::ModelGraph;
 use crate::scheduler::Schedule;
 use crate::util::rng::Rng;
+use anyhow::Result;
 
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -61,7 +63,8 @@ impl BatchingReport {
     }
 }
 
-/// Virtual-time batching simulation of one policy.
+/// Virtual-time batching simulation of one policy on the simulator
+/// backend (the Fig. 8 path; infallible).
 pub fn run_batching_sim(
     graph: &ModelGraph,
     dev: &DeviceModel,
@@ -70,6 +73,27 @@ pub fn run_batching_sim(
     requests: &[Request],
     policy: &BatchPolicy,
 ) -> BatchingReport {
+    run_batching(&SimBackend, graph, dev, sched, opts, requests, policy)
+        .expect("sim backend is infallible")
+}
+
+/// Virtual-time batching over an arbitrary execution backend: per-batch
+/// inference latency is the `makespan_us` that `backend.execute` reports
+/// at each batch size (cached per size).  The arrival stream and
+/// queueing always stay in virtual time; a real backend additionally
+/// executes one synthesized batch per probed size (its latencies still
+/// come from the shared calibrated timeline, so results match
+/// [`SimBackend`] — pay the real execution only when you want the
+/// numerics side effects).
+pub fn run_batching(
+    backend: &dyn ExecutionBackend,
+    graph: &ModelGraph,
+    dev: &DeviceModel,
+    sched: &Schedule,
+    opts: &SimOptions,
+    requests: &[Request],
+    policy: &BatchPolicy,
+) -> Result<BatchingReport> {
     let mut now = 0.0f64;
     let mut i = 0usize;
     let mut latencies = Vec::with_capacity(requests.len());
@@ -80,12 +104,21 @@ pub fn run_batching_sim(
     // Per-batch-size inference latency cache.
     let mut lat_cache: std::collections::HashMap<usize, f64> =
         std::collections::HashMap::new();
-    let mut lat_of = |b: usize| -> f64 {
-        *lat_cache.entry(b).or_insert_with(|| {
-            let mut o = opts.clone();
-            o.batch = b;
-            simulate(graph, dev, sched, &o).makespan_us
-        })
+    let mut lat_of = |b: usize| -> Result<f64> {
+        if let Some(&l) = lat_cache.get(&b) {
+            return Ok(l);
+        }
+        let mut o = opts.clone();
+        o.batch = b;
+        let r = backend.execute(&ExecuteRequest {
+            graph,
+            device: dev,
+            schedule: sched,
+            options: &o,
+            inputs: &[],
+        })?;
+        lat_cache.insert(b, r.makespan_us);
+        Ok(r.makespan_us)
     };
 
     while i < requests.len() {
@@ -122,7 +155,7 @@ pub fn run_batching_sim(
             }
         };
         now += wait_extra + policy_cost;
-        let lat = lat_of(exec_size);
+        let lat = lat_of(exec_size)?;
         let finish = now + lat;
         // Overhead attribution: padding slots + wait + optimizer cost.
         let pad_frac =
@@ -143,7 +176,7 @@ pub fn run_batching_sim(
     rep.throughput_rps = requests.len() as f64 / (now / 1e6);
     rep.mean_batch = crate::util::stats::mean(
         &batch_sizes.iter().map(|&b| b as f64).collect::<Vec<_>>());
-    rep
+    Ok(rep)
 }
 
 #[cfg(test)]

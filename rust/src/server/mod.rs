@@ -5,5 +5,7 @@
 pub mod batcher;
 pub mod metrics;
 
-pub use batcher::{BatchPolicy, BatchingReport, Request, run_batching_sim};
+pub use batcher::{
+    run_batching, run_batching_sim, BatchPolicy, BatchingReport, Request,
+};
 pub use metrics::ServeMetrics;

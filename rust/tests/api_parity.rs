@@ -1,0 +1,87 @@
+//! Backend parity: `SimBackend` and `PjrtBackend` accept the same
+//! `Session` configuration and return `InferenceReport`s that agree on
+//! every field defined in both — the architectural guarantee that lets
+//! figures (simulated) and serving (real) share one engine.
+
+use sparoa::api::{BackendChoice, Session, SessionBuilder};
+
+fn artifacts_ready() -> bool {
+    // The parity pair needs real execution: AOT artifacts + the PJRT
+    // bridge (`pjrt` cargo feature — the default build is stubbed).
+    cfg!(feature = "pjrt")
+        && sparoa::artifacts_dir().join("manifest.json").exists()
+}
+
+fn build(backend: BackendChoice) -> Session {
+    // Deterministic, predictor-free configuration shared by both builds.
+    SessionBuilder::new()
+        .model("mobilenet_v3_small")
+        .device("agx_orin")
+        .policy("threshold")
+        .batch(1)
+        .seed(9)
+        .backend(backend)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn sim_and_pjrt_accept_the_same_configuration() {
+    if !artifacts_ready() {
+        eprintln!("artifacts missing; skipping");
+        return;
+    }
+    let sim = build(BackendChoice::Sim);
+    let real = build(BackendChoice::Pjrt);
+
+    // Identical configuration resolves to the identical schedule.
+    assert_eq!(sim.schedule().policy, real.schedule().policy);
+    assert_eq!(sim.schedule().xi, real.schedule().xi);
+    assert_eq!(sim.backend_name(), "sim");
+    assert_eq!(real.backend_name(), "pjrt");
+
+    let srep = sim.infer().unwrap();
+    let rrep = real.infer().unwrap();
+
+    // Schedule provenance and batch agree.
+    assert_eq!(srep.policy, rrep.policy);
+    assert_eq!(srep.batch, rrep.batch);
+
+    // Fields defined in both backends: the shared calibrated timeline.
+    assert!((srep.makespan_us - rrep.makespan_us).abs() < 1e-6,
+            "sim {} vs pjrt {}", srep.makespan_us, rrep.makespan_us);
+    assert!((srep.cpu_busy_us - rrep.cpu_busy_us).abs() < 1e-6);
+    assert!((srep.gpu_busy_us - rrep.gpu_busy_us).abs() < 1e-6);
+    assert!((srep.transfer_us - rrep.transfer_us).abs() < 1e-6);
+    assert!((srep.peak_gpu_mem_mb - rrep.peak_gpu_mem_mb).abs() < 1e-6);
+    assert_eq!(srep.switches, rrep.switches);
+    assert_eq!(srep.timings.len(), rrep.timings.len());
+
+    // Fields defined only on the real path.
+    assert!(srep.output.is_none() && srep.host_us.is_none());
+    let out = rrep.output.expect("pjrt returns numerics");
+    let last = real.graph().ops.last().unwrap();
+    assert_eq!(out.shape, last.exec_out_shape);
+    assert!(rrep.host_us.unwrap() > 0.0);
+    let sparsity = rrep.measured_sparsity.expect("pjrt measures sparsity");
+    assert_eq!(sparsity.len(), real.graph().ops.len());
+}
+
+#[test]
+fn batched_inference_is_consistent_across_backends() {
+    if !artifacts_ready() {
+        return;
+    }
+    let sim = build(BackendChoice::Sim);
+    let real = build(BackendChoice::Pjrt);
+    let inputs = [real.random_input(1), real.random_input(2)];
+
+    let srep = sim.infer_batch(&inputs).unwrap();
+    let rrep = real.infer_batch(&inputs).unwrap();
+    assert_eq!(srep.batch, 2);
+    assert_eq!(rrep.batch, 2);
+    assert!((srep.makespan_us - rrep.makespan_us).abs() < 1e-6);
+    // The real backend executed both items.
+    assert!(rrep.host_us.unwrap() > 0.0);
+    assert!(rrep.output.is_some());
+}

@@ -9,6 +9,10 @@ use sparoa::predictor::{
 use sparoa::runtime::{HostTensor, Runtime};
 
 fn setup() -> Option<(PredictorDataset, Runtime)> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("built without the `pjrt` feature; skipping");
+        return None;
+    }
     let art = sparoa::artifacts_dir();
     if !art.join("predictor/dataset.json").exists() {
         eprintln!("predictor artifacts missing; skipping");

@@ -7,7 +7,10 @@ use sparoa::runtime::{HostTensor, Runtime, WeightStore};
 use sparoa::util::rng::Rng;
 
 fn artifacts_ready() -> bool {
-    sparoa::artifacts_dir().join("manifest.json").exists()
+    // Real execution needs both the AOT artifacts and the PJRT bridge
+    // (`pjrt` cargo feature — the default build ships a stub runtime).
+    cfg!(feature = "pjrt")
+        && sparoa::artifacts_dir().join("manifest.json").exists()
 }
 
 #[test]

@@ -1,48 +1,36 @@
-//! End-to-end serving integration: real PJRT execution + virtual-time
-//! batching over a Poisson request stream (the same path
-//! examples/serve_requests.rs demonstrates).
+//! End-to-end serving integration through `api::Session`: real PJRT
+//! execution + virtual-time batching over a Poisson request stream (the
+//! same path examples/serve_requests.rs demonstrates).
 
-use sparoa::device::DeviceRegistry;
-use sparoa::engine::sim::SimOptions;
-use sparoa::engine::HybridEngine;
-use sparoa::graph::ModelZoo;
-use sparoa::runtime::{HostTensor, Runtime};
-use sparoa::scheduler::{greedy::GreedyScheduler, ScheduleCtx, Scheduler};
-use sparoa::server::{
-    batcher::poisson_stream, run_batching_sim, BatchPolicy, ServeMetrics,
-};
-use sparoa::util::rng::Rng;
+use sparoa::api::{BackendChoice, SessionBuilder};
+use sparoa::server::{batcher::poisson_stream, BatchPolicy, ServeMetrics};
+
+fn artifacts_ready() -> bool {
+    sparoa::artifacts_dir().join("manifest.json").exists()
+}
 
 #[test]
 fn serves_real_requests_through_pjrt() {
-    let art = sparoa::artifacts_dir();
-    if !art.join("manifest.json").exists() {
+    // Needs the PJRT bridge (`pjrt` cargo feature) on top of artifacts.
+    if !cfg!(feature = "pjrt") || !artifacts_ready() {
         return;
     }
-    let zoo = ModelZoo::load(&art).unwrap();
-    let g = zoo.get("mobilenet_v3_small").unwrap();
-    let rt = Runtime::new(&art).unwrap();
-    let engine = HybridEngine::new(&rt, g).unwrap();
-    engine.warm_up().unwrap();
-    let reg = DeviceRegistry::load(
-        &sparoa::repo_root().join("config/devices.json")).unwrap();
-    let dev = reg.get("agx_orin").unwrap();
-    let plan = GreedyScheduler.schedule(&ScheduleCtx {
-        graph: g, device: dev, thresholds: None, batch: 1,
-    });
+    let session = SessionBuilder::new()
+        .model("mobilenet_v3_small")
+        .device("agx_orin")
+        .policy("greedy")
+        .backend(BackendChoice::Pjrt)
+        .build()
+        .unwrap();
 
     let mut metrics = ServeMetrics::new();
-    let mut rng = Rng::new(5);
-    let n: usize = g.input_shape_exec.iter().product();
-    for _ in 0..8 {
-        let input = HostTensor::new(
-            g.input_shape_exec.clone(),
-            (0..n).map(|_| rng.normal() as f32).collect(),
-        );
+    for seed in 0..8u64 {
+        let input = session.random_input(seed);
         let t0 = std::time::Instant::now();
-        let out = engine.infer(&input, &plan).unwrap();
+        let rep = session.infer_input(&input).unwrap();
         metrics.record(t0.elapsed().as_secs_f64() * 1e6);
-        assert!(out.output.data.iter().all(|v| v.is_finite()));
+        let out = rep.output.expect("pjrt returns numerics");
+        assert!(out.data.iter().all(|v| v.is_finite()));
     }
     metrics.finish();
     assert_eq!(metrics.count(), 8);
@@ -55,25 +43,27 @@ fn dynamic_batching_wins_across_rates_and_devices() {
     // Fig. 8's claim at integration scope: SparOA's dynamic batching keeps
     // overhead below the static fixed-batch policy at every arrival rate
     // on both device profiles.
-    let art = sparoa::artifacts_dir();
-    if !art.join("manifest.json").exists() {
+    if !artifacts_ready() {
         return;
     }
-    let zoo = ModelZoo::load(&art).unwrap();
-    let reg = DeviceRegistry::load(
-        &sparoa::repo_root().join("config/devices.json")).unwrap();
-    let g = zoo.get("mobilenet_v3_small").unwrap();
     for dev_name in ["agx_orin", "orin_nano"] {
-        let dev = reg.get(dev_name).unwrap();
-        let sched = sparoa::scheduler::Schedule::uniform(g, 1.0, "gpu");
+        let session = SessionBuilder::new()
+            .model("mobilenet_v3_small")
+            .device(dev_name)
+            .policy("gpu")
+            .backend(BackendChoice::Sim)
+            .build()
+            .unwrap();
         for rate in [50.0, 200.0, 800.0] {
             let reqs = poisson_stream(250, rate, 11);
-            let fixed = run_batching_sim(
-                g, dev, &sched, &SimOptions::default(), &reqs,
-                &BatchPolicy::Fixed { size: 32, timeout_us: 25_000.0 });
-            let dynamic = run_batching_sim(
-                g, dev, &sched, &SimOptions::default(), &reqs,
-                &BatchPolicy::Dynamic { max: 64, optimizer_cost_us: 30.0 });
+            let fixed = session
+                .serve(&reqs, &BatchPolicy::Fixed {
+                    size: 32, timeout_us: 25_000.0 })
+                .unwrap();
+            let dynamic = session
+                .serve(&reqs, &BatchPolicy::Dynamic {
+                    max: 64, optimizer_cost_us: 30.0 })
+                .unwrap();
             assert!(
                 dynamic.overhead_pct() <= fixed.overhead_pct() + 1.0,
                 "{dev_name}@{rate}: dyn {:.1}% vs fixed {:.1}%",
