@@ -1,0 +1,105 @@
+//! Figure 13 (extension): multi-tenant SLO attainment under increasing
+//! load — cross-model sparsity-aware cluster scheduling vs N independent
+//! single-queue batchers on a static CPU/GPU split.
+//!
+//! Unlike the paper-figure benches this one never skips: it uses the
+//! artifact models when `make artifacts` has run and the synthetic demo
+//! fleet otherwise.  Emits a JSON report (per-class p50/p95/p99, shed
+//! rate, attainment) on stdout after the tables.
+
+use sparoa::bench_support::Table;
+use sparoa::serve::{
+    demo, merge_arrivals, run_cluster, ClusterOptions, ClusterPolicy,
+};
+use sparoa::util::json::{self, Value};
+use std::collections::BTreeMap;
+
+fn main() {
+    let device = "agx_orin";
+    let registry = demo::registry(&sparoa::artifacts_dir(), device)
+        .expect("building demo registry");
+    let classes = demo::classes();
+
+    let mut t = Table::new(
+        &format!(
+            "Fig.13 — multi-model SLO attainment, {} models on {}",
+            registry.len(), device
+        ),
+        &["load", "policy", "attainment", "shed", "p99(interactive)",
+          "cpu util", "gpu util", "mean batch"],
+    );
+    let mut scenarios = Vec::new();
+    for load in [0.5, 1.5, 3.0] {
+        let tenants = demo::tenants(&registry, load, 400, 23, None)
+            .expect("building tenants");
+        let arrivals = merge_arrivals(&tenants, 23);
+        let mut per_policy = Vec::new();
+        for policy in
+            [ClusterPolicy::SparsityAware, ClusterPolicy::StaticSplit]
+        {
+            let snap = run_cluster(&registry, &classes, &tenants,
+                &arrivals,
+                &ClusterOptions { policy, ..Default::default() })
+                .expect("cluster run");
+            t.row(vec![
+                format!("x{load:.1}"),
+                snap.policy.clone(),
+                format!("{:.1}%", 100.0 * snap.aggregate_attainment()),
+                snap.total_shed().to_string(),
+                snap.per_class[0].percentile_str(99.0),
+                format!("{:.0}%", 100.0 * snap.cpu_util()),
+                format!("{:.0}%", 100.0 * snap.gpu_util()),
+                format!("{:.1}", snap.mean_batch()),
+            ]);
+            per_policy.push(snap);
+        }
+        scenarios.push((load, per_policy));
+    }
+    t.print();
+
+    // Headline: the cross-model scheduler must win under overload.
+    let overload = scenarios.last().unwrap();
+    let (dyn_a, stat_a) = (
+        overload.1[0].aggregate_attainment(),
+        overload.1[1].aggregate_attainment(),
+    );
+    println!(
+        "\nAt x{:.1} load: cluster {:.1}% vs static split {:.1}% \
+         aggregate attainment ({:+.1} pts).",
+        overload.0,
+        100.0 * dyn_a,
+        100.0 * stat_a,
+        100.0 * (dyn_a - stat_a)
+    );
+
+    // Machine-readable report.
+    let report = Value::Obj(
+        [
+            ("bench".to_string(), Value::Str("fig13_multimodel".into())),
+            ("device".to_string(), Value::Str(device.into())),
+            (
+                "scenarios".to_string(),
+                Value::Arr(
+                    scenarios
+                        .iter()
+                        .map(|(load, snaps)| {
+                            let mut o = BTreeMap::new();
+                            o.insert("load".into(), Value::Num(*load));
+                            o.insert(
+                                "policies".into(),
+                                Value::Arr(snaps
+                                    .iter()
+                                    .map(|s| s.to_json())
+                                    .collect()),
+                            );
+                            Value::Obj(o)
+                        })
+                        .collect(),
+                ),
+            ),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    println!("\n{}", json::to_string(&report));
+}

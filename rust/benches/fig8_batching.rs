@@ -26,11 +26,7 @@ fn main() {
             let opts = SimOptions::default();
             // Alg. 2 picks the dynamic cap from the model/hardware.
             let plan = optimize_batch(g, dev, &sched, &opts, 8,
-                                      &BatchConstraints {
-                                          mem_limit_mb:
-                                              dev.gpu_mem_capacity_mb,
-                                          ..Default::default()
-                                      });
+                                      &BatchConstraints::for_device(dev));
             let reqs = poisson_stream(300, 250.0, 17);
             let fixed = run_batching_sim(g, dev, &sched, &opts, &reqs,
                 &BatchPolicy::Fixed { size: 32, timeout_us: 25_000.0 });

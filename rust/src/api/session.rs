@@ -50,6 +50,8 @@ pub struct SessionBuilder {
     schedule: Option<Schedule>,
     options: Option<SimOptions>,
     backend: BackendChoice,
+    graph_override: Option<ModelGraph>,
+    device_override: Option<DeviceModel>,
 }
 
 impl Default for SessionBuilder {
@@ -69,6 +71,8 @@ impl Default for SessionBuilder {
             schedule: None,
             options: None,
             backend: BackendChoice::Sim,
+            graph_override: None,
+            device_override: None,
         }
     }
 }
@@ -100,6 +104,8 @@ impl SessionBuilder {
             schedule: None,
             options: None,
             backend,
+            graph_override: None,
+            device_override: None,
         }
     }
 
@@ -165,14 +171,43 @@ impl SessionBuilder {
         self.backend = backend;
         self
     }
+    /// Use this graph directly instead of loading it from `artifacts/`.
+    /// Lets synthetic models ([`ModelGraph::synthetic`]) and in-memory
+    /// graphs run through the full session machinery without `make
+    /// artifacts` — the substrate for always-on tests and the
+    /// multi-tenant serving demos.
+    pub fn with_graph(mut self, graph: ModelGraph) -> Self {
+        self.graph_override = Some(graph);
+        self
+    }
+    /// Use this device profile directly instead of resolving
+    /// `devices.json`.
+    pub fn with_device(mut self, device: DeviceModel) -> Self {
+        self.device_override = Some(device);
+        self
+    }
 
     /// Load the model + device, resolve the backend, run the scheduling
     /// policy and warm everything up.
     pub fn build(self) -> Result<Session> {
-        let zoo = ModelZoo::load(&self.artifacts)?;
-        let graph = zoo.get(&self.model)?.clone();
-        let device = load_device(
-            &self.artifacts, self.devices_json.as_deref(), &self.device)?;
+        let graph = match self.graph_override {
+            Some(g) => {
+                g.validate()?;
+                g
+            }
+            None => {
+                let zoo = ModelZoo::load(&self.artifacts)?;
+                zoo.get(&self.model)?.clone()
+            }
+        };
+        let device = match self.device_override {
+            Some(d) => d,
+            None => load_device(
+                &self.artifacts,
+                self.devices_json.as_deref(),
+                &self.device,
+            )?,
+        };
 
         // Resolve the backend first: the predictor runs through it.
         anyhow::ensure!(
@@ -371,6 +406,33 @@ impl Session {
             policy,
         )
     }
+
+    /// Probe one `batch`-sized inference under an alternate `schedule`
+    /// through this session's backend, without mutating the session.
+    /// The multi-tenant cluster scheduler uses this as its latency
+    /// oracle (e.g. "what would this model's batch cost on the CPU
+    /// fallback plan?").
+    pub fn probe(
+        &self,
+        schedule: &Schedule,
+        batch: usize,
+    ) -> Result<InferenceReport> {
+        anyhow::ensure!(
+            schedule.xi.len() == self.graph.ops.len(),
+            "probe schedule has {} entries for a {}-op graph",
+            schedule.xi.len(),
+            self.graph.ops.len()
+        );
+        let mut opts = self.options.clone();
+        opts.batch = batch.max(1);
+        self.backend.execute(&ExecuteRequest {
+            graph: &self.graph,
+            device: &self.device,
+            schedule,
+            options: &opts,
+            inputs: &[],
+        })
+    }
 }
 
 #[cfg(test)]
@@ -401,6 +463,34 @@ mod tests {
             .unwrap();
         assert_eq!(batched.batch, 2);
         assert!(batched.makespan_us > rep.makespan_us);
+    }
+
+    #[test]
+    fn synthetic_session_runs_without_artifacts() {
+        // No `make artifacts`, no gating: with_graph + with_device make
+        // the full session machinery self-contained.
+        let g = ModelGraph::synthetic("syn_session", 4, 1.0, 0.5);
+        let dev = crate::bench_support::device_profile("agx_orin");
+        let session = SessionBuilder::new()
+            .with_graph(g)
+            .with_device(dev)
+            .policy("greedy")
+            .build()
+            .unwrap();
+        let rep = session.infer().unwrap();
+        assert_eq!(rep.backend, "sim");
+        assert!(rep.makespan_us > 0.0);
+        // probe: CPU projection is slower than the hybrid plan on this
+        // compute-heavy chain, and leaves the GPU idle.
+        let cpu = session.schedule().project(
+            crate::device::Proc::Cpu, "cpu-probe");
+        let probed = session.probe(&cpu, 2).unwrap();
+        assert_eq!(probed.batch, 2);
+        assert!(probed.gpu_busy_us == 0.0);
+        assert!(probed.makespan_us > rep.makespan_us);
+        // wrong-length schedules are rejected
+        let bad = Schedule { xi: vec![0.0; 3], policy: "bad".into() };
+        assert!(session.probe(&bad, 1).is_err());
     }
 
     #[test]

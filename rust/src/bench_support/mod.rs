@@ -25,6 +25,17 @@ pub fn load_env() -> Option<(crate::graph::ModelZoo,
     ))
 }
 
+/// Load one device profile from the checked-in `config/devices.json` —
+/// the always-on test/bench fixture (no artifacts required).
+pub fn device_profile(id: &str) -> crate::device::DeviceModel {
+    crate::device::DeviceRegistry::load(
+        &crate::repo_root().join("config/devices.json"))
+        .expect("loading config/devices.json")
+        .get(id)
+        .expect("unknown device id")
+        .clone()
+}
+
 /// The five evaluation models in the paper's Table 2 order.
 pub const MODELS: [&str; 5] = [
     "resnet18",

@@ -30,6 +30,12 @@ pub struct Config {
     pub backend: String,
     /// verbose output (per-op timelines in `infer`); bare `--verbose`.
     pub verbose: bool,
+    /// serve-multi: load multiplier on every tenant's arrival rate.
+    pub load: f64,
+    /// serve-multi: JSON trace file to replay ("" = built-in trace).
+    pub trace: String,
+    /// emit machine-readable JSON instead of tables; bare `--json`.
+    pub json: bool,
 }
 
 impl Default for Config {
@@ -50,6 +56,9 @@ impl Default for Config {
             backend: if cfg!(feature = "pjrt") { "both" } else { "sim" }
                 .into(),
             verbose: false,
+            load: 1.0,
+            trace: String::new(),
+            json: false,
         }
     }
 }
@@ -98,6 +107,9 @@ impl Config {
                 .get("verbose")
                 .as_bool()
                 .unwrap_or(d.verbose),
+            load: v.get("load").as_f64().unwrap_or(d.load),
+            trace: v.get("trace").as_str().unwrap_or(&d.trace).into(),
+            json: v.get("json").as_bool().unwrap_or(d.json),
         })
     }
 
@@ -121,6 +133,9 @@ impl Config {
                 }
             },
             "verbose" => self.verbose = parse_bool(value)?,
+            "load" => self.load = value.parse()?,
+            "trace" => self.trace = value.into(),
+            "json" => self.json = parse_bool(value)?,
             other => anyhow::bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -173,6 +188,15 @@ mod tests {
         c.apply_override("verbose", "off").unwrap();
         assert!(!c.verbose);
         assert!(c.apply_override("verbose", "maybe").is_err());
+        // serve-multi knobs
+        assert!((c.load - 1.0).abs() < 1e-12 && c.trace.is_empty());
+        c.apply_override("load", "2.5").unwrap();
+        assert!((c.load - 2.5).abs() < 1e-12);
+        c.apply_override("trace", "t.json").unwrap();
+        assert_eq!(c.trace, "t.json");
+        c.apply_override("json", "true").unwrap(); // bare `--json`
+        assert!(c.json);
+        assert!(c.apply_override("load", "fast").is_err());
         // Config files get the same backend validation as the CLI.
         let bad = json::parse(r#"{"backend": "cuda"}"#).unwrap();
         assert!(Config::from_json(&bad).is_err());

@@ -38,6 +38,18 @@ impl Default for BatchConstraints {
     }
 }
 
+impl BatchConstraints {
+    /// Constraints derived from a device profile: the memory budget is the
+    /// device's GPU capacity (what the Fig. 8 bench and the multi-tenant
+    /// registry both want).
+    pub fn for_device(dev: &DeviceModel) -> Self {
+        BatchConstraints {
+            mem_limit_mb: dev.gpu_mem_capacity_mb,
+            ..Default::default()
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct BatchStep {
     pub batch: usize,
@@ -61,8 +73,10 @@ fn eval(graph: &ModelGraph, dev: &DeviceModel, sched: &Schedule,
     (r, per_item)
 }
 
-/// Mean input sparsity / intensity of the model (drives lines 10-14).
-fn model_profile(graph: &ModelGraph) -> (f64, f64) {
+/// Mean input sparsity / normalized intensity of the model's schedulable
+/// ops (drives Alg. 2 lines 10-14; the multi-tenant cluster scheduler
+/// reuses the same signals for cross-model placement tie-breaks).
+pub fn model_profile(graph: &ModelGraph) -> (f64, f64) {
     let mut sp = 0.0;
     let mut it = 0.0;
     let mut n = 0.0f64;

@@ -271,6 +271,109 @@ impl ModelGraph {
     pub fn schedulable_ops(&self) -> impl Iterator<Item = &Op> {
         self.ops.iter().filter(|o| o.class.schedulable())
     }
+
+    /// Build a synthetic conv-stack model so tests, benches and serving
+    /// demos can run without `make artifacts`.
+    ///
+    /// The graph is a chain of `blocks` x (conv -> batchnorm -> relu)
+    /// followed by a global-average-pool + linear head.  `flops_scale`
+    /// sets the compute weight of the model (1.0 ~ a small mobile CNN)
+    /// and `relu_sparsity` is the activation sparsity every ReLU emits —
+    /// together they place the model anywhere on the paper's Fig. 2
+    /// sparsity/intensity plane (dense-heavy => GPU-bound, sparse-light
+    /// => CPU-amenable).  Paper-scale FLOPs/bytes drive the simulator;
+    /// exec-scale shapes are kept tiny so numerics backends stay cheap.
+    pub fn synthetic(
+        name: &str,
+        blocks: usize,
+        flops_scale: f64,
+        relu_sparsity: f64,
+    ) -> ModelGraph {
+        let scale = flops_scale.max(0.01);
+        let sparsity = relu_sparsity.clamp(0.0, 1.0);
+        // Activation tensor size (paper scale): ~64 KB at scale 1.
+        let act_elems = (16_384.0 * scale.sqrt()).max(64.0);
+        let act_bytes = 4.0 * act_elems;
+        let conv_flops = 1.5e8 * scale;
+        let conv_params_bytes = 4.0 * 9.0 * 64.0 * 64.0 * scale.sqrt();
+
+        let mut ops: Vec<Op> = Vec::with_capacity(3 * blocks.max(1) + 3);
+        let mut push = |ops: &mut Vec<Op>,
+                        name: String,
+                        kind: OpKind,
+                        class: OpClass,
+                        flops: f64,
+                        bytes_out: f64,
+                        params_bytes: f64,
+                        sparsity_out: f64| {
+            let id = ops.len();
+            let (inputs, bytes_in, sparsity_in) = if id == 0 {
+                (vec![], 0.0, 0.0)
+            } else {
+                let prev = &ops[id - 1];
+                (vec![id - 1], prev.bytes_out_paper, prev.sparsity_out)
+            };
+            ops.push(Op {
+                id,
+                name,
+                kind,
+                class,
+                inputs,
+                exec_in_shapes: if id == 0 {
+                    vec![]
+                } else {
+                    vec![vec![1, 4, 4, 8]]
+                },
+                exec_out_shape: vec![1, 4, 4, 8],
+                paper_out_shape: vec![1, act_elems as usize],
+                flops_exec: flops * 1e-4,
+                flops_paper: flops,
+                bytes_in_paper: bytes_in,
+                bytes_out_paper: bytes_out,
+                params_bytes_paper: params_bytes,
+                sparsity_in,
+                sparsity_out,
+                weights: vec![],
+                artifact: None,
+            });
+        };
+
+        push(&mut ops, "input".into(), OpKind::Input, OpClass::Other,
+             0.0, act_bytes, 0.0, 0.0);
+        for b in 0..blocks.max(1) {
+            push(&mut ops, format!("conv{b}"), OpKind::Conv2d,
+                 OpClass::Conv, conv_flops, act_bytes,
+                 conv_params_bytes, 0.0);
+            push(&mut ops, format!("bn{b}"), OpKind::BatchNorm,
+                 OpClass::Norm, 2.0 * act_elems, act_bytes, 0.0, 0.0);
+            push(&mut ops, format!("relu{b}"), OpKind::Relu,
+                 OpClass::Elementwise, act_elems, act_bytes, 0.0,
+                 sparsity);
+        }
+        push(&mut ops, "gap".into(), OpKind::GlobalAvgPool, OpClass::Pool,
+             act_elems, 4.0 * 256.0, 0.0, 0.0);
+        push(&mut ops, "fc".into(), OpKind::Linear, OpClass::MatMul,
+             2.0 * 256.0 * 1000.0, 4.0 * 1000.0, 4.0 * 256.0 * 1000.0,
+             0.0);
+
+        let n = ops.len();
+        let mut consumers = vec![Vec::new(); n];
+        for op in &ops {
+            for &i in &op.inputs {
+                consumers[i].push(op.id);
+            }
+        }
+        let total_flops: f64 = ops.iter().map(|o| o.flops_paper).sum();
+        ModelGraph {
+            model: name.to_string(),
+            input_shape_exec: vec![1, 4, 4, 8],
+            input_shape_paper: vec![1, act_elems as usize],
+            total_flops_paper: total_flops,
+            weights_path: PathBuf::from(format!("{name}.weights.bin")),
+            ops,
+            consumers,
+        }
+    }
 }
 
 /// Registry of all models under `artifacts/models`.
@@ -346,6 +449,19 @@ mod tests {
         assert_eq!(g.ops[1].weights[0].numel, 216);
         assert!(g.ops[1].class.schedulable());
         assert!(!g.ops[0].class.schedulable());
+    }
+
+    #[test]
+    fn synthetic_graph_is_valid_and_scales() {
+        let g = ModelGraph::synthetic("syn", 4, 1.0, 0.6);
+        g.validate().unwrap();
+        assert_eq!(g.ops.len(), 1 + 4 * 3 + 2);
+        // ReLU sparsity propagates to the next conv's input.
+        let conv1 = g.ops.iter().find(|o| o.name == "conv1").unwrap();
+        assert!((conv1.sparsity_in - 0.6).abs() < 1e-12);
+        let heavy = ModelGraph::synthetic("heavy", 4, 8.0, 0.0);
+        assert!(heavy.total_flops_paper > 4.0 * g.total_flops_paper);
+        assert!(g.schedulable_ops().count() >= 4 * 3);
     }
 
     #[test]

@@ -26,6 +26,13 @@
 //!                      engine-options pairs run through the same API.
 //!     * `server`     — request streams, batching policies and serving
 //!                      metrics (the online half of §5).
+//!     * `serve`      — multi-tenant SLO-aware serving above `api`: a
+//!                      `ModelRegistry` of warmed sessions, per-class
+//!                      admission control + load shedding, and an
+//!                      event-driven virtual-time cluster scheduler that
+//!                      co-schedules CPU/GPU capacity across models
+//!                      using the paper's sparsity/intensity signals
+//!                      (`serve-multi` CLI, `fig13_multimodel` bench).
 //!     * `runtime`    — the PJRT bridge (optional `pjrt` cargo feature)
 //!                      and host tensors / weight stores.
 //!     * `device`/`energy`/`graph`/`profiler` — calibrated device models,
@@ -60,6 +67,27 @@
 //! println!("p99 {:.0}us", served.p99_latency_us);
 //! # Ok(()) }
 //! ```
+//!
+//! Multi-tenant serving hosts many sessions behind SLO classes and a
+//! cross-model cluster scheduler (run `sparoa serve-multi` for the full
+//! demo):
+//!
+//! ```no_run
+//! use sparoa::serve::{
+//!     demo, merge_arrivals, run_cluster, ClusterOptions,
+//! };
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let registry = demo::registry(&sparoa::artifacts_dir(), "agx_orin")?;
+//! let classes = demo::classes();
+//! let tenants = demo::tenants(&registry, 1.0, 500, 42, None)?;
+//! let arrivals = merge_arrivals(&tenants, 42);
+//! let snapshot = run_cluster(&registry, &classes, &tenants, &arrivals,
+//!                            &ClusterOptions::default())?;
+//! println!("{}", snapshot.summary());
+//! println!("{}", snapshot.to_json_string());
+//! # Ok(()) }
+//! ```
 
 pub mod api;
 pub mod baselines;
@@ -75,6 +103,7 @@ pub mod profiler;
 pub mod rl;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod server;
 pub mod util;
 

@@ -1,12 +1,13 @@
 //! `sparoa` — the SparOA coordinator CLI / launcher.
 //!
 //! Subcommands:
-//!   profile    — Fig. 2 quadrant profile of a model
-//!   infer      — one scheduled inference (simulated timeline + real PJRT)
-//!   serve      — serve a Poisson request stream with dynamic batching
-//!   train      — train the SAC scheduler, print the convergence trace
-//!   compare    — run all baselines on one model/device (Fig. 5 row)
-//!   predict    — query the threshold predictor for a model
+//!   profile     — Fig. 2 quadrant profile of a model
+//!   infer       — one scheduled inference (simulated timeline + real PJRT)
+//!   serve       — serve a Poisson request stream with dynamic batching
+//!   serve-multi — multi-tenant SLO-aware serving across models
+//!   train       — train the SAC scheduler, print the convergence trace
+//!   compare     — run all baselines on one model/device (Fig. 5 row)
+//!   predict     — query the threshold predictor for a model
 //!
 //! Flags are `--key=value` overrides of the config (see config/mod.rs),
 //! `--key` alone for booleans (e.g. `--verbose`), plus
@@ -25,6 +26,10 @@ use sparoa::graph::ModelZoo;
 use sparoa::profiler;
 use sparoa::scheduler::sac_sched::{SacScheduler, SacSchedulerConfig};
 use sparoa::scheduler::{ScheduleCtx, Scheduler};
+use sparoa::serve::{
+    self, merge_arrivals, run_cluster, trace_from_json, ClusterOptions,
+    ClusterPolicy,
+};
 use sparoa::server::{batcher::poisson_stream, BatchPolicy};
 
 fn main() {
@@ -34,8 +39,10 @@ fn main() {
     }
 }
 
-const SUBCOMMANDS: [&str; 6] =
-    ["profile", "infer", "serve", "train", "compare", "predict"];
+const SUBCOMMANDS: [&str; 7] = [
+    "profile", "infer", "serve", "serve-multi", "train", "compare",
+    "predict",
+];
 
 fn usage(cmd: &str) -> String {
     let common = "--model=NAME --device=ID --artifacts=DIR --seed=N";
@@ -55,6 +62,15 @@ fn usage(cmd: &str) -> String {
             "sparoa serve [{common}] [--policy=..] [--request_rate=R] \
              [--num_requests=N]\n  \
              Serve a Poisson stream under fixed vs dynamic batching."
+        ),
+        "serve-multi" => format!(
+            "sparoa serve-multi [{common}] [--load=X] [--num_requests=N] \
+             [--trace=FILE.json] [--json]\n  \
+             Multi-tenant SLO-aware serving: 3 models x 3 SLO classes x \
+             4 arrival patterns\n  \
+             (poisson, bursty MMPP, diurnal, trace replay) on shared \
+             CPU/GPU capacity,\n  \
+             cross-model cluster scheduling vs a static split baseline."
         ),
         "train" => format!(
             "sparoa train [{common}] [--episodes=N] [--noise=X] \
@@ -84,7 +100,7 @@ fn parse_args() -> Result<(String, Option<String>, Config)> {
     let mut positional = Vec::new();
     let mut cfg = Config::default();
     // Flags that may appear bare (`--flag` == `--flag=true`).
-    const BOOL_FLAGS: [&str; 1] = ["verbose"];
+    const BOOL_FLAGS: [&str; 2] = ["verbose", "json"];
     for a in &args {
         if let Some(rest) = a.strip_prefix("--") {
             // `--key=value`, or a bare boolean `--flag` (=true).
@@ -130,6 +146,7 @@ fn run() -> Result<()> {
         "profile" => profile(&cfg),
         "infer" => infer(&cfg),
         "serve" => serve(&cfg),
+        "serve-multi" => serve_multi(&cfg),
         "train" => train(&cfg),
         "compare" => compare(&cfg),
         "predict" => predict(&cfg),
@@ -253,6 +270,73 @@ fn serve(cfg: &Config) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+fn serve_multi(cfg: &Config) -> Result<()> {
+    let registry = serve::demo::registry(&cfg.artifacts, &cfg.device)?;
+    let classes = serve::demo::classes();
+    let trace = if cfg.trace.is_empty() {
+        None
+    } else {
+        let text = std::fs::read_to_string(&cfg.trace)
+            .with_context(|| format!("reading trace `{}`", cfg.trace))?;
+        Some(trace_from_json(&text)?)
+    };
+    let tenants = serve::demo::tenants(
+        &registry, cfg.load, cfg.num_requests, cfg.seed, trace)?;
+    let arrivals = merge_arrivals(&tenants, cfg.seed);
+
+    if !cfg.json {
+        let mut t = Table::new(
+            &format!(
+                "multi-tenant fleet — {} models on {} (load x{:.1}, {} \
+                 requests)",
+                registry.len(), cfg.device, cfg.load, arrivals.len()),
+            &["tenant", "model", "class", "pattern", "requests"],
+        );
+        for tn in &tenants {
+            t.row(vec![
+                tn.name.clone(),
+                tn.model.clone(),
+                classes[tn.class].name.clone(),
+                tn.pattern.kind().into(),
+                tn.pattern.len().to_string(),
+            ]);
+        }
+        t.print();
+    }
+
+    let mut snapshots = Vec::new();
+    for policy in [ClusterPolicy::SparsityAware, ClusterPolicy::StaticSplit]
+    {
+        let snap = run_cluster(&registry, &classes, &tenants, &arrivals,
+            &ClusterOptions { policy, ..Default::default() })?;
+        if !cfg.json {
+            snap.class_table(&format!(
+                "per-class outcomes — {}", snap.policy)).print();
+            println!("{}", snap.summary());
+        }
+        snapshots.push(snap);
+    }
+
+    if cfg.json {
+        let obj = sparoa::util::json::Value::Arr(
+            snapshots.iter().map(|s| s.to_json()).collect());
+        println!("{}", sparoa::util::json::to_string(&obj));
+    } else {
+        let (dyn_a, stat_a) = (
+            snapshots[0].aggregate_attainment(),
+            snapshots[1].aggregate_attainment(),
+        );
+        println!(
+            "\ncross-model cluster scheduling: {:.1}% aggregate SLO \
+             attainment vs {:.1}% on a static CPU/GPU split ({:+.1} pts)",
+            100.0 * dyn_a,
+            100.0 * stat_a,
+            100.0 * (dyn_a - stat_a)
+        );
+    }
     Ok(())
 }
 

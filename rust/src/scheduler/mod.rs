@@ -78,6 +78,18 @@ impl Schedule {
         }
     }
 
+    /// Project the whole plan onto one device, keeping the entry count.
+    /// The multi-tenant serving tier uses this to derive a CPU-fallback
+    /// variant of a model's hybrid schedule (the cluster scheduler's
+    /// "run this batch on the other processor" option).
+    pub fn project(&self, proc: Proc, label: &str) -> Schedule {
+        let xi = match proc {
+            Proc::Cpu => 0.0,
+            Proc::Gpu => 1.0,
+        };
+        Schedule { xi: vec![xi; self.xi.len()], policy: label.into() }
+    }
+
     /// Number of adjacent-op device switches (O_switch proxy).
     pub fn switch_count(&self, graph: &ModelGraph) -> usize {
         let mut last: Option<Proc> = None;
@@ -129,5 +141,15 @@ mod tests {
     fn primary_rounds() {
         assert_eq!(primary_proc(0.49), Proc::Cpu);
         assert_eq!(primary_proc(0.51), Proc::Gpu);
+    }
+
+    #[test]
+    fn project_pins_every_op() {
+        let s = Schedule { xi: vec![0.3, 0.7, 0.5], policy: "mix".into() };
+        let cpu = s.project(Proc::Cpu, "cpu-fallback");
+        assert_eq!(cpu.xi, vec![0.0; 3]);
+        assert_eq!(cpu.policy, "cpu-fallback");
+        let gpu = s.project(Proc::Gpu, "gpu-pin");
+        assert_eq!(gpu.xi, vec![1.0; 3]);
     }
 }

@@ -1,0 +1,518 @@
+//! Event-driven virtual-time cluster scheduler: co-schedules CPU/GPU
+//! capacity *across* models.
+//!
+//! This is the dynamic tier of a Sparse-DySta-style two-tier design.
+//! The static tier is per-model and offline: each registered model
+//! carries its SparOA schedule (GPU-leaning hybrid), a CPU-fallback
+//! projection, and Algorithm-2 batch caps for both ([`ModelRegistry`]).
+//! The dynamic tier runs at dispatch time: whenever queued work exists,
+//! it scores every (model, processor) placement by the deadline-weighted
+//! value of the batch it could run — how many queued requests would
+//! finish inside their SLO, weighted by class — with the paper's
+//! sparsity/intensity signals as placement tie-breaks (sparse models
+//! tolerate the CPU, dense-heavy models want the GPU; most of that
+//! signal already lives in the calibrated per-placement latencies).
+//!
+//! Resource model: two lanes (CPU, GPU).  A dispatched batch occupies
+//! exactly one lane for its full makespan — the lane its schedule
+//! primarily targets — so a hybrid schedule's minority-device time is
+//! folded into its lane occupancy.  That keeps the event loop exact and
+//! errs conservative (slightly over-serializing each lane).
+//!
+//! [`ClusterPolicy::StaticSplit`] is the ablation baseline the paper's
+//! serving claim is judged against: each model is pinned to one
+//! processor up front (every model on the GPU except the one with the
+//! cheapest CPU latency), requests drain FIFO with no class ordering and
+//! no expiry shedding — i.e. N independent single-queue batchers on a
+//! static capacity split.
+
+use crate::device::Proc;
+use crate::serve::registry::ModelRegistry;
+use crate::serve::report::PerfSnapshot;
+use crate::serve::slo::{AdmissionQueues, ShedPolicy, SloClass};
+use crate::serve::workload::{Arrival, Tenant};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Cross-model scheduling discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterPolicy {
+    /// SLO- and sparsity-aware dynamic co-scheduling (the SparOA tier).
+    SparsityAware,
+    /// Per-model static processor pinning + FIFO (the baseline).
+    StaticSplit,
+}
+
+impl ClusterPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ClusterPolicy::SparsityAware => "cluster",
+            ClusterPolicy::StaticSplit => "static-split",
+        }
+    }
+}
+
+/// Knobs for one cluster run.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterOptions {
+    pub policy: ClusterPolicy,
+    pub shed: ShedPolicy,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions {
+            policy: ClusterPolicy::SparsityAware,
+            shed: ShedPolicy::ShedLowestClass,
+        }
+    }
+}
+
+fn lane(p: Proc) -> usize {
+    match p {
+        Proc::Cpu => 0,
+        Proc::Gpu => 1,
+    }
+}
+
+/// Serve a merged multi-tenant arrival stream and report per-class /
+/// per-model outcomes.  Everything runs in virtual time through each
+/// session's execution backend (the latency oracle is
+/// [`crate::api::Session::probe`], cached per (model, placement,
+/// batch)).
+pub fn run_cluster(
+    registry: &ModelRegistry,
+    classes: &[SloClass],
+    tenants: &[Tenant],
+    arrivals: &[Arrival],
+    opts: &ClusterOptions,
+) -> Result<PerfSnapshot> {
+    anyhow::ensure!(!registry.is_empty(), "registry holds no models");
+    anyhow::ensure!(!classes.is_empty(), "no SLO classes configured");
+    let model_of: Vec<usize> = tenants
+        .iter()
+        .map(|t| registry.index_of(&t.model))
+        .collect::<Result<_>>()?;
+    for t in tenants {
+        anyhow::ensure!(
+            t.class < classes.len(),
+            "tenant `{}` references SLO class {} of {}",
+            t.name, t.class, classes.len()
+        );
+    }
+    anyhow::ensure!(
+        arrivals.windows(2).all(|w| w[0].at_us <= w[1].at_us),
+        "arrivals must be time-sorted (use serve::merge_arrivals)"
+    );
+
+    let nm = registry.len();
+    let class_labels: Vec<String> =
+        classes.iter().map(|c| c.name.clone()).collect();
+    let model_labels: Vec<String> = registry
+        .entries()
+        .iter()
+        .map(|e| e.name.clone())
+        .collect();
+    let mut snap = PerfSnapshot::new(
+        opts.policy.name(),
+        opts.shed.name(),
+        &class_labels,
+        &model_labels,
+    );
+
+    // Latency oracle, cached per (model, placement, batch).
+    let mut lat_cache: HashMap<(usize, usize, usize), f64> = HashMap::new();
+    let mut lat_of = |m: usize, p: Proc, b: usize| -> Result<f64> {
+        let key = (m, lane(p), b);
+        if let Some(&l) = lat_cache.get(&key) {
+            return Ok(l);
+        }
+        let e = registry.get(m);
+        let rep = e.session.probe(e.schedule_for(p), b)?;
+        lat_cache.insert(key, rep.makespan_us);
+        Ok(rep.makespan_us)
+    };
+
+    // Static split: pin every model to the GPU except the one that runs
+    // cheapest on the CPU (with >= 2 models both processors stay used).
+    let static_lane: Vec<Proc> = if opts.policy
+        == ClusterPolicy::StaticSplit
+    {
+        let mut lanes = vec![Proc::Gpu; nm];
+        if nm >= 2 {
+            let mut best = 0usize;
+            let mut best_lat = f64::INFINITY;
+            for m in 0..nm {
+                let l = lat_of(m, Proc::Cpu, 1)?;
+                if l < best_lat {
+                    best = m;
+                    best_lat = l;
+                }
+            }
+            lanes[best] = Proc::Cpu;
+        }
+        lanes
+    } else {
+        Vec::new()
+    };
+
+    let sparsity_aware = opts.policy == ClusterPolicy::SparsityAware;
+    let mut q = AdmissionQueues::new(classes, opts.shed, nm);
+    // Debug builds (and therefore `cargo test`) verify settlement at the
+    // request-id level: every request leaves the system exactly once —
+    // served or shed, never both, never twice.
+    #[cfg(debug_assertions)]
+    let mut settled: std::collections::HashSet<usize> =
+        std::collections::HashSet::with_capacity(arrivals.len());
+    let mut shed_seen = 0usize;
+    let mut free = [0.0f64; 2];
+    let mut busy = [0.0f64; 2];
+    let mut now = 0.0f64;
+    let mut ai = 0usize;
+    let mut last_finish = 0.0f64;
+
+    loop {
+        // Ingest everything that has arrived by `now`.
+        while ai < arrivals.len() && arrivals[ai].at_us <= now {
+            let a = arrivals[ai];
+            ai += 1;
+            let m = model_of[a.tenant];
+            snap.record_offered(tenants[a.tenant].class, m);
+            q.offer(a.req, a.tenant, m, tenants[a.tenant].class, a.at_us);
+        }
+        // The dynamic tier refuses to burn capacity on doomed requests.
+        if sparsity_aware {
+            q.drop_expired(now);
+        }
+        while shed_seen < q.shed.len() {
+            let s = q.shed[shed_seen];
+            shed_seen += 1;
+            #[cfg(debug_assertions)]
+            debug_assert!(settled.insert(s.req),
+                          "request {} settled twice (shed)", s.req);
+            snap.record_shed(s.class, model_of[s.tenant], s.at_admission);
+        }
+
+        if q.total_queued() == 0 {
+            if ai >= arrivals.len() {
+                break;
+            }
+            now = arrivals[ai].at_us;
+            continue;
+        }
+
+        // Score every feasible (model, placement, batch) dispatch
+        // option.  Only lanes free *now* are dispatchable — queued work
+        // accumulates while a lane is busy, which is what lets the
+        // dispatcher re-order by class/deadline and right-size batches
+        // (a scheduler that commits arrivals to future slots one by one
+        // degenerates into FIFO).  Busy-lane options are still scored:
+        // they tell the wait heuristic whether patience would save
+        // deadlines that an immediate doomed dispatch would burn.
+        struct Candidate {
+            m: usize,
+            proc: Proc,
+            b: usize,
+            start: f64,
+            finish: f64,
+            score: f64,
+            met_w: f64,
+        }
+        let mut best_now: Option<Candidate> = None;
+        let mut best_any: Option<Candidate> = None;
+        let mut next_free = f64::INFINITY;
+        for m in 0..nm {
+            let qlen = q.queue_len(m);
+            if qlen == 0 {
+                continue;
+            }
+            let entry = registry.get(m);
+            let sorted = q.sorted_queue(m);
+            let head_arrival = sorted
+                .iter()
+                .map(|r| r.arrival_us)
+                .fold(f64::INFINITY, f64::min);
+            let both = [Proc::Cpu, Proc::Gpu];
+            let procs: &[Proc] = if sparsity_aware {
+                &both
+            } else {
+                std::slice::from_ref(&static_lane[m])
+            };
+            for &proc in procs {
+                let lane_free = free[lane(proc)];
+                if lane_free > now {
+                    next_free = next_free.min(lane_free);
+                }
+                let cap = entry.batch_cap(proc).max(1);
+                let start = now.max(lane_free);
+                // Candidate batch sizes: powers of two up to the Alg. 2
+                // cap, plus "everything queued".  Batch latency grows
+                // with size, so right-sizing is what keeps tight
+                // deadlines servable under backlog (the static baseline
+                // always drains min(queue, cap), like the single-model
+                // batcher it stands in for).
+                let mut sizes: Vec<usize> = Vec::new();
+                if sparsity_aware {
+                    let mut b = 1usize;
+                    while b < cap.min(qlen) {
+                        sizes.push(b);
+                        b *= 2;
+                    }
+                }
+                sizes.push(qlen.min(cap));
+                for &b in &sizes {
+                    let l = lat_of(m, proc, b)?;
+                    let finish = start + l;
+                    let met_w: f64 = sorted
+                        .iter()
+                        .take(b)
+                        .filter(|r| r.deadline_us >= finish)
+                        .map(|r| classes[r.class].weight)
+                        .sum();
+                    let score = if sparsity_aware {
+                        // Primary: deadline-weighted value of the batch
+                        // (class weights are >= 1, so one met deadline
+                        // outranks every secondary term).  Secondary:
+                        // drain rate — when every option is doomed the
+                        // scheduler degrades to throughput mode instead
+                        // of thrashing on size-1 batches.  The Fig. 2
+                        // signals and earlier finishes break ties.
+                        let drain =
+                            (10.0 * b as f64 / l.max(1.0)).min(0.9);
+                        let affinity = match proc {
+                            Proc::Cpu => entry.sparsity,
+                            Proc::Gpu => entry.intensity,
+                        };
+                        met_w + drain + 0.01 * affinity - 1e-9 * finish
+                    } else {
+                        // FIFO across the lane's models: oldest head
+                        // wins.
+                        -head_arrival - 1e-9 * finish
+                    };
+                    let cand = || Candidate {
+                        m, proc, b, start, finish, score, met_w,
+                    };
+                    if lane_free <= now
+                        && best_now
+                            .as_ref()
+                            .map_or(true, |c| score > c.score)
+                    {
+                        best_now = Some(cand());
+                    }
+                    if best_any
+                        .as_ref()
+                        .map_or(true, |c| score > c.score)
+                    {
+                        best_any = Some(cand());
+                    }
+                }
+            }
+        }
+
+        // Wait instead of dispatching when nothing is dispatchable now,
+        // or when everything dispatchable now is doomed while a busy
+        // lane could still meet deadlines once it frees (don't shred
+        // requests on an idle-but-hopeless processor).
+        let wait = match (&best_now, &best_any) {
+            (None, _) => true,
+            (Some(bn), Some(ba)) => {
+                sparsity_aware
+                    && bn.met_w <= 0.0
+                    && ba.met_w > 0.0
+                    && ba.start > now
+            }
+            _ => false,
+        };
+        if wait {
+            let mut t = next_free;
+            if ai < arrivals.len() {
+                t = t.min(arrivals[ai].at_us);
+            }
+            debug_assert!(t.is_finite() && t > now,
+                          "wait must advance virtual time");
+            now = t;
+            continue;
+        }
+
+        let c = best_now.expect("non-wait iterations dispatch");
+        let taken = q.take_batch(c.m, c.b, sparsity_aware);
+        debug_assert!(!taken.is_empty());
+        free[lane(c.proc)] = c.finish;
+        busy[lane(c.proc)] += c.finish - c.start;
+        last_finish = last_finish.max(c.finish);
+        snap.n_batches += 1;
+        snap.dispatched += taken.len() as u64;
+        for r in &taken {
+            let latency = c.finish - r.arrival_us;
+            #[cfg(debug_assertions)]
+            debug_assert!(settled.insert(r.req),
+                          "request {} settled twice (served)", r.req);
+            snap.record_served(
+                r.class,
+                r.model,
+                latency,
+                c.finish <= r.deadline_us,
+            );
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    debug_assert_eq!(
+        settled.len() as u64,
+        snap.total_served() + snap.total_shed(),
+        "settlement accounting drifted"
+    );
+    snap.makespan_us = last_finish.max(now);
+    snap.cpu_busy_us = busy[0];
+    snap.gpu_busy_us = busy[1];
+    Ok(snap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SessionBuilder;
+    use crate::graph::ModelGraph;
+    use crate::serve::workload::merge_arrivals;
+    use crate::serve::workload::ArrivalPattern;
+
+    fn registry() -> ModelRegistry {
+        let dev = crate::bench_support::device_profile("agx_orin");
+        let mut reg = ModelRegistry::new();
+        for (name, blocks, scale, sparsity) in [
+            ("heavy", 6, 6.0, 0.1),
+            ("light", 4, 0.3, 0.75),
+        ] {
+            let s = SessionBuilder::new()
+                .with_graph(ModelGraph::synthetic(
+                    name, blocks, scale, sparsity))
+                .with_device(dev.clone())
+                .policy("greedy")
+                .build()
+                .unwrap();
+            reg.register(s).unwrap();
+        }
+        reg
+    }
+
+    fn classes() -> Vec<SloClass> {
+        vec![
+            SloClass::new("interactive", 30_000.0, 64, 4.0),
+            SloClass::new("batch", 200_000.0, 256, 1.0),
+        ]
+    }
+
+    #[test]
+    fn light_load_meets_slos_and_conserves_requests() {
+        let reg = registry();
+        let cls = classes();
+        let tenants = vec![
+            Tenant {
+                name: "t-heavy".into(),
+                model: "heavy".into(),
+                class: 0,
+                pattern: ArrivalPattern::Poisson {
+                    rate_per_s: 30.0,
+                    n: 150,
+                },
+            },
+            Tenant {
+                name: "t-light".into(),
+                model: "light".into(),
+                class: 1,
+                pattern: ArrivalPattern::Poisson {
+                    rate_per_s: 60.0,
+                    n: 150,
+                },
+            },
+        ];
+        let arrivals = merge_arrivals(&tenants, 11);
+        let snap = run_cluster(&reg, &cls, &tenants, &arrivals,
+                               &ClusterOptions::default())
+            .unwrap();
+        assert_eq!(snap.total_offered(), 300);
+        assert_eq!(snap.total_served() + snap.total_shed(), 300);
+        assert!(snap.aggregate_attainment() > 0.9,
+                "light load attainment {}", snap.aggregate_attainment());
+        assert!(snap.makespan_us > 0.0);
+        assert!(snap.gpu_busy_us > 0.0);
+    }
+
+    #[test]
+    fn unknown_model_or_class_is_rejected() {
+        let reg = registry();
+        let cls = classes();
+        let bad_model = vec![Tenant {
+            name: "x".into(),
+            model: "nope".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson { rate_per_s: 1.0, n: 1 },
+        }];
+        assert!(run_cluster(&reg, &cls, &bad_model, &[],
+                            &ClusterOptions::default())
+            .is_err());
+        let bad_class = vec![Tenant {
+            name: "x".into(),
+            model: "heavy".into(),
+            class: 9,
+            pattern: ArrivalPattern::Poisson { rate_per_s: 1.0, n: 1 },
+        }];
+        assert!(run_cluster(&reg, &cls, &bad_class, &[],
+                            &ClusterOptions::default())
+            .is_err());
+        // Hand-built arrival streams must be time-sorted.
+        let ok_tenant = vec![Tenant {
+            name: "x".into(),
+            model: "heavy".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson { rate_per_s: 1.0, n: 2 },
+        }];
+        let unsorted = vec![
+            Arrival { req: 0, tenant: 0, at_us: 100.0 },
+            Arrival { req: 1, tenant: 0, at_us: 50.0 },
+        ];
+        assert!(run_cluster(&reg, &cls, &ok_tenant, &unsorted,
+                            &ClusterOptions::default())
+            .is_err());
+    }
+
+    #[test]
+    fn static_split_pins_one_model_per_processor() {
+        let reg = registry();
+        let cls = classes();
+        let tenants = vec![
+            Tenant {
+                name: "t-heavy".into(),
+                model: "heavy".into(),
+                class: 0,
+                pattern: ArrivalPattern::Poisson {
+                    rate_per_s: 50.0,
+                    n: 120,
+                },
+            },
+            Tenant {
+                name: "t-light".into(),
+                model: "light".into(),
+                class: 1,
+                pattern: ArrivalPattern::Poisson {
+                    rate_per_s: 200.0,
+                    n: 240,
+                },
+            },
+        ];
+        let arrivals = merge_arrivals(&tenants, 13);
+        let snap = run_cluster(&reg, &cls, &tenants, &arrivals,
+            &ClusterOptions {
+                policy: ClusterPolicy::StaticSplit,
+                shed: ShedPolicy::RejectNew,
+            })
+            .unwrap();
+        // light (cheapest on CPU) pinned to CPU, heavy to GPU: both
+        // processors accumulate busy time.
+        assert!(snap.cpu_busy_us > 0.0);
+        assert!(snap.gpu_busy_us > 0.0);
+        assert_eq!(snap.policy, "static-split");
+        assert_eq!(snap.total_served() + snap.total_shed(),
+                   snap.total_offered());
+    }
+}

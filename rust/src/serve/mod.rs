@@ -1,0 +1,222 @@
+//! Multi-tenant SLO-aware serving — the cluster layer above
+//! [`crate::api::Session`].
+//!
+//! Where [`crate::server`] batches one model's request stream, this
+//! module serves *many* models against shared CPU/GPU capacity:
+//!
+//! * [`ModelRegistry`] — N warmed sessions with per-model batch plans
+//!   (Algorithm 2) for both processors and Fig. 2 sparsity/intensity
+//!   signals (registry).
+//! * [`SloClass`] / [`AdmissionQueues`] / [`ShedPolicy`] — per-class
+//!   deadlines, bounded queues, and load shedding with exact
+//!   conservation accounting (slo).
+//! * [`run_cluster`] — the event-driven virtual-time cross-model
+//!   scheduler (the Sparse-DySta-style dynamic tier over SparOA's
+//!   static per-model schedules), plus the static-split baseline it is
+//!   benchmarked against (cluster).
+//! * [`ArrivalPattern`] / [`Tenant`] — Poisson, bursty MMPP, diurnal
+//!   and JSON-trace-replay workload generators (workload).
+//! * [`PerfSnapshot`] — per-class/per-model p50/p95/p99, shed rate,
+//!   attainment and utilization, with JSON output (report).
+//!
+//! The `serve-multi` CLI subcommand and the `fig13_multimodel` bench
+//! drive the [`demo`] fleet end-to-end; `rust/tests/serve_multitenant.rs`
+//! property-tests the conservation/fairness invariants.
+
+pub mod cluster;
+pub mod registry;
+pub mod report;
+pub mod slo;
+pub mod workload;
+
+pub use cluster::{run_cluster, ClusterOptions, ClusterPolicy};
+pub use registry::{ModelEntry, ModelRegistry};
+pub use report::{GroupStats, PerfSnapshot};
+pub use slo::{AdmissionQueues, QueuedReq, ShedPolicy, ShedReq, SloClass};
+pub use workload::{
+    merge_arrivals, trace_from_json, trace_to_json, Arrival,
+    ArrivalPattern, Tenant,
+};
+
+/// A canonical three-model / three-class / four-pattern scenario shared
+/// by the CLI demo, the `fig13_multimodel` bench and the integration
+/// tests.  Falls back to synthetic models when `make artifacts` hasn't
+/// run, so the demo always works.
+pub mod demo {
+    use super::*;
+    use crate::api::{BackendChoice, Session, SessionBuilder};
+    use crate::graph::{ModelGraph, ModelZoo};
+    use anyhow::Result;
+    use std::path::Path;
+
+    /// (name, blocks, flops_scale, relu_sparsity) for the synthetic
+    /// fallback fleet: one dense-heavy, one mid, one sparse-light model.
+    const SYNTHETIC_FLEET: [(&str, usize, f64, f64); 3] = [
+        ("syn_heavy", 8, 6.0, 0.1),
+        ("syn_mid", 6, 1.5, 0.45),
+        ("syn_light", 4, 0.3, 0.75),
+    ];
+
+    /// Artifact models used when `make artifacts` has run.
+    const ARTIFACT_FLEET: [&str; 3] =
+        ["mobilenet_v3_small", "resnet18", "mobilenet_v2"];
+
+    fn build_session(
+        artifacts: &Path,
+        device: &str,
+        model: Option<&str>,
+        synthetic: Option<&ModelGraph>,
+    ) -> Result<Session> {
+        let mut b = SessionBuilder::new()
+            .artifacts(artifacts)
+            .device(device)
+            .policy("greedy")
+            .backend(BackendChoice::Sim);
+        if let Some(g) = synthetic {
+            b = b.with_graph(g.clone());
+        } else if let Some(m) = model {
+            b = b.model(m);
+        }
+        b.build()
+    }
+
+    /// Build the demo registry: artifact models when available,
+    /// synthetic fleet otherwise.
+    pub fn registry(artifacts: &Path, device: &str) -> Result<ModelRegistry> {
+        let mut reg = ModelRegistry::new();
+        let zoo = ModelZoo::load(artifacts).ok();
+        let have_artifacts = zoo
+            .as_ref()
+            .map_or(false, |z| {
+                ARTIFACT_FLEET.iter().all(|m| z.get(m).is_ok())
+            });
+        if have_artifacts {
+            for m in ARTIFACT_FLEET {
+                reg.register(build_session(
+                    artifacts, device, Some(m), None)?)?;
+            }
+        } else {
+            for (name, blocks, scale, sparsity) in SYNTHETIC_FLEET {
+                let g = ModelGraph::synthetic(name, blocks, scale, sparsity);
+                reg.register(build_session(
+                    artifacts, device, None, Some(&g))?)?;
+            }
+        }
+        Ok(reg)
+    }
+
+    /// Interactive (20 ms), standard (60 ms), best-effort (250 ms).
+    pub fn classes() -> Vec<SloClass> {
+        vec![
+            SloClass::new("interactive", 20_000.0, 128, 4.0),
+            SloClass::new("standard", 60_000.0, 256, 2.0),
+            SloClass::new("best-effort", 250_000.0, 512, 1.0),
+        ]
+    }
+
+    /// Four tenants covering all four arrival patterns (poisson, bursty
+    /// MMPP, diurnal, JSON trace replay).  `load` scales every rate;
+    /// `n` is the per-tenant request count; `trace` optionally replaces
+    /// the built-in replay trace (e.g. from `--trace=FILE`).
+    pub fn tenants(
+        registry: &ModelRegistry,
+        load: f64,
+        n: usize,
+        seed: u64,
+        trace: Option<ArrivalPattern>,
+    ) -> Result<Vec<Tenant>> {
+        anyhow::ensure!(registry.len() >= 3, "demo fleet needs 3 models");
+        anyhow::ensure!(n >= 1, "need at least 1 request per tenant");
+        let load = load.max(0.01);
+        let m = |i: usize| registry.get(i).name.clone();
+        // Built-in replay trace: a bursty stream serialized to JSON and
+        // parsed back, so the trace path is exercised end-to-end.
+        let trace = match trace {
+            Some(t) => t,
+            None => {
+                let src = ArrivalPattern::Mmpp {
+                    rate_lo_per_s: 20.0 * load,
+                    rate_hi_per_s: 240.0 * load,
+                    mean_dwell_s: 0.08,
+                    n,
+                }
+                .generate(seed ^ 0x5eed);
+                trace_from_json(&trace_to_json(&src))?
+            }
+        };
+        Ok(vec![
+            Tenant {
+                name: "vision-interactive".into(),
+                model: m(0),
+                class: 0,
+                pattern: ArrivalPattern::Poisson {
+                    rate_per_s: 90.0 * load,
+                    n,
+                },
+            },
+            Tenant {
+                name: "detector-bursty".into(),
+                model: m(1),
+                class: 1,
+                pattern: ArrivalPattern::Mmpp {
+                    rate_lo_per_s: 30.0 * load,
+                    rate_hi_per_s: 450.0 * load,
+                    mean_dwell_s: 0.05,
+                    n,
+                },
+            },
+            Tenant {
+                name: "analytics-diurnal".into(),
+                model: m(2),
+                class: 2,
+                pattern: ArrivalPattern::Diurnal {
+                    base_rate_per_s: 220.0 * load,
+                    amplitude: 0.8,
+                    period_s: 0.5,
+                    n,
+                },
+            },
+            Tenant {
+                name: "replay-trace".into(),
+                model: m(2),
+                class: 0,
+                pattern: trace,
+            },
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_fleet_runs_end_to_end_without_artifacts() {
+        // Point at a directory with no artifacts: the synthetic fleet
+        // must come up and serve all four patterns on both policies.
+        let artifacts = std::env::temp_dir().join("sparoa-no-artifacts");
+        let reg = demo::registry(&artifacts, "agx_orin").unwrap();
+        assert_eq!(reg.len(), 3);
+        let classes = demo::classes();
+        let tenants =
+            demo::tenants(&reg, 0.2, 40, 7, None).unwrap();
+        assert_eq!(tenants.len(), 4);
+        let kinds: Vec<&str> =
+            tenants.iter().map(|t| t.pattern.kind()).collect();
+        assert!(kinds.contains(&"poisson"));
+        assert!(kinds.contains(&"mmpp"));
+        assert!(kinds.contains(&"diurnal"));
+        assert!(kinds.contains(&"trace"));
+        let arrivals = merge_arrivals(&tenants, 3);
+        for policy in
+            [ClusterPolicy::SparsityAware, ClusterPolicy::StaticSplit]
+        {
+            let snap = run_cluster(&reg, &classes, &tenants, &arrivals,
+                &ClusterOptions { policy, ..Default::default() })
+                .unwrap();
+            assert_eq!(snap.total_offered() as usize, arrivals.len());
+            assert_eq!(snap.total_served() + snap.total_shed(),
+                       snap.total_offered());
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! [`ModelRegistry`] — N warmed [`Session`]s with per-model batch plans
+//! and sparsity/intensity signals, ready for cross-model scheduling.
+//!
+//! Registration derives, per model:
+//! * a CPU-fallback projection of the session's (typically GPU-leaning)
+//!   schedule, so the cluster scheduler can place any model's batch on
+//!   either processor;
+//! * Algorithm-2 batch caps for both placements (the static tier of the
+//!   Sparse-DySta-style split: per-model plans computed offline, consumed
+//!   by the dynamic cross-model tier at dispatch time);
+//! * the model's mean activation sparsity / compute intensity
+//!   ([`crate::engine::batching::model_profile`]), the paper's Fig. 2
+//!   signals, used as placement tie-breaks.
+
+use crate::api::Session;
+use crate::device::Proc;
+use crate::engine::batching::{
+    model_profile, optimize_batch, BatchConstraints,
+};
+use crate::scheduler::Schedule;
+use anyhow::Result;
+
+/// One registered model and its precomputed serving plans.
+pub struct ModelEntry {
+    pub name: String,
+    pub session: Session,
+    /// The session's own (hybrid/GPU-leaning) schedule drives GPU-side
+    /// dispatch; this projection drives CPU-side dispatch.
+    pub cpu_schedule: Schedule,
+    /// Algorithm-2 batch cap when dispatched on the GPU plan.
+    pub gpu_batch_cap: usize,
+    /// Algorithm-2 batch cap when dispatched on the CPU fallback.
+    pub cpu_batch_cap: usize,
+    /// Mean activation sparsity of schedulable ops, [0, 1].
+    pub sparsity: f64,
+    /// Mean normalized compute intensity of schedulable ops, [0, 1].
+    pub intensity: f64,
+}
+
+impl ModelEntry {
+    /// Batch cap for a placement.
+    pub fn batch_cap(&self, proc: Proc) -> usize {
+        match proc {
+            Proc::Cpu => self.cpu_batch_cap,
+            Proc::Gpu => self.gpu_batch_cap,
+        }
+    }
+
+    /// Schedule used when this model's batch runs on `proc`.
+    pub fn schedule_for(&self, proc: Proc) -> &Schedule {
+        match proc {
+            Proc::Cpu => &self.cpu_schedule,
+            Proc::Gpu => self.session.schedule(),
+        }
+    }
+}
+
+/// The set of models a serving cluster hosts.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a warmed session; computes both batch plans and the
+    /// Fig. 2 signals.  Returns the model's registry index.
+    pub fn register(&mut self, session: Session) -> Result<usize> {
+        let name = session.graph().model.clone();
+        anyhow::ensure!(
+            self.index_of(&name).is_err(),
+            "model `{name}` already registered"
+        );
+        let graph = session.graph();
+        let (sparsity, intensity) = model_profile(graph);
+        let cpu_schedule = session
+            .schedule()
+            .project(Proc::Cpu, &format!("{}+cpu-fallback",
+                                         session.schedule().policy));
+        let constraints = BatchConstraints::for_device(session.device());
+        let gpu_plan = optimize_batch(
+            graph,
+            session.device(),
+            session.schedule(),
+            session.options(),
+            8,
+            &constraints,
+        );
+        // CPU batches amortize launches less; start the search low and
+        // keep the cap modest so one CPU batch never monopolizes the lane.
+        let cpu_constraints = BatchConstraints {
+            max_batch: 16,
+            ..constraints
+        };
+        let cpu_plan = optimize_batch(
+            graph,
+            session.device(),
+            &cpu_schedule,
+            session.options(),
+            2,
+            &cpu_constraints,
+        );
+        self.entries.push(ModelEntry {
+            name,
+            session,
+            cpu_schedule,
+            gpu_batch_cap: gpu_plan.batch.max(1),
+            cpu_batch_cap: cpu_plan.batch.max(1),
+            sparsity,
+            intensity,
+        });
+        Ok(self.entries.len() - 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> &ModelEntry {
+        &self.entries[idx]
+    }
+
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.entries
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.entries
+            .iter()
+            .position(|e| e.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!("model `{name}` not registered")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SessionBuilder;
+    use crate::graph::ModelGraph;
+
+    fn session(name: &str, scale: f64, sparsity: f64) -> Session {
+        let dev = crate::bench_support::device_profile("agx_orin");
+        SessionBuilder::new()
+            .with_graph(ModelGraph::synthetic(name, 4, scale, sparsity))
+            .with_device(dev)
+            .policy("greedy")
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn register_builds_dual_plans_and_signals() {
+        let mut reg = ModelRegistry::new();
+        let heavy = reg.register(session("heavy", 6.0, 0.05)).unwrap();
+        let light = reg.register(session("light", 0.4, 0.8)).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.index_of("light").unwrap(), light);
+        let h = reg.get(heavy);
+        let l = reg.get(light);
+        assert!(l.sparsity > h.sparsity);
+        assert!(h.intensity > l.intensity);
+        assert!(h.gpu_batch_cap >= 1 && h.cpu_batch_cap >= 1);
+        assert!(h.cpu_batch_cap <= 16);
+        // CPU projection leaves the GPU idle; GPU plan uses it.
+        let on_cpu = h
+            .session
+            .probe(h.schedule_for(crate::device::Proc::Cpu), 1)
+            .unwrap();
+        assert_eq!(on_cpu.gpu_busy_us, 0.0);
+        let on_gpu = h
+            .session
+            .probe(h.schedule_for(crate::device::Proc::Gpu), 1)
+            .unwrap();
+        assert!(on_gpu.makespan_us < on_cpu.makespan_us);
+        // Duplicate names are rejected.
+        assert!(reg.register(session("heavy", 1.0, 0.1)).is_err());
+    }
+}

@@ -1,0 +1,321 @@
+//! [`PerfSnapshot`] — the serving tier's unified performance report:
+//! per-class and per-model latency quantiles (bounded histograms), shed
+//! rates, SLO attainment and processor utilization, with compact JSON
+//! output for benches and dashboards.
+
+use crate::bench_support::Table;
+use crate::server::LatencyHistogram;
+use crate::util::json::{self, Value};
+use std::collections::BTreeMap;
+
+/// Aggregated statistics for one group (an SLO class or a model).
+#[derive(Debug, Clone)]
+pub struct GroupStats {
+    pub label: String,
+    /// Requests offered (admitted + shed at admission).
+    pub offered: u64,
+    /// Requests served to completion.
+    pub served: u64,
+    /// Served within their deadline.
+    pub met: u64,
+    /// Shed by admission control.
+    pub shed_admission: u64,
+    /// Shed after expiring in queue.
+    pub shed_expired: u64,
+    pub hist: LatencyHistogram,
+}
+
+impl GroupStats {
+    pub fn new(label: &str) -> Self {
+        GroupStats {
+            label: label.into(),
+            offered: 0,
+            served: 0,
+            met: 0,
+            shed_admission: 0,
+            shed_expired: 0,
+            hist: LatencyHistogram::new(),
+        }
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed_admission + self.shed_expired
+    }
+
+    /// Served but past deadline.
+    pub fn violations(&self) -> u64 {
+        self.served - self.met
+    }
+
+    /// Fraction of *offered* requests served within deadline (shed
+    /// requests count against attainment).
+    pub fn attainment(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        self.met as f64 / self.offered as f64
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        self.shed() as f64 / self.offered as f64
+    }
+
+    /// Latency quantile for display: "-" when nothing was served (an
+    /// empty histogram's quantiles are NaN).
+    pub fn percentile_str(&self, p: f64) -> String {
+        if self.served == 0 {
+            "-".into()
+        } else {
+            format!("{:.0}us", self.hist.percentile(p))
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("label".into(), Value::Str(self.label.clone()));
+        o.insert("offered".into(), Value::Num(self.offered as f64));
+        o.insert("served".into(), Value::Num(self.served as f64));
+        o.insert("met".into(), Value::Num(self.met as f64));
+        o.insert("shed".into(), Value::Num(self.shed() as f64));
+        o.insert("shed_rate".into(), Value::Num(self.shed_rate()));
+        o.insert("attainment".into(), Value::Num(self.attainment()));
+        o.insert("latency".into(), self.hist.to_json());
+        Value::Obj(o)
+    }
+}
+
+/// One serving run's full report.
+#[derive(Debug, Clone)]
+pub struct PerfSnapshot {
+    /// Cluster policy name ("cluster" / "static-split").
+    pub policy: String,
+    pub shed_policy: String,
+    pub makespan_us: f64,
+    pub cpu_busy_us: f64,
+    pub gpu_busy_us: f64,
+    pub n_batches: u64,
+    pub dispatched: u64,
+    pub per_class: Vec<GroupStats>,
+    pub per_model: Vec<GroupStats>,
+}
+
+impl PerfSnapshot {
+    pub fn new(
+        policy: &str,
+        shed_policy: &str,
+        class_labels: &[String],
+        model_labels: &[String],
+    ) -> Self {
+        PerfSnapshot {
+            policy: policy.into(),
+            shed_policy: shed_policy.into(),
+            makespan_us: 0.0,
+            cpu_busy_us: 0.0,
+            gpu_busy_us: 0.0,
+            n_batches: 0,
+            dispatched: 0,
+            per_class: class_labels
+                .iter()
+                .map(|l| GroupStats::new(l))
+                .collect(),
+            per_model: model_labels
+                .iter()
+                .map(|l| GroupStats::new(l))
+                .collect(),
+        }
+    }
+
+    pub fn record_offered(&mut self, class: usize, model: usize) {
+        self.per_class[class].offered += 1;
+        self.per_model[model].offered += 1;
+    }
+
+    pub fn record_served(&mut self, class: usize, model: usize,
+                         latency_us: f64, met: bool) {
+        for g in [&mut self.per_class[class], &mut self.per_model[model]] {
+            g.served += 1;
+            if met {
+                g.met += 1;
+            }
+            g.hist.record(latency_us);
+        }
+    }
+
+    pub fn record_shed(&mut self, class: usize, model: usize,
+                       at_admission: bool) {
+        for g in [&mut self.per_class[class], &mut self.per_model[model]] {
+            if at_admission {
+                g.shed_admission += 1;
+            } else {
+                g.shed_expired += 1;
+            }
+        }
+    }
+
+    pub fn total_offered(&self) -> u64 {
+        self.per_class.iter().map(|g| g.offered).sum()
+    }
+    pub fn total_served(&self) -> u64 {
+        self.per_class.iter().map(|g| g.served).sum()
+    }
+    pub fn total_shed(&self) -> u64 {
+        self.per_class.iter().map(|g| g.shed()).sum()
+    }
+    pub fn total_met(&self) -> u64 {
+        self.per_class.iter().map(|g| g.met).sum()
+    }
+
+    /// Fraction of all offered requests served within deadline — the
+    /// headline number the overload comparison is judged on.
+    pub fn aggregate_attainment(&self) -> f64 {
+        let offered = self.total_offered();
+        if offered == 0 {
+            return 0.0;
+        }
+        self.total_met() as f64 / offered as f64
+    }
+
+    pub fn cpu_util(&self) -> f64 {
+        if self.makespan_us > 0.0 {
+            (self.cpu_busy_us / self.makespan_us).min(1.0)
+        } else {
+            0.0
+        }
+    }
+    pub fn gpu_util(&self) -> f64 {
+        if self.makespan_us > 0.0 {
+            (self.gpu_busy_us / self.makespan_us).min(1.0)
+        } else {
+            0.0
+        }
+    }
+    pub fn mean_batch(&self) -> f64 {
+        if self.n_batches > 0 {
+            self.dispatched as f64 / self.n_batches as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("policy".into(), Value::Str(self.policy.clone()));
+        o.insert("shed_policy".into(),
+                 Value::Str(self.shed_policy.clone()));
+        o.insert("makespan_us".into(), Value::Num(self.makespan_us));
+        o.insert("cpu_util".into(), Value::Num(self.cpu_util()));
+        o.insert("gpu_util".into(), Value::Num(self.gpu_util()));
+        o.insert("mean_batch".into(), Value::Num(self.mean_batch()));
+        o.insert("aggregate_attainment".into(),
+                 Value::Num(self.aggregate_attainment()));
+        o.insert("offered".into(), Value::Num(self.total_offered() as f64));
+        o.insert("served".into(), Value::Num(self.total_served() as f64));
+        o.insert("shed".into(), Value::Num(self.total_shed() as f64));
+        o.insert(
+            "per_class".into(),
+            Value::Arr(self.per_class.iter().map(|g| g.to_json()).collect()),
+        );
+        o.insert(
+            "per_model".into(),
+            Value::Arr(self.per_model.iter().map(|g| g.to_json()).collect()),
+        );
+        Value::Obj(o)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+
+    /// Per-class console table for the CLI.
+    pub fn class_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &["class", "offered", "served", "met", "shed", "p50", "p95",
+              "p99", "attainment"],
+        );
+        for g in &self.per_class {
+            t.row(vec![
+                g.label.clone(),
+                g.offered.to_string(),
+                g.served.to_string(),
+                g.met.to_string(),
+                g.shed().to_string(),
+                g.percentile_str(50.0),
+                g.percentile_str(95.0),
+                g.percentile_str(99.0),
+                format!("{:.1}%", 100.0 * g.attainment()),
+            ]);
+        }
+        t
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "[{}] attainment {:.1}% ({} met / {} offered, {} shed) \
+             cpu {:.0}% gpu {:.0}% mean batch {:.1}",
+            self.policy,
+            100.0 * self.aggregate_attainment(),
+            self.total_met(),
+            self.total_offered(),
+            self.total_shed(),
+            100.0 * self.cpu_util(),
+            100.0 * self.gpu_util(),
+            self.mean_batch()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_accounting_and_json() {
+        let mut s = PerfSnapshot::new(
+            "cluster",
+            "reject-new",
+            &["interactive".into(), "batch".into()],
+            &["m0".into(), "m1".into()],
+        );
+        s.record_offered(0, 0);
+        s.record_offered(0, 1);
+        s.record_offered(1, 1);
+        s.record_served(0, 0, 5_000.0, true);
+        s.record_served(1, 1, 90_000.0, false);
+        s.record_shed(0, 1, true);
+        s.makespan_us = 100_000.0;
+        s.cpu_busy_us = 30_000.0;
+        s.gpu_busy_us = 80_000.0;
+        s.n_batches = 2;
+        s.dispatched = 2;
+
+        assert_eq!(s.total_offered(), 3);
+        assert_eq!(s.total_served(), 2);
+        assert_eq!(s.total_shed(), 1);
+        assert_eq!(s.total_met(), 1);
+        assert!((s.aggregate_attainment() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((s.cpu_util() - 0.3).abs() < 1e-12);
+        assert_eq!(s.per_class[0].violations(), 0);
+        assert_eq!(s.per_class[1].violations(), 1);
+        assert!((s.per_class[0].shed_rate() - 0.5).abs() < 1e-12);
+
+        let text = s.to_json_string();
+        let v = json::parse(&text).unwrap();
+        assert_eq!(v.str_of("policy"), "cluster");
+        assert_eq!(v.get("per_class").as_arr().unwrap().len(), 2);
+        assert_eq!(
+            v.get("per_class").idx(0).str_of("label"),
+            "interactive"
+        );
+        assert!((v.get("aggregate_attainment").as_f64().unwrap()
+            - 1.0 / 3.0)
+            .abs()
+            < 1e-9);
+        // table renders without panicking
+        s.class_table("t").print();
+    }
+}

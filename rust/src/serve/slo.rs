@@ -1,0 +1,369 @@
+//! SLO classes, bounded per-class queues, admission control and load
+//! shedding for the multi-tenant serving tier.
+//!
+//! Every request carries an SLO class (0 = highest priority) with a
+//! per-class latency deadline and a bounded outstanding-request budget.
+//! When a class budget is full, the [`ShedPolicy`] decides who pays:
+//! reject the newcomer, shed the oldest queued request of that class, or
+//! shed from the lowest-priority class that has work queued.  The
+//! accounting is conservation-exact: every offered request is either
+//! admitted (and later served or shed-expired) or shed at admission —
+//! nothing is lost, nothing is served twice (property-tested in
+//! `rust/tests/serve_multitenant.rs`).
+
+/// One service class.
+#[derive(Debug, Clone)]
+pub struct SloClass {
+    pub name: String,
+    /// End-to-end latency deadline, microseconds after arrival.
+    pub deadline_us: f64,
+    /// Bound on outstanding (queued, unserved) requests of this class.
+    pub queue_cap: usize,
+    /// Scheduling weight (higher = more valuable to meet).  Keep >= 1.0:
+    /// the cluster scheduler treats one met deadline as outranking all
+    /// of its sub-unit tie-break terms.
+    pub weight: f64,
+}
+
+impl SloClass {
+    pub fn new(name: &str, deadline_us: f64, queue_cap: usize,
+               weight: f64) -> Self {
+        SloClass { name: name.into(), deadline_us, queue_cap, weight }
+    }
+}
+
+/// What to do when the queue budget is exhausted.
+///
+/// `RejectNew` and `ShedOldest` enforce each class's `queue_cap`
+/// independently.  `ShedLowestClass` treats the sum of all caps as one
+/// shared pool: when the pool is full, the oldest request of the
+/// lowest-priority class with queued work is displaced — but never a
+/// class of strictly higher priority than the newcomer (a batch arrival
+/// cannot push out interactive work; it is rejected instead).  Either
+/// way the total outstanding count never exceeds the configured budget,
+/// so queue memory is bounded regardless of offered load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Drop the arriving request.
+    RejectNew,
+    /// Drop the oldest queued request of the same class, admit the new.
+    ShedOldest,
+    /// Shared pool; displace the lowest-priority queued work.
+    ShedLowestClass,
+}
+
+impl ShedPolicy {
+    pub fn parse(s: &str) -> Option<ShedPolicy> {
+        Some(match s {
+            "reject-new" => ShedPolicy::RejectNew,
+            "shed-oldest" => ShedPolicy::ShedOldest,
+            "shed-lowest-class" => ShedPolicy::ShedLowestClass,
+            _ => return None,
+        })
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedPolicy::RejectNew => "reject-new",
+            ShedPolicy::ShedOldest => "shed-oldest",
+            ShedPolicy::ShedLowestClass => "shed-lowest-class",
+        }
+    }
+}
+
+/// One admitted, not-yet-served request.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedReq {
+    pub req: usize,
+    pub tenant: usize,
+    pub model: usize,
+    pub class: usize,
+    pub arrival_us: f64,
+    pub deadline_us: f64,
+}
+
+/// A request shed before service, and why.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedReq {
+    pub req: usize,
+    pub tenant: usize,
+    pub class: usize,
+    /// true when shed at admission, false when expired in queue.
+    pub at_admission: bool,
+}
+
+/// Dispatch order: class priority first, FIFO within a class — the one
+/// comparator both the scoring snapshot and the dispatch drain use.
+fn class_then_arrival(a: &QueuedReq, b: &QueuedReq) -> std::cmp::Ordering {
+    a.class
+        .cmp(&b.class)
+        .then(a.arrival_us.partial_cmp(&b.arrival_us).unwrap())
+}
+
+/// Bounded multi-model queues with per-class admission budgets.
+#[derive(Debug, Clone)]
+pub struct AdmissionQueues {
+    classes: Vec<SloClass>,
+    policy: ShedPolicy,
+    /// Per-model FIFO queues (arrival order within a model).
+    queues: Vec<Vec<QueuedReq>>,
+    /// Outstanding queued requests per class (across models).
+    outstanding: Vec<usize>,
+    pub admitted: u64,
+    /// Everything shed so far (admission rejections + queue expiries).
+    pub shed: Vec<ShedReq>,
+}
+
+impl AdmissionQueues {
+    pub fn new(classes: &[SloClass], policy: ShedPolicy,
+               n_models: usize) -> Self {
+        AdmissionQueues {
+            classes: classes.to_vec(),
+            policy,
+            queues: vec![Vec::new(); n_models],
+            outstanding: vec![0; classes.len()],
+            admitted: 0,
+            shed: Vec::new(),
+        }
+    }
+
+    pub fn classes(&self) -> &[SloClass] {
+        &self.classes
+    }
+
+    pub fn total_queued(&self) -> usize {
+        self.outstanding.iter().sum()
+    }
+
+    pub fn queue_len(&self, model: usize) -> usize {
+        self.queues[model].len()
+    }
+
+    /// Sorted dispatch view of one model's queue: class-priority first,
+    /// FIFO within a class.
+    pub fn sorted_queue(&self, model: usize) -> Vec<QueuedReq> {
+        let mut q = self.queues[model].clone();
+        q.sort_by(class_then_arrival);
+        q
+    }
+
+    /// Offer one arriving request; admits it or sheds per policy.
+    pub fn offer(&mut self, req: usize, tenant: usize, model: usize,
+                 class: usize, now_us: f64) {
+        let full = match self.policy {
+            ShedPolicy::RejectNew | ShedPolicy::ShedOldest => {
+                self.outstanding[class] >= self.classes[class].queue_cap
+            }
+            ShedPolicy::ShedLowestClass => {
+                let pool: usize =
+                    self.classes.iter().map(|c| c.queue_cap).sum();
+                self.total_queued() >= pool
+            }
+        };
+        if full {
+            match self.policy {
+                ShedPolicy::RejectNew => {
+                    self.shed.push(ShedReq {
+                        req, tenant, class, at_admission: true });
+                    return;
+                }
+                ShedPolicy::ShedOldest => {
+                    if !self.evict_oldest_of_class(class) {
+                        self.shed.push(ShedReq {
+                            req, tenant, class, at_admission: true });
+                        return;
+                    }
+                }
+                ShedPolicy::ShedLowestClass => {
+                    // Victim class: lowest priority (highest index) with
+                    // queued work, but never a class above the newcomer.
+                    let victim = (class..self.classes.len())
+                        .rev()
+                        .find(|&c| self.outstanding[c] > 0);
+                    match victim {
+                        Some(vc) if self.evict_oldest_of_class(vc) => {}
+                        _ => {
+                            self.shed.push(ShedReq {
+                                req, tenant, class, at_admission: true });
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+        self.outstanding[class] += 1;
+        self.admitted += 1;
+        self.queues[model].push(QueuedReq {
+            req,
+            tenant,
+            model,
+            class,
+            arrival_us: now_us,
+            deadline_us: now_us + self.classes[class].deadline_us,
+        });
+    }
+
+    fn evict_oldest_of_class(&mut self, class: usize) -> bool {
+        let mut best: Option<(usize, usize, f64)> = None; // (model, idx, t)
+        for (m, q) in self.queues.iter().enumerate() {
+            for (i, r) in q.iter().enumerate() {
+                if r.class == class
+                    && best.map_or(true, |(_, _, t)| r.arrival_us < t)
+                {
+                    best = Some((m, i, r.arrival_us));
+                }
+            }
+        }
+        let Some((m, i, _)) = best else { return false };
+        let victim = self.queues[m].remove(i);
+        self.outstanding[victim.class] -= 1;
+        self.shed.push(ShedReq {
+            req: victim.req,
+            tenant: victim.tenant,
+            class: victim.class,
+            at_admission: true,
+        });
+        true
+    }
+
+    /// Shed every queued request whose deadline has already passed (the
+    /// dynamic tier's "don't burn capacity on doomed work" rule).
+    pub fn drop_expired(&mut self, now_us: f64) {
+        for q in &mut self.queues {
+            let mut i = 0;
+            while i < q.len() {
+                if q[i].deadline_us <= now_us {
+                    let victim = q.remove(i);
+                    self.outstanding[victim.class] -= 1;
+                    self.shed.push(ShedReq {
+                        req: victim.req,
+                        tenant: victim.tenant,
+                        class: victim.class,
+                        at_admission: false,
+                    });
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    /// Remove up to `max` requests of one model for dispatch.  With
+    /// `class_order`, higher-priority classes leave the queue first
+    /// (FIFO within a class); otherwise strict FIFO.
+    pub fn take_batch(&mut self, model: usize, max: usize,
+                      class_order: bool) -> Vec<QueuedReq> {
+        let q = &mut self.queues[model];
+        if class_order {
+            q.sort_by(class_then_arrival);
+        } else {
+            q.sort_by(|a, b| {
+                a.arrival_us.partial_cmp(&b.arrival_us).unwrap()
+            });
+        }
+        let take = max.min(q.len());
+        let taken: Vec<QueuedReq> = q.drain(..take).collect();
+        for r in &taken {
+            self.outstanding[r.class] -= 1;
+        }
+        taken
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn classes() -> Vec<SloClass> {
+        vec![
+            SloClass::new("interactive", 20_000.0, 2, 4.0),
+            SloClass::new("batch", 100_000.0, 3, 1.0),
+        ]
+    }
+
+    #[test]
+    fn reject_new_bounds_the_queue() {
+        let cls = classes();
+        let mut q = AdmissionQueues::new(&cls, ShedPolicy::RejectNew, 1);
+        for i in 0..5 {
+            q.offer(i, 0, 0, 0, i as f64);
+        }
+        assert_eq!(q.admitted, 2);
+        assert_eq!(q.shed.len(), 3);
+        assert!(q.shed.iter().all(|s| s.at_admission));
+        assert_eq!(q.total_queued(), 2);
+        // the admitted ones are the first two
+        let taken = q.take_batch(0, 10, true);
+        assert_eq!(taken.iter().map(|r| r.req).collect::<Vec<_>>(),
+                   vec![0, 1]);
+        assert_eq!(q.total_queued(), 0);
+    }
+
+    #[test]
+    fn shed_oldest_keeps_the_newest() {
+        let cls = classes();
+        let mut q = AdmissionQueues::new(&cls, ShedPolicy::ShedOldest, 1);
+        for i in 0..5 {
+            q.offer(i, 0, 0, 0, i as f64);
+        }
+        assert_eq!(q.admitted, 5);
+        assert_eq!(q.shed.len(), 3); // 0, 1, 2 displaced
+        let taken = q.take_batch(0, 10, true);
+        assert_eq!(taken.iter().map(|r| r.req).collect::<Vec<_>>(),
+                   vec![3, 4]);
+    }
+
+    #[test]
+    fn shed_lowest_class_protects_high_priority() {
+        let cls = classes();
+        let mut q =
+            AdmissionQueues::new(&cls, ShedPolicy::ShedLowestClass, 1);
+        // Fill the batch class.
+        for i in 0..3 {
+            q.offer(i, 1, 0, 1, i as f64);
+        }
+        // Fill interactive, then overflow it: the victim must come from
+        // the batch class (lower priority), not from interactive.
+        q.offer(10, 0, 0, 0, 10.0);
+        q.offer(11, 0, 0, 0, 11.0);
+        q.offer(12, 0, 0, 0, 12.0);
+        let shed_classes: Vec<usize> =
+            q.shed.iter().map(|s| s.class).collect();
+        assert_eq!(shed_classes, vec![1]);
+        assert_eq!(q.shed[0].req, 0); // oldest batch request paid
+        // A batch overflow can never displace interactive work.
+        q.offer(13, 1, 0, 1, 13.0);
+        q.offer(14, 1, 0, 1, 14.0);
+        let shed_after: Vec<usize> =
+            q.shed.iter().map(|s| s.class).collect();
+        assert!(shed_after.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn expiry_sheds_with_accounting() {
+        let cls = classes();
+        let mut q = AdmissionQueues::new(&cls, ShedPolicy::RejectNew, 2);
+        q.offer(0, 0, 0, 0, 0.0); // deadline 20ms
+        q.offer(1, 0, 1, 1, 0.0); // deadline 100ms
+        q.drop_expired(50_000.0);
+        assert_eq!(q.shed.len(), 1);
+        assert_eq!(q.shed[0].req, 0);
+        assert!(!q.shed[0].at_admission);
+        assert_eq!(q.total_queued(), 1);
+        assert_eq!(q.queue_len(0), 0);
+        assert_eq!(q.queue_len(1), 1);
+    }
+
+    #[test]
+    fn take_batch_orders_by_class_then_fifo() {
+        let cls = classes();
+        let mut q = AdmissionQueues::new(&cls, ShedPolicy::RejectNew, 1);
+        q.offer(0, 0, 0, 1, 0.0);
+        q.offer(1, 0, 0, 0, 1.0);
+        q.offer(2, 0, 0, 1, 2.0);
+        q.offer(3, 0, 0, 0, 3.0);
+        let taken = q.take_batch(0, 3, true);
+        assert_eq!(taken.iter().map(|r| r.req).collect::<Vec<_>>(),
+                   vec![1, 3, 0]);
+        assert_eq!(q.total_queued(), 1);
+    }
+}

@@ -1,10 +1,161 @@
 //! Serving metrics: latency distribution, throughput, SLO attainment.
+//!
+//! The latency store is a fixed-size log-bucketed histogram
+//! ([`LatencyHistogram`]), not a growing `Vec`: memory stays bounded
+//! under sustained traffic (4 KB per histogram regardless of request
+//! count) while `count`/`mean`/`min`/`max` remain exact and quantiles
+//! are accurate to one bucket width (~3.7% relative).
 
-use crate::util::stats;
+use crate::util::json::Value;
+use std::collections::BTreeMap;
 
+/// Number of log-spaced buckets.
+const BUCKETS: usize = 512;
+/// Lower edge of bucket 0, microseconds.
+const LO_US: f64 = 1.0;
+/// Upper edge of the last bucket, microseconds (100 s).
+const HI_US: f64 = 1e8;
+
+/// Bounded-memory latency histogram with log-spaced buckets over
+/// [1us, 100s].  Samples outside the range clamp into the edge buckets
+/// (count/mean stay exact regardless).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// ln(bucket upper edge / lower edge), identical for every bucket.
+fn ln_ratio() -> f64 {
+    (HI_US / LO_US).ln() / BUCKETS as f64
+}
+
+fn bucket_of(x: f64) -> usize {
+    let x = x.max(LO_US);
+    (((x / LO_US).ln() / ln_ratio()) as usize).min(BUCKETS - 1)
+}
+
+/// Lower edge of bucket `i`, microseconds.
+fn bucket_lo(i: usize) -> f64 {
+    LO_US * (i as f64 * ln_ratio()).exp()
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, x_us: f64) {
+        self.counts[bucket_of(x_us)] += 1;
+        self.count += 1;
+        self.sum += x_us;
+        self.min = self.min.min(x_us);
+        self.max = self.max.max(x_us);
+    }
+
+    /// Fold another histogram in (per-class -> aggregate roll-ups).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact mean (the running sum is not bucketed).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Quantile estimate, `p` in [0, 100]: geometric interpolation inside
+    /// the covering bucket, clamped to the exact observed [min, max].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (p / 100.0).clamp(0.0, 1.0)
+            * (self.count.saturating_sub(1)) as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 > target {
+                let frac = (target - cum as f64) / c as f64;
+                let v = bucket_lo(i) * (frac * ln_ratio()).exp();
+                return v.clamp(self.min, self.max);
+            }
+            cum += c;
+        }
+        self.max
+    }
+
+    /// Estimated fraction of samples `<= x_us` (log-linear interpolation
+    /// inside the boundary bucket).
+    pub fn fraction_le(&self, x_us: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        if x_us >= self.max {
+            return 1.0;
+        }
+        if x_us < self.min {
+            return 0.0;
+        }
+        let b = bucket_of(x_us);
+        let mut below = 0u64;
+        for &c in &self.counts[..b] {
+            below += c;
+        }
+        let inside = (x_us.max(LO_US) / bucket_lo(b)).ln() / ln_ratio();
+        let part = self.counts[b] as f64 * inside.clamp(0.0, 1.0);
+        ((below as f64 + part) / self.count as f64).clamp(0.0, 1.0)
+    }
+
+    /// Compact JSON for reports: count + mean + the standard quantiles.
+    pub fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("count".into(), Value::Num(self.count as f64));
+        if self.count > 0 {
+            o.insert("mean_us".into(), Value::Num(self.mean_us()));
+            o.insert("p50_us".into(), Value::Num(self.percentile(50.0)));
+            o.insert("p95_us".into(), Value::Num(self.percentile(95.0)));
+            o.insert("p99_us".into(), Value::Num(self.percentile(99.0)));
+            o.insert("min_us".into(), Value::Num(self.min));
+            o.insert("max_us".into(), Value::Num(self.max));
+        }
+        Value::Obj(o)
+    }
+}
+
+/// Per-stream serving metrics over a [`LatencyHistogram`].
 #[derive(Debug, Clone, Default)]
 pub struct ServeMetrics {
-    latencies_us: Vec<f64>,
+    hist: LatencyHistogram,
     start: Option<std::time::Instant>,
     elapsed_s: f64,
 }
@@ -16,7 +167,7 @@ impl ServeMetrics {
     }
 
     pub fn record(&mut self, latency_us: f64) {
-        self.latencies_us.push(latency_us);
+        self.hist.record(latency_us);
     }
 
     pub fn finish(&mut self) {
@@ -25,17 +176,25 @@ impl ServeMetrics {
         }
     }
 
+    /// The underlying bounded histogram (per-class roll-ups, JSON).
+    pub fn histogram(&self) -> &LatencyHistogram {
+        &self.hist
+    }
+
     pub fn count(&self) -> usize {
-        self.latencies_us.len()
+        self.hist.count() as usize
     }
     pub fn mean_us(&self) -> f64 {
-        stats::mean(&self.latencies_us)
+        self.hist.mean_us()
     }
     pub fn p50_us(&self) -> f64 {
-        stats::percentile(&self.latencies_us, 50.0)
+        self.hist.percentile(50.0)
+    }
+    pub fn p95_us(&self) -> f64 {
+        self.hist.percentile(95.0)
     }
     pub fn p99_us(&self) -> f64 {
-        stats::percentile(&self.latencies_us, 99.0)
+        self.hist.percentile(99.0)
     }
     pub fn throughput_rps(&self) -> f64 {
         if self.elapsed_s > 0.0 {
@@ -46,11 +205,7 @@ impl ServeMetrics {
     }
     /// Fraction of requests within `slo_us`.
     pub fn slo_attainment(&self, slo_us: f64) -> f64 {
-        if self.latencies_us.is_empty() {
-            return 0.0;
-        }
-        self.latencies_us.iter().filter(|&&l| l <= slo_us).count() as f64
-            / self.latencies_us.len() as f64
+        self.hist.fraction_le(slo_us)
     }
 
     pub fn summary(&self, label: &str) -> String {
@@ -79,9 +234,62 @@ mod tests {
         m.finish();
         assert_eq!(m.count(), 100);
         assert!((m.mean_us() - 5050.0).abs() < 1.0);
-        assert!((m.p50_us() - 5050.0).abs() < 110.0);
-        assert!(m.p99_us() >= 9800.0);
+        assert!((m.p50_us() - 5050.0).abs() < 200.0);
+        assert!(m.p99_us() >= 9700.0);
         assert!((m.slo_attainment(5000.0) - 0.5).abs() < 0.02);
         assert!(m.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn histogram_is_bounded_and_exact_on_count_mean() {
+        let mut h = LatencyHistogram::new();
+        let mut exact: Vec<f64> = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(41);
+        for _ in 0..50_000 {
+            let x = rng.exponential(1.0 / 3000.0); // mean 3000us
+            h.record(x);
+            exact.push(x);
+        }
+        assert_eq!(h.count(), 50_000);
+        assert!((h.mean_us() - crate::util::stats::mean(&exact)).abs()
+                < 1e-6);
+        // Quantiles within one bucket width of the exact values.
+        for p in [50.0, 95.0, 99.0] {
+            let approx = h.percentile(p);
+            let truth = crate::util::stats::percentile(&exact, p);
+            let rel = (approx - truth).abs() / truth;
+            assert!(rel < 0.05, "p{p}: approx {approx} vs exact {truth}");
+        }
+        // Memory is the fixed bucket array no matter the sample count.
+        assert_eq!(h.counts.len(), BUCKETS);
+    }
+
+    #[test]
+    fn histogram_merge_and_edges() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(10.0);
+        a.record(100.0);
+        b.record(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.mean_us() - 370.0).abs() < 1e-9);
+        assert!(a.fraction_le(5.0) == 0.0);
+        assert!(a.fraction_le(2000.0) == 1.0);
+        // Out-of-range samples clamp into edge buckets; sums stay exact.
+        let mut e = LatencyHistogram::new();
+        e.record(0.0);
+        e.record(1e12);
+        assert_eq!(e.count(), 2);
+        assert!((e.mean_us() - 5e11).abs() < 1.0);
+        assert!(e.percentile(0.0) <= e.percentile(100.0));
+    }
+
+    #[test]
+    fn empty_histogram_is_nan_like_stats() {
+        let h = LatencyHistogram::new();
+        assert!(h.mean_us().is_nan());
+        assert!(h.percentile(50.0).is_nan());
+        assert_eq!(h.fraction_le(10.0), 0.0);
     }
 }

@@ -8,4 +8,4 @@ pub mod metrics;
 pub use batcher::{
     run_batching, run_batching_sim, BatchPolicy, BatchingReport, Request,
 };
-pub use metrics::ServeMetrics;
+pub use metrics::{LatencyHistogram, ServeMetrics};

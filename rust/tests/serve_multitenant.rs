@@ -1,0 +1,287 @@
+//! Multi-tenant serving invariants — always-on (synthetic models +
+//! checked-in device profiles; no `make artifacts` gating):
+//!
+//! * conservation: every offered request is served exactly once or
+//!   accounted as shed; nothing is lost, nothing is double-served;
+//! * bounded queues: admission control sheds under overload instead of
+//!   queueing without limit;
+//! * priority: higher SLO classes on the same model never do worse than
+//!   lower ones under overload, and never starve;
+//! * the acceptance comparison: under overload the cross-model cluster
+//!   scheduler beats the static CPU/GPU split on aggregate attainment.
+
+use sparoa::api::SessionBuilder;
+use sparoa::bench_support::{device_profile, prop};
+use sparoa::graph::ModelGraph;
+use sparoa::serve::{
+    demo, merge_arrivals, run_cluster, ArrivalPattern, ClusterOptions,
+    ClusterPolicy, ModelRegistry, ShedPolicy, SloClass, Tenant,
+};
+
+fn registry_of(models: &[(&str, usize, f64, f64)]) -> ModelRegistry {
+    let dev = device_profile("agx_orin");
+    let mut reg = ModelRegistry::new();
+    for (name, blocks, scale, sparsity) in models {
+        let session = SessionBuilder::new()
+            .with_graph(ModelGraph::synthetic(
+                name, *blocks, *scale, *sparsity))
+            .with_device(dev.clone())
+            .policy("greedy")
+            .build()
+            .unwrap();
+        reg.register(session).unwrap();
+    }
+    reg
+}
+
+#[test]
+fn conservation_under_random_mixes() {
+    // Across random tenant mixes, rates, class caps and shed policies:
+    // offered == served + shed, and per-class/per-model accounting agree.
+    let reg = registry_of(&[
+        ("m_big", 6, 3.0, 0.2),
+        ("m_small", 4, 0.4, 0.7),
+    ]);
+    let sheds = [
+        ShedPolicy::RejectNew,
+        ShedPolicy::ShedOldest,
+        ShedPolicy::ShedLowestClass,
+    ];
+    prop::check(
+        "serve-conservation",
+        12,
+        1701,
+        |rng| {
+            let rate0 = rng.range(20.0, 800.0);
+            let rate1 = rng.range(20.0, 800.0);
+            let cap0 = 4 + rng.below(40);
+            let cap1 = 4 + rng.below(60);
+            let shed = sheds[rng.below(3)];
+            let policy = if rng.below(2) == 0 {
+                ClusterPolicy::SparsityAware
+            } else {
+                ClusterPolicy::StaticSplit
+            };
+            let seed = rng.next_u64() % 10_000;
+            (rate0, rate1, cap0, cap1, shed, policy, seed)
+        },
+        |&(rate0, rate1, cap0, cap1, shed, policy, seed)| {
+            let classes = vec![
+                SloClass::new("hi", 15_000.0, cap0, 4.0),
+                SloClass::new("lo", 80_000.0, cap1, 1.0),
+            ];
+            let tenants = vec![
+                Tenant {
+                    name: "a".into(),
+                    model: "m_big".into(),
+                    class: 0,
+                    pattern: ArrivalPattern::Poisson {
+                        rate_per_s: rate0,
+                        n: 120,
+                    },
+                },
+                Tenant {
+                    name: "b".into(),
+                    model: "m_small".into(),
+                    class: 1,
+                    pattern: ArrivalPattern::Mmpp {
+                        rate_lo_per_s: rate1 * 0.2,
+                        rate_hi_per_s: rate1 * 2.0,
+                        mean_dwell_s: 0.05,
+                        n: 120,
+                    },
+                },
+            ];
+            let arrivals = merge_arrivals(&tenants, seed);
+            let snap = run_cluster(&reg, &classes, &tenants, &arrivals,
+                &ClusterOptions { policy, shed })
+                .map_err(|e| e.to_string())?;
+            let offered = snap.total_offered();
+            if offered != arrivals.len() as u64 {
+                return Err(format!(
+                    "offered {offered} != arrivals {}", arrivals.len()));
+            }
+            if snap.total_served() + snap.total_shed() != offered {
+                return Err(format!(
+                    "lost requests: served {} + shed {} != offered \
+                     {offered}",
+                    snap.total_served(), snap.total_shed()));
+            }
+            for g in snap.per_class.iter().chain(&snap.per_model) {
+                if g.served + g.shed() != g.offered {
+                    return Err(format!(
+                        "group `{}` unbalanced: {} + {} != {}",
+                        g.label, g.served, g.shed(), g.offered));
+                }
+                if g.hist.count() != g.served {
+                    return Err(format!(
+                        "group `{}` served {} but recorded {} latencies",
+                        g.label, g.served, g.hist.count()));
+                }
+                if g.met > g.served {
+                    return Err(format!(
+                        "group `{}` met {} > served {}",
+                        g.label, g.met, g.served));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn overload_sheds_instead_of_queueing_unboundedly() {
+    let reg = registry_of(&[("m_only", 6, 4.0, 0.3)]);
+    // Tiny queue budgets + heavy overload: shedding must kick in, and
+    // served + shed still balances.
+    let classes = vec![
+        SloClass::new("hi", 10_000.0, 8, 4.0),
+        SloClass::new("lo", 50_000.0, 8, 1.0),
+    ];
+    let tenants = vec![
+        Tenant {
+            name: "hi".into(),
+            model: "m_only".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson { rate_per_s: 900.0, n: 600 },
+        },
+        Tenant {
+            name: "lo".into(),
+            model: "m_only".into(),
+            class: 1,
+            pattern: ArrivalPattern::Poisson { rate_per_s: 900.0, n: 600 },
+        },
+    ];
+    let arrivals = merge_arrivals(&tenants, 5);
+    for shed in [
+        ShedPolicy::RejectNew,
+        ShedPolicy::ShedOldest,
+        ShedPolicy::ShedLowestClass,
+    ] {
+        let snap = run_cluster(&reg, &classes, &tenants, &arrivals,
+            &ClusterOptions {
+                policy: ClusterPolicy::SparsityAware,
+                shed,
+            })
+            .unwrap();
+        assert!(snap.total_shed() > 0,
+                "{}: overload must shed", shed.name());
+        assert_eq!(snap.total_served() + snap.total_shed(),
+                   snap.total_offered());
+        // Dispatched batches never exceed the Alg. 2 caps.
+        let e = reg.get(0);
+        assert!(snap.mean_batch()
+                <= e.gpu_batch_cap.max(e.cpu_batch_cap) as f64 + 1e-9);
+    }
+}
+
+#[test]
+fn higher_class_never_does_worse_on_shared_model() {
+    // Two tenants, same model, same arrival process — only the SLO class
+    // differs.  Under overload the high-priority class must come out at
+    // least as well (attainment) and must actually be served.
+    let reg = registry_of(&[("m_shared", 6, 3.0, 0.3)]);
+    let classes = vec![
+        SloClass::new("hi", 25_000.0, 64, 4.0),
+        SloClass::new("lo", 25_000.0, 64, 1.0),
+    ];
+    let mk = |class: usize| Tenant {
+        name: format!("c{class}"),
+        model: "m_shared".into(),
+        class,
+        pattern: ArrivalPattern::Poisson { rate_per_s: 700.0, n: 500 },
+    };
+    let tenants = vec![mk(0), mk(1)];
+    let arrivals = merge_arrivals(&tenants, 17);
+    for shed in [ShedPolicy::RejectNew, ShedPolicy::ShedLowestClass] {
+        let snap = run_cluster(&reg, &classes, &tenants, &arrivals,
+            &ClusterOptions {
+                policy: ClusterPolicy::SparsityAware,
+                shed,
+            })
+            .unwrap();
+        let hi = &snap.per_class[0];
+        let lo = &snap.per_class[1];
+        assert!(hi.met > 0, "{}: high class starved", shed.name());
+        assert!(
+            hi.attainment() >= lo.attainment() - 1e-9,
+            "{}: high class attainment {:.3} < low {:.3}",
+            shed.name(), hi.attainment(), lo.attainment()
+        );
+    }
+}
+
+#[test]
+fn cluster_beats_static_split_under_overload() {
+    // The tentpole acceptance criterion: >= 3 models, >= 2 SLO classes,
+    // >= 3 arrival patterns; under overload the sparsity-aware
+    // cross-model scheduler achieves higher aggregate SLO attainment
+    // than per-model single-queue batching on a static CPU/GPU split.
+    let artifacts = sparoa::artifacts_dir();
+    let reg = demo::registry(&artifacts, "agx_orin").unwrap();
+    let classes = demo::classes();
+    let tenants = demo::tenants(&reg, 3.0, 300, 29, None).unwrap();
+    assert!(reg.len() >= 3);
+    assert!(classes.len() >= 2);
+    let kinds: std::collections::BTreeSet<&str> =
+        tenants.iter().map(|t| t.pattern.kind()).collect();
+    assert!(kinds.len() >= 3, "patterns {kinds:?}");
+    let arrivals = merge_arrivals(&tenants, 29);
+
+    let dynamic = run_cluster(&reg, &classes, &tenants, &arrivals,
+        &ClusterOptions {
+            policy: ClusterPolicy::SparsityAware,
+            ..Default::default()
+        })
+        .unwrap();
+    let static_split = run_cluster(&reg, &classes, &tenants, &arrivals,
+        &ClusterOptions {
+            policy: ClusterPolicy::StaticSplit,
+            ..Default::default()
+        })
+        .unwrap();
+    assert!(
+        dynamic.aggregate_attainment()
+            > static_split.aggregate_attainment(),
+        "cluster {:.3} vs static split {:.3}",
+        dynamic.aggregate_attainment(),
+        static_split.aggregate_attainment()
+    );
+    // Both processors are actually used by the dynamic tier.
+    assert!(dynamic.gpu_busy_us > 0.0);
+    assert!(dynamic.cpu_busy_us > 0.0);
+    // And the low-load sanity check: the cluster meets nearly all SLOs.
+    let calm_tenants = demo::tenants(&reg, 0.2, 150, 31, None).unwrap();
+    let calm_arrivals = merge_arrivals(&calm_tenants, 31);
+    let calm = run_cluster(&reg, &classes, &calm_tenants, &calm_arrivals,
+        &ClusterOptions::default())
+        .unwrap();
+    assert!(calm.aggregate_attainment() > 0.85,
+            "calm attainment {:.3}", calm.aggregate_attainment());
+}
+
+#[test]
+fn trace_replay_drives_the_cluster() {
+    // A JSON trace round-trips into a tenant and its requests are all
+    // accounted.
+    let reg = registry_of(&[
+        ("m_a", 4, 1.0, 0.4),
+        ("m_b", 4, 0.5, 0.6),
+        ("m_c", 5, 2.0, 0.2),
+    ]);
+    let src: Vec<f64> = (0..200).map(|i| i as f64 * 2_500.0).collect();
+    let text = sparoa::serve::trace_to_json(&src);
+    let pattern = sparoa::serve::trace_from_json(&text).unwrap();
+    let tenants =
+        demo::tenants(&reg, 1.0, 100, 3, Some(pattern)).unwrap();
+    let replay = tenants.iter().find(|t| t.name == "replay-trace").unwrap();
+    assert_eq!(replay.pattern.len(), 200);
+    let arrivals = merge_arrivals(&tenants, 3);
+    let classes = demo::classes();
+    let snap = run_cluster(&reg, &classes, &tenants, &arrivals,
+                           &ClusterOptions::default())
+        .unwrap();
+    assert_eq!(snap.total_offered() as usize, arrivals.len());
+    assert_eq!(snap.total_served() + snap.total_shed(),
+               snap.total_offered());
+}
