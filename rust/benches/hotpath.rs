@@ -1,60 +1,145 @@
 //! Hot-path micro-benchmarks (the §Perf harness): per-op scheduling +
-//! dispatch cost, simulator throughput, SAC step cost, batcher step,
-//! JSON parse, and real PJRT op execution.  The SPAROA_DISPATCH_US
-//! constant in the device simulator must stay honest against the
-//! `engine dispatch decision` line below.
+//! dispatch cost, simulator throughput (reference vs the engine::costs
+//! fast path), incremental flip evaluation, greedy schedule search, SAC
+//! step cost, batcher step, JSON parse, and real PJRT op execution.
+//!
+//! Always-on: falls back to a synthetic ~150-op conv stack when `make
+//! artifacts` hasn't run, so the perf trajectory is tracked in every
+//! checkout.  Each run writes machine-readable `BENCH_hotpath.json`
+//! (name -> ns/op, plus the `workload` it was measured on) at the repo
+//! root; `--ci` runs short iteration counts and exits non-zero when the
+//! fast-path simulate line regresses >2x against the committed
+//! baseline (same-workload, fastpath/reference-ratio comparison, so
+//! runner hardware cancels out).
+//!
+//! The SPAROA_DISPATCH_US constant in the device simulator must stay
+//! honest against the `env.step + sac.act` line below.
 
-use sparoa::bench_support::{bench, load_env};
+use sparoa::bench_support::{bench, load_env, BenchResult};
 use sparoa::device::Proc;
-use sparoa::engine::sim::{op_cost_us, simulate, SimOptions};
-use sparoa::graph::OpClass;
+use sparoa::engine::costs::{CostTable, SimScratch};
+use sparoa::engine::sim::{
+    op_cost_us, simulate, simulate_reference, SimOptions,
+};
+use sparoa::graph::{ModelGraph, OpClass};
 use sparoa::rl::env::SchedulingEnv;
 use sparoa::rl::replay::Transition;
 use sparoa::rl::sac::{Sac, SacConfig};
-use sparoa::runtime::{HostTensor, Runtime};
 use sparoa::scheduler::{greedy::GreedyScheduler, Schedule, ScheduleCtx,
                         Scheduler};
-use sparoa::util::rng::Rng;
+
+/// Regression budget for `--ci`: fail when the fast-path simulate line
+/// slows more than this factor relative to the committed baseline.  The
+/// comparison is on the *fastpath/reference ratio* (both measured in the
+/// same run), so a slower/noisier CI runner cancels out and only a real
+/// fast-path regression trips the gate.
+const CI_REGRESSION_FACTOR: f64 = 2.0;
+const CI_GATE_KEY: &str = "simulate_fastpath";
+const CI_REF_KEY: &str = "simulate_reference";
 
 fn main() {
-    let Some((zoo, reg)) = load_env() else { return };
-    let g = zoo.get("mobilenet_v3_small").unwrap();
-    let dev = reg.get("agx_orin").unwrap();
+    let ci = std::env::args().any(|a| a == "--ci");
+    // CI runs short: the gate tolerates 2x, so ~1/10 the samples is
+    // plenty of signal.
+    let it = |n: usize| if ci { (n / 10).max(5) } else { n };
+
+    let env_data = load_env();
+    let have_artifacts = env_data.is_some();
+    let (g, dev) = match &env_data {
+        Some((zoo, reg)) => (
+            zoo.get("mobilenet_v3_small").unwrap().clone(),
+            reg.get("agx_orin").unwrap().clone(),
+        ),
+        None => (
+            // ~153 ops: the same scale as mobilenet_v3_small's 156.
+            ModelGraph::synthetic("hotpath_syn", 50, 1.0, 0.4),
+            sparoa::bench_support::device_profile("agx_orin"),
+        ),
+    };
+    let n_ops = g.ops.len();
+    let mut results: Vec<(&'static str, BenchResult)> = Vec::new();
+
+    // 1. Pure per-op cost evaluation (the innermost roofline primitive).
     let opts = SimOptions::default();
-    let mut results = Vec::new();
+    results.push(("op_cost_us", bench(
+        "op_cost_us (single op)", 1000, it(200000), || {
+            std::hint::black_box(op_cost_us(
+                &dev, Proc::Gpu, OpClass::Conv, 1e7, 1e6, 0.4, &opts));
+        })));
 
-    // 1. Pure per-op cost evaluation (the innermost scheduling primitive).
-    results.push(bench("op_cost_us (single op)", 1000, 200000, || {
-        std::hint::black_box(op_cost_us(
-            dev, Proc::Gpu, OpClass::Conv, 1e7, 1e6, 0.4, &opts));
-    }));
+    // 2a. Whole-model simulation, reference path (per-call roofline
+    //     re-derivation + per-call allocation).
+    let sched = Schedule::uniform(&g, 1.0, "gpu");
+    results.push(("simulate_reference", bench(
+        &format!("simulate_reference ({n_ops} ops)"), 20, it(400), || {
+            std::hint::black_box(
+                simulate_reference(&g, &dev, &sched, &opts));
+        })));
 
-    // 2. Whole-model simulation (one inference on the virtual timeline).
-    let sched = Schedule::uniform(g, 1.0, "gpu");
-    results.push(bench("simulate() mobilenet_v3 (156 ops)", 20, 400, || {
-        std::hint::black_box(simulate(g, dev, &sched, &opts));
-    }));
+    // 2b. Fast path: prebuilt CostTable + reused scratch, no timing vec —
+    //     the configuration every search loop runs in.
+    let fast_opts = SimOptions { record_timings: false, ..opts.clone() };
+    let table = CostTable::build(&g, &dev, &fast_opts);
+    let mut scratch = SimScratch::new();
+    results.push(("simulate_fastpath", bench(
+        &format!("simulate() fast path ({n_ops} ops)"), 20, it(4000), || {
+            table.simulate_into(&sched, &mut scratch);
+            std::hint::black_box(scratch.report.makespan_us);
+        })));
 
-    // 3. Greedy full-model schedule.
-    let ctx = ScheduleCtx { graph: g, device: dev, thresholds: None,
+    // 2c. One-shot wrapper (table build + walk) — what `simulate()`
+    //     costs a caller that doesn't reuse anything.
+    results.push(("simulate_wrapper", bench(
+        &format!("simulate() one-shot wrapper ({n_ops} ops)"), 20, it(400),
+        || {
+            std::hint::black_box(simulate(&g, &dev, &sched, &fast_opts));
+        })));
+
+    // 3. Incremental single-flip evaluation (suffix re-timing only).
+    let mixed: Vec<f64> =
+        (0..n_ops).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+    let mixed = Schedule { xi: mixed, policy: "alt".into() };
+    let mut inc = table.incremental(&mixed.xi);
+    let flip_at = n_ops / 2;
+    let mut flip_to = 0.0;
+    results.push(("eval_flip", bench(
+        "eval_flip (mid-graph op)", 100, it(20000), || {
+            flip_to = 1.0 - flip_to;
+            std::hint::black_box(inc.eval_flip(flip_at, flip_to));
+        })));
+
+    // 4a. Greedy full-model schedule, end to end (builds its own table).
+    let ctx = ScheduleCtx { graph: &g, device: &dev, thresholds: None,
                             batch: 1 };
-    results.push(bench("greedy schedule (full model)", 10, 200, || {
-        std::hint::black_box(GreedyScheduler.schedule(&ctx));
-    }));
+    results.push(("greedy_schedule", bench(
+        "greedy schedule (full model)", 10, it(200), || {
+            std::hint::black_box(GreedyScheduler.schedule(&ctx));
+        })));
 
-    // 4. RL environment step + SAC action.
-    let mut env = SchedulingEnv::new(g, dev, 0.0, 1, 1);
+    // 4b. Greedy over a cached table — the search-loop configuration.
+    let greedy_table = CostTable::build(&g, &dev, &SimOptions {
+        batch: 1, record_timings: false, ..Default::default()
+    });
+    results.push(("greedy_fastpath", bench(
+        "greedy schedule (cached CostTable)", 10, it(4000), || {
+            std::hint::black_box(
+                GreedyScheduler::schedule_with_table(&greedy_table));
+        })));
+
+    // 5. RL environment step + SAC action.
+    let mut env = SchedulingEnv::new(&g, &dev, 0.0, 1, 1);
     let mut sac = Sac::new(SacConfig::default());
-    results.push(bench("env.step + sac.act (per op)", 200, 20000, || {
-        if env.done() {
-            env.reset(1);
-        }
-        let s = env.observe();
-        let a = sac.act(&s);
-        std::hint::black_box(env.step(a));
-    }));
+    results.push(("env_step_sac_act", bench(
+        "env.step + sac.act (per op)", 200, it(20000), || {
+            if env.done() {
+                env.reset(1);
+            }
+            let s = env.observe();
+            let a = sac.act(&s);
+            std::hint::black_box(env.step(a));
+        })));
 
-    // 5. SAC gradient update (batch 64).
+    // 6. SAC gradient update (batch 64).
     for i in 0..256 {
         sac.remember(Transition {
             state: vec![0.1; 7],
@@ -64,46 +149,156 @@ fn main() {
             done: false,
         });
     }
-    results.push(bench("sac.update (batch 64)", 5, 100, || {
-        std::hint::black_box(sac.update());
-    }));
+    results.push(("sac_update", bench(
+        "sac.update (batch 64)", 5, it(100), || {
+            std::hint::black_box(sac.update());
+        })));
 
-    // 6. JSON parse of a topology file.
-    let topo = std::fs::read_to_string(
-        sparoa::artifacts_dir()
-            .join("models/mobilenet_v3_small/topology.json"))
-        .unwrap();
-    results.push(bench("json parse topology (156 ops)", 5, 100, || {
-        std::hint::black_box(sparoa::util::json::parse(&topo).unwrap());
-    }));
-
-    // 7. Real PJRT op execution (first conv of mobilenet).
-    let rt = Runtime::new(&sparoa::artifacts_dir()).unwrap();
-    let ws = sparoa::runtime::WeightStore::load(&g.weights_path).unwrap();
-    let conv = g.ops.iter()
-        .find(|o| o.kind == sparoa::graph::OpKind::Conv2d).unwrap();
-    let mut rng = Rng::new(1);
-    let n: usize = conv.exec_in_shapes[0].iter().product();
-    let mut args = vec![HostTensor::new(
-        conv.exec_in_shapes[0].clone(),
-        (0..n).map(|_| rng.normal() as f32).collect())];
-    args.extend(ws.op_params(conv).unwrap());
-    let artifact = conv.artifact.clone().unwrap();
-    rt.execute(&artifact, &args).unwrap(); // compile outside the loop
-    results.push(bench("pjrt execute (stem conv)", 5, 200, || {
-        std::hint::black_box(rt.execute(&artifact, &args).unwrap());
-    }));
+    // 7. Artifacts-only lines: topology JSON parse + real PJRT execution.
+    if have_artifacts {
+        if let Ok(topo) = std::fs::read_to_string(
+            sparoa::artifacts_dir()
+                .join("models/mobilenet_v3_small/topology.json"))
+        {
+            results.push(("json_parse_topology", bench(
+                "json parse topology", 5, it(100), || {
+                    std::hint::black_box(
+                        sparoa::util::json::parse(&topo).unwrap());
+                })));
+        }
+        if let Some(r) = pjrt_line(&g, it(200)) {
+            results.push(("pjrt_execute", r));
+        }
+    }
 
     println!("\n=== hotpath micro-benchmarks ===");
-    for r in &results {
+    for (_, r) in &results {
         println!("{}", r.report());
     }
+
+    let ns = |key: &str| -> Option<f64> {
+        results
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, r)| r.mean_us * 1000.0)
+    };
+    if let (Some(rf), Some(fp)) =
+        (ns("simulate_reference"), ns("simulate_fastpath"))
+    {
+        println!("\nsimulate fast-path speedup: {:.1}x \
+                  (reference {:.0} ns -> fast {:.0} ns)",
+                 rf / fp, rf, fp);
+    }
+    if let (Some(gr), Some(gf)) =
+        (ns("greedy_schedule"), ns("greedy_fastpath"))
+    {
+        println!("greedy cached-table speedup: {:.1}x \
+                  (end-to-end {:.0} ns -> cached {:.0} ns)",
+                 gr / gf, gr, gf);
+    }
     // Honesty check for the simulator's dispatch constant.
-    let decision = &results[3];
-    println!(
-        "\nper-op decision+dispatch = {:.2}us (simulator assumes \
-         SPAROA_DISPATCH_US = {}us)",
-        decision.mean_us,
-        sparoa::engine::sim::SPAROA_DISPATCH_US
-    );
+    if let Some(d) = results.iter().find(|(k, _)| *k == "env_step_sac_act")
+    {
+        println!(
+            "per-op decision+dispatch = {:.2}us (simulator assumes \
+             SPAROA_DISPATCH_US = {}us)",
+            d.1.mean_us,
+            sparoa::engine::sim::SPAROA_DISPATCH_US
+        );
+    }
+
+    let baseline_path = sparoa::repo_root().join("BENCH_hotpath.json");
+    if ci {
+        // Gate against the committed baseline; a missing/empty baseline
+        // passes (bootstrap) and is reported, not silently skipped.
+        // Hardware-independent comparison: committed fast/ref ratio vs
+        // this run's fast/ref ratio (absolute ns would make the gate
+        // flaky whenever the committing machine and the CI runner
+        // differ, which is always).
+        // ... and only against the same workload: a baseline committed
+        // from an artifacts checkout benches mobilenet_v3_small while
+        // an artifact-less runner benches the synthetic fallback; their
+        // ratios are not comparable.
+        let committed = std::fs::read_to_string(&baseline_path)
+            .ok()
+            .and_then(|t| sparoa::util::json::parse(&t).ok())
+            .and_then(|v| {
+                if v.get("workload").as_str() != Some(g.model.as_str()) {
+                    return None;
+                }
+                match (v.get(CI_GATE_KEY).as_f64(),
+                       v.get(CI_REF_KEY).as_f64()) {
+                    (Some(f), Some(r)) if f > 0.0 && r > 0.0 => {
+                        Some(f / r)
+                    }
+                    _ => None,
+                }
+            });
+        let measured = match (ns(CI_GATE_KEY), ns(CI_REF_KEY)) {
+            (Some(f), Some(r)) if r > 0.0 => Some(f / r),
+            _ => None,
+        };
+        match (committed, measured) {
+            (Some(old), Some(new)) => {
+                println!("\nci gate: {CI_GATE_KEY}/{CI_REF_KEY} ratio \
+                          {new:.3} vs committed {old:.3}");
+                if new > CI_REGRESSION_FACTOR * old {
+                    eprintln!(
+                        "hotpath regression: {CI_GATE_KEY} slowed \
+                         {:.1}x relative to the reference walk \
+                         (> {CI_REGRESSION_FACTOR}x budget)",
+                        new / old
+                    );
+                    std::process::exit(1);
+                }
+            }
+            _ => println!(
+                "\nci gate: no committed {CI_GATE_KEY}/{CI_REF_KEY} \
+                 baseline for workload `{}` in BENCH_hotpath.json; run \
+                 `cargo bench --bench hotpath` locally and commit the \
+                 refreshed file",
+                g.model
+            ),
+        }
+    } else {
+        // Full local runs refresh the committed perf trajectory.
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"workload\": \"{}\",\n", g.model));
+        for (i, (k, r)) in results.iter().enumerate() {
+            let comma = if i + 1 < results.len() { "," } else { "" };
+            out.push_str(&format!("  \"{}\": {:.1}{}\n",
+                                  k, r.mean_us * 1000.0, comma));
+        }
+        out.push_str("}\n");
+        match std::fs::write(&baseline_path, out) {
+            Ok(()) => println!("\nwrote {}", baseline_path.display()),
+            Err(e) => eprintln!("\ncould not write {}: {e}",
+                                baseline_path.display()),
+        }
+    }
+}
+
+/// Real PJRT op execution (first conv of the model); None when the
+/// runtime is the no-pjrt stub or the model carries no artifacts.
+fn pjrt_line(g: &ModelGraph, iters: usize) -> Option<BenchResult> {
+    use sparoa::runtime::{HostTensor, Runtime, WeightStore};
+    use sparoa::util::rng::Rng;
+    let rt = Runtime::new(&sparoa::artifacts_dir()).ok()?;
+    let ws = WeightStore::load(&g.weights_path).ok()?;
+    let conv = g
+        .ops
+        .iter()
+        .find(|o| o.kind == sparoa::graph::OpKind::Conv2d)?;
+    let artifact = conv.artifact.clone()?;
+    let mut rng = Rng::new(1);
+    let n: usize = conv.exec_in_shapes.first()?.iter().product();
+    let mut args = vec![HostTensor::new(
+        conv.exec_in_shapes[0].clone(),
+        (0..n).map(|_| rng.normal() as f32).collect(),
+    )];
+    args.extend(ws.op_params(conv).ok()?);
+    rt.execute(&artifact, &args).ok()?; // compile outside the loop
+    Some(bench("pjrt execute (stem conv)", 5, iters, || {
+        std::hint::black_box(rt.execute(&artifact, &args).unwrap());
+    }))
 }

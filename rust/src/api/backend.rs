@@ -4,6 +4,12 @@
 //! Two first-class implementations ship with the crate:
 //! * [`SimBackend`] — the virtual-time simulator over the calibrated
 //!   device models (`engine::sim`); every figure/baseline runs here.
+//!   Each `execute` is one `simulate` call — a thin wrapper over the
+//!   `engine::costs` table walk; search loops that re-simulate one
+//!   (graph, device, options) many times should hold a
+//!   `engine::costs::CostTable` directly instead of going through a
+//!   backend (the serve tier additionally memoizes probe results per
+//!   (model, placement, batch) in its registry).
 //! * [`PjrtBackend`] — real numerics through the PJRT runtime
 //!   (`engine::exec`), owned and `Send`, with per-model executable and
 //!   weight-parameter caches so the request hot path neither compiles nor

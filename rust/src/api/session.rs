@@ -411,7 +411,10 @@ impl Session {
     /// through this session's backend, without mutating the session.
     /// The multi-tenant cluster scheduler uses this as its latency
     /// oracle (e.g. "what would this model's batch cost on the CPU
-    /// fallback plan?").
+    /// fallback plan?") — cached per (placement, batch) in
+    /// `serve::registry::ModelEntry::latency_us`.  Probes skip per-op
+    /// timing recording: callers consume the aggregates only, and the
+    /// serve tier issues thousands of probes per run.
     pub fn probe(
         &self,
         schedule: &Schedule,
@@ -425,6 +428,7 @@ impl Session {
         );
         let mut opts = self.options.clone();
         opts.batch = batch.max(1);
+        opts.record_timings = false;
         self.backend.execute(&ExecuteRequest {
             graph: &self.graph,
             device: &self.device,

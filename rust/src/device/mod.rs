@@ -244,9 +244,15 @@ pub struct HardwareState {
 
 impl HardwareState {
     pub fn new(dev: &DeviceModel, seed: u64, noise: f64) -> Self {
+        Self::with_capacity(dev.gpu_mem_capacity_mb, seed, noise)
+    }
+
+    /// Construct from a bare GPU capacity — what cost tables cache so a
+    /// timeline walk needs no `DeviceModel` borrow (engine::costs).
+    pub fn with_capacity(gpu_cap_mb: f64, seed: u64, noise: f64) -> Self {
         HardwareState {
-            gpu_mem_mb: 0.15 * dev.gpu_mem_capacity_mb, // framework baseline
-            gpu_cap_mb: dev.gpu_mem_capacity_mb,
+            gpu_mem_mb: 0.15 * gpu_cap_mb, // framework baseline
+            gpu_cap_mb,
             cpu_load: 0.1,
             switches: 0,
             last_proc: None,

@@ -4,12 +4,16 @@
 //! constraint rules: halve on memory overflow + real-time violation,
 //! double (capped) for highly sparse inputs, halve for high-intensity
 //! inputs.  The latency/memory oracle is the device simulator, so the
-//! optimizer is hardware-aware by construction.
+//! optimizer is hardware-aware by construction.  Candidate batch sizes
+//! are memoized across iterations (the search revisits the same sizes
+//! constantly) and the independent gradient-neighbor probes run in
+//! parallel ([`crate::util::par::par_map`]).
 
 use crate::device::DeviceModel;
 use crate::engine::sim::{simulate, SimOptions, SimReport};
 use crate::graph::ModelGraph;
 use crate::scheduler::Schedule;
+use std::collections::HashMap;
 
 #[derive(Debug, Clone)]
 pub struct BatchConstraints {
@@ -68,9 +72,26 @@ fn eval(graph: &ModelGraph, dev: &DeviceModel, sched: &Schedule,
         opts: &SimOptions, b: usize) -> (SimReport, f64) {
     let mut o = opts.clone();
     o.batch = b;
+    // The optimizer only reads aggregates; skip the per-op timing vec.
+    o.record_timings = false;
     let r = simulate(graph, dev, sched, &o);
     let per_item = r.makespan_us / b as f64;
     (r, per_item)
+}
+
+/// Memoized probe: (per-item latency us, total memory MB) for one batch
+/// size, computed at most once per `optimize_batch` call.
+fn cached<F: Fn(usize) -> (f64, f64)>(
+    cache: &mut HashMap<usize, (f64, f64)>,
+    probe: &F,
+    b: usize,
+) -> (f64, f64) {
+    if let Some(&v) = cache.get(&b) {
+        return v;
+    }
+    let v = probe(b);
+    cache.insert(b, v);
+    v
 }
 
 /// Mean input sparsity / normalized intensity of the model's schedulable
@@ -108,22 +129,40 @@ pub fn optimize_batch(
     };
     let mut b = clamp(b0 as f64);
     let mut trace = Vec::new();
-    let (mut rep, mut per_item) = eval(graph, dev, sched, opts, b);
+    // Probe oracle (one full simulation per *distinct* batch size) and
+    // its memo: the descent revisits the same sizes on most iterations.
+    let mut cache: HashMap<usize, (f64, f64)> = HashMap::new();
+    let probe = |bb: usize| -> (f64, f64) {
+        let (r, l) = eval(graph, dev, sched, opts, bb);
+        (l, r.total_mem_mb())
+    };
+    let (mut per_item, mut mem_mb) = cached(&mut cache, &probe, b);
     let mut prev = f64::INFINITY;
 
     for _ in 0..24 {
-        trace.push(BatchStep { batch: b, per_item_us: per_item,
-                               mem_mb: rep.total_mem_mb() });
+        trace.push(BatchStep { batch: b, per_item_us: per_item, mem_mb });
         if prev.is_finite() && (per_item - prev).abs() <= eps * prev {
             break;
         }
         prev = per_item;
 
-        // line 5-6: numeric gradient on log-batch, step downhill.
+        // line 5-6: numeric gradient on log-batch, step downhill.  The
+        // two neighbor probes are independent simulations — evaluate the
+        // uncached ones in parallel.
         let b_hi = clamp(b as f64 * 2.0);
         let b_lo = clamp(b as f64 / 2.0);
-        let (_, l_hi) = eval(graph, dev, sched, opts, b_hi);
-        let (_, l_lo) = eval(graph, dev, sched, opts, b_lo);
+        let mut misses: Vec<usize> = Vec::new();
+        for cand in [b_hi, b_lo] {
+            if !cache.contains_key(&cand) && !misses.contains(&cand) {
+                misses.push(cand);
+            }
+        }
+        let fresh = crate::util::par::par_map(&misses, |&x| probe(x));
+        for (&x, v) in misses.iter().zip(fresh) {
+            cache.insert(x, v);
+        }
+        let l_hi = cache[&b_hi].0;
+        let l_lo = cache[&b_lo].0;
         let grad = (l_hi - l_lo)
             / ((b_hi as f64).log2() - (b_lo as f64).log2()).max(1e-9);
         let mut nb = (b as f64).log2() - eta * grad.signum()
@@ -132,11 +171,14 @@ pub fn optimize_batch(
         let mut next = clamp(nb.exp2());
 
         // lines 7-9: memory guard (halve while over budget), with the
-        // real-time bound as a secondary shrink trigger.
-        let (mut r_next, l_next) = eval(graph, dev, sched, opts, next);
-        while r_next.total_mem_mb() > c.mem_limit_mb && next > c.min_batch {
+        // real-time bound as a secondary shrink trigger.  The real-time
+        // check deliberately tests the *pre-halving* candidate's
+        // latency, matching the original formulation (the memoization
+        // refactor must not shift Alg. 2's trajectory).
+        let (l_next, mut m_next) = cached(&mut cache, &probe, next);
+        while m_next > c.mem_limit_mb && next > c.min_batch {
             next = clamp(next as f64 / 2.0);
-            r_next = eval(graph, dev, sched, opts, next).0;
+            m_next = cached(&mut cache, &probe, next).1;
         }
         if l_next > c.realtime_us && next > c.min_batch {
             next = clamp(next as f64 / 2.0);
@@ -151,9 +193,9 @@ pub fn optimize_batch(
             break;
         }
         b = next;
-        let e = eval(graph, dev, sched, opts, b);
-        rep = e.0;
-        per_item = e.1;
+        let v = cached(&mut cache, &probe, b);
+        per_item = v.0;
+        mem_mb = v.1;
     }
     // Keep the best *memory-feasible* point seen, not just the last.
     let feasible: Vec<&BatchStep> = trace
@@ -169,8 +211,7 @@ pub fn optimize_batch(
         .iter()
         .min_by(|a, x| a.per_item_us.partial_cmp(&x.per_item_us).unwrap())
         .map(|s| (*s).clone())
-        .unwrap_or(BatchStep { batch: b, per_item_us: per_item,
-                               mem_mb: rep.total_mem_mb() });
+        .unwrap_or(BatchStep { batch: b, per_item_us: per_item, mem_mb });
     BatchPlan { batch: best.batch, per_item_us: best.per_item_us, trace }
 }
 

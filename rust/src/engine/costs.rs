@@ -1,0 +1,771 @@
+//! Precomputed cost tables + allocation-free / incremental simulation —
+//! the fast inner loop behind every schedule search.
+//!
+//! [`crate::engine::sim::simulate_reference`] is the readable spec
+//! timeline: it re-derives every per-op roofline cost on every call and
+//! allocates fresh buffers per inference.  Schedule search (threshold
+//! calibration, Alg. 2 batch right-sizing, DP/greedy/SAC, the serve
+//! tier's latency oracle) invokes the simulator O(candidates x ops) per
+//! decision, so this module hoists everything that is invariant across
+//! candidates:
+//!
+//! * [`CostTable`] — built once per (graph, device, options, batch):
+//!   each op's (latency, launch) on CPU and GPU plus its cross-device
+//!   transfer cost, so [`CostTable::simulate_into`] is a pure timeline
+//!   walk over table lookups.
+//! * [`SimScratch`] — reusable finish/placed/timing buffers; repeated
+//!   simulations allocate nothing after the first call.  With
+//!   `SimOptions::record_timings = false` the per-op [`OpTiming`] vec is
+//!   skipped entirely (search loops never read it).
+//! * [`IncrementalSim`] — per-op timeline checkpoints so a single-op
+//!   placement flip re-times only the affected suffix
+//!   ([`IncrementalSim::eval_flip`]); [`refine_flips`] builds a
+//!   hill-climbing local search on top.
+//!
+//! Which entry point to use when: search loops build one `CostTable` and
+//! call `simulate_into` (scratch reuse) or `IncrementalSim` (flip
+//! neighborhoods); report/figure paths keep calling
+//! [`crate::engine::sim::simulate`], a thin wrapper over the same walk.
+//! `rust/tests/sim_fastpath.rs` pins every fast entry point to
+//! bit-identical aggregates against the reference simulator.
+
+use crate::device::{DeviceModel, HardwareState, Proc};
+use crate::engine::sim::{
+    op_cost_us, OpTiming, SimOptions, SimReport, AGGREGATION_US,
+    MEM_FLOOR_MB,
+};
+use crate::graph::ModelGraph;
+use crate::scheduler::{mode_of, Mode, Schedule};
+
+/// Per-op costs precomputed under one engine configuration.  All values
+/// mirror exactly what the reference simulator would derive inline.
+#[derive(Debug, Clone, Copy)]
+struct OpCostEntry {
+    schedulable: bool,
+    cpu_lat: f64,
+    cpu_launch: f64,
+    gpu_lat: f64,
+    gpu_launch: f64,
+    /// Cross-device transfer cost of this op's output (always computed:
+    /// the DMA latency floor applies even to empty payloads, which is
+    /// what the co-run aggregation path pays).
+    xfer_out: f64,
+    /// Whether the ready-time path charges a transfer at all (the
+    /// reference simulator skips zero-byte producer edges).
+    has_out_bytes: bool,
+    out_bytes_batch: f64,
+    params_bytes: f64,
+    out_mb: f64,
+    params_mb: f64,
+}
+
+/// Precomputed per-op cost table for one (graph, device, options, batch).
+///
+/// Self-contained (owns copies of the op dependency lists and the device
+/// bits the timeline needs), so it can be cached and shared without
+/// holding graph/device borrows.
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    batch: usize,
+    seed: u64,
+    noise: f64,
+    gpu_cap_mb: f64,
+    replicate_weights: bool,
+    record_timings: bool,
+    entries: Vec<OpCostEntry>,
+    inputs: Vec<Vec<usize>>,
+}
+
+impl CostTable {
+    /// Precompute every op's placement costs under `opts`.  Costs the
+    /// equivalent of two roofline evaluations per op — one reference
+    /// simulation — after which every walk is pure lookups.
+    pub fn build(
+        graph: &ModelGraph,
+        dev: &DeviceModel,
+        opts: &SimOptions,
+    ) -> CostTable {
+        let batch = opts.batch.max(1) as f64;
+        let n = graph.ops.len();
+        let mut entries = Vec::with_capacity(n);
+        let mut inputs = Vec::with_capacity(n);
+        for op in &graph.ops {
+            let flops = op.flops_paper * batch;
+            let bytes = op.bytes_moved_paper() * batch;
+            let (cpu_lat, cpu_launch) = op_cost_us(
+                dev, Proc::Cpu, op.class, flops, bytes, op.sparsity_in,
+                opts);
+            let (gpu_lat, gpu_launch) = op_cost_us(
+                dev, Proc::Gpu, op.class, flops, bytes, op.sparsity_in,
+                opts);
+            let out_bytes_batch = op.bytes_out_paper * batch;
+            entries.push(OpCostEntry {
+                schedulable: op.class.schedulable(),
+                cpu_lat,
+                cpu_launch,
+                gpu_lat,
+                gpu_launch,
+                xfer_out: dev.transfer_us(
+                    out_bytes_batch,
+                    opts.pinned_memory,
+                    opts.async_streams,
+                ),
+                has_out_bytes: op.bytes_out_paper > 0.0,
+                out_bytes_batch,
+                params_bytes: op.params_bytes_paper,
+                out_mb: out_bytes_batch / 1e6,
+                params_mb: op.params_bytes_paper / 1e6,
+            });
+            inputs.push(op.inputs.clone());
+        }
+        CostTable {
+            batch: opts.batch.max(1),
+            seed: opts.seed,
+            noise: opts.noise,
+            gpu_cap_mb: dev.gpu_mem_capacity_mb,
+            replicate_weights: opts.replicate_weights,
+            record_timings: opts.record_timings,
+            entries,
+            inputs,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Batch size the table was built for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn schedulable(&self, id: usize) -> bool {
+        self.entries[id].schedulable
+    }
+
+    /// Dependency list of op `id` (copy of the graph's).
+    pub fn inputs(&self, id: usize) -> &[usize] {
+        &self.inputs[id]
+    }
+
+    /// Contention-free latency of op `id` on `proc` (compute + residual
+    /// launch), exactly [`op_cost_us`]'s first component.
+    pub fn lat(&self, id: usize, proc: Proc) -> f64 {
+        match proc {
+            Proc::Cpu => self.entries[id].cpu_lat,
+            Proc::Gpu => self.entries[id].gpu_lat,
+        }
+    }
+
+    /// Residual launch component of op `id` on `proc`.
+    pub fn launch(&self, id: usize, proc: Proc) -> f64 {
+        match proc {
+            Proc::Cpu => self.entries[id].cpu_launch,
+            Proc::Gpu => self.entries[id].gpu_launch,
+        }
+    }
+
+    /// Cross-device transfer cost of op `id`'s output.
+    pub fn xfer_out(&self, id: usize) -> f64 {
+        self.entries[id].xfer_out
+    }
+
+    /// Whether op `id` emits bytes that a cross-device consumer must pay
+    /// a transfer for.
+    pub fn has_out_bytes(&self, id: usize) -> bool {
+        self.entries[id].has_out_bytes
+    }
+
+    /// Batched output bytes of op `id` (hardware-state working set).
+    pub fn out_bytes_batch(&self, id: usize) -> f64 {
+        self.entries[id].out_bytes_batch
+    }
+
+    /// Parameter bytes of op `id`.
+    pub fn params_bytes(&self, id: usize) -> f64 {
+        self.entries[id].params_bytes
+    }
+
+    /// Simulate one inference under `schedule` into reusable buffers.
+    /// Identical timeline to the reference simulator — same hardware
+    /// state, same RNG draw order, same accounting — minus all per-call
+    /// allocation and roofline recomputation.  The result lands in
+    /// `scratch.report`.
+    pub fn simulate_into(
+        &self,
+        schedule: &Schedule,
+        scratch: &mut SimScratch,
+    ) {
+        let n = self.entries.len();
+        debug_assert_eq!(schedule.xi.len(), n);
+        scratch.reset(n);
+        let SimScratch { finish, placed, report } = scratch;
+        let mut hw = HardwareState::with_capacity(
+            self.gpu_cap_mb, self.seed, self.noise);
+        let mut cpu_free = 0.0f64;
+        let mut gpu_free = 0.0f64;
+        let mut gpu_weights_mb = 0.0;
+        let mut cpu_weights_mb = 0.0;
+        let mut gpu_act_mb: f64 = 0.0;
+        let mut staging_mb = 0.0;
+        let mut peak_gpu: f64 = 0.0;
+
+        for id in 0..n {
+            let e = self.entries[id];
+            let ins = &self.inputs[id];
+            let mode = if !e.schedulable {
+                let p = ins.first().map(|&i| placed[i]).unwrap_or(Proc::Cpu);
+                Mode::Single(p)
+            } else {
+                mode_of(schedule.xi[id])
+            };
+            match mode {
+                Mode::Single(proc) => {
+                    let (base, launch) = match proc {
+                        Proc::Cpu => (e.cpu_lat, e.cpu_launch),
+                        Proc::Gpu => (e.gpu_lat, e.gpu_launch),
+                    };
+                    let lat = base * hw.contention_factor(proc);
+                    let mut r: f64 = 0.0;
+                    for &i in ins {
+                        let mut t = finish[i];
+                        if placed[i] != proc && self.entries[i].has_out_bytes
+                        {
+                            let x = self.entries[i].xfer_out;
+                            report.transfer_us += x;
+                            t += x;
+                        }
+                        r = r.max(t);
+                    }
+                    let free = match proc {
+                        Proc::Cpu => cpu_free,
+                        Proc::Gpu => gpu_free,
+                    };
+                    let start = r.max(free);
+                    let end = start + lat;
+                    match proc {
+                        Proc::Cpu => {
+                            cpu_free = end;
+                            report.cpu_busy_us += lat;
+                        }
+                        Proc::Gpu => {
+                            gpu_free = end;
+                            report.gpu_busy_us += lat;
+                        }
+                    }
+                    report.launch_us += launch;
+                    finish[id] = end;
+                    placed[id] = proc;
+                    hw.dispatch(proc, e.out_bytes_batch, e.params_bytes);
+                    if proc == Proc::Gpu {
+                        gpu_weights_mb += e.params_mb;
+                        gpu_act_mb = (gpu_act_mb * 0.92) + e.out_mb;
+                        if self.replicate_weights {
+                            cpu_weights_mb += e.params_mb;
+                        }
+                    } else {
+                        cpu_weights_mb += e.params_mb;
+                        if self.replicate_weights {
+                            gpu_weights_mb += e.params_mb;
+                        }
+                    }
+                    for &i in ins {
+                        if placed[i] != proc {
+                            staging_mb += 2.0 * self.entries[i].out_mb;
+                        }
+                    }
+                    if self.record_timings {
+                        report.timings.push(OpTiming {
+                            op: id,
+                            proc,
+                            start_us: start,
+                            finish_us: end,
+                            compute_us: lat,
+                            transfer_us: 0.0,
+                        });
+                    }
+                }
+                Mode::CoRun(_w) => {
+                    let lat_c = e.cpu_lat * hw.contention_factor(Proc::Cpu);
+                    let lat_g = e.gpu_lat * hw.contention_factor(Proc::Gpu);
+                    let mut rc: f64 = 0.0;
+                    for &i in ins {
+                        let mut t = finish[i];
+                        if placed[i] != Proc::Cpu
+                            && self.entries[i].has_out_bytes
+                        {
+                            let x = self.entries[i].xfer_out;
+                            report.transfer_us += x;
+                            t += x;
+                        }
+                        rc = rc.max(t);
+                    }
+                    let mut rg: f64 = 0.0;
+                    for &i in ins {
+                        let mut t = finish[i];
+                        if placed[i] != Proc::Gpu
+                            && self.entries[i].has_out_bytes
+                        {
+                            let x = self.entries[i].xfer_out;
+                            report.transfer_us += x;
+                            t += x;
+                        }
+                        rg = rg.max(t);
+                    }
+                    let sc = rc.max(cpu_free);
+                    let sg = rg.max(gpu_free);
+                    let ec = sc + lat_c;
+                    let eg = sg + lat_g;
+                    cpu_free = ec;
+                    gpu_free = eg;
+                    report.cpu_busy_us += lat_c;
+                    report.gpu_busy_us += lat_g;
+                    report.launch_us += e.cpu_launch + e.gpu_launch;
+                    let xcpu = e.xfer_out;
+                    report.transfer_us += xcpu;
+                    report.aggregation_us += AGGREGATION_US;
+                    let end = ec.max(eg) + xcpu + AGGREGATION_US;
+                    finish[id] = end;
+                    placed[id] = Proc::Gpu;
+                    hw.dispatch(Proc::Gpu, e.out_bytes_batch, e.params_bytes);
+                    gpu_weights_mb += e.params_mb;
+                    cpu_weights_mb += e.params_mb; // replicated
+                    gpu_act_mb = (gpu_act_mb * 0.92) + e.out_mb;
+                    if self.record_timings {
+                        report.timings.push(OpTiming {
+                            op: id,
+                            proc: Proc::Gpu,
+                            start_us: sc.min(sg),
+                            finish_us: end,
+                            compute_us: lat_c.max(lat_g),
+                            transfer_us: xcpu,
+                        });
+                    }
+                }
+            }
+            peak_gpu = peak_gpu.max(gpu_weights_mb + gpu_act_mb + staging_mb);
+        }
+
+        report.switches = hw.switches;
+        let last_finish = finish.iter().cloned().fold(0.0, f64::max);
+        report.makespan_us = cpu_free.max(gpu_free).max(last_finish);
+        report.peak_gpu_mem_mb = peak_gpu + MEM_FLOOR_MB;
+        report.cpu_mem_mb = cpu_weights_mb;
+    }
+
+    /// Start an incremental evaluator from schedule `xi` (full replay
+    /// once, then [`IncrementalSim::eval_flip`] is O(suffix)).
+    pub fn incremental(&self, xi: &[f64]) -> IncrementalSim<'_> {
+        assert_eq!(
+            xi.len(),
+            self.entries.len(),
+            "schedule has {} entries for a {}-op table",
+            xi.len(),
+            self.entries.len()
+        );
+        let n = self.entries.len();
+        let mut inc = IncrementalSim {
+            table: self,
+            xi: xi.to_vec(),
+            ckpt: Vec::with_capacity(n),
+            finish: vec![0.0; n],
+            placed: vec![Proc::Cpu; n],
+            makespan: 0.0,
+            tmp_finish: vec![0.0; n],
+            tmp_placed: vec![Proc::Cpu; n],
+        };
+        inc.replay_commit(0);
+        inc
+    }
+}
+
+/// Reusable simulation buffers: feed to [`CostTable::simulate_into`]
+/// repeatedly; nothing is allocated after the first call (timings keep
+/// their capacity across runs and stay empty when the table was built
+/// with `record_timings: false`).
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    finish: Vec<f64>,
+    placed: Vec<Proc>,
+    /// Result of the most recent `simulate_into` call.
+    pub report: SimReport,
+}
+
+impl SimScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, n: usize) {
+        self.finish.clear();
+        self.finish.resize(n, 0.0);
+        self.placed.clear();
+        self.placed.resize(n, Proc::Cpu);
+        let mut timings = std::mem::take(&mut self.report.timings);
+        timings.clear();
+        self.report = SimReport { timings, ..SimReport::default() };
+    }
+
+    /// Move the last report out (the one-shot `simulate` wrapper path).
+    pub fn take_report(&mut self) -> SimReport {
+        std::mem::take(&mut self.report)
+    }
+}
+
+/// Timeline state immediately before an op executes.
+#[derive(Debug, Clone)]
+struct Checkpoint {
+    cpu_free: f64,
+    gpu_free: f64,
+    hw: HardwareState,
+}
+
+/// Incremental delta-evaluator over one [`CostTable`]: holds the
+/// committed schedule's per-op timeline checkpoints so a single-op
+/// placement flip replays only ops `k..n` instead of the whole model.
+/// Makespans are exactly those of the reference simulator (same state
+/// evolution, same RNG order), so a local search driven by `eval_flip`
+/// optimizes the true objective, not an approximation.
+pub struct IncrementalSim<'a> {
+    table: &'a CostTable,
+    xi: Vec<f64>,
+    /// ckpt[i] = state just before op i ran under the committed xi.
+    ckpt: Vec<Checkpoint>,
+    finish: Vec<f64>,
+    placed: Vec<Proc>,
+    makespan: f64,
+    tmp_finish: Vec<f64>,
+    tmp_placed: Vec<Proc>,
+}
+
+impl IncrementalSim<'_> {
+    /// Advance one op on a timeline state.  Mirrors the `simulate_into`
+    /// walk (same f64 operation order, same RNG draws) minus the report
+    /// accounting that makespan evaluation never reads.
+    fn step_op(
+        table: &CostTable,
+        xi: f64,
+        id: usize,
+        finish: &mut [f64],
+        placed: &mut [Proc],
+        cpu_free: &mut f64,
+        gpu_free: &mut f64,
+        hw: &mut HardwareState,
+    ) {
+        let e = table.entries[id];
+        let ins = &table.inputs[id];
+        let mode = if !e.schedulable {
+            let p = ins.first().map(|&i| placed[i]).unwrap_or(Proc::Cpu);
+            Mode::Single(p)
+        } else {
+            mode_of(xi)
+        };
+        match mode {
+            Mode::Single(proc) => {
+                let base = match proc {
+                    Proc::Cpu => e.cpu_lat,
+                    Proc::Gpu => e.gpu_lat,
+                };
+                let lat = base * hw.contention_factor(proc);
+                let mut r: f64 = 0.0;
+                for &i in ins {
+                    let mut t = finish[i];
+                    if placed[i] != proc && table.entries[i].has_out_bytes {
+                        t += table.entries[i].xfer_out;
+                    }
+                    r = r.max(t);
+                }
+                let free = match proc {
+                    Proc::Cpu => *cpu_free,
+                    Proc::Gpu => *gpu_free,
+                };
+                let start = r.max(free);
+                let end = start + lat;
+                match proc {
+                    Proc::Cpu => *cpu_free = end,
+                    Proc::Gpu => *gpu_free = end,
+                }
+                finish[id] = end;
+                placed[id] = proc;
+                hw.dispatch(proc, e.out_bytes_batch, e.params_bytes);
+            }
+            Mode::CoRun(_w) => {
+                let lat_c = e.cpu_lat * hw.contention_factor(Proc::Cpu);
+                let lat_g = e.gpu_lat * hw.contention_factor(Proc::Gpu);
+                let mut rc: f64 = 0.0;
+                for &i in ins {
+                    let mut t = finish[i];
+                    if placed[i] != Proc::Cpu
+                        && table.entries[i].has_out_bytes
+                    {
+                        t += table.entries[i].xfer_out;
+                    }
+                    rc = rc.max(t);
+                }
+                let mut rg: f64 = 0.0;
+                for &i in ins {
+                    let mut t = finish[i];
+                    if placed[i] != Proc::Gpu
+                        && table.entries[i].has_out_bytes
+                    {
+                        t += table.entries[i].xfer_out;
+                    }
+                    rg = rg.max(t);
+                }
+                let sc = rc.max(*cpu_free);
+                let sg = rg.max(*gpu_free);
+                let ec = sc + lat_c;
+                let eg = sg + lat_g;
+                *cpu_free = ec;
+                *gpu_free = eg;
+                finish[id] = ec.max(eg) + e.xfer_out + AGGREGATION_US;
+                placed[id] = Proc::Gpu;
+                hw.dispatch(Proc::Gpu, e.out_bytes_batch, e.params_bytes);
+            }
+        }
+    }
+
+    /// Replay ops `k..n` into the committed state, refreshing
+    /// checkpoints; updates and returns the makespan.
+    fn replay_commit(&mut self, k: usize) -> f64 {
+        let n = self.table.entries.len();
+        let (mut cpu_free, mut gpu_free, mut hw) = if k == 0 {
+            (
+                0.0,
+                0.0,
+                HardwareState::with_capacity(
+                    self.table.gpu_cap_mb,
+                    self.table.seed,
+                    self.table.noise,
+                ),
+            )
+        } else {
+            let c = self.ckpt[k].clone();
+            (c.cpu_free, c.gpu_free, c.hw)
+        };
+        self.ckpt.truncate(k);
+        for id in k..n {
+            self.ckpt.push(Checkpoint {
+                cpu_free,
+                gpu_free,
+                hw: hw.clone(),
+            });
+            Self::step_op(
+                self.table,
+                self.xi[id],
+                id,
+                &mut self.finish,
+                &mut self.placed,
+                &mut cpu_free,
+                &mut gpu_free,
+                &mut hw,
+            );
+        }
+        let last = self.finish.iter().cloned().fold(0.0, f64::max);
+        self.makespan = cpu_free.max(gpu_free).max(last);
+        self.makespan
+    }
+
+    /// Makespan if op `op` were flipped to `new_xi`, leaving the
+    /// committed schedule untouched.  Replays only ops `op..n`
+    /// (allocation-free: scratch buffers are reused).
+    pub fn eval_flip(&mut self, op: usize, new_xi: f64) -> f64 {
+        let n = self.table.entries.len();
+        assert!(op < n, "op {op} out of range for {n}-op table");
+        let (mut cpu_free, mut gpu_free, mut hw) = {
+            let c = &self.ckpt[op];
+            (c.cpu_free, c.gpu_free, c.hw.clone())
+        };
+        self.tmp_finish.copy_from_slice(&self.finish);
+        self.tmp_placed.copy_from_slice(&self.placed);
+        for id in op..n {
+            let xi = if id == op { new_xi } else { self.xi[id] };
+            Self::step_op(
+                self.table,
+                xi,
+                id,
+                &mut self.tmp_finish,
+                &mut self.tmp_placed,
+                &mut cpu_free,
+                &mut gpu_free,
+                &mut hw,
+            );
+        }
+        let last = self.tmp_finish.iter().cloned().fold(0.0, f64::max);
+        cpu_free.max(gpu_free).max(last)
+    }
+
+    /// Commit a flip: re-times the suffix, refreshes checkpoints and
+    /// returns the new makespan (exactly what `eval_flip` predicted).
+    pub fn apply_flip(&mut self, op: usize, new_xi: f64) -> f64 {
+        assert!(
+            op < self.table.entries.len(),
+            "op {op} out of range for {}-op table",
+            self.table.entries.len()
+        );
+        self.xi[op] = new_xi;
+        self.replay_commit(op)
+    }
+
+    /// Makespan of the committed schedule, us.
+    pub fn makespan_us(&self) -> f64 {
+        self.makespan
+    }
+
+    /// The committed schedule.
+    pub fn xi(&self) -> &[f64] {
+        &self.xi
+    }
+
+    /// Consume the evaluator, keeping the committed schedule.
+    pub fn into_xi(self) -> Vec<f64> {
+        self.xi
+    }
+}
+
+/// Hill-climb over single-op placement flips with the incremental
+/// evaluator: each schedulable op's primary device is tentatively
+/// flipped and the flip is kept when the exact simulated makespan
+/// improves.  Updates `schedule.xi` in place and returns the refined
+/// makespan.  Cost: O(passes x n x suffix) table lookups — hundreds of
+/// times cheaper than the same search over full re-simulations.
+pub fn refine_flips(
+    table: &CostTable,
+    schedule: &mut Schedule,
+    max_passes: usize,
+) -> f64 {
+    let mut inc = table.incremental(&schedule.xi);
+    let mut best = inc.makespan_us();
+    for _ in 0..max_passes {
+        let mut improved = false;
+        for id in 0..table.len() {
+            if !table.schedulable(id) {
+                continue;
+            }
+            let cur = inc.xi()[id];
+            let flipped = if cur >= 0.5 { 0.0 } else { 1.0 };
+            let m = inc.eval_flip(id, flipped);
+            if m < best * (1.0 - 1e-12) {
+                best = inc.apply_flip(id, flipped);
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    schedule.xi = inc.into_xi();
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::sim::simulate_reference;
+
+    fn fixture() -> (ModelGraph, DeviceModel, SimOptions) {
+        let g = ModelGraph::synthetic("costs_fixture", 5, 1.5, 0.5);
+        let dev = crate::bench_support::device_profile("agx_orin");
+        let opts = SimOptions { batch: 2, ..Default::default() };
+        (g, dev, opts)
+    }
+
+    fn mixed_schedule(n: usize) -> Schedule {
+        let xi = (0..n)
+            .map(|i| match i % 4 {
+                0 => 0.0,
+                1 => 1.0,
+                2 => 0.5, // co-run band
+                _ => 0.8,
+            })
+            .collect();
+        Schedule { xi, policy: "mixed".into() }
+    }
+
+    #[test]
+    fn table_walk_matches_reference_bitwise() {
+        let (g, dev, opts) = fixture();
+        let sched = mixed_schedule(g.ops.len());
+        let r = simulate_reference(&g, &dev, &sched, &opts);
+        let table = CostTable::build(&g, &dev, &opts);
+        let mut scratch = SimScratch::new();
+        // Twice: scratch reuse must not leak state between runs.
+        for _ in 0..2 {
+            table.simulate_into(&sched, &mut scratch);
+            let f = &scratch.report;
+            assert_eq!(f.makespan_us, r.makespan_us);
+            assert_eq!(f.cpu_busy_us, r.cpu_busy_us);
+            assert_eq!(f.gpu_busy_us, r.gpu_busy_us);
+            assert_eq!(f.transfer_us, r.transfer_us);
+            assert_eq!(f.launch_us, r.launch_us);
+            assert_eq!(f.aggregation_us, r.aggregation_us);
+            assert_eq!(f.switches, r.switches);
+            assert_eq!(f.peak_gpu_mem_mb, r.peak_gpu_mem_mb);
+            assert_eq!(f.cpu_mem_mb, r.cpu_mem_mb);
+            assert_eq!(f.timings.len(), r.timings.len());
+        }
+    }
+
+    #[test]
+    fn record_timings_off_skips_vec_but_keeps_aggregates() {
+        let (g, dev, opts) = fixture();
+        let sched = mixed_schedule(g.ops.len());
+        let r = simulate_reference(&g, &dev, &sched, &opts);
+        let fast_opts = SimOptions { record_timings: false, ..opts };
+        let table = CostTable::build(&g, &dev, &fast_opts);
+        let mut scratch = SimScratch::new();
+        table.simulate_into(&sched, &mut scratch);
+        assert!(scratch.report.timings.is_empty());
+        assert_eq!(scratch.report.makespan_us, r.makespan_us);
+        assert_eq!(scratch.report.transfer_us, r.transfer_us);
+    }
+
+    #[test]
+    fn eval_flip_is_tentative_and_apply_matches_reference() {
+        let (g, dev, opts) = fixture();
+        let sched = mixed_schedule(g.ops.len());
+        let table = CostTable::build(&g, &dev, &opts);
+        let mut inc = table.incremental(&sched.xi);
+        let base = inc.makespan_us();
+        assert_eq!(
+            base,
+            simulate_reference(&g, &dev, &sched, &opts).makespan_us
+        );
+        // Tentative evaluation leaves the committed state untouched.
+        let mid = g.ops.len() / 2;
+        let probed = inc.eval_flip(mid, 1.0 - sched.xi[mid].round());
+        assert_eq!(inc.makespan_us(), base);
+        assert_eq!(probed, inc.eval_flip(mid, 1.0 - sched.xi[mid].round()));
+        // Committing reproduces exactly the tentative value and the
+        // reference simulation of the flipped schedule.
+        let committed = inc.apply_flip(mid, 1.0 - sched.xi[mid].round());
+        assert_eq!(probed, committed);
+        let mut xi = sched.xi.clone();
+        xi[mid] = 1.0 - sched.xi[mid].round();
+        let flipped = Schedule { xi, policy: "flipped".into() };
+        assert_eq!(
+            committed,
+            simulate_reference(&g, &dev, &flipped, &opts).makespan_us
+        );
+    }
+
+    #[test]
+    fn refine_never_worsens_the_plan() {
+        let (g, dev, opts) = fixture();
+        let table = CostTable::build(&g, &dev, &opts);
+        // Deliberately bad plan: everything on the CPU.
+        let mut plan = Schedule::uniform(&g, 0.0, "cpu-pin");
+        let before =
+            simulate_reference(&g, &dev, &plan, &opts).makespan_us;
+        let after = refine_flips(&table, &mut plan, 3);
+        assert!(after <= before);
+        assert_eq!(
+            after,
+            simulate_reference(&g, &dev, &plan, &opts).makespan_us
+        );
+    }
+}

@@ -3,9 +3,13 @@
 //! calibrated device timeline.
 //!
 //! * `sim` — the virtual-time simulator (every figure runs through it).
+//! * `costs` — the fast inner loop: precomputed per-op [`CostTable`]s,
+//!   the allocation-free `simulate_into` walk, and the incremental
+//!   `eval_flip` suffix re-timer that schedule search runs on.
 //! * `exec` — real execution of the exec-scale artifacts (native handling
 //!   of data-movement ops, weighted-average aggregation of co-run ops).
-//! * `batching` — the gradient-based dynamic batching of Alg. 2.
+//! * `batching` — the gradient-based dynamic batching of Alg. 2, with
+//!   memoized + parallel candidate evaluation.
 //!
 //! These are implementation details of the public [`crate::api`] layer:
 //! `api::SimBackend` wraps `sim::simulate` and `api::PjrtBackend` wraps
@@ -13,8 +17,10 @@
 //! rather than calling either path directly.
 
 pub mod batching;
+pub mod costs;
 pub mod exec;
 pub mod sim;
 
+pub use costs::{refine_flips, CostTable, IncrementalSim, SimScratch};
 pub use exec::{execute_graph, HybridEngine, OpParams};
-pub use sim::{simulate, SimOptions, SimReport};
+pub use sim::{simulate, simulate_reference, SimOptions, SimReport};

@@ -47,6 +47,10 @@ pub struct SimOptions {
     /// dual-layout weight replication (CoDL keeps CPU+GPU copies of every
     /// operator's weights for its hybrid-type-friendly data sharing).
     pub replicate_weights: bool,
+    /// record the per-op [`OpTiming`] vec in the report.  On by default
+    /// (figure/report paths read it); search loops that only consume the
+    /// aggregates turn it off so the fast path allocates nothing.
+    pub record_timings: bool,
     /// batch size.
     pub batch: usize,
     /// rng seed for the hardware-dynamics jitter.
@@ -69,6 +73,7 @@ impl Default for SimOptions {
             dispatch_overhead_us: SPAROA_DISPATCH_US,
             cpu_kernel_quality: 1.0,
             replicate_weights: false,
+            record_timings: true,
             noise: 0.0,
             batch: 1,
             seed: 1,
@@ -156,10 +161,43 @@ impl SimReport {
 }
 
 /// Fixed cost of the weighted-average aggregation step (Eq. 14), us.
-const AGGREGATION_US: f64 = 4.0;
+pub const AGGREGATION_US: f64 = 4.0;
+
+/// Framework/runtime baseline of the reported GPU footprint, MB (the
+/// contention model's allocator baseline in `HardwareState` is *not*
+/// part of the model's reported footprint).
+pub(crate) const MEM_FLOOR_MB: f64 = 280.0;
 
 /// Simulate one inference under `schedule`.
+///
+/// Thin wrapper over the fast path (`engine::costs`): builds a
+/// [`crate::engine::costs::CostTable`] and walks it through a fresh
+/// [`crate::engine::costs::SimScratch`].  One-shot report/figure callers
+/// should use this; search loops evaluating many candidates on one
+/// (graph, device, options, batch) should build the `CostTable` once and
+/// call `simulate_into` (scratch reuse, `record_timings: false`) or
+/// `IncrementalSim::eval_flip` (single-op flips) directly — that is
+/// where the ~10x win over per-call table builds lives.
 pub fn simulate(
+    graph: &ModelGraph,
+    dev: &DeviceModel,
+    schedule: &Schedule,
+    opts: &SimOptions,
+) -> SimReport {
+    let table = crate::engine::costs::CostTable::build(graph, dev, opts);
+    let mut scratch = crate::engine::costs::SimScratch::new();
+    table.simulate_into(schedule, &mut scratch);
+    scratch.take_report()
+}
+
+/// Reference implementation of the simulated timeline: re-derives every
+/// per-op roofline cost inline and allocates per call.  This is the
+/// readable spec the fast path is pinned against (see
+/// `rust/tests/sim_fastpath.rs`, which asserts bit-identical aggregates);
+/// production code should call [`simulate`] or the `engine::costs` entry
+/// points instead.  Always records per-op timings regardless of
+/// `SimOptions::record_timings`.
+pub fn simulate_reference(
     graph: &ModelGraph,
     dev: &DeviceModel,
     schedule: &Schedule,
@@ -176,10 +214,6 @@ pub fn simulate(
     let mut cpu_free = 0.0f64;
     let mut gpu_free = 0.0f64;
     // Weights resident per device (Fig. 12 sharded-storage accounting).
-    // `mem_floor` is the framework/runtime baseline; the contention model's
-    // allocator baseline (HardwareState) is *not* part of the model's
-    // reported footprint.
-    let mem_floor_mb = 280.0;
     let mut gpu_weights_mb = 0.0;
     let mut cpu_weights_mb = 0.0;
     let mut gpu_act_mb: f64 = 0.0;
@@ -275,8 +309,8 @@ pub fn simulate(
                 // pinned staging for cross-device input edges (two copies)
                 for &i in &op.inputs {
                     if placed[i] != proc {
-                        staging_mb +=
-                            2.0 * graph.ops[i].bytes_out_paper * batch / 1e6;
+                        staging_mb += 2.0
+                            * (graph.ops[i].bytes_out_paper * batch / 1e6);
                     }
                 }
                 report.timings.push(OpTiming {
@@ -338,7 +372,7 @@ pub fn simulate(
     // timelines, so the makespan is the max over all completion events.
     let last_finish = finish.iter().cloned().fold(0.0, f64::max);
     report.makespan_us = cpu_free.max(gpu_free).max(last_finish);
-    report.peak_gpu_mem_mb = peak_gpu + mem_floor_mb;
+    report.peak_gpu_mem_mb = peak_gpu + MEM_FLOOR_MB;
     report.cpu_mem_mb = cpu_weights_mb;
     report
 }

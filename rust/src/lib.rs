@@ -17,7 +17,18 @@
 //!                      `PjrtBackend`, and the unified `InferenceReport`.
 //!     * `engine`     — execution internals behind the backends: the
 //!                      virtual-time simulator, the real PJRT graph
-//!                      walker, and Alg. 2 dynamic batching.
+//!                      walker, Alg. 2 dynamic batching, and the
+//!                      `engine::costs` fast path (precomputed
+//!                      `CostTable`, allocation-free `simulate_into`,
+//!                      incremental `eval_flip`).  Which entry point
+//!                      when: search loops evaluating many candidates
+//!                      on one (graph, device, options) build a
+//!                      `CostTable` once and use the scratch /
+//!                      incremental walkers with
+//!                      `SimOptions::record_timings = false`; one-shot
+//!                      report/figure paths call `engine::sim::simulate`
+//!                      (a thin wrapper over the same walk, per-op
+//!                      timings on).
 //!     * `scheduler`  — placement policies (threshold, greedy, DP, SAC)
 //!                      over the shared `Schedule` representation.
 //!     * `predictor`  — the Transformer-LSTM threshold predictor client.

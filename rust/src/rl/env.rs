@@ -9,9 +9,15 @@
 //! integration test asserts the totals agree), including the stochastic
 //! hardware dynamics (contention jitter, memory pressure) that make the
 //! learned policy beat static DP plans.
+//!
+//! The per-step costs come from a [`CostTable`] precomputed at
+//! construction (the SAC reward loop steps this environment millions of
+//! times per training run; re-deriving roofline costs per step was the
+//! single hottest path in policy search).
 
 use crate::device::{DeviceModel, HardwareState, Proc};
-use crate::engine::sim::{op_cost_us, SimOptions};
+use crate::engine::costs::CostTable;
+use crate::engine::sim::{SimOptions, AGGREGATION_US};
 use crate::graph::ModelGraph;
 use crate::scheduler::{mode_of, Mode};
 
@@ -46,6 +52,11 @@ pub struct SchedulingEnv<'a> {
     pub opts: SimOptions,
     pub noise: f64,
     pub batch: usize,
+    /// Precomputed per-op placement costs.  The table depends only on
+    /// (graph, device, opts, batch), not on the episode seed; `reset`
+    /// rebuilds it so callers that mutate the pub `opts`/`batch` fields
+    /// between episodes keep getting live costs.
+    costs: CostTable,
     // timeline state
     cursor: usize,
     cpu_free: f64,
@@ -67,13 +78,16 @@ impl<'a> SchedulingEnv<'a> {
         seed: u64,
     ) -> Self {
         let n = graph.ops.len();
+        let opts = SimOptions { noise, batch, seed, ..Default::default() };
+        let costs = CostTable::build(graph, device, &opts);
         let mut env = SchedulingEnv {
             graph,
             device,
             weights: RewardWeights::default(),
-            opts: SimOptions { noise, batch, seed, ..Default::default() },
+            opts,
             noise,
             batch,
+            costs,
             cursor: 0,
             cpu_free: 0.0,
             gpu_free: 0.0,
@@ -97,6 +111,12 @@ impl<'a> SchedulingEnv<'a> {
         self.seed = seed;
         self.hw = HardwareState::new(self.device, seed, self.noise);
         self.xi = vec![0.0; n];
+        // Honor post-construction mutation of the pub opts/batch knobs:
+        // one table build per episode is amortized over the episode's
+        // per-op steps (which are now pure lookups).
+        let mut o = self.opts.clone();
+        o.batch = self.batch;
+        self.costs = CostTable::build(self.graph, self.device, &o);
         self.skip_unschedulable();
     }
 
@@ -173,28 +193,18 @@ impl<'a> SchedulingEnv<'a> {
         let xi = xi.clamp(0.0, 1.0);
         self.xi[op_id] = xi;
         let op = &self.graph.ops[op_id];
-        let batch = self.batch.max(1) as f64;
-        let flops = op.flops_paper * batch;
-        let bytes = op.bytes_moved_paper() * batch;
 
         let switches_before = self.hw.switches;
         match mode_of(xi) {
             Mode::Single(proc) => {
-                let (base, _) = op_cost_us(
-                    self.device, proc, op.class, flops, bytes,
-                    op.sparsity_in, &self.opts);
-                let lat = base * self.hw.contention_factor(proc);
+                let lat = self.costs.lat(op_id, proc)
+                    * self.hw.contention_factor(proc);
                 let mut ready: f64 = 0.0;
                 for &i in &op.inputs {
                     let mut t = self.finish[i];
-                    if self.placed[i] != proc
-                        && self.graph.ops[i].bytes_out_paper > 0.0
+                    if self.placed[i] != proc && self.costs.has_out_bytes(i)
                     {
-                        t += self.device.transfer_us(
-                            self.graph.ops[i].bytes_out_paper * batch,
-                            true,
-                            true,
-                        );
+                        t += self.costs.xfer_out(i);
                     }
                     ready = ready.max(t);
                 }
@@ -209,24 +219,19 @@ impl<'a> SchedulingEnv<'a> {
                 }
                 self.finish[op_id] = end;
                 self.placed[op_id] = proc;
-                self.hw.dispatch(proc, op.bytes_out_paper * batch,
-                                 op.params_bytes_paper);
+                self.hw.dispatch(proc, self.costs.out_bytes_batch(op_id),
+                                 self.costs.params_bytes(op_id));
             }
             Mode::CoRun(_) => {
-                let lat_c = op_cost_us(self.device, Proc::Cpu, op.class,
-                                       flops, bytes, op.sparsity_in,
-                                       &self.opts).0
+                let lat_c = self.costs.lat(op_id, Proc::Cpu)
                     * self.hw.contention_factor(Proc::Cpu);
-                let lat_g = op_cost_us(self.device, Proc::Gpu, op.class,
-                                       flops, bytes, op.sparsity_in,
-                                       &self.opts).0
+                let lat_g = self.costs.lat(op_id, Proc::Gpu)
                     * self.hw.contention_factor(Proc::Gpu);
                 let mut rc: f64 = 0.0;
                 let mut rg: f64 = 0.0;
                 for &i in &op.inputs {
                     let t = self.finish[i];
-                    let x = self.device.transfer_us(
-                        self.graph.ops[i].bytes_out_paper * batch, true, true);
+                    let x = self.costs.xfer_out(i);
                     rc = rc.max(if self.placed[i] != Proc::Cpu { t + x } else { t });
                     rg = rg.max(if self.placed[i] != Proc::Gpu { t + x } else { t });
                 }
@@ -234,12 +239,12 @@ impl<'a> SchedulingEnv<'a> {
                 let eg = rg.max(self.gpu_free) + lat_g;
                 self.cpu_free = ec;
                 self.gpu_free = eg;
-                let xfer = self.device.transfer_us(
-                    op.bytes_out_paper * batch, true, true);
-                self.finish[op_id] = ec.max(eg) + xfer + 4.0;
+                let xfer = self.costs.xfer_out(op_id);
+                self.finish[op_id] = ec.max(eg) + xfer + AGGREGATION_US;
                 self.placed[op_id] = Proc::Gpu;
-                self.hw.dispatch(Proc::Gpu, op.bytes_out_paper * batch,
-                                 op.params_bytes_paper);
+                self.hw.dispatch(Proc::Gpu,
+                                 self.costs.out_bytes_batch(op_id),
+                                 self.costs.params_bytes(op_id));
             }
         }
         let switched = (self.hw.switches - switches_before) as f64;

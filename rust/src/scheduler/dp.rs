@@ -7,8 +7,19 @@
 //! and cannot react to memory pressure or contention, so SAC beats it at
 //! runtime even though DP searches exhaustively (and takes far longer on
 //! big graphs; we reproduce the cost by sweeping a latency-noise ensemble).
+//!
+//! Implementation: one [`CostTable`] is built per `schedule()` call and
+//! shared by every ensemble member (the DP recurrences are pure table
+//! lookups), each candidate plan is scored through the allocation-free
+//! `simulate_into` scratch path, and the winner is polished by a
+//! single-op flip local search over the incremental evaluator
+//! ([`crate::engine::costs::refine_flips`]) — the chain-DP ignores
+//! queueing/contention, so cheap exact-makespan flips reliably shave the
+//! residual.
 
 use crate::device::Proc;
+use crate::engine::costs::{refine_flips, CostTable, SimScratch};
+use crate::engine::sim::SimOptions;
 use crate::scheduler::{Schedule, ScheduleCtx, Scheduler};
 
 pub struct DpScheduler {
@@ -30,27 +41,39 @@ impl Scheduler for DpScheduler {
     }
 
     fn schedule(&mut self, ctx: &ScheduleCtx) -> Schedule {
+        let opts = SimOptions {
+            batch: ctx.batch,
+            record_timings: false,
+            ..Default::default()
+        };
+        let table = CostTable::build(ctx.graph, ctx.device, &opts);
+        let mut scratch = SimScratch::new();
         let mut best: Option<(f64, Schedule)> = None;
         for e in 0..self.ensemble.max(1) {
-            let plan = self.plan_once(ctx, e as u64);
-            let opts = crate::engine::sim::SimOptions::default();
-            let r = crate::engine::sim::simulate(ctx.graph, ctx.device,
-                                                 &plan, &opts);
-            if best.as_ref().map(|(m, _)| r.makespan_us < *m).unwrap_or(true)
-            {
-                best = Some((r.makespan_us, plan));
+            let plan = self.plan_once(ctx, &table, e as u64);
+            table.simulate_into(&plan, &mut scratch);
+            let m = scratch.report.makespan_us;
+            if best.as_ref().map(|(b, _)| m < *b).unwrap_or(true) {
+                best = Some((m, plan));
             }
         }
-        best.unwrap().1
+        let (m, mut plan) = best.unwrap();
+        let refined = refine_flips(&table, &mut plan, 2);
+        debug_assert!(refined <= m + 1e-9,
+                      "refinement worsened dp: {refined} vs {m}");
+        plan
     }
 }
 
 impl DpScheduler {
-    fn plan_once(&self, ctx: &ScheduleCtx, seed: u64) -> Schedule {
+    fn plan_once(
+        &self,
+        ctx: &ScheduleCtx,
+        table: &CostTable,
+        seed: u64,
+    ) -> Schedule {
         use crate::util::rng::Rng;
         let g = ctx.graph;
-        let dev = ctx.device;
-        let batch = ctx.batch.max(1) as f64;
         let mut rng = Rng::new(seed * 7919 + 13);
         // Jitter factor per (op, proc): models the nominal-vs-actual gap
         // the static plan cannot see (zero jitter for ensemble member 0).
@@ -62,28 +85,19 @@ impl DpScheduler {
         if n == 0 {
             return Schedule::uniform(g, 1.0, "dp");
         }
-        let opts = crate::engine::sim::SimOptions {
-            batch: ctx.batch, ..Default::default()
-        };
-        let lat = |op: &crate::graph::Op, p: Proc, rng: &mut Rng| -> f64 {
-            let (l, _) = crate::engine::sim::op_cost_us(
-                dev, p, op.class, op.flops_paper * batch,
-                op.bytes_moved_paper() * batch, op.sparsity_in, &opts);
-            l * (1.0 + amp * rng.normal())
-        };
-        let xfer = |op: &crate::graph::Op| -> f64 {
-            dev.transfer_us(op.bytes_out_paper * batch, true, true)
+        let lat = |op_id: usize, p: Proc, rng: &mut Rng| -> f64 {
+            table.lat(op_id, p) * (1.0 + amp * rng.normal())
         };
 
         // DP tables.
         let mut cost = vec![[0.0f64; 2]; n];
         let mut back = vec![[0usize; 2]; n];
-        cost[0] = [lat(chain[0], Proc::Cpu, &mut rng),
-                   lat(chain[0], Proc::Gpu, &mut rng)];
+        cost[0] = [lat(chain[0].id, Proc::Cpu, &mut rng),
+                   lat(chain[0].id, Proc::Gpu, &mut rng)];
         for i in 1..n {
-            let lc = lat(chain[i], Proc::Cpu, &mut rng);
-            let lg = lat(chain[i], Proc::Gpu, &mut rng);
-            let x = xfer(chain[i - 1]);
+            let lc = lat(chain[i].id, Proc::Cpu, &mut rng);
+            let lg = lat(chain[i].id, Proc::Gpu, &mut rng);
+            let x = table.xfer_out(chain[i - 1].id);
             for (d, l) in [(0usize, lc), (1usize, lg)] {
                 let stay = cost[i - 1][d] + l;
                 let switch = cost[i - 1][1 - d] + x + l;
@@ -142,11 +156,30 @@ mod tests {
             });
             let opts = SimOptions::default();
             let r = simulate(g, dev, &plan, &opts);
-            let cpu = simulate(g, dev, &Schedule::uniform(g, 0.0, "c"), &opts);
-            let gpu = simulate(g, dev, &Schedule::uniform(g, 1.0, "g"), &opts);
-            assert!(r.makespan_us <= cpu.makespan_us.min(gpu.makespan_us)
-                * 1.05, "{model}: dp {} cpu {} gpu {}",
-                r.makespan_us, cpu.makespan_us, gpu.makespan_us);
+            let (cpu, gpu) = crate::bench_support::uniform_baselines(g, dev);
+            assert!(r.makespan_us <= cpu.min(gpu) * 1.05,
+                "{model}: dp {} cpu {cpu} gpu {gpu}", r.makespan_us);
         }
+    }
+
+    #[test]
+    fn dp_runs_and_refines_on_synthetic_graphs() {
+        let g = crate::graph::ModelGraph::synthetic("dp_syn", 6, 2.0, 0.4);
+        let dev = crate::bench_support::device_profile("orin_nano");
+        let mut dp = DpScheduler { ensemble: 3 };
+        let plan = dp.schedule(&ScheduleCtx {
+            graph: &g, device: &dev, thresholds: None, batch: 2,
+        });
+        assert_eq!(plan.xi.len(), g.ops.len());
+        let opts = SimOptions { batch: 2, ..Default::default() };
+        let r = simulate(&g, &dev, &plan, &opts);
+        let cpu = simulate(&g, &dev, &Schedule::uniform(&g, 0.0, "c"),
+                           &opts);
+        let gpu = simulate(&g, &dev, &Schedule::uniform(&g, 1.0, "g"),
+                           &opts);
+        assert!(r.makespan_us
+                <= cpu.makespan_us.min(gpu.makespan_us) * 1.05,
+                "dp {} cpu {} gpu {}", r.makespan_us, cpu.makespan_us,
+                gpu.makespan_us);
     }
 }

@@ -208,7 +208,6 @@ mod tests {
     use crate::device::DeviceRegistry;
     use crate::engine::sim::{simulate, SimOptions};
     use crate::graph::ModelZoo;
-    use crate::scheduler::Schedule as Sched;
 
     #[test]
     fn sac_beats_single_device_plans() {
@@ -232,10 +231,9 @@ mod tests {
         assert!(!s.trace.is_empty());
         let opts = SimOptions::default();
         let sac = simulate(g, dev, &plan, &opts);
-        let cpu = simulate(g, dev, &Sched::uniform(g, 0.0, "c"), &opts);
-        let gpu = simulate(g, dev, &Sched::uniform(g, 1.0, "g"), &opts);
-        assert!(sac.makespan_us < cpu.makespan_us);
-        assert!(sac.makespan_us <= gpu.makespan_us * 1.02,
-                "sac {} vs gpu {}", sac.makespan_us, gpu.makespan_us);
+        let (cpu, gpu) = crate::bench_support::uniform_baselines(g, dev);
+        assert!(sac.makespan_us < cpu);
+        assert!(sac.makespan_us <= gpu * 1.02,
+                "sac {} vs gpu {gpu}", sac.makespan_us);
     }
 }

@@ -32,7 +32,6 @@ use crate::serve::report::PerfSnapshot;
 use crate::serve::slo::{AdmissionQueues, ShedPolicy, SloClass};
 use crate::serve::workload::{Arrival, Tenant};
 use anyhow::Result;
-use std::collections::HashMap;
 
 /// Cross-model scheduling discipline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -120,17 +119,12 @@ pub fn run_cluster(
         &model_labels,
     );
 
-    // Latency oracle, cached per (model, placement, batch).
-    let mut lat_cache: HashMap<(usize, usize, usize), f64> = HashMap::new();
-    let mut lat_of = |m: usize, p: Proc, b: usize| -> Result<f64> {
-        let key = (m, lane(p), b);
-        if let Some(&l) = lat_cache.get(&key) {
-            return Ok(l);
-        }
-        let e = registry.get(m);
-        let rep = e.session.probe(e.schedule_for(p), b)?;
-        lat_cache.insert(key, rep.makespan_us);
-        Ok(rep.makespan_us)
+    // Latency oracle: memoized per (model, placement, batch) *inside the
+    // registry entries* ([`crate::serve::registry::ModelEntry::latency_us`]),
+    // so identical configurations are simulated once per registry
+    // lifetime — not once per `run_cluster` call.
+    let lat_of = |m: usize, p: Proc, b: usize| -> Result<f64> {
+        registry.get(m).latency_us(p, b)
     };
 
     // Static split: pin every model to the GPU except the one that runs

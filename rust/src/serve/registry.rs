@@ -19,6 +19,8 @@ use crate::engine::batching::{
 };
 use crate::scheduler::Schedule;
 use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Mutex;
 
 /// One registered model and its precomputed serving plans.
 pub struct ModelEntry {
@@ -35,6 +37,12 @@ pub struct ModelEntry {
     pub sparsity: f64,
     /// Mean normalized compute intensity of schedulable ops, [0, 1].
     pub intensity: f64,
+    /// Memoized [`Session::probe`] makespans keyed by (placement,
+    /// batch).  The cluster scheduler's event loop scores the same
+    /// configurations at every dispatch decision; each one is simulated
+    /// exactly once per registry lifetime (so the cache also spans
+    /// repeated `run_cluster` calls over the same registry).
+    probe_cache: Mutex<HashMap<(Proc, usize), f64>>,
 }
 
 impl ModelEntry {
@@ -52,6 +60,22 @@ impl ModelEntry {
             Proc::Cpu => &self.cpu_schedule,
             Proc::Gpu => self.session.schedule(),
         }
+    }
+
+    /// Memoized latency oracle: makespan (us) of one `batch`-sized
+    /// inference on `proc`'s plan, probing the session's backend on the
+    /// first query only.
+    pub fn latency_us(&self, proc: Proc, batch: usize) -> Result<f64> {
+        let key = (proc, batch);
+        if let Some(&v) = self.probe_cache.lock().unwrap().get(&key) {
+            return Ok(v);
+        }
+        let rep = self.session.probe(self.schedule_for(proc), batch)?;
+        self.probe_cache
+            .lock()
+            .unwrap()
+            .insert(key, rep.makespan_us);
+        Ok(rep.makespan_us)
     }
 }
 
@@ -111,6 +135,7 @@ impl ModelRegistry {
             cpu_batch_cap: cpu_plan.batch.max(1),
             sparsity,
             intensity,
+            probe_cache: Mutex::new(HashMap::new()),
         });
         Ok(self.entries.len() - 1)
     }
@@ -183,5 +208,23 @@ mod tests {
         assert!(on_gpu.makespan_us < on_cpu.makespan_us);
         // Duplicate names are rejected.
         assert!(reg.register(session("heavy", 1.0, 0.1)).is_err());
+    }
+
+    #[test]
+    fn latency_oracle_memoizes_probes() {
+        let mut reg = ModelRegistry::new();
+        reg.register(session("memo", 2.0, 0.3)).unwrap();
+        let e = reg.get(0);
+        let p = crate::device::Proc::Gpu;
+        let direct = e.session.probe(e.schedule_for(p), 4).unwrap();
+        let l1 = e.latency_us(p, 4).unwrap();
+        let l2 = e.latency_us(p, 4).unwrap();
+        assert_eq!(l1, direct.makespan_us);
+        assert_eq!(l1, l2);
+        assert_eq!(e.probe_cache.lock().unwrap().len(), 1);
+        // Distinct (placement, batch) keys populate separately.
+        let _ = e.latency_us(crate::device::Proc::Cpu, 4).unwrap();
+        let _ = e.latency_us(p, 8).unwrap();
+        assert_eq!(e.probe_cache.lock().unwrap().len(), 3);
     }
 }

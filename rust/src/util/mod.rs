@@ -1,5 +1,7 @@
-//! Dependency-free substrates: JSON, RNG, timing/stats helpers.
+//! Dependency-free substrates: JSON, RNG, scoped-thread parallelism,
+//! timing/stats helpers.
 
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod stats;

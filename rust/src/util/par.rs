@@ -1,0 +1,58 @@
+//! Minimal scoped-thread parallelism (the vendored crate set has no
+//! rayon): a `par_iter().map().collect()` stand-in for coarse-grained
+//! candidate evaluation.
+
+/// Apply `f` to every item on its own scoped thread and collect the
+/// results in input order.  Each item pays one thread spawn, so this is
+/// for coarse work — e.g. one whole-model simulation per item in the
+/// Alg. 2 batch-size search — not per-op math.  Slices of length 0/1
+/// run inline.
+///
+/// Panics propagate: a panicking worker poisons the whole map, exactly
+/// like `rayon::par_iter` would.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    std::thread::scope(|scope| {
+        let fref = &f;
+        let handles: Vec<_> = items
+            .iter()
+            .map(|item| scope.spawn(move || fref(item)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let xs: Vec<u64> = (0..8).collect();
+        let ys = par_map(&xs, |&x| x * x);
+        assert_eq!(ys, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+    }
+
+    #[test]
+    fn short_slices_run_inline() {
+        assert_eq!(par_map(&[] as &[u64], |&x| x), Vec::<u64>::new());
+        assert_eq!(par_map(&[7u64], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn workers_see_shared_state() {
+        let base = vec![10u64, 20, 30];
+        let ys = par_map(&[0usize, 1, 2], |&i| base[i] + 1);
+        assert_eq!(ys, vec![11, 21, 31]);
+    }
+}

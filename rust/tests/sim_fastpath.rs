@@ -1,0 +1,187 @@
+//! Fast-path parity: the `engine::costs` entry points (`simulate` the
+//! wrapper, `CostTable::simulate_into` + `SimScratch` reuse, and
+//! `IncrementalSim::eval_flip`/`apply_flip`) must produce makespans —
+//! and every other aggregate — exactly equal to the reference simulator
+//! across randomized graphs, schedules, batches, noise settings and
+//! sequences of placement flips.  Always-on (synthetic graphs + the
+//! checked-in device profiles; no artifacts needed).
+
+use sparoa::bench_support::{device_profile, prop};
+use sparoa::engine::costs::{CostTable, SimScratch};
+use sparoa::engine::sim::{
+    simulate, simulate_reference, SimOptions, SimReport,
+};
+use sparoa::graph::ModelGraph;
+use sparoa::scheduler::Schedule;
+use sparoa::util::rng::Rng;
+
+#[derive(Debug)]
+struct Case {
+    blocks: usize,
+    scale: f64,
+    sparsity: f64,
+    batch: usize,
+    noise: f64,
+    seed: u64,
+    device: &'static str,
+    xi: Vec<f64>,
+    flips: Vec<(usize, f64)>,
+}
+
+fn gen_case(r: &mut Rng) -> Case {
+    let blocks = 1 + r.below(8);
+    let n_ops = 1 + 3 * blocks + 2; // synthetic() chain length
+    // Raw uniform xi hits CPU, GPU and the co-run band.
+    let xi: Vec<f64> = (0..n_ops).map(|_| r.f64()).collect();
+    let flips: Vec<(usize, f64)> = (0..1 + r.below(8))
+        .map(|_| (r.below(n_ops), r.f64()))
+        .collect();
+    Case {
+        blocks,
+        scale: r.range(0.05, 5.0),
+        sparsity: r.f64(),
+        batch: 1 + r.below(8),
+        noise: if r.below(2) == 0 { 0.0 } else { 0.05 },
+        seed: r.below(1000) as u64,
+        device: if r.below(2) == 0 { "agx_orin" } else { "orin_nano" },
+        xi,
+        flips,
+    }
+}
+
+fn diff_aggregates(a: &SimReport, b: &SimReport) -> Result<(), String> {
+    let pairs = [
+        ("makespan_us", a.makespan_us, b.makespan_us),
+        ("cpu_busy_us", a.cpu_busy_us, b.cpu_busy_us),
+        ("gpu_busy_us", a.gpu_busy_us, b.gpu_busy_us),
+        ("transfer_us", a.transfer_us, b.transfer_us),
+        ("launch_us", a.launch_us, b.launch_us),
+        ("aggregation_us", a.aggregation_us, b.aggregation_us),
+        ("peak_gpu_mem_mb", a.peak_gpu_mem_mb, b.peak_gpu_mem_mb),
+        ("cpu_mem_mb", a.cpu_mem_mb, b.cpu_mem_mb),
+    ];
+    for (name, x, y) in pairs {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{name} differs: {x:?} vs {y:?}"));
+        }
+    }
+    if a.switches != b.switches {
+        return Err(format!(
+            "switches differ: {} vs {}", a.switches, b.switches));
+    }
+    Ok(())
+}
+
+#[test]
+fn fastpath_bitwise_equals_reference_under_random_cases() {
+    prop::check("sim-fastpath-parity", 50, 0xC057AB1E, gen_case, |case| {
+        let g = ModelGraph::synthetic(
+            "parity", case.blocks, case.scale, case.sparsity);
+        let dev = device_profile(case.device);
+        let opts = SimOptions {
+            batch: case.batch,
+            noise: case.noise,
+            seed: case.seed,
+            ..Default::default()
+        };
+        let sched = Schedule { xi: case.xi.clone(), policy: "p".into() };
+        let reference = simulate_reference(&g, &dev, &sched, &opts);
+
+        // 1. The public `simulate` wrapper (fast walk, timings on).
+        let fast = simulate(&g, &dev, &sched, &opts);
+        diff_aggregates(&reference, &fast).map_err(|e| format!("wrapper: {e}"))?;
+        if fast.timings.len() != reference.timings.len() {
+            return Err(format!(
+                "wrapper timings {} vs reference {}",
+                fast.timings.len(),
+                reference.timings.len()
+            ));
+        }
+        for (a, b) in reference.timings.iter().zip(&fast.timings) {
+            if a.op != b.op
+                || a.proc != b.proc
+                || a.start_us.to_bits() != b.start_us.to_bits()
+                || a.finish_us.to_bits() != b.finish_us.to_bits()
+                || a.compute_us.to_bits() != b.compute_us.to_bits()
+                || a.transfer_us.to_bits() != b.transfer_us.to_bits()
+            {
+                return Err(format!("timing for op {} differs", a.op));
+            }
+        }
+
+        // 2. Scratch reuse with record_timings off: aggregates still
+        //    bit-identical, timing vec skipped, no state leak across
+        //    repeated simulations into one scratch.
+        let fast_opts =
+            SimOptions { record_timings: false, ..opts.clone() };
+        let table = CostTable::build(&g, &dev, &fast_opts);
+        let mut scratch = SimScratch::new();
+        for round in 0..2 {
+            table.simulate_into(&sched, &mut scratch);
+            diff_aggregates(&reference, &scratch.report)
+                .map_err(|e| format!("scratch round {round}: {e}"))?;
+            if !scratch.report.timings.is_empty() {
+                return Err("record_timings=false recorded timings".into());
+            }
+        }
+
+        // 3. Incremental evaluator: construction matches, tentative
+        //    flips do not mutate, commits match a from-scratch reference
+        //    simulation of the flipped schedule.
+        let mut inc = table.incremental(&sched.xi);
+        if inc.makespan_us().to_bits() != reference.makespan_us.to_bits() {
+            return Err(format!(
+                "incremental base {} vs reference {}",
+                inc.makespan_us(),
+                reference.makespan_us
+            ));
+        }
+        let mut xi = case.xi.clone();
+        for &(op, v) in &case.flips {
+            let before = inc.makespan_us();
+            let probe1 = inc.eval_flip(op, v);
+            let probe2 = inc.eval_flip(op, v);
+            if probe1.to_bits() != probe2.to_bits() {
+                return Err("eval_flip is not deterministic".into());
+            }
+            if inc.makespan_us().to_bits() != before.to_bits() {
+                return Err("eval_flip mutated committed state".into());
+            }
+            let committed = inc.apply_flip(op, v);
+            if committed.to_bits() != probe1.to_bits() {
+                return Err(format!(
+                    "apply_flip {} disagrees with eval_flip {}",
+                    committed, probe1
+                ));
+            }
+            xi[op] = v;
+            let flipped =
+                Schedule { xi: xi.clone(), policy: "p".into() };
+            let r2 = simulate_reference(&g, &dev, &flipped, &opts);
+            if committed.to_bits() != r2.makespan_us.to_bits() {
+                return Err(format!(
+                    "flip (op {op} -> {v}): incremental {} vs \
+                     reference {}",
+                    committed, r2.makespan_us
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wrapper_and_reference_agree_on_the_trivial_graph() {
+    // Smallest end-to-end check: one block, batch 1, defaults.
+    let g = ModelGraph::synthetic("tiny", 1, 1.0, 0.0);
+    let dev = device_profile("agx_orin");
+    let opts = SimOptions::default();
+    for xi_val in [0.0, 0.5, 1.0] {
+        let sched = Schedule::uniform(&g, xi_val, "u");
+        let a = simulate_reference(&g, &dev, &sched, &opts);
+        let b = simulate(&g, &dev, &sched, &opts);
+        assert_eq!(a.makespan_us, b.makespan_us, "xi={xi_val}");
+        assert_eq!(a.transfer_us, b.transfer_us, "xi={xi_val}");
+        assert_eq!(a.switches, b.switches, "xi={xi_val}");
+    }
+}
