@@ -1,0 +1,128 @@
+//! Fleet extension figure: distributed multi-board serving under
+//! increasing load — router policies compared, autoscaled vs static
+//! replica placement.
+//!
+//! Like `fig13_multimodel` this bench never skips: it uses the
+//! artifact models when `make artifacts` has run and the synthetic
+//! demo fleet otherwise.  Emits the fleet-level JSON report (aggregate
+//! + per-board attainment/utilization/shed rate, replica-count
+//! timeline) on stdout after the tables.
+
+use sparoa::bench_support::Table;
+use sparoa::serve::{
+    demo, merge_arrivals, run_fleet, AutoscalePolicy, FleetOptions,
+    RouterPolicy,
+};
+use sparoa::util::json::{self, Value};
+use std::collections::BTreeMap;
+
+fn main() {
+    let device = "agx_orin";
+    let boards = 4usize;
+    let registry = demo::registry(&sparoa::artifacts_dir(), device)
+        .expect("building demo registry");
+    let classes = demo::classes();
+
+    let mut t = Table::new(
+        &format!(
+            "fleet — {} boards x {} models on {}",
+            boards, registry.len(), device
+        ),
+        &["load", "router", "autoscale", "attainment", "shed",
+          "mean batch", "gpu util", "scale events", "mean replicas"],
+    );
+    let mut scenarios = Vec::new();
+    for load in [0.5, 2.0, 4.0] {
+        let tenants = demo::tenants(&registry, load, 300, 23, None)
+            .expect("building tenants");
+        let arrivals = merge_arrivals(&tenants, 23);
+        // Three routers autoscaled, plus the static ablation on the
+        // cost-aware router.
+        let runs: Vec<(RouterPolicy, bool)> = vec![
+            (RouterPolicy::RoundRobin, true),
+            (RouterPolicy::JoinShortestQueue, true),
+            (RouterPolicy::CostAware, true),
+            (RouterPolicy::CostAware, false),
+        ];
+        let mut snaps = Vec::new();
+        for (router, autoscaled) in runs {
+            let mut opts = FleetOptions::new(boards, registry.len());
+            opts.router = router;
+            if autoscaled {
+                opts.autoscale = Some(AutoscalePolicy::default());
+            }
+            let snap = run_fleet(
+                &registry, &classes, &tenants, &arrivals, &opts)
+                .expect("fleet run");
+            let reps: Vec<String> = snap
+                .mean_replicas
+                .iter()
+                .map(|x| format!("{x:.1}"))
+                .collect();
+            t.row(vec![
+                format!("x{load:.1}"),
+                snap.router.clone(),
+                if autoscaled { "on" } else { "off" }.into(),
+                format!("{:.1}%", 100.0 * snap.aggregate_attainment()),
+                snap.total_shed().to_string(),
+                format!("{:.1}", snap.aggregate.mean_batch()),
+                format!("{:.0}%", 100.0 * snap.mean_gpu_util()),
+                snap.scale_events.len().to_string(),
+                reps.join("/"),
+            ]);
+            snaps.push(snap);
+        }
+        scenarios.push((load, snaps));
+    }
+    t.print();
+
+    // Headline: cost-aware routing vs round-robin at the top load.
+    let top = scenarios.last().unwrap();
+    let (rr, cost) = (
+        top.1[0].aggregate_attainment(),
+        top.1[2].aggregate_attainment(),
+    );
+    println!(
+        "\nAt x{:.1} load: cost-aware router {:.1}% vs round-robin \
+         {:.1}% aggregate attainment ({:+.1} pts); autoscale sheds {} \
+         vs {} static.",
+        top.0,
+        100.0 * cost,
+        100.0 * rr,
+        100.0 * (cost - rr),
+        top.1[2].total_shed(),
+        top.1[3].total_shed(),
+    );
+
+    // Machine-readable fleet report.
+    let report = Value::Obj(
+        [
+            ("bench".to_string(), Value::Str("fig_fleet".into())),
+            ("device".to_string(), Value::Str(device.into())),
+            ("boards".to_string(), Value::Num(boards as f64)),
+            (
+                "scenarios".to_string(),
+                Value::Arr(
+                    scenarios
+                        .iter()
+                        .map(|(load, snaps)| {
+                            let mut o = BTreeMap::new();
+                            o.insert("load".into(), Value::Num(*load));
+                            o.insert(
+                                "runs".into(),
+                                Value::Arr(snaps
+                                    .iter()
+                                    .map(|s| s.to_json())
+                                    .collect()),
+                            );
+                            Value::Obj(o)
+                        })
+                        .collect(),
+                ),
+            ),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    println!("\n{}", json::to_string(&report));
+}

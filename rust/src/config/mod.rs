@@ -36,6 +36,12 @@ pub struct Config {
     pub trace: String,
     /// emit machine-readable JSON instead of tables; bare `--json`.
     pub json: bool,
+    /// serve-fleet: number of simulated boards.
+    pub boards: usize,
+    /// serve-fleet: router policy (round-robin | jsq | cost-aware).
+    pub router: String,
+    /// serve-fleet: run the replica autoscaler; bare `--autoscale`.
+    pub autoscale: bool,
 }
 
 impl Default for Config {
@@ -59,6 +65,9 @@ impl Default for Config {
             load: 1.0,
             trace: String::new(),
             json: false,
+            boards: 4,
+            router: "cost-aware".into(),
+            autoscale: false,
         }
     }
 }
@@ -78,6 +87,13 @@ impl Config {
         if let Some(b) = v.get("backend").as_str() {
             if !matches!(b, "sim" | "pjrt" | "both") {
                 anyhow::bail!("backend must be sim|pjrt|both, got `{b}`");
+            }
+        }
+        if let Some(r) = v.get("router").as_str() {
+            if crate::serve::RouterPolicy::parse(r).is_none() {
+                anyhow::bail!(
+                    "router must be round-robin|jsq|cost-aware, got `{r}`"
+                );
             }
         }
         let d = Config::default();
@@ -110,6 +126,12 @@ impl Config {
             load: v.get("load").as_f64().unwrap_or(d.load),
             trace: v.get("trace").as_str().unwrap_or(&d.trace).into(),
             json: v.get("json").as_bool().unwrap_or(d.json),
+            boards: v.get("boards").as_usize().unwrap_or(d.boards),
+            router: v.get("router").as_str().unwrap_or(&d.router).into(),
+            autoscale: v
+                .get("autoscale")
+                .as_bool()
+                .unwrap_or(d.autoscale),
         })
     }
 
@@ -136,6 +158,16 @@ impl Config {
             "load" => self.load = value.parse()?,
             "trace" => self.trace = value.into(),
             "json" => self.json = parse_bool(value)?,
+            "boards" => self.boards = value.parse()?,
+            "router" => {
+                anyhow::ensure!(
+                    crate::serve::RouterPolicy::parse(value).is_some(),
+                    "router must be round-robin|jsq|cost-aware, \
+                     got `{value}`"
+                );
+                self.router = value.into();
+            }
+            "autoscale" => self.autoscale = parse_bool(value)?,
             other => anyhow::bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -197,6 +229,25 @@ mod tests {
         c.apply_override("json", "true").unwrap(); // bare `--json`
         assert!(c.json);
         assert!(c.apply_override("load", "fast").is_err());
+        // serve-fleet knobs
+        assert_eq!(c.boards, 4);
+        assert_eq!(c.router, "cost-aware");
+        assert!(!c.autoscale); // opt-in, like every other bare flag
+        c.apply_override("boards", "8").unwrap();
+        assert_eq!(c.boards, 8);
+        c.apply_override("router", "jsq").unwrap();
+        assert_eq!(c.router, "jsq");
+        assert!(c.apply_override("router", "random").is_err());
+        c.apply_override("autoscale", "true").unwrap(); // bare flag
+        assert!(c.autoscale);
+        let bad_router = json::parse(r#"{"router": "dice"}"#).unwrap();
+        assert!(Config::from_json(&bad_router).is_err());
+        let good_router =
+            json::parse(r#"{"router": "round-robin", "boards": 2}"#)
+                .unwrap();
+        let cr = Config::from_json(&good_router).unwrap();
+        assert_eq!(cr.router, "round-robin");
+        assert_eq!(cr.boards, 2);
         // Config files get the same backend validation as the CLI.
         let bad = json::parse(r#"{"backend": "cuda"}"#).unwrap();
         assert!(Config::from_json(&bad).is_err());

@@ -130,10 +130,12 @@ impl CostTable {
         }
     }
 
+    /// Number of ops in the table (== the graph's op count).
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True for an empty graph's table.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -143,6 +145,8 @@ impl CostTable {
         self.batch
     }
 
+    /// Whether op `id` participates in CPU/GPU placement (non-schedulable
+    /// ops are fixed by their kind).
     pub fn schedulable(&self, id: usize) -> bool {
         self.entries[id].schedulable
     }
@@ -396,6 +400,7 @@ pub struct SimScratch {
 }
 
 impl SimScratch {
+    /// Empty buffers; sized lazily on first use.
     pub fn new() -> Self {
         Self::default()
     }

@@ -2,8 +2,9 @@
 //!
 //! Reproduction of *"SparOA: Sparse and Operator-aware Hybrid Scheduling
 //! for Edge DNN Inference"* (Zhang, Liu, Mottola, 2025) as a three-layer
-//! Rust + JAX + Pallas stack.  See DESIGN.md for the system inventory and
-//! EXPERIMENTS.md for the paper-vs-measured record.
+//! Rust + JAX + Pallas stack.  See `docs/ARCHITECTURE.md` for the full
+//! architecture guide (layer map, life of a request, paper-to-module
+//! table) and `README.md` for the CLI quickstart.
 //!
 //! Layer map:
 //! * L1/L2 (build-time python): Pallas kernels + JAX operator graphs,
@@ -44,6 +45,13 @@
 //!                      co-schedules CPU/GPU capacity across models
 //!                      using the paper's sparsity/intensity signals
 //!                      (`serve-multi` CLI, `fig13_multimodel` bench).
+//!     * `serve::fleet` — distributed multi-board serving: N board
+//!                      schedulers (per-board `LaneMatrix` + admission
+//!                      queues) in one virtual clock behind a front-tier
+//!                      router (round-robin | jsq | cost-aware), with
+//!                      replica autoscaling from per-board attainment /
+//!                      queue-pressure windows (`serve-fleet` CLI,
+//!                      `fig_fleet` bench).
 //!     * `runtime`    — the PJRT bridge (optional `pjrt` cargo feature)
 //!                      and host tensors / weight stores.
 //!     * `device`/`energy`/`graph`/`profiler` — calibrated device models,
@@ -100,6 +108,12 @@
 //! # Ok(()) }
 //! ```
 
+// Documentation policy: `#![warn(missing_docs)]` is intentionally NOT
+// enabled crate-wide yet — the inner layers (engine, scheduler, rl)
+// predate the doc pass and would drown CI's `cargo doc -D warnings`
+// gate in noise.  The public serving surface (`serve`, `engine::costs`)
+// is documented per item with units stated (us, bytes, ratios); enable
+// the lint once the older layers catch up.
 pub mod api;
 pub mod baselines;
 pub mod bench_support;

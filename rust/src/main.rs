@@ -5,6 +5,7 @@
 //!   infer       — one scheduled inference (simulated timeline + real PJRT)
 //!   serve       — serve a Poisson request stream with dynamic batching
 //!   serve-multi — multi-tenant SLO-aware serving across models
+//!   serve-fleet — distributed multi-board serving: router + autoscaler
 //!   train       — train the SAC scheduler, print the convergence trace
 //!   compare     — run all baselines on one model/device (Fig. 5 row)
 //!   predict     — query the threshold predictor for a model
@@ -27,8 +28,9 @@ use sparoa::profiler;
 use sparoa::scheduler::sac_sched::{SacScheduler, SacSchedulerConfig};
 use sparoa::scheduler::{ScheduleCtx, Scheduler};
 use sparoa::serve::{
-    self, merge_arrivals, run_cluster, trace_from_json, ClusterOptions,
-    ClusterPolicy,
+    self, merge_arrivals, run_cluster, run_fleet, trace_from_json,
+    AutoscalePolicy, ClusterOptions, ClusterPolicy, FleetOptions,
+    RouterPolicy,
 };
 use sparoa::server::{batcher::poisson_stream, BatchPolicy};
 
@@ -39,9 +41,9 @@ fn main() {
     }
 }
 
-const SUBCOMMANDS: [&str; 7] = [
-    "profile", "infer", "serve", "serve-multi", "train", "compare",
-    "predict",
+const SUBCOMMANDS: [&str; 8] = [
+    "profile", "infer", "serve", "serve-multi", "serve-fleet", "train",
+    "compare", "predict",
 ];
 
 fn usage(cmd: &str) -> String {
@@ -72,6 +74,18 @@ fn usage(cmd: &str) -> String {
              CPU/GPU capacity,\n  \
              cross-model cluster scheduling vs a static split baseline."
         ),
+        "serve-fleet" => format!(
+            "sparoa serve-fleet [{common}] [--boards=N] \
+             [--router=round-robin|jsq|cost-aware] [--autoscale] \
+             [--load=X] [--num_requests=N] [--trace=FILE.json] \
+             [--json]\n  \
+             Distributed multi-board serving: the serve-multi tenant \
+             mix routed across N\n  \
+             simulated boards by a front-tier router, with optional \
+             replica autoscaling\n  \
+             from per-board attainment/queue-pressure signals.  \
+             Compares all three routers."
+        ),
         "train" => format!(
             "sparoa train [{common}] [--episodes=N] [--noise=X] \
              [--batch=N]\n  \
@@ -100,7 +114,7 @@ fn parse_args() -> Result<(String, Option<String>, Config)> {
     let mut positional = Vec::new();
     let mut cfg = Config::default();
     // Flags that may appear bare (`--flag` == `--flag=true`).
-    const BOOL_FLAGS: [&str; 2] = ["verbose", "json"];
+    const BOOL_FLAGS: [&str; 3] = ["verbose", "json", "autoscale"];
     for a in &args {
         if let Some(rest) = a.strip_prefix("--") {
             // `--key=value`, or a bare boolean `--flag` (=true).
@@ -147,6 +161,7 @@ fn run() -> Result<()> {
         "infer" => infer(&cfg),
         "serve" => serve(&cfg),
         "serve-multi" => serve_multi(&cfg),
+        "serve-fleet" => serve_fleet(&cfg),
         "train" => train(&cfg),
         "compare" => compare(&cfg),
         "predict" => predict(&cfg),
@@ -273,7 +288,16 @@ fn serve(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
-fn serve_multi(cfg: &Config) -> Result<()> {
+/// Shared serve-multi / serve-fleet preamble: the demo registry,
+/// classes, tenants (honoring `--trace`) and the merged arrival stream.
+fn demo_workload(
+    cfg: &Config,
+) -> Result<(
+    sparoa::serve::ModelRegistry,
+    Vec<sparoa::serve::SloClass>,
+    Vec<sparoa::serve::Tenant>,
+    Vec<sparoa::serve::Arrival>,
+)> {
     let registry = serve::demo::registry(&cfg.artifacts, &cfg.device)?;
     let classes = serve::demo::classes();
     let trace = if cfg.trace.is_empty() {
@@ -286,6 +310,11 @@ fn serve_multi(cfg: &Config) -> Result<()> {
     let tenants = serve::demo::tenants(
         &registry, cfg.load, cfg.num_requests, cfg.seed, trace)?;
     let arrivals = merge_arrivals(&tenants, cfg.seed);
+    Ok((registry, classes, tenants, arrivals))
+}
+
+fn serve_multi(cfg: &Config) -> Result<()> {
+    let (registry, classes, tenants, arrivals) = demo_workload(cfg)?;
 
     if !cfg.json {
         let mut t = Table::new(
@@ -337,6 +366,108 @@ fn serve_multi(cfg: &Config) -> Result<()> {
             100.0 * (dyn_a - stat_a)
         );
     }
+    Ok(())
+}
+
+fn serve_fleet(cfg: &Config) -> Result<()> {
+    let (registry, classes, tenants, arrivals) = demo_workload(cfg)?;
+    let n_boards = cfg.boards.max(1);
+    let chosen = RouterPolicy::parse(&cfg.router).with_context(|| {
+        format!("router must be round-robin|jsq|cost-aware, got `{}`",
+                cfg.router)
+    })?;
+
+    if !cfg.json {
+        println!(
+            "fleet — {} boards (1 cpu + 1 gpu lane each), {} models, \
+             load x{:.1}, {} requests, autoscale {}",
+            n_boards, registry.len(), cfg.load, arrivals.len(),
+            if cfg.autoscale { "on" } else { "off" },
+        );
+    }
+
+    // Run all three routers over the same stream for the comparison
+    // table; the configured one is detailed last.
+    let routers = [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::JoinShortestQueue,
+        RouterPolicy::CostAware,
+    ];
+    let mut snapshots = Vec::new();
+    for router in routers {
+        let mut opts = FleetOptions::new(n_boards, registry.len());
+        opts.router = router;
+        if cfg.autoscale {
+            opts.autoscale = Some(AutoscalePolicy::default());
+        }
+        snapshots.push(run_fleet(
+            &registry, &classes, &tenants, &arrivals, &opts)?);
+    }
+
+    if cfg.json {
+        let obj = sparoa::util::json::Value::Arr(
+            snapshots.iter().map(|s| s.to_json()).collect());
+        println!("{}", sparoa::util::json::to_string(&obj));
+        return Ok(());
+    }
+
+    let mut t = Table::new(
+        "front-tier router comparison",
+        &["router", "attainment", "shed", "mean batch", "cpu util",
+          "gpu util", "scale events"],
+    );
+    for s in &snapshots {
+        t.row(vec![
+            s.router.clone(),
+            format!("{:.1}%", 100.0 * s.aggregate_attainment()),
+            s.total_shed().to_string(),
+            format!("{:.1}", s.aggregate.mean_batch()),
+            format!("{:.0}%", 100.0 * s.mean_cpu_util()),
+            format!("{:.0}%", 100.0 * s.mean_gpu_util()),
+            s.scale_events.len().to_string(),
+        ]);
+    }
+    t.print();
+
+    let detail = snapshots
+        .iter()
+        .find(|s| s.router == chosen.name())
+        .expect("configured router was run");
+    let mut bt = Table::new(
+        &format!("per-board outcomes — {}", detail.router),
+        &["board", "offered", "served", "met", "shed", "cpu util",
+          "gpu util"],
+    );
+    for (b, snap) in detail.boards.iter().enumerate() {
+        bt.row(vec![
+            b.to_string(),
+            snap.total_offered().to_string(),
+            snap.total_served().to_string(),
+            snap.total_met().to_string(),
+            snap.total_shed().to_string(),
+            format!("{:.0}%", 100.0 * snap.cpu_util()),
+            format!("{:.0}%", 100.0 * snap.gpu_util()),
+        ]);
+    }
+    bt.print();
+    detail
+        .aggregate
+        .class_table("fleet per-class outcomes")
+        .print();
+    if cfg.autoscale {
+        let reps: Vec<String> = detail
+            .mean_replicas
+            .iter()
+            .map(|x| format!("{x:.2}"))
+            .collect();
+        println!(
+            "autoscaler: {} scale events, mean replicas per model \
+             [{}]",
+            detail.scale_events.len(),
+            reps.join(", "),
+        );
+    }
+    println!("{}", detail.summary());
     Ok(())
 }
 

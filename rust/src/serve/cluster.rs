@@ -1,5 +1,5 @@
 //! Event-driven virtual-time cluster scheduler: co-schedules CPU/GPU
-//! capacity *across* models.
+//! capacity *across* models on one board.
 //!
 //! This is the dynamic tier of a Sparse-DySta-style two-tier design.
 //! The static tier is per-model and offline: each registered model
@@ -13,11 +13,19 @@
 //! tolerate the CPU, dense-heavy models want the GPU; most of that
 //! signal already lives in the calibrated per-placement latencies).
 //!
-//! Resource model: two lanes (CPU, GPU).  A dispatched batch occupies
-//! exactly one lane for its full makespan — the lane its schedule
-//! primarily targets — so a hybrid schedule's minority-device time is
-//! folded into its lane occupancy.  That keeps the event loop exact and
-//! errs conservative (slightly over-serializing each lane).
+//! Resource model: a [`LaneMatrix`] of independent execution lanes
+//! (`run_cluster` uses the classic two-lane CPU+GPU board,
+//! [`LaneMatrix::duo`]; the fleet tier gives each board an arbitrary
+//! lane mix).  A dispatched batch occupies exactly one lane for its
+//! full makespan — the lane its schedule primarily targets — so a
+//! hybrid schedule's minority-device time is folded into its lane
+//! occupancy.  That keeps the event loop exact and errs conservative
+//! (slightly over-serializing each lane).
+//!
+//! The loop itself lives in `BoardSim` (crate-internal), the
+//! single-board scheduling engine: [`run_cluster`] drives one instance
+//! over an arrival stream; [`crate::serve::fleet::run_fleet`] drives N
+//! of them behind a router.
 //!
 //! [`ClusterPolicy::StaticSplit`] is the ablation baseline the paper's
 //! serving claim is judged against: each model is pinned to one
@@ -43,6 +51,7 @@ pub enum ClusterPolicy {
 }
 
 impl ClusterPolicy {
+    /// Report label ("cluster" / "static-split").
     pub fn name(self) -> &'static str {
         match self {
             ClusterPolicy::SparsityAware => "cluster",
@@ -54,7 +63,9 @@ impl ClusterPolicy {
 /// Knobs for one cluster run.
 #[derive(Debug, Clone, Copy)]
 pub struct ClusterOptions {
+    /// Cross-model scheduling discipline.
     pub policy: ClusterPolicy,
+    /// What admission control does when a queue budget fills.
     pub shed: ShedPolicy,
 }
 
@@ -67,16 +78,446 @@ impl Default for ClusterOptions {
     }
 }
 
-fn lane(p: Proc) -> usize {
-    match p {
-        Proc::Cpu => 0,
-        Proc::Gpu => 1,
+/// How many independent execution lanes of each processor type a board
+/// exposes.  The classic SparOA board is [`LaneMatrix::duo`] (one CPU
+/// lane + one GPU lane); multi-accelerator boards widen either side.
+/// A lane serves one dispatched batch at a time for its full makespan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneMatrix {
+    /// Number of CPU lanes (>= 1).
+    pub cpu: usize,
+    /// Number of GPU lanes (>= 1).
+    pub gpu: usize,
+}
+
+impl LaneMatrix {
+    /// The single CPU + single GPU board `run_cluster` models.
+    pub fn duo() -> Self {
+        LaneMatrix { cpu: 1, gpu: 1 }
+    }
+
+    /// A board with `cpu` CPU lanes and `gpu` GPU lanes (both clamped
+    /// to >= 1 so every placement stays feasible).
+    pub fn new(cpu: usize, gpu: usize) -> Self {
+        LaneMatrix { cpu: cpu.max(1), gpu: gpu.max(1) }
+    }
+
+    /// Total lane count.
+    pub fn total(&self) -> usize {
+        self.cpu + self.gpu
     }
 }
 
-/// Serve a merged multi-tenant arrival stream and report per-class /
-/// per-model outcomes.  Everything runs in virtual time through each
-/// session's execution backend (the latency oracle is
+/// Mutable lane occupancy for one board: per-lane free-at time and
+/// accumulated busy time, both microseconds of virtual time.
+#[derive(Debug, Clone)]
+struct LaneState {
+    procs: Vec<Proc>,
+    free: Vec<f64>,
+    busy: Vec<f64>,
+}
+
+impl LaneState {
+    fn new(m: LaneMatrix) -> Self {
+        let mut procs = vec![Proc::Cpu; m.cpu.max(1)];
+        procs.extend(vec![Proc::Gpu; m.gpu.max(1)]);
+        let n = procs.len();
+        LaneState { procs, free: vec![0.0; n], busy: vec![0.0; n] }
+    }
+
+    /// Earliest-free lane of `proc`: (lane index, free-at time in us).
+    fn earliest(&self, proc: Proc) -> (usize, f64) {
+        let mut best = usize::MAX;
+        let mut best_t = f64::INFINITY;
+        for (i, &p) in self.procs.iter().enumerate() {
+            if p == proc && self.free[i] < best_t {
+                best = i;
+                best_t = self.free[i];
+            }
+        }
+        debug_assert!(best != usize::MAX, "no {proc:?} lane configured");
+        (best, best_t)
+    }
+
+    fn occupy(&mut self, lane: usize, start_us: f64, finish_us: f64) {
+        self.free[lane] = finish_us;
+        self.busy[lane] += finish_us - start_us;
+    }
+
+    fn busy_us(&self, proc: Proc) -> f64 {
+        self.procs
+            .iter()
+            .zip(&self.busy)
+            .filter(|(&p, _)| p == proc)
+            .map(|(_, &b)| b)
+            .sum()
+    }
+}
+
+/// One board's event-driven scheduler: admission queues, a lane matrix
+/// and the dispatch loop of the dynamic tier, packaged so one instance
+/// serves [`run_cluster`] and N instances serve
+/// [`crate::serve::fleet::run_fleet`].
+///
+/// Protocol: the driver owns virtual time.  It calls
+/// [`BoardSim::offer`] for every arrival with `at_us <= now`, then
+/// [`BoardSim::pump`] to let the board dispatch everything worth
+/// dispatching at `now`; `pump` returns the board's next wake-up time
+/// (a busy lane freeing) or `None` when the board is idle.  The driver
+/// advances `now` to the earliest of all boards' wake-ups and the next
+/// arrival, and repeats.  [`BoardSim::finish`] seals the run into a
+/// [`PerfSnapshot`].
+pub(crate) struct BoardSim<'a> {
+    registry: &'a ModelRegistry,
+    classes: &'a [SloClass],
+    sparsity_aware: bool,
+    /// StaticSplit only: the processor each model is pinned to.
+    static_lane: Vec<Proc>,
+    lanes: LaneState,
+    q: AdmissionQueues,
+    snap: PerfSnapshot,
+    shed_seen: usize,
+    last_finish: f64,
+    #[cfg(debug_assertions)]
+    settled: std::collections::HashSet<usize>,
+}
+
+/// One scored dispatch option inside the pump loop.
+struct Candidate {
+    m: usize,
+    lane: usize,
+    proc: Proc,
+    b: usize,
+    start: f64,
+    finish: f64,
+    score: f64,
+    met_w: f64,
+}
+
+impl<'a> BoardSim<'a> {
+    /// Build a board over `registry`'s models.  `label` names the
+    /// board's [`PerfSnapshot`] (e.g. "cluster" or "fleet/board3").
+    /// StaticSplit pins every model to the GPU except the one with the
+    /// cheapest CPU latency (probing the registry's latency oracle).
+    pub(crate) fn new(
+        registry: &'a ModelRegistry,
+        classes: &'a [SloClass],
+        opts: &ClusterOptions,
+        lanes: LaneMatrix,
+        label: &str,
+    ) -> Result<Self> {
+        let nm = registry.len();
+        let class_labels: Vec<String> =
+            classes.iter().map(|c| c.name.clone()).collect();
+        let model_labels: Vec<String> = registry
+            .entries()
+            .iter()
+            .map(|e| e.name.clone())
+            .collect();
+        // Static split: pin every model to the GPU except the one that
+        // runs cheapest on the CPU (with >= 2 models both processors
+        // stay used).
+        let static_lane: Vec<Proc> = if opts.policy
+            == ClusterPolicy::StaticSplit
+        {
+            let mut pins = vec![Proc::Gpu; nm];
+            if nm >= 2 {
+                let mut best = 0usize;
+                let mut best_lat = f64::INFINITY;
+                for m in 0..nm {
+                    let l = registry.get(m).latency_us(Proc::Cpu, 1)?;
+                    if l < best_lat {
+                        best = m;
+                        best_lat = l;
+                    }
+                }
+                pins[best] = Proc::Cpu;
+            }
+            pins
+        } else {
+            Vec::new()
+        };
+        Ok(BoardSim {
+            registry,
+            classes,
+            sparsity_aware: opts.policy == ClusterPolicy::SparsityAware,
+            static_lane,
+            lanes: LaneState::new(lanes),
+            q: AdmissionQueues::new(classes, opts.shed, nm),
+            snap: PerfSnapshot::new(
+                label,
+                opts.shed.name(),
+                &class_labels,
+                &model_labels,
+            ),
+            shed_seen: 0,
+            last_finish: 0.0,
+            #[cfg(debug_assertions)]
+            settled: std::collections::HashSet::new(),
+        })
+    }
+
+    /// Offer one arriving request to admission control and record it as
+    /// offered in the board's snapshot.  `now_us` is virtual time.
+    pub(crate) fn offer(&mut self, req: usize, tenant: usize,
+                        model: usize, class: usize, now_us: f64) {
+        self.snap.record_offered(class, model);
+        self.q.offer(req, tenant, model, class, now_us);
+    }
+
+    /// Outstanding queued requests across all models.
+    pub(crate) fn total_queued(&self) -> usize {
+        self.q.total_queued()
+    }
+
+    /// Outstanding queued requests for one model.
+    pub(crate) fn queue_len(&self, model: usize) -> usize {
+        self.q.queue_len(model)
+    }
+
+    /// Read-only view of the board's running snapshot (the fleet
+    /// autoscaler's per-window attainment signals).
+    pub(crate) fn snapshot(&self) -> &PerfSnapshot {
+        &self.snap
+    }
+
+    /// Estimated microseconds of work standing between a new arrival
+    /// and a free lane: in-flight residual (lane free-at times past
+    /// `now`) plus queued work priced by `lat1_us[model]` (each
+    /// model's cheapest batch-1 latency, precomputed by the caller so
+    /// the per-arrival hot path never touches the probe cache),
+    /// averaged over the lane count.  The cost-aware router's board
+    /// score.
+    pub(crate) fn backlog_residual_us(&self, now_us: f64,
+                                      lat1_us: &[f64]) -> f64 {
+        let n = self.lanes.procs.len() as f64;
+        let resid: f64 = self
+            .lanes
+            .free
+            .iter()
+            .map(|&f| (f - now_us).max(0.0))
+            .sum();
+        let mut work = 0.0;
+        for (m, &lat) in lat1_us.iter().enumerate() {
+            let ql = self.q.queue_len(m);
+            if ql > 0 {
+                work += ql as f64 * lat;
+            }
+        }
+        (resid + work) / n
+    }
+
+    /// Charge a replica warm-up to this board: occupies the earliest
+    /// free GPU lane for `warmup_us` starting no earlier than `now_us`,
+    /// so scaling up is never free in virtual time.  Returns the time
+    /// the warm-up completes (the replica's earliest serving time).
+    pub(crate) fn charge_warmup(&mut self, now_us: f64,
+                                warmup_us: f64) -> f64 {
+        let (lane, free) = self.lanes.earliest(Proc::Gpu);
+        let start = now_us.max(free);
+        self.lanes.occupy(lane, start, start + warmup_us);
+        start + warmup_us
+    }
+
+    /// Dispatch everything worth dispatching at `now_us`: sheds expired
+    /// work (dynamic tier), settles shed accounting, then repeatedly
+    /// scores every feasible (model, placement, batch) option and
+    /// dispatches the best until the board prefers to wait.  Returns
+    /// the board's next wake-up time (earliest busy lane freeing), or
+    /// `None` when nothing is queued.
+    pub(crate) fn pump(&mut self, now_us: f64) -> Result<Option<f64>> {
+        let now = now_us;
+        // The dynamic tier refuses to burn capacity on doomed requests.
+        if self.sparsity_aware {
+            self.q.drop_expired(now);
+        }
+        self.settle_sheds();
+        loop {
+            if self.q.total_queued() == 0 {
+                return Ok(None);
+            }
+
+            // Score every feasible (model, placement, batch) dispatch
+            // option.  Only lanes free *now* are dispatchable — queued
+            // work accumulates while a lane is busy, which is what lets
+            // the dispatcher re-order by class/deadline and right-size
+            // batches (a scheduler that commits arrivals to future
+            // slots one by one degenerates into FIFO).  Busy-lane
+            // options are still scored: they tell the wait heuristic
+            // whether patience would save deadlines that an immediate
+            // doomed dispatch would burn.
+            let mut best_now: Option<Candidate> = None;
+            let mut best_any: Option<Candidate> = None;
+            let mut next_free = f64::INFINITY;
+            for m in 0..self.registry.len() {
+                let qlen = self.q.queue_len(m);
+                if qlen == 0 {
+                    continue;
+                }
+                let entry = self.registry.get(m);
+                let sorted = self.q.sorted_queue(m);
+                let head_arrival = sorted
+                    .iter()
+                    .map(|r| r.arrival_us)
+                    .fold(f64::INFINITY, f64::min);
+                let both = [Proc::Cpu, Proc::Gpu];
+                let procs: &[Proc] = if self.sparsity_aware {
+                    &both
+                } else {
+                    std::slice::from_ref(&self.static_lane[m])
+                };
+                for &proc in procs {
+                    let (lane, lane_free) = self.lanes.earliest(proc);
+                    if lane_free > now {
+                        next_free = next_free.min(lane_free);
+                    }
+                    let cap = entry.batch_cap(proc).max(1);
+                    let start = now.max(lane_free);
+                    // Candidate batch sizes: powers of two up to the
+                    // Alg. 2 cap, plus "everything queued".  Batch
+                    // latency grows with size, so right-sizing is what
+                    // keeps tight deadlines servable under backlog (the
+                    // static baseline always drains min(queue, cap),
+                    // like the single-model batcher it stands in for).
+                    let mut sizes: Vec<usize> = Vec::new();
+                    if self.sparsity_aware {
+                        let mut b = 1usize;
+                        while b < cap.min(qlen) {
+                            sizes.push(b);
+                            b *= 2;
+                        }
+                    }
+                    sizes.push(qlen.min(cap));
+                    for &b in &sizes {
+                        let l = entry.latency_us(proc, b)?;
+                        let finish = start + l;
+                        let met_w: f64 = sorted
+                            .iter()
+                            .take(b)
+                            .filter(|r| r.deadline_us >= finish)
+                            .map(|r| self.classes[r.class].weight)
+                            .sum();
+                        let score = if self.sparsity_aware {
+                            // Primary: deadline-weighted value of the
+                            // batch (class weights are >= 1, so one met
+                            // deadline outranks every secondary term).
+                            // Secondary: drain rate — when every option
+                            // is doomed the scheduler degrades to
+                            // throughput mode instead of thrashing on
+                            // size-1 batches.  The Fig. 2 signals and
+                            // earlier finishes break ties.
+                            let drain =
+                                (10.0 * b as f64 / l.max(1.0)).min(0.9);
+                            let affinity = match proc {
+                                Proc::Cpu => entry.sparsity,
+                                Proc::Gpu => entry.intensity,
+                            };
+                            met_w + drain + 0.01 * affinity
+                                - 1e-9 * finish
+                        } else {
+                            // FIFO across the lane's models: oldest
+                            // head wins.
+                            -head_arrival - 1e-9 * finish
+                        };
+                        let cand = || Candidate {
+                            m, lane, proc, b, start, finish, score,
+                            met_w,
+                        };
+                        if lane_free <= now
+                            && best_now
+                                .as_ref()
+                                .map_or(true, |c| score > c.score)
+                        {
+                            best_now = Some(cand());
+                        }
+                        if best_any
+                            .as_ref()
+                            .map_or(true, |c| score > c.score)
+                        {
+                            best_any = Some(cand());
+                        }
+                    }
+                }
+            }
+
+            // Wait instead of dispatching when nothing is dispatchable
+            // now, or when everything dispatchable now is doomed while
+            // a busy lane could still meet deadlines once it frees
+            // (don't shred requests on an idle-but-hopeless processor).
+            let wait = match (&best_now, &best_any) {
+                (None, _) => true,
+                (Some(bn), Some(ba)) => {
+                    self.sparsity_aware
+                        && bn.met_w <= 0.0
+                        && ba.met_w > 0.0
+                        && ba.start > now
+                }
+                _ => false,
+            };
+            if wait {
+                debug_assert!(
+                    next_free.is_finite() && next_free > now,
+                    "wait must have a busy lane to wake on"
+                );
+                return Ok(Some(next_free));
+            }
+
+            let c = best_now.expect("non-wait iterations dispatch");
+            let taken =
+                self.q.take_batch(c.m, c.b, self.sparsity_aware);
+            debug_assert!(!taken.is_empty());
+            self.lanes.occupy(c.lane, c.start, c.finish);
+            self.last_finish = self.last_finish.max(c.finish);
+            self.snap.n_batches += 1;
+            self.snap.dispatched += taken.len() as u64;
+            for r in &taken {
+                let latency = c.finish - r.arrival_us;
+                #[cfg(debug_assertions)]
+                debug_assert!(self.settled.insert(r.req),
+                              "request {} settled twice (served)", r.req);
+                self.snap.record_served(
+                    r.class,
+                    r.model,
+                    latency,
+                    c.finish <= r.deadline_us,
+                );
+            }
+        }
+    }
+
+    /// Record any newly shed requests (admission rejections + expiries)
+    /// into the snapshot, exactly once each.
+    fn settle_sheds(&mut self) {
+        while self.shed_seen < self.q.shed.len() {
+            let s = self.q.shed[self.shed_seen];
+            self.shed_seen += 1;
+            #[cfg(debug_assertions)]
+            debug_assert!(self.settled.insert(s.req),
+                          "request {} settled twice (shed)", s.req);
+            self.snap.record_shed(s.class, s.model, s.at_admission);
+        }
+    }
+
+    /// Seal the run: `now_us` is the driver's final virtual time.
+    /// Verifies (debug builds) that every request settled exactly once.
+    pub(crate) fn finish(mut self, now_us: f64) -> PerfSnapshot {
+        self.settle_sheds();
+        #[cfg(debug_assertions)]
+        debug_assert_eq!(
+            self.settled.len() as u64,
+            self.snap.total_served() + self.snap.total_shed(),
+            "settlement accounting drifted"
+        );
+        self.snap.makespan_us = self.last_finish.max(now_us);
+        self.snap.cpu_busy_us = self.lanes.busy_us(Proc::Cpu);
+        self.snap.gpu_busy_us = self.lanes.busy_us(Proc::Gpu);
+        self.snap
+    }
+}
+
+/// Serve a merged multi-tenant arrival stream on one two-lane board and
+/// report per-class / per-model outcomes.  Everything runs in virtual
+/// time through each session's execution backend (the latency oracle is
 /// [`crate::api::Session::probe`], cached per (model, placement,
 /// batch)).
 pub fn run_cluster(
@@ -104,262 +545,47 @@ pub fn run_cluster(
         "arrivals must be time-sorted (use serve::merge_arrivals)"
     );
 
-    let nm = registry.len();
-    let class_labels: Vec<String> =
-        classes.iter().map(|c| c.name.clone()).collect();
-    let model_labels: Vec<String> = registry
-        .entries()
-        .iter()
-        .map(|e| e.name.clone())
-        .collect();
-    let mut snap = PerfSnapshot::new(
+    let mut board = BoardSim::new(
+        registry,
+        classes,
+        opts,
+        LaneMatrix::duo(),
         opts.policy.name(),
-        opts.shed.name(),
-        &class_labels,
-        &model_labels,
-    );
-
-    // Latency oracle: memoized per (model, placement, batch) *inside the
-    // registry entries* ([`crate::serve::registry::ModelEntry::latency_us`]),
-    // so identical configurations are simulated once per registry
-    // lifetime — not once per `run_cluster` call.
-    let lat_of = |m: usize, p: Proc, b: usize| -> Result<f64> {
-        registry.get(m).latency_us(p, b)
-    };
-
-    // Static split: pin every model to the GPU except the one that runs
-    // cheapest on the CPU (with >= 2 models both processors stay used).
-    let static_lane: Vec<Proc> = if opts.policy
-        == ClusterPolicy::StaticSplit
-    {
-        let mut lanes = vec![Proc::Gpu; nm];
-        if nm >= 2 {
-            let mut best = 0usize;
-            let mut best_lat = f64::INFINITY;
-            for m in 0..nm {
-                let l = lat_of(m, Proc::Cpu, 1)?;
-                if l < best_lat {
-                    best = m;
-                    best_lat = l;
-                }
-            }
-            lanes[best] = Proc::Cpu;
-        }
-        lanes
-    } else {
-        Vec::new()
-    };
-
-    let sparsity_aware = opts.policy == ClusterPolicy::SparsityAware;
-    let mut q = AdmissionQueues::new(classes, opts.shed, nm);
-    // Debug builds (and therefore `cargo test`) verify settlement at the
-    // request-id level: every request leaves the system exactly once —
-    // served or shed, never both, never twice.
-    #[cfg(debug_assertions)]
-    let mut settled: std::collections::HashSet<usize> =
-        std::collections::HashSet::with_capacity(arrivals.len());
-    let mut shed_seen = 0usize;
-    let mut free = [0.0f64; 2];
-    let mut busy = [0.0f64; 2];
+    )?;
     let mut now = 0.0f64;
     let mut ai = 0usize;
-    let mut last_finish = 0.0f64;
-
     loop {
         // Ingest everything that has arrived by `now`.
         while ai < arrivals.len() && arrivals[ai].at_us <= now {
             let a = arrivals[ai];
             ai += 1;
-            let m = model_of[a.tenant];
-            snap.record_offered(tenants[a.tenant].class, m);
-            q.offer(a.req, a.tenant, m, tenants[a.tenant].class, a.at_us);
-        }
-        // The dynamic tier refuses to burn capacity on doomed requests.
-        if sparsity_aware {
-            q.drop_expired(now);
-        }
-        while shed_seen < q.shed.len() {
-            let s = q.shed[shed_seen];
-            shed_seen += 1;
-            #[cfg(debug_assertions)]
-            debug_assert!(settled.insert(s.req),
-                          "request {} settled twice (shed)", s.req);
-            snap.record_shed(s.class, model_of[s.tenant], s.at_admission);
-        }
-
-        if q.total_queued() == 0 {
-            if ai >= arrivals.len() {
-                break;
-            }
-            now = arrivals[ai].at_us;
-            continue;
-        }
-
-        // Score every feasible (model, placement, batch) dispatch
-        // option.  Only lanes free *now* are dispatchable — queued work
-        // accumulates while a lane is busy, which is what lets the
-        // dispatcher re-order by class/deadline and right-size batches
-        // (a scheduler that commits arrivals to future slots one by one
-        // degenerates into FIFO).  Busy-lane options are still scored:
-        // they tell the wait heuristic whether patience would save
-        // deadlines that an immediate doomed dispatch would burn.
-        struct Candidate {
-            m: usize,
-            proc: Proc,
-            b: usize,
-            start: f64,
-            finish: f64,
-            score: f64,
-            met_w: f64,
-        }
-        let mut best_now: Option<Candidate> = None;
-        let mut best_any: Option<Candidate> = None;
-        let mut next_free = f64::INFINITY;
-        for m in 0..nm {
-            let qlen = q.queue_len(m);
-            if qlen == 0 {
-                continue;
-            }
-            let entry = registry.get(m);
-            let sorted = q.sorted_queue(m);
-            let head_arrival = sorted
-                .iter()
-                .map(|r| r.arrival_us)
-                .fold(f64::INFINITY, f64::min);
-            let both = [Proc::Cpu, Proc::Gpu];
-            let procs: &[Proc] = if sparsity_aware {
-                &both
-            } else {
-                std::slice::from_ref(&static_lane[m])
-            };
-            for &proc in procs {
-                let lane_free = free[lane(proc)];
-                if lane_free > now {
-                    next_free = next_free.min(lane_free);
-                }
-                let cap = entry.batch_cap(proc).max(1);
-                let start = now.max(lane_free);
-                // Candidate batch sizes: powers of two up to the Alg. 2
-                // cap, plus "everything queued".  Batch latency grows
-                // with size, so right-sizing is what keeps tight
-                // deadlines servable under backlog (the static baseline
-                // always drains min(queue, cap), like the single-model
-                // batcher it stands in for).
-                let mut sizes: Vec<usize> = Vec::new();
-                if sparsity_aware {
-                    let mut b = 1usize;
-                    while b < cap.min(qlen) {
-                        sizes.push(b);
-                        b *= 2;
-                    }
-                }
-                sizes.push(qlen.min(cap));
-                for &b in &sizes {
-                    let l = lat_of(m, proc, b)?;
-                    let finish = start + l;
-                    let met_w: f64 = sorted
-                        .iter()
-                        .take(b)
-                        .filter(|r| r.deadline_us >= finish)
-                        .map(|r| classes[r.class].weight)
-                        .sum();
-                    let score = if sparsity_aware {
-                        // Primary: deadline-weighted value of the batch
-                        // (class weights are >= 1, so one met deadline
-                        // outranks every secondary term).  Secondary:
-                        // drain rate — when every option is doomed the
-                        // scheduler degrades to throughput mode instead
-                        // of thrashing on size-1 batches.  The Fig. 2
-                        // signals and earlier finishes break ties.
-                        let drain =
-                            (10.0 * b as f64 / l.max(1.0)).min(0.9);
-                        let affinity = match proc {
-                            Proc::Cpu => entry.sparsity,
-                            Proc::Gpu => entry.intensity,
-                        };
-                        met_w + drain + 0.01 * affinity - 1e-9 * finish
-                    } else {
-                        // FIFO across the lane's models: oldest head
-                        // wins.
-                        -head_arrival - 1e-9 * finish
-                    };
-                    let cand = || Candidate {
-                        m, proc, b, start, finish, score, met_w,
-                    };
-                    if lane_free <= now
-                        && best_now
-                            .as_ref()
-                            .map_or(true, |c| score > c.score)
-                    {
-                        best_now = Some(cand());
-                    }
-                    if best_any
-                        .as_ref()
-                        .map_or(true, |c| score > c.score)
-                    {
-                        best_any = Some(cand());
-                    }
-                }
-            }
-        }
-
-        // Wait instead of dispatching when nothing is dispatchable now,
-        // or when everything dispatchable now is doomed while a busy
-        // lane could still meet deadlines once it frees (don't shred
-        // requests on an idle-but-hopeless processor).
-        let wait = match (&best_now, &best_any) {
-            (None, _) => true,
-            (Some(bn), Some(ba)) => {
-                sparsity_aware
-                    && bn.met_w <= 0.0
-                    && ba.met_w > 0.0
-                    && ba.start > now
-            }
-            _ => false,
-        };
-        if wait {
-            let mut t = next_free;
-            if ai < arrivals.len() {
-                t = t.min(arrivals[ai].at_us);
-            }
-            debug_assert!(t.is_finite() && t > now,
-                          "wait must advance virtual time");
-            now = t;
-            continue;
-        }
-
-        let c = best_now.expect("non-wait iterations dispatch");
-        let taken = q.take_batch(c.m, c.b, sparsity_aware);
-        debug_assert!(!taken.is_empty());
-        free[lane(c.proc)] = c.finish;
-        busy[lane(c.proc)] += c.finish - c.start;
-        last_finish = last_finish.max(c.finish);
-        snap.n_batches += 1;
-        snap.dispatched += taken.len() as u64;
-        for r in &taken {
-            let latency = c.finish - r.arrival_us;
-            #[cfg(debug_assertions)]
-            debug_assert!(settled.insert(r.req),
-                          "request {} settled twice (served)", r.req);
-            snap.record_served(
-                r.class,
-                r.model,
-                latency,
-                c.finish <= r.deadline_us,
+            board.offer(
+                a.req,
+                a.tenant,
+                model_of[a.tenant],
+                tenants[a.tenant].class,
+                a.at_us,
             );
         }
+        match board.pump(now)? {
+            None => {
+                if ai >= arrivals.len() {
+                    break;
+                }
+                now = arrivals[ai].at_us;
+            }
+            Some(wake) => {
+                let mut t = wake;
+                if ai < arrivals.len() {
+                    t = t.min(arrivals[ai].at_us);
+                }
+                debug_assert!(t.is_finite() && t > now,
+                              "wait must advance virtual time");
+                now = t;
+            }
+        }
     }
-
-    #[cfg(debug_assertions)]
-    debug_assert_eq!(
-        settled.len() as u64,
-        snap.total_served() + snap.total_shed(),
-        "settlement accounting drifted"
-    );
-    snap.makespan_us = last_finish.max(now);
-    snap.cpu_busy_us = busy[0];
-    snap.gpu_busy_us = busy[1];
-    Ok(snap)
+    Ok(board.finish(now))
 }
 
 #[cfg(test)]
@@ -508,5 +734,61 @@ mod tests {
         assert_eq!(snap.policy, "static-split");
         assert_eq!(snap.total_served() + snap.total_shed(),
                    snap.total_offered());
+    }
+
+    #[test]
+    fn lane_matrix_widens_a_board() {
+        // Same overloaded single-model stream on a 1+1 vs a 1+3 board:
+        // more GPU lanes must not lose requests, and must not serve
+        // materially fewer deadlines (the greedy dispatcher doesn't
+        // guarantee strict monotonicity — extra free lanes can trade
+        // batch amortization for immediacy — so allow 10% slack).
+        let reg = registry();
+        let cls = classes();
+        let tenants = vec![Tenant {
+            name: "t".into(),
+            model: "heavy".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson { rate_per_s: 600.0, n: 400 },
+        }];
+        let arrivals = merge_arrivals(&tenants, 19);
+        let model_of = vec![0usize];
+        let mut met = Vec::new();
+        for lanes in [LaneMatrix::duo(), LaneMatrix::new(1, 3)] {
+            let mut board = BoardSim::new(
+                &reg, &cls, &ClusterOptions::default(), lanes, "t")
+                .unwrap();
+            let mut now = 0.0;
+            let mut ai = 0;
+            loop {
+                while ai < arrivals.len() && arrivals[ai].at_us <= now {
+                    let a = arrivals[ai];
+                    ai += 1;
+                    board.offer(a.req, a.tenant, model_of[a.tenant], 0,
+                                a.at_us);
+                }
+                match board.pump(now).unwrap() {
+                    None => {
+                        if ai >= arrivals.len() {
+                            break;
+                        }
+                        now = arrivals[ai].at_us;
+                    }
+                    Some(w) => {
+                        now = if ai < arrivals.len() {
+                            w.min(arrivals[ai].at_us)
+                        } else {
+                            w
+                        };
+                    }
+                }
+            }
+            let snap = board.finish(now);
+            assert_eq!(snap.total_served() + snap.total_shed(),
+                       snap.total_offered());
+            met.push(snap.total_met());
+        }
+        assert!(met[1] as f64 >= met[0] as f64 * 0.9,
+                "wider board met {} << duo {}", met[1], met[0]);
     }
 }

@@ -1,0 +1,972 @@
+//! Distributed multi-board serving: a fleet of N simulated boards
+//! behind a front-tier router, with replica autoscaling.
+//!
+//! One [`crate::serve::run_cluster`] board co-schedules CPU/GPU
+//! capacity across models; this module scales that out:
+//!
+//! * **Sharded registry.**  The [`ModelRegistry`] stays the shared
+//!   *catalog* of model plans (schedules, batch caps, memoized latency
+//!   probes — boards are homogeneous, so probes are placement-valid
+//!   everywhere).  Each board's *shard* is its warm-replica set: a
+//!   board can serve model `m` only while it hosts a replica of `m`,
+//!   and each board runs its own `BoardSim` (crate-internal: admission
+//!   queues + [`LaneMatrix`] + dispatch loop) over its shard.
+//! * **Front-tier router.**  Every arrival is placed on exactly one
+//!   board by a [`RouterPolicy`]: `RoundRobin` (per-model rotation),
+//!   `JoinShortestQueue` (fewest queued requests), or `CostAware`
+//!   (least estimated microseconds of standing work, pricing each
+//!   board's queues through the registry's memoized latency oracle
+//!   plus its in-flight lane residuals).
+//! * **Replica autoscaler.**  A periodic control loop reads per-model
+//!   attainment and queue-pressure windows from the per-board
+//!   [`PerfSnapshot`]s and scales replicas up (warm a session on the
+//!   least-busy board lacking one; the warm-up occupies a GPU lane for
+//!   [`AutoscalePolicy::warmup_us`] of virtual time, so scaling is
+//!   never free) or down (mark a replica draining — the router stops
+//!   sending to it, it retires once its queue empties).  Hysteresis
+//!   ([`AutoscalePolicy::hysteresis`] consecutive ticks) keeps it from
+//!   flapping; the up/down thresholds leave a dead band.
+//!
+//! `sparoa serve-fleet` drives the demo fleet from the CLI; the
+//! `fig_fleet` bench emits the fleet-level JSON report; and
+//! `rust/tests/serve_fleet.rs` property-tests conservation, the
+//! router ordering under skew, and autoscaler convergence/shedding.
+
+use crate::serve::cluster::{
+    BoardSim, ClusterOptions, ClusterPolicy, LaneMatrix,
+};
+use crate::serve::registry::ModelRegistry;
+use crate::serve::report::PerfSnapshot;
+use crate::serve::slo::{ShedPolicy, SloClass};
+use crate::serve::workload::{Arrival, Tenant};
+use crate::util::json::{self, Value};
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Front-tier request placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Per-model rotation over the boards hosting the model.
+    RoundRobin,
+    /// The hosting board with the fewest queued requests.
+    JoinShortestQueue,
+    /// The hosting board with the least estimated standing work:
+    /// queued requests priced by the memoized latency probes, plus
+    /// in-flight lane residuals.
+    CostAware,
+}
+
+impl RouterPolicy {
+    /// Parse a CLI/config spelling (`round-robin` | `jsq` |
+    /// `join-shortest-queue` | `cost-aware`).
+    pub fn parse(s: &str) -> Option<RouterPolicy> {
+        Some(match s {
+            "round-robin" | "rr" => RouterPolicy::RoundRobin,
+            "jsq" | "join-shortest-queue" => {
+                RouterPolicy::JoinShortestQueue
+            }
+            "cost-aware" => RouterPolicy::CostAware,
+            _ => return None,
+        })
+    }
+
+    /// Canonical spelling, the inverse of [`RouterPolicy::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::JoinShortestQueue => "jsq",
+            RouterPolicy::CostAware => "cost-aware",
+        }
+    }
+}
+
+/// Replica autoscaler control knobs.  All times are microseconds of
+/// virtual time.
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscalePolicy {
+    /// Control period: signals are windowed per tick.
+    pub interval_us: f64,
+    /// Scale a model up while its window attainment sits below this
+    /// (fraction in [0, 1]).
+    pub up_attainment: f64,
+    /// Scale a model down while its window load per replica — offered
+    /// requests priced at [`crate::serve::ModelEntry::efficient_cost_us`]
+    /// over the interval — sits below this fraction of one replica's
+    /// capacity.  Keep well below `up_attainment`'s implied load so the
+    /// dead band prevents flapping.
+    pub down_load: f64,
+    /// Virtual-time cost of warming a replica: the warm-up occupies a
+    /// GPU lane on the target board for this long (starting when the
+    /// lane frees), and the replica serves only once it completes.
+    pub warmup_us: f64,
+    /// Consecutive ticks a signal must persist before acting (>= 1).
+    pub hysteresis: usize,
+    /// Per-model replica cap; 0 means one per board.
+    pub max_per_model: usize,
+    /// Queue-pressure trigger: also scale up when a model's standing
+    /// backlog per replica exceeds this fraction of the interval (the
+    /// predictive signal — it fires a tick before attainment
+    /// collapses).
+    pub pressure: f64,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            interval_us: 50_000.0,
+            up_attainment: 0.92,
+            down_load: 0.45,
+            warmup_us: 25_000.0,
+            hysteresis: 2,
+            max_per_model: 0,
+            pressure: 0.6,
+        }
+    }
+}
+
+/// Configuration of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetOptions {
+    /// Lane matrix of every board (boards are homogeneous).
+    pub lanes: LaneMatrix,
+    /// Front-tier placement policy.
+    pub router: RouterPolicy,
+    /// Per-board admission shed policy.
+    pub shed: ShedPolicy,
+    /// Initial replica placement: `placement[b]` lists the registry
+    /// indices warm on board `b` at time zero.  Every model must
+    /// appear on at least one board.
+    pub placement: Vec<Vec<usize>>,
+    /// Autoscaler; `None` pins the placement for the whole run.
+    pub autoscale: Option<AutoscalePolicy>,
+}
+
+impl FleetOptions {
+    /// A fleet of `n_boards` two-lane boards with one replica of each
+    /// of `n_models` models, spread round-robin, cost-aware routing,
+    /// no autoscaling.
+    pub fn new(n_boards: usize, n_models: usize) -> Self {
+        FleetOptions {
+            lanes: LaneMatrix::duo(),
+            router: RouterPolicy::CostAware,
+            shed: ShedPolicy::ShedLowestClass,
+            placement: spread_placement(
+                n_boards, &vec![1; n_models]),
+            autoscale: None,
+        }
+    }
+}
+
+/// Spread `replicas[m]` replicas of each model over `n_boards` boards:
+/// replica `r` of model `m` lands on board `(m + r) % n_boards`, at
+/// most one replica of a model per board.
+pub fn spread_placement(
+    n_boards: usize,
+    replicas: &[usize],
+) -> Vec<Vec<usize>> {
+    let nb = n_boards.max(1);
+    let mut placement = vec![Vec::new(); nb];
+    for (m, &k) in replicas.iter().enumerate() {
+        for r in 0..k.clamp(1, nb) {
+            placement[(m + r) % nb].push(m);
+        }
+    }
+    placement
+}
+
+/// One autoscaler action.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleEvent {
+    /// Virtual time of the decision, microseconds.
+    pub t_us: f64,
+    /// Registry index of the scaled model.
+    pub model: usize,
+    /// Board gaining (up) or draining (down) the replica.
+    pub board: usize,
+    /// true = scale up, false = drain.
+    pub up: bool,
+}
+
+/// One autoscaler-tick sample of the replica map.
+#[derive(Debug, Clone)]
+pub struct ReplicaSample {
+    /// Virtual time of the sample, microseconds.
+    pub t_us: f64,
+    /// Non-draining replica count per model (warming included: they
+    /// are committed capacity).
+    pub per_model: Vec<usize>,
+}
+
+/// A fleet run's full report: per-board snapshots, the merged
+/// aggregate, and the autoscaler's trace.
+#[derive(Debug, Clone)]
+pub struct FleetSnapshot {
+    /// Router policy name.
+    pub router: String,
+    /// Whether the autoscaler ran.
+    pub autoscaled: bool,
+    /// Per-board lane matrix.
+    pub lanes: LaneMatrix,
+    /// Per-board outcomes ("fleet/board0", ...).
+    pub boards: Vec<PerfSnapshot>,
+    /// All boards merged ([`PerfSnapshot::merge_from`]); busy times
+    /// sum across boards, so utilizations here are fleet totals over
+    /// one makespan.
+    pub aggregate: PerfSnapshot,
+    /// Every autoscaler action, in time order.
+    pub scale_events: Vec<ScaleEvent>,
+    /// Replica counts sampled at every autoscaler tick, bracketed by
+    /// boundary samples at t = 0 and the end of the run so the
+    /// time-weighted mean covers the whole horizon (empty without
+    /// autoscaling).
+    pub replica_timeline: Vec<ReplicaSample>,
+    /// Time-weighted mean replica count per model (the static-fleet
+    /// comparison point; equals the placement counts when static).
+    pub mean_replicas: Vec<f64>,
+}
+
+impl FleetSnapshot {
+    /// Fraction of all offered requests served within deadline.
+    pub fn aggregate_attainment(&self) -> f64 {
+        self.aggregate.aggregate_attainment()
+    }
+
+    /// Requests shed fleet-wide (admission + expiry).
+    pub fn total_shed(&self) -> u64 {
+        self.aggregate.total_shed()
+    }
+
+    /// Mean per-board CPU busy fraction over the makespan, [0, 1].
+    pub fn mean_cpu_util(&self) -> f64 {
+        let nb = self.boards.len().max(1) as f64;
+        let lanes = self.lanes.cpu.max(1) as f64;
+        if self.aggregate.makespan_us > 0.0 {
+            (self.aggregate.cpu_busy_us
+                / (self.aggregate.makespan_us * nb * lanes))
+                .min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean per-board GPU busy fraction over the makespan, [0, 1].
+    pub fn mean_gpu_util(&self) -> f64 {
+        let nb = self.boards.len().max(1) as f64;
+        let lanes = self.lanes.gpu.max(1) as f64;
+        if self.aggregate.makespan_us > 0.0 {
+            (self.aggregate.gpu_busy_us
+                / (self.aggregate.makespan_us * nb * lanes))
+                .min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Fleet-level JSON report: aggregate + per-board snapshots, shed
+    /// rate, mean utilizations, replica-count timeline and scale
+    /// events.
+    pub fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("router".into(), Value::Str(self.router.clone()));
+        o.insert("autoscaled".into(), Value::Bool(self.autoscaled));
+        o.insert("n_boards".into(),
+                 Value::Num(self.boards.len() as f64));
+        o.insert("lanes_cpu".into(), Value::Num(self.lanes.cpu as f64));
+        o.insert("lanes_gpu".into(), Value::Num(self.lanes.gpu as f64));
+        // The merged aggregate's own cpu_util/gpu_util divide
+        // busy-time summed across boards by one makespan and clamp to
+        // 1.0 — meaningless fleet-wide.  Overwrite them with the
+        // per-board means so JSON consumers can't misread saturation.
+        let mut agg_json = self.aggregate.to_json();
+        if let Value::Obj(agg) = &mut agg_json {
+            agg.insert("cpu_util".into(),
+                       Value::Num(self.mean_cpu_util()));
+            agg.insert("gpu_util".into(),
+                       Value::Num(self.mean_gpu_util()));
+        }
+        o.insert("aggregate".into(), agg_json);
+        o.insert(
+            "shed_rate".into(),
+            Value::Num(if self.aggregate.total_offered() > 0 {
+                self.total_shed() as f64
+                    / self.aggregate.total_offered() as f64
+            } else {
+                0.0
+            }),
+        );
+        o.insert("mean_cpu_util".into(),
+                 Value::Num(self.mean_cpu_util()));
+        o.insert("mean_gpu_util".into(),
+                 Value::Num(self.mean_gpu_util()));
+        o.insert(
+            "per_board".into(),
+            Value::Arr(self.boards.iter().map(|b| b.to_json()).collect()),
+        );
+        o.insert(
+            "mean_replicas".into(),
+            Value::Arr(self
+                .mean_replicas
+                .iter()
+                .map(|&x| Value::Num(x))
+                .collect()),
+        );
+        o.insert(
+            "replica_timeline".into(),
+            Value::Arr(self
+                .replica_timeline
+                .iter()
+                .map(|s| {
+                    let mut t = BTreeMap::new();
+                    t.insert("t_us".into(), Value::Num(s.t_us));
+                    t.insert(
+                        "per_model".into(),
+                        Value::Arr(s
+                            .per_model
+                            .iter()
+                            .map(|&c| Value::Num(c as f64))
+                            .collect()),
+                    );
+                    Value::Obj(t)
+                })
+                .collect()),
+        );
+        o.insert(
+            "scale_events".into(),
+            Value::Arr(self
+                .scale_events
+                .iter()
+                .map(|e| {
+                    let mut t = BTreeMap::new();
+                    t.insert("t_us".into(), Value::Num(e.t_us));
+                    t.insert("model".into(), Value::Num(e.model as f64));
+                    t.insert("board".into(), Value::Num(e.board as f64));
+                    t.insert("up".into(), Value::Bool(e.up));
+                    Value::Obj(t)
+                })
+                .collect()),
+        );
+        Value::Obj(o)
+    }
+
+    /// [`FleetSnapshot::to_json`] rendered to a string.
+    pub fn to_json_string(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "[fleet/{}{}] {} boards: attainment {:.1}% ({} met / {} \
+             offered, {} shed) cpu {:.0}% gpu {:.0}% scale events {}",
+            self.router,
+            if self.autoscaled { "+autoscale" } else { "" },
+            self.boards.len(),
+            100.0 * self.aggregate_attainment(),
+            self.aggregate.total_met(),
+            self.aggregate.total_offered(),
+            self.total_shed(),
+            100.0 * self.mean_cpu_util(),
+            100.0 * self.mean_gpu_util(),
+            self.scale_events.len(),
+        )
+    }
+}
+
+/// One hosted replica on one board.
+#[derive(Debug, Clone, Copy)]
+struct Replica {
+    model: usize,
+    /// The replica serves (and the router targets it) from this time.
+    active_from: f64,
+    /// Draining replicas take no new requests and retire once their
+    /// board's queue for the model empties.
+    draining: bool,
+}
+
+/// Autoscaler state across ticks.
+struct AutoState {
+    prev_offered: Vec<u64>,
+    prev_met: Vec<u64>,
+    up_streak: Vec<usize>,
+    down_streak: Vec<usize>,
+    next_tick_us: f64,
+}
+
+/// Serve a merged multi-tenant arrival stream on a fleet of boards
+/// behind the configured router (and optionally the autoscaler), all
+/// in one shared virtual clock.  The returned snapshot's aggregate
+/// conserves requests: offered == served + shed == `arrivals.len()`.
+pub fn run_fleet(
+    registry: &ModelRegistry,
+    classes: &[SloClass],
+    tenants: &[Tenant],
+    arrivals: &[Arrival],
+    opts: &FleetOptions,
+) -> Result<FleetSnapshot> {
+    anyhow::ensure!(!registry.is_empty(), "registry holds no models");
+    anyhow::ensure!(!classes.is_empty(), "no SLO classes configured");
+    anyhow::ensure!(!opts.placement.is_empty(), "fleet needs >= 1 board");
+    let nm = registry.len();
+    let nb = opts.placement.len();
+    let model_of: Vec<usize> = tenants
+        .iter()
+        .map(|t| registry.index_of(&t.model))
+        .collect::<Result<_>>()?;
+    for t in tenants {
+        anyhow::ensure!(
+            t.class < classes.len(),
+            "tenant `{}` references SLO class {} of {}",
+            t.name, t.class, classes.len()
+        );
+    }
+    anyhow::ensure!(
+        arrivals.windows(2).all(|w| w[0].at_us <= w[1].at_us),
+        "arrivals must be time-sorted (use serve::merge_arrivals)"
+    );
+    let mut replicas: Vec<Vec<Replica>> = Vec::with_capacity(nb);
+    for (b, models) in opts.placement.iter().enumerate() {
+        let mut seen = vec![false; nm];
+        for &m in models {
+            anyhow::ensure!(m < nm,
+                "board {b} hosts unknown model index {m} (of {nm})");
+            anyhow::ensure!(!seen[m],
+                "board {b} hosts model {m} twice");
+            seen[m] = true;
+        }
+        replicas.push(
+            models
+                .iter()
+                .map(|&m| Replica {
+                    model: m,
+                    active_from: 0.0,
+                    draining: false,
+                })
+                .collect(),
+        );
+    }
+    for m in 0..nm {
+        anyhow::ensure!(
+            replicas.iter().any(|p| p.iter().any(|r| r.model == m)),
+            "model `{}` has no replica in the initial placement",
+            registry.get(m).name
+        );
+    }
+    if let Some(auto) = &opts.autoscale {
+        anyhow::ensure!(auto.interval_us > 0.0,
+                        "autoscale interval must be positive");
+        anyhow::ensure!(auto.warmup_us >= 0.0,
+                        "autoscale warmup must be non-negative");
+        anyhow::ensure!(auto.hysteresis >= 1,
+                        "autoscale hysteresis must be >= 1");
+    }
+
+    let cluster_opts = ClusterOptions {
+        policy: ClusterPolicy::SparsityAware,
+        shed: opts.shed,
+    };
+    let mut boards: Vec<BoardSim> = (0..nb)
+        .map(|b| {
+            BoardSim::new(
+                registry,
+                classes,
+                &cluster_opts,
+                opts.lanes,
+                &format!("fleet/board{b}"),
+            )
+        })
+        .collect::<Result<_>>()?;
+
+    let mut rr = vec![0usize; nm];
+    let mut auto_state = AutoState {
+        prev_offered: vec![0; nm],
+        prev_met: vec![0; nm],
+        up_streak: vec![0; nm],
+        down_streak: vec![0; nm],
+        next_tick_us: opts
+            .autoscale
+            .map_or(f64::INFINITY, |a| a.interval_us),
+    };
+    let mut scale_events: Vec<ScaleEvent> = Vec::new();
+    let mut timeline: Vec<ReplicaSample> = Vec::new();
+    if opts.autoscale.is_some() {
+        // Boundary sample so the initial placement is time-weighted
+        // from t = 0 (the autoscaler only samples at its ticks).
+        timeline.push(ReplicaSample {
+            t_us: 0.0,
+            per_model: count_active(&replicas, nm),
+        });
+    }
+    // Per-model price tables, probed once so neither the per-arrival
+    // routing hot path nor the control loop touches the probe cache:
+    // cheapest batch-1 latency (router backlog pricing) and per-request
+    // cost at the full batch (autoscaler load signal).
+    let lat1_us: Vec<f64> = (0..nm)
+        .map(|m| registry.get(m).cheapest_latency_us(1))
+        .collect::<Result<_>>()?;
+    let eff_cost_us: Vec<f64> = (0..nm)
+        .map(|m| registry.get(m).efficient_cost_us())
+        .collect::<Result<_>>()?;
+
+    let mut now = 0.0f64;
+    let mut ai = 0usize;
+    let mut elig: Vec<usize> = Vec::with_capacity(nb);
+    loop {
+        // Ingest and route everything that has arrived by `now`.
+        while ai < arrivals.len() && arrivals[ai].at_us <= now {
+            let a = arrivals[ai];
+            ai += 1;
+            let m = model_of[a.tenant];
+            eligible_boards_into(m, now, &replicas, &mut elig);
+            let b = route(
+                opts.router, m, now, &lat1_us, &boards, &elig,
+                &mut rr,
+            )?;
+            boards[b].offer(a.req, a.tenant, m,
+                            tenants[a.tenant].class, a.at_us);
+        }
+        // Autoscaler tick.  The schedule only drives the clock while
+        // work is standing (see below), so after an idle gap in the
+        // arrival stream `next_tick_us` may lie far in the past: fire
+        // one catch-up tick and realign instead of replaying every
+        // missed no-op interval.
+        if let Some(auto) = &opts.autoscale {
+            if now >= auto_state.next_tick_us {
+                autoscale_tick(
+                    now, auto, &eff_cost_us, &lat1_us, &mut boards,
+                    &mut replicas, &mut auto_state, &mut scale_events,
+                    &mut timeline,
+                );
+                auto_state.next_tick_us += auto.interval_us;
+                while auto_state.next_tick_us <= now {
+                    auto_state.next_tick_us += auto.interval_us;
+                }
+            }
+        }
+        // Let every board dispatch at `now`; collect wake-ups.
+        let mut t_next = f64::INFINITY;
+        for board in boards.iter_mut() {
+            if let Some(wake) = board.pump(now)? {
+                t_next = t_next.min(wake);
+            }
+        }
+        if ai < arrivals.len() {
+            t_next = t_next.min(arrivals[ai].at_us);
+        }
+        // Ticks drive the clock only while work is standing; across an
+        // idle arrival gap the clock jumps straight to the next
+        // arrival (ticks resume there via the catch-up above) instead
+        // of stepping through thousands of no-op control intervals.
+        let queued: usize =
+            boards.iter().map(|b| b.total_queued()).sum();
+        if opts.autoscale.is_some() && queued > 0 {
+            t_next = t_next.min(auto_state.next_tick_us);
+        }
+        if !t_next.is_finite() {
+            break;
+        }
+        debug_assert!(t_next > now, "fleet clock must advance");
+        now = t_next;
+    }
+    // Seal per-board snapshots and merge the aggregate.
+    let board_snaps: Vec<PerfSnapshot> = boards
+        .into_iter()
+        .map(|b| b.finish(now))
+        .collect();
+    let class_labels: Vec<String> =
+        classes.iter().map(|c| c.name.clone()).collect();
+    let model_labels: Vec<String> = registry
+        .entries()
+        .iter()
+        .map(|e| e.name.clone())
+        .collect();
+    let mut aggregate = PerfSnapshot::new(
+        "fleet",
+        opts.shed.name(),
+        &class_labels,
+        &model_labels,
+    );
+    for snap in &board_snaps {
+        aggregate.merge_from(snap);
+    }
+    if opts.autoscale.is_some()
+        && timeline
+            .last()
+            .map_or(false, |s| s.t_us < aggregate.makespan_us)
+    {
+        // Closing boundary sample at the true end of the run (the
+        // last batch finish, not the loop-exit time), so the
+        // time-weighted mean covers the whole makespan.
+        timeline.push(ReplicaSample {
+            t_us: aggregate.makespan_us,
+            per_model: count_active(&replicas, nm),
+        });
+    }
+    debug_assert_eq!(aggregate.total_offered() as usize, arrivals.len(),
+                     "router lost requests");
+    debug_assert_eq!(
+        aggregate.total_served() + aggregate.total_shed(),
+        aggregate.total_offered(),
+        "fleet conservation drifted"
+    );
+
+    // Time-weighted mean replica count per model.
+    let mean_replicas: Vec<f64> = if timeline.len() >= 2 {
+        let span = timeline.last().unwrap().t_us - timeline[0].t_us;
+        let mut mean = vec![0.0; nm];
+        for w in timeline.windows(2) {
+            let dt = w[1].t_us - w[0].t_us;
+            for m in 0..nm {
+                mean[m] += w[0].per_model[m] as f64 * dt;
+            }
+        }
+        mean.iter().map(|x| x / span.max(1e-12)).collect()
+    } else {
+        count_active(&replicas, nm)
+            .into_iter()
+            .map(|c| c as f64)
+            .collect()
+    };
+
+    Ok(FleetSnapshot {
+        router: opts.router.name().into(),
+        autoscaled: opts.autoscale.is_some(),
+        lanes: opts.lanes,
+        boards: board_snaps,
+        aggregate,
+        scale_events,
+        replica_timeline: timeline,
+        mean_replicas,
+    })
+}
+
+/// Non-draining replica count per model (warming included: committed
+/// capacity) — the one definition behind the timeline samples and the
+/// autoscaler's load signals.
+fn count_active(replicas: &[Vec<Replica>], nm: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; nm];
+    for r in replicas.iter().flat_map(|p| p.iter()) {
+        if !r.draining {
+            counts[r.model] += 1;
+        }
+    }
+    counts
+}
+
+/// Collect the boards eligible for a model-`m` request at `now` into
+/// `out` (a scratch buffer reused across arrivals — the routing hot
+/// path allocates nothing): those with an active, non-draining
+/// replica; falls back to boards hosting *any* replica of `m`
+/// (warming or draining) so the request is never lost.
+fn eligible_boards_into(
+    m: usize,
+    now: f64,
+    replicas: &[Vec<Replica>],
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    for (b, p) in replicas.iter().enumerate() {
+        if p.iter().any(|r| {
+            r.model == m && !r.draining && r.active_from <= now
+        }) {
+            out.push(b);
+        }
+    }
+    if out.is_empty() {
+        for (b, p) in replicas.iter().enumerate() {
+            if p.iter().any(|r| r.model == m) {
+                out.push(b);
+            }
+        }
+    }
+}
+
+/// Pick the board for one model-`m` arrival from the eligible set.
+/// `lat1_us` is the precomputed per-model cheapest batch-1 latency
+/// table pricing each board's backlog.
+fn route(
+    policy: RouterPolicy,
+    m: usize,
+    now: f64,
+    lat1_us: &[f64],
+    boards: &[BoardSim],
+    elig: &[usize],
+    rr: &mut [usize],
+) -> Result<usize> {
+    debug_assert!(!elig.is_empty(),
+                  "placement invariant lost: model {m} unhosted");
+    anyhow::ensure!(!elig.is_empty(),
+                    "no board hosts model index {m}");
+    Ok(match policy {
+        RouterPolicy::RoundRobin => {
+            let b = elig[rr[m] % elig.len()];
+            rr[m] += 1;
+            b
+        }
+        RouterPolicy::JoinShortestQueue => *elig
+            .iter()
+            .min_by_key(|&&b| (boards[b].total_queued(), b))
+            .unwrap(),
+        RouterPolicy::CostAware => {
+            let mut best = elig[0];
+            let mut best_score = f64::INFINITY;
+            for &b in elig {
+                let score =
+                    boards[b].backlog_residual_us(now, lat1_us);
+                if score < best_score {
+                    best = b;
+                    best_score = score;
+                }
+            }
+            best
+        }
+    })
+}
+
+/// One autoscaler control step: retire drained replicas, window the
+/// per-model signals, and scale up/down with hysteresis.
+#[allow(clippy::too_many_arguments)]
+fn autoscale_tick(
+    now: f64,
+    auto: &AutoscalePolicy,
+    eff_cost_us: &[f64],
+    lat1_us: &[f64],
+    boards: &mut [BoardSim],
+    replicas: &mut [Vec<Replica>],
+    state: &mut AutoState,
+    events: &mut Vec<ScaleEvent>,
+    timeline: &mut Vec<ReplicaSample>,
+) {
+    let nm = eff_cost_us.len();
+    let nb = boards.len();
+    // Retire draining replicas whose queues have emptied.
+    for (b, plist) in replicas.iter_mut().enumerate() {
+        plist.retain(|r| !(r.draining && boards[b].queue_len(r.model) == 0));
+    }
+    let counts = count_active(replicas, nm);
+    let max_per_model = if auto.max_per_model == 0 {
+        nb
+    } else {
+        auto.max_per_model
+    };
+    for m in 0..nm {
+        let offered: u64 = boards
+            .iter()
+            .map(|b| b.snapshot().per_model[m].offered)
+            .sum();
+        let met: u64 = boards
+            .iter()
+            .map(|b| b.snapshot().per_model[m].met)
+            .sum();
+        let d_off = offered - state.prev_offered[m];
+        let d_met = met - state.prev_met[m];
+        state.prev_offered[m] = offered;
+        state.prev_met[m] = met;
+        let attainment = if d_off > 0 {
+            d_met as f64 / d_off as f64
+        } else {
+            1.0
+        };
+        let eff_cost = eff_cost_us[m];
+        // Queue pressure: standing backlog (us of work per replica) —
+        // the predictive scale-up signal.
+        let queued: usize =
+            boards.iter().map(|b| b.queue_len(m)).sum();
+        let backlog_us =
+            queued as f64 * eff_cost / counts[m].max(1) as f64;
+        let pressured = backlog_us > auto.pressure * auto.interval_us;
+
+        // Scale up: unhealthy window or standing pressure.  The streak
+        // is not reset after acting — while the signal persists the
+        // fleet adds one replica per tick (fast ramp); it resets only
+        // when the signal clears.
+        if (d_off > 0 && attainment < auto.up_attainment) || pressured {
+            state.up_streak[m] += 1;
+        } else {
+            state.up_streak[m] = 0;
+        }
+        let total_reps = replicas
+            .iter()
+            .flat_map(|p| p.iter())
+            .filter(|r| r.model == m)
+            .count();
+        if state.up_streak[m] >= auto.hysteresis {
+            // Cheapest capacity first: a still-warm draining replica is
+            // reclaimed by cancelling its drain — no warm-up to pay.
+            let undrain = (0..nb).find(|&b| {
+                replicas[b].iter().any(|r| r.model == m && r.draining)
+            });
+            if let Some(b) = undrain {
+                if let Some(r) = replicas[b]
+                    .iter_mut()
+                    .find(|r| r.model == m && r.draining)
+                {
+                    r.draining = false;
+                }
+                events.push(ScaleEvent {
+                    t_us: now,
+                    model: m,
+                    board: b,
+                    up: true,
+                });
+            } else if total_reps < max_per_model {
+                // Otherwise warm a fresh replica on the least-loaded
+                // board (by *current* standing work, the same signal
+                // the cost-aware router uses) without one.
+                let mut target: Option<(usize, f64)> = None;
+                for b in 0..nb {
+                    if replicas[b].iter().any(|r| r.model == m) {
+                        continue;
+                    }
+                    let load_b =
+                        boards[b].backlog_residual_us(now, lat1_us);
+                    if target.map_or(true, |(_, best)| load_b < best) {
+                        target = Some((b, load_b));
+                    }
+                }
+                if let Some((b, _)) = target {
+                    // The replica serves once its warm-up completes —
+                    // which may start late if the board's GPU lanes
+                    // are busy.
+                    let ready =
+                        boards[b].charge_warmup(now, auto.warmup_us);
+                    replicas[b].push(Replica {
+                        model: m,
+                        active_from: ready,
+                        draining: false,
+                    });
+                    events.push(ScaleEvent {
+                        t_us: now,
+                        model: m,
+                        board: b,
+                        up: true,
+                    });
+                }
+            }
+        }
+
+        // Scale down: healthy, lightly loaded AND no standing backlog
+        // (`!pressured` keeps the up and down branches mutually
+        // exclusive — a backlogged-but-quiet window must not drain)
+        // for `hysteresis` consecutive ticks.  Never drains the last
+        // replica.
+        let load = d_off as f64 * eff_cost
+            / (auto.interval_us * counts[m].max(1) as f64);
+        if counts[m] > 1
+            && attainment >= auto.up_attainment
+            && load < auto.down_load
+            && !pressured
+        {
+            state.down_streak[m] += 1;
+        } else {
+            state.down_streak[m] = 0;
+        }
+        if state.down_streak[m] >= auto.hysteresis && counts[m] > 1 {
+            // Victim preference: a still-warming replica first (no
+            // traffic routes to it yet, so no serving capacity is
+            // disturbed — its already-charged warm-up lane time is a
+            // sunk cost either way); otherwise the *serving* board
+            // with the fewest queued requests of m (fastest
+            // retirement) — but never the last serving replica.
+            let warming = (0..nb).find(|&b| {
+                replicas[b].iter().any(|r| {
+                    r.model == m && !r.draining && r.active_from > now
+                })
+            });
+            let target = warming.or_else(|| {
+                let serving: Vec<usize> = (0..nb)
+                    .filter(|&b| {
+                        replicas[b].iter().any(|r| {
+                            r.model == m
+                                && !r.draining
+                                && r.active_from <= now
+                        })
+                    })
+                    .collect();
+                if serving.len() > 1 {
+                    serving
+                        .into_iter()
+                        .min_by_key(|&b| (boards[b].queue_len(m), b))
+                } else {
+                    None
+                }
+            });
+            if let Some(b) = target {
+                // A board hosts at most one replica per model, so this
+                // finds exactly the chosen victim.
+                if let Some(r) = replicas[b]
+                    .iter_mut()
+                    .find(|r| r.model == m && !r.draining)
+                {
+                    r.draining = true;
+                }
+                events.push(ScaleEvent {
+                    t_us: now,
+                    model: m,
+                    board: b,
+                    up: false,
+                });
+            }
+        }
+    }
+    timeline.push(ReplicaSample {
+        t_us: now,
+        per_model: count_active(replicas, nm),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_policy_parses_and_names() {
+        for (s, p) in [
+            ("round-robin", RouterPolicy::RoundRobin),
+            ("rr", RouterPolicy::RoundRobin),
+            ("jsq", RouterPolicy::JoinShortestQueue),
+            ("join-shortest-queue", RouterPolicy::JoinShortestQueue),
+            ("cost-aware", RouterPolicy::CostAware),
+        ] {
+            assert_eq!(RouterPolicy::parse(s), Some(p));
+        }
+        assert_eq!(RouterPolicy::parse("nope"), None);
+        for p in [
+            RouterPolicy::RoundRobin,
+            RouterPolicy::JoinShortestQueue,
+            RouterPolicy::CostAware,
+        ] {
+            assert_eq!(RouterPolicy::parse(p.name()), Some(p));
+        }
+    }
+
+    #[test]
+    fn spread_placement_covers_every_model() {
+        let p = spread_placement(4, &[1, 2, 4]);
+        assert_eq!(p.len(), 4);
+        // model 0 on board 0; model 1 on boards 1,2; model 2 on all.
+        assert_eq!(p[0], vec![0, 2]);
+        assert_eq!(p[1], vec![1, 2]);
+        assert_eq!(p[2], vec![1, 2]);
+        assert_eq!(p[3], vec![2]);
+        // zero-replica requests still land one replica
+        let q = spread_placement(2, &[0]);
+        assert_eq!(q.iter().flatten().count(), 1);
+        // replica counts above the board count are clamped
+        let r = spread_placement(2, &[5]);
+        assert_eq!(r.iter().flatten().count(), 2);
+    }
+
+    #[test]
+    fn fleet_options_defaults_are_well_formed() {
+        let o = FleetOptions::new(3, 2);
+        assert_eq!(o.placement.len(), 3);
+        assert_eq!(o.router, RouterPolicy::CostAware);
+        assert!(o.autoscale.is_none());
+        let covered: Vec<usize> =
+            o.placement.iter().flatten().copied().collect();
+        assert!(covered.contains(&0) && covered.contains(&1));
+        let a = AutoscalePolicy::default();
+        assert!(a.hysteresis >= 1 && a.interval_us > 0.0);
+        assert!(a.down_load < a.up_attainment);
+    }
+}

@@ -14,22 +14,35 @@
 //!   scheduler (the Sparse-DySta-style dynamic tier over SparOA's
 //!   static per-model schedules), plus the static-split baseline it is
 //!   benchmarked against (cluster).
+//! * [`run_fleet`] — N simulated boards (each an independent board
+//!   scheduler over a per-board [`LaneMatrix`]) behind a front-tier
+//!   [`RouterPolicy`], with replica autoscaling driven by the
+//!   per-board [`PerfSnapshot`] signals (fleet).
 //! * [`ArrivalPattern`] / [`Tenant`] — Poisson, bursty MMPP, diurnal
 //!   and JSON-trace-replay workload generators (workload).
 //! * [`PerfSnapshot`] — per-class/per-model p50/p95/p99, shed rate,
 //!   attainment and utilization, with JSON output (report).
 //!
-//! The `serve-multi` CLI subcommand and the `fig13_multimodel` bench
-//! drive the [`demo`] fleet end-to-end; `rust/tests/serve_multitenant.rs`
-//! property-tests the conservation/fairness invariants.
+//! The `serve-multi` / `serve-fleet` CLI subcommands and the
+//! `fig13_multimodel` / `fig_fleet` benches drive the [`demo`] fleet
+//! end-to-end; `rust/tests/serve_multitenant.rs` and
+//! `rust/tests/serve_fleet.rs` property-test the
+//! conservation/fairness/routing/autoscaling invariants.
 
 pub mod cluster;
+pub mod fleet;
 pub mod registry;
 pub mod report;
 pub mod slo;
 pub mod workload;
 
-pub use cluster::{run_cluster, ClusterOptions, ClusterPolicy};
+pub use cluster::{
+    run_cluster, ClusterOptions, ClusterPolicy, LaneMatrix,
+};
+pub use fleet::{
+    run_fleet, spread_placement, AutoscalePolicy, FleetOptions,
+    FleetSnapshot, ReplicaSample, RouterPolicy, ScaleEvent,
+};
 pub use registry::{ModelEntry, ModelRegistry};
 pub use report::{GroupStats, PerfSnapshot};
 pub use slo::{AdmissionQueues, QueuedReq, ShedPolicy, ShedReq, SloClass};

@@ -24,7 +24,9 @@ use std::sync::Mutex;
 
 /// One registered model and its precomputed serving plans.
 pub struct ModelEntry {
+    /// Model name (unique within the registry).
     pub name: String,
+    /// The warmed session this entry serves through.
     pub session: Session,
     /// The session's own (hybrid/GPU-leaning) schedule drives GPU-side
     /// dispatch; this projection drives CPU-side dispatch.
@@ -77,6 +79,26 @@ impl ModelEntry {
             .insert(key, rep.makespan_us);
         Ok(rep.makespan_us)
     }
+
+    /// Cheapest makespan (us) of one `batch`-sized inference across
+    /// both placements — the router's request-cost estimate.
+    pub fn cheapest_latency_us(&self, batch: usize) -> Result<f64> {
+        Ok(self
+            .latency_us(Proc::Cpu, batch)?
+            .min(self.latency_us(Proc::Gpu, batch)?))
+    }
+
+    /// Per-request cost (us) at the full Algorithm-2 batch on whichever
+    /// placement amortizes better — one replica's marginal serving cost
+    /// at peak efficiency, i.e. the reciprocal of its max throughput.
+    /// The fleet autoscaler's load signal.
+    pub fn efficient_cost_us(&self) -> Result<f64> {
+        let g = self.latency_us(Proc::Gpu, self.gpu_batch_cap)?
+            / self.gpu_batch_cap.max(1) as f64;
+        let c = self.latency_us(Proc::Cpu, self.cpu_batch_cap)?
+            / self.cpu_batch_cap.max(1) as f64;
+        Ok(g.min(c))
+    }
 }
 
 /// The set of models a serving cluster hosts.
@@ -86,6 +108,7 @@ pub struct ModelRegistry {
 }
 
 impl ModelRegistry {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -140,22 +163,27 @@ impl ModelRegistry {
         Ok(self.entries.len() - 1)
     }
 
+    /// Number of registered models.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when no models are registered.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// The entry at registry index `idx` (panics when out of range).
     pub fn get(&self, idx: usize) -> &ModelEntry {
         &self.entries[idx]
     }
 
+    /// All entries, in registration order (index == registry index).
     pub fn entries(&self) -> &[ModelEntry] {
         &self.entries
     }
 
+    /// Registry index of the model named `name`.
     pub fn index_of(&self, name: &str) -> Result<usize> {
         self.entries
             .iter()
@@ -226,5 +254,28 @@ mod tests {
         let _ = e.latency_us(crate::device::Proc::Cpu, 4).unwrap();
         let _ = e.latency_us(p, 8).unwrap();
         assert_eq!(e.probe_cache.lock().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn cost_helpers_bound_each_other() {
+        use crate::device::Proc;
+        let mut reg = ModelRegistry::new();
+        reg.register(session("costs", 2.0, 0.3)).unwrap();
+        let e = reg.get(0);
+        // Cheapest batch-1 latency is the min over both placements.
+        let cheapest = e.cheapest_latency_us(1).unwrap();
+        assert_eq!(
+            cheapest,
+            e.latency_us(Proc::Cpu, 1)
+                .unwrap()
+                .min(e.latency_us(Proc::Gpu, 1).unwrap())
+        );
+        // Batching amortizes: the per-request cost at the full Alg.2
+        // batch stays at or below the batch-1 latency (10% headroom
+        // for simulator noise at tiny caps).
+        let eff = e.efficient_cost_us().unwrap();
+        assert!(eff > 0.0);
+        assert!(eff <= cheapest * 1.1,
+                "efficient {eff} > batch-1 {cheapest}");
     }
 }

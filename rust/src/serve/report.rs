@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 /// Aggregated statistics for one group (an SLO class or a model).
 #[derive(Debug, Clone)]
 pub struct GroupStats {
+    /// Group label (class or model name).
     pub label: String,
     /// Requests offered (admitted + shed at admission).
     pub offered: u64,
@@ -22,10 +23,12 @@ pub struct GroupStats {
     pub shed_admission: u64,
     /// Shed after expiring in queue.
     pub shed_expired: u64,
+    /// End-to-end latency distribution (us) of served requests.
     pub hist: LatencyHistogram,
 }
 
 impl GroupStats {
+    /// Zeroed stats for one labelled group.
     pub fn new(label: &str) -> Self {
         GroupStats {
             label: label.into(),
@@ -38,6 +41,7 @@ impl GroupStats {
         }
     }
 
+    /// Total shed (admission + expiry), in requests.
     pub fn shed(&self) -> u64 {
         self.shed_admission + self.shed_expired
     }
@@ -56,6 +60,7 @@ impl GroupStats {
         self.met as f64 / self.offered as f64
     }
 
+    /// Fraction of offered requests shed, in [0, 1].
     pub fn shed_rate(&self) -> f64 {
         if self.offered == 0 {
             return 0.0;
@@ -73,6 +78,7 @@ impl GroupStats {
         }
     }
 
+    /// Compact JSON object (counts, rates in [0, 1], latency in us).
     pub fn to_json(&self) -> Value {
         let mut o = BTreeMap::new();
         o.insert("label".into(), Value::Str(self.label.clone()));
@@ -90,19 +96,28 @@ impl GroupStats {
 /// One serving run's full report.
 #[derive(Debug, Clone)]
 pub struct PerfSnapshot {
-    /// Cluster policy name ("cluster" / "static-split").
+    /// Cluster policy / board label ("cluster", "static-split", ...).
     pub policy: String,
+    /// Shed policy name ("reject-new" / "shed-oldest" / ...).
     pub shed_policy: String,
+    /// End-to-end virtual-time span of the run, microseconds.
     pub makespan_us: f64,
+    /// Accumulated CPU-lane busy time, microseconds.
     pub cpu_busy_us: f64,
+    /// Accumulated GPU-lane busy time, microseconds.
     pub gpu_busy_us: f64,
+    /// Batches dispatched.
     pub n_batches: u64,
+    /// Requests dispatched (sum of batch sizes).
     pub dispatched: u64,
+    /// Outcomes grouped by SLO class.
     pub per_class: Vec<GroupStats>,
+    /// Outcomes grouped by model.
     pub per_model: Vec<GroupStats>,
 }
 
 impl PerfSnapshot {
+    /// Zeroed snapshot with one [`GroupStats`] per class and model.
     pub fn new(
         policy: &str,
         shed_policy: &str,
@@ -128,11 +143,14 @@ impl PerfSnapshot {
         }
     }
 
+    /// Count one offered request against its class and model groups.
     pub fn record_offered(&mut self, class: usize, model: usize) {
         self.per_class[class].offered += 1;
         self.per_model[model].offered += 1;
     }
 
+    /// Count one served request; `latency_us` is end-to-end
+    /// (arrival to batch finish), `met` whether it beat its deadline.
     pub fn record_served(&mut self, class: usize, model: usize,
                          latency_us: f64, met: bool) {
         for g in [&mut self.per_class[class], &mut self.per_model[model]] {
@@ -144,6 +162,8 @@ impl PerfSnapshot {
         }
     }
 
+    /// Count one shed request (`at_admission`: rejected at admission
+    /// vs expired in queue).
     pub fn record_shed(&mut self, class: usize, model: usize,
                        at_admission: bool) {
         for g in [&mut self.per_class[class], &mut self.per_model[model]] {
@@ -155,15 +175,49 @@ impl PerfSnapshot {
         }
     }
 
+    /// Fold another snapshot's counters into this one: counts and busy
+    /// times add, latency histograms merge, makespan takes the max.
+    /// Group labels must match (same class table / registry) — the
+    /// fleet tier uses this to build its aggregate report from
+    /// per-board snapshots.
+    pub fn merge_from(&mut self, other: &PerfSnapshot) {
+        debug_assert_eq!(self.per_class.len(), other.per_class.len());
+        debug_assert_eq!(self.per_model.len(), other.per_model.len());
+        self.makespan_us = self.makespan_us.max(other.makespan_us);
+        self.cpu_busy_us += other.cpu_busy_us;
+        self.gpu_busy_us += other.gpu_busy_us;
+        self.n_batches += other.n_batches;
+        self.dispatched += other.dispatched;
+        for (dst, src) in self
+            .per_class
+            .iter_mut()
+            .zip(&other.per_class)
+            .chain(self.per_model.iter_mut().zip(&other.per_model))
+        {
+            debug_assert_eq!(dst.label, src.label,
+                             "merging mismatched groups");
+            dst.offered += src.offered;
+            dst.served += src.served;
+            dst.met += src.met;
+            dst.shed_admission += src.shed_admission;
+            dst.shed_expired += src.shed_expired;
+            dst.hist.merge(&src.hist);
+        }
+    }
+
+    /// Requests offered, across all classes.
     pub fn total_offered(&self) -> u64 {
         self.per_class.iter().map(|g| g.offered).sum()
     }
+    /// Requests served to completion, across all classes.
     pub fn total_served(&self) -> u64 {
         self.per_class.iter().map(|g| g.served).sum()
     }
+    /// Requests shed (admission + expiry), across all classes.
     pub fn total_shed(&self) -> u64 {
         self.per_class.iter().map(|g| g.shed()).sum()
     }
+    /// Requests served within deadline, across all classes.
     pub fn total_met(&self) -> u64 {
         self.per_class.iter().map(|g| g.met).sum()
     }
@@ -178,6 +232,8 @@ impl PerfSnapshot {
         self.total_met() as f64 / offered as f64
     }
 
+    /// CPU busy fraction over the makespan, clamped to [0, 1] (a
+    /// multi-lane board can accumulate more busy-us than makespan).
     pub fn cpu_util(&self) -> f64 {
         if self.makespan_us > 0.0 {
             (self.cpu_busy_us / self.makespan_us).min(1.0)
@@ -185,6 +241,7 @@ impl PerfSnapshot {
             0.0
         }
     }
+    /// GPU busy fraction over the makespan, clamped to [0, 1].
     pub fn gpu_util(&self) -> f64 {
         if self.makespan_us > 0.0 {
             (self.gpu_busy_us / self.makespan_us).min(1.0)
@@ -192,6 +249,7 @@ impl PerfSnapshot {
             0.0
         }
     }
+    /// Mean dispatched batch size, in requests.
     pub fn mean_batch(&self) -> f64 {
         if self.n_batches > 0 {
             self.dispatched as f64 / self.n_batches as f64
@@ -200,6 +258,8 @@ impl PerfSnapshot {
         }
     }
 
+    /// Full JSON object: scalars (us, rates in [0, 1]) plus per-class
+    /// and per-model group arrays.
     pub fn to_json(&self) -> Value {
         let mut o = BTreeMap::new();
         o.insert("policy".into(), Value::Str(self.policy.clone()));
@@ -225,6 +285,7 @@ impl PerfSnapshot {
         Value::Obj(o)
     }
 
+    /// [`PerfSnapshot::to_json`] rendered to a string.
     pub fn to_json_string(&self) -> String {
         json::to_string(&self.to_json())
     }
@@ -317,5 +378,42 @@ mod tests {
             < 1e-9);
         // table renders without panicking
         s.class_table("t").print();
+    }
+
+    #[test]
+    fn merge_sums_counters_and_histograms() {
+        let labels = (
+            vec!["hi".to_string(), "lo".to_string()],
+            vec!["m0".to_string()],
+        );
+        let mut a = PerfSnapshot::new("fleet", "reject-new",
+                                      &labels.0, &labels.1);
+        let mut b = a.clone();
+        a.record_offered(0, 0);
+        a.record_served(0, 0, 1_000.0, true);
+        a.makespan_us = 50_000.0;
+        a.cpu_busy_us = 10_000.0;
+        a.n_batches = 1;
+        a.dispatched = 1;
+        b.record_offered(1, 0);
+        b.record_offered(1, 0);
+        b.record_served(1, 0, 9_000.0, false);
+        b.record_shed(1, 0, false);
+        b.makespan_us = 80_000.0;
+        b.gpu_busy_us = 20_000.0;
+        b.n_batches = 1;
+        b.dispatched = 1;
+        a.merge_from(&b);
+        assert_eq!(a.total_offered(), 3);
+        assert_eq!(a.total_served(), 2);
+        assert_eq!(a.total_shed(), 1);
+        assert_eq!(a.total_met(), 1);
+        assert_eq!(a.n_batches, 2);
+        assert!((a.makespan_us - 80_000.0).abs() < 1e-9);
+        assert!((a.cpu_busy_us - 10_000.0).abs() < 1e-9);
+        assert!((a.gpu_busy_us - 20_000.0).abs() < 1e-9);
+        assert_eq!(a.per_class[0].hist.count()
+                   + a.per_class[1].hist.count(), 2);
+        assert_eq!(a.per_model[0].hist.count(), 2);
     }
 }

@@ -26,6 +26,9 @@ pub struct SloClass {
 }
 
 impl SloClass {
+    /// Build a class: `deadline_us` is the end-to-end budget in
+    /// microseconds, `queue_cap` the outstanding-request bound,
+    /// `weight` the (>= 1.0) scheduling weight.
     pub fn new(name: &str, deadline_us: f64, queue_cap: usize,
                weight: f64) -> Self {
         SloClass { name: name.into(), deadline_us, queue_cap, weight }
@@ -53,6 +56,8 @@ pub enum ShedPolicy {
 }
 
 impl ShedPolicy {
+    /// Parse a CLI/config spelling (`reject-new` | `shed-oldest` |
+    /// `shed-lowest-class`).
     pub fn parse(s: &str) -> Option<ShedPolicy> {
         Some(match s {
             "reject-new" => ShedPolicy::RejectNew,
@@ -61,6 +66,7 @@ impl ShedPolicy {
             _ => return None,
         })
     }
+    /// Canonical spelling, the inverse of [`ShedPolicy::parse`].
     pub fn name(self) -> &'static str {
         match self {
             ShedPolicy::RejectNew => "reject-new",
@@ -73,19 +79,30 @@ impl ShedPolicy {
 /// One admitted, not-yet-served request.
 #[derive(Debug, Clone, Copy)]
 pub struct QueuedReq {
+    /// Global request id (index into the merged arrival stream).
     pub req: usize,
+    /// Index into the tenant set.
     pub tenant: usize,
+    /// Registry index of the target model.
     pub model: usize,
+    /// SLO class index (0 = highest priority).
     pub class: usize,
+    /// Admission time, microseconds of virtual time.
     pub arrival_us: f64,
+    /// Absolute deadline, microseconds (`arrival_us` + class budget).
     pub deadline_us: f64,
 }
 
 /// A request shed before service, and why.
 #[derive(Debug, Clone, Copy)]
 pub struct ShedReq {
+    /// Global request id (index into the merged arrival stream).
     pub req: usize,
+    /// Index into the tenant set.
     pub tenant: usize,
+    /// Registry index of the model the request targeted.
+    pub model: usize,
+    /// SLO class index (0 = highest priority).
     pub class: usize,
     /// true when shed at admission, false when expired in queue.
     pub at_admission: bool,
@@ -108,12 +125,14 @@ pub struct AdmissionQueues {
     queues: Vec<Vec<QueuedReq>>,
     /// Outstanding queued requests per class (across models).
     outstanding: Vec<usize>,
+    /// Requests admitted so far (count).
     pub admitted: u64,
     /// Everything shed so far (admission rejections + queue expiries).
     pub shed: Vec<ShedReq>,
 }
 
 impl AdmissionQueues {
+    /// Empty queues for `n_models` models under `classes` budgets.
     pub fn new(classes: &[SloClass], policy: ShedPolicy,
                n_models: usize) -> Self {
         AdmissionQueues {
@@ -126,14 +145,17 @@ impl AdmissionQueues {
         }
     }
 
+    /// The configured SLO class table.
     pub fn classes(&self) -> &[SloClass] {
         &self.classes
     }
 
+    /// Outstanding (queued, unserved) requests across all models.
     pub fn total_queued(&self) -> usize {
         self.outstanding.iter().sum()
     }
 
+    /// Outstanding requests queued for one model.
     pub fn queue_len(&self, model: usize) -> usize {
         self.queues[model].len()
     }
@@ -163,13 +185,14 @@ impl AdmissionQueues {
             match self.policy {
                 ShedPolicy::RejectNew => {
                     self.shed.push(ShedReq {
-                        req, tenant, class, at_admission: true });
+                        req, tenant, model, class, at_admission: true });
                     return;
                 }
                 ShedPolicy::ShedOldest => {
                     if !self.evict_oldest_of_class(class) {
                         self.shed.push(ShedReq {
-                            req, tenant, class, at_admission: true });
+                            req, tenant, model, class,
+                            at_admission: true });
                         return;
                     }
                 }
@@ -183,7 +206,8 @@ impl AdmissionQueues {
                         Some(vc) if self.evict_oldest_of_class(vc) => {}
                         _ => {
                             self.shed.push(ShedReq {
-                                req, tenant, class, at_admission: true });
+                                req, tenant, model, class,
+                                at_admission: true });
                             return;
                         }
                     }
@@ -219,6 +243,7 @@ impl AdmissionQueues {
         self.shed.push(ShedReq {
             req: victim.req,
             tenant: victim.tenant,
+            model: victim.model,
             class: victim.class,
             at_admission: true,
         });
@@ -237,6 +262,7 @@ impl AdmissionQueues {
                     self.shed.push(ShedReq {
                         req: victim.req,
                         tenant: victim.tenant,
+                        model: victim.model,
                         class: victim.class,
                         at_admission: false,
                     });

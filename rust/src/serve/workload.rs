@@ -131,6 +131,7 @@ impl ArrivalPattern {
         }
     }
 
+    /// True when the pattern emits no requests.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -149,11 +150,13 @@ impl ArrivalPattern {
 /// One workload stream: a model, an SLO class, an arrival process.
 #[derive(Debug, Clone)]
 pub struct Tenant {
+    /// Display name of the stream.
     pub name: String,
     /// Model name in the [`crate::serve::ModelRegistry`].
     pub model: String,
     /// Index into the cluster's SLO class table (0 = highest priority).
     pub class: usize,
+    /// The stream's arrival process.
     pub pattern: ArrivalPattern,
 }
 
@@ -164,6 +167,7 @@ pub struct Arrival {
     pub req: usize,
     /// Index into the tenant set.
     pub tenant: usize,
+    /// Arrival time, microseconds of virtual time.
     pub at_us: f64,
 }
 

@@ -1,0 +1,555 @@
+//! Distributed multi-board serving invariants — always-on (synthetic
+//! models + checked-in device profiles; no `make artifacts` gating).
+//!
+//! Every scenario self-calibrates its arrival rates and deadlines from
+//! the registry's memoized latency oracle, so the tests track the
+//! synthetic models' real costs instead of hard-coding magic rates:
+//!
+//! * conservation: every arrival is routed to exactly one board and
+//!   settles exactly once (served or shed) under every router, shed
+//!   policy and board count;
+//! * router ordering: under skewed load (the heavy model pinned to half
+//!   the boards), cost-aware routing beats round-robin on aggregate
+//!   attainment — the acceptance criterion;
+//! * autoscaler convergence: under steady overload the replica count
+//!   ramps up, then stabilizes (no scale events in the tail);
+//! * autoscaler value: under a diurnal trace the autoscaled fleet sheds
+//!   less than a static fleet of the same mean replica count;
+//! * the fleet JSON report round-trips, and malformed traces fail with
+//!   useful errors instead of panics.
+
+use sparoa::api::SessionBuilder;
+use sparoa::bench_support::{device_profile, prop};
+use sparoa::device::Proc;
+use sparoa::graph::ModelGraph;
+use sparoa::serve::{
+    merge_arrivals, run_fleet, spread_placement, ArrivalPattern,
+    AutoscalePolicy, FleetOptions, FleetSnapshot, ModelRegistry,
+    RouterPolicy, ShedPolicy, SloClass, Tenant,
+};
+use sparoa::util::json;
+
+/// heavy = 0, mid = 1, light = 2 (the demo fleet's synthetic shapes).
+fn registry3() -> ModelRegistry {
+    let dev = device_profile("agx_orin");
+    let mut reg = ModelRegistry::new();
+    for (name, blocks, scale, sparsity) in [
+        ("heavy", 8, 6.0, 0.1),
+        ("mid", 6, 1.5, 0.45),
+        ("light", 4, 0.3, 0.75),
+    ] {
+        let s = SessionBuilder::new()
+            .with_graph(ModelGraph::synthetic(
+                name, blocks, scale, sparsity))
+            .with_device(dev.clone())
+            .policy("greedy")
+            .build()
+            .unwrap();
+        reg.register(s).unwrap();
+    }
+    reg
+}
+
+/// Per-model calibration: (max req/s of one replica's best lane at the
+/// full Alg.2 batch, batch-1 cheapest latency us, full-batch latency us).
+fn calibrate(reg: &ModelRegistry, m: usize) -> (f64, f64, f64) {
+    let e = reg.get(m);
+    let cap = e.gpu_batch_cap.max(1);
+    let batch_lat = e.latency_us(Proc::Gpu, cap).unwrap();
+    let gpu_rate = cap as f64 / batch_lat * 1e6;
+    let ccap = e.cpu_batch_cap.max(1);
+    let cpu_batch_lat = e.latency_us(Proc::Cpu, ccap).unwrap();
+    let cpu_rate = ccap as f64 / cpu_batch_lat * 1e6;
+    let lat1 = e.cheapest_latency_us(1).unwrap();
+    (gpu_rate.max(cpu_rate), lat1, batch_lat)
+}
+
+/// Interactive / standard / best-effort classes scaled to the heavy
+/// model's full-batch latency (so one queued heavy batch endangers an
+/// interactive deadline, moderate backlog endangers standard).
+fn classes_for(reg: &ModelRegistry) -> Vec<SloClass> {
+    let (_, heavy_lat1, heavy_batch) = calibrate(reg, 0);
+    let (_, mid_lat1, _) = calibrate(reg, 1);
+    let interactive = (1.2 * heavy_batch).max(4.0 * mid_lat1);
+    let standard = (3.5 * heavy_batch).max(3.0 * heavy_lat1);
+    vec![
+        SloClass::new("interactive", interactive, 128, 4.0),
+        SloClass::new("standard", standard, 256, 2.0),
+        SloClass::new("best-effort", 15.0 * heavy_batch, 512, 1.0),
+    ]
+}
+
+fn check_conserved(snap: &FleetSnapshot, n_arrivals: usize) {
+    assert_eq!(snap.aggregate.total_offered() as usize, n_arrivals,
+               "router lost or duplicated requests");
+    assert_eq!(
+        snap.aggregate.total_served() + snap.aggregate.total_shed(),
+        snap.aggregate.total_offered(),
+        "fleet conservation broken"
+    );
+    let board_offered: u64 = snap
+        .boards
+        .iter()
+        .map(|b| b.total_offered())
+        .sum();
+    assert_eq!(board_offered, snap.aggregate.total_offered(),
+               "per-board offered does not sum to aggregate");
+    for (i, b) in snap.boards.iter().enumerate() {
+        assert_eq!(b.total_served() + b.total_shed(), b.total_offered(),
+                   "board {i} unbalanced");
+    }
+}
+
+#[test]
+fn conservation_across_router_and_boards() {
+    let reg = registry3();
+    let classes = classes_for(&reg);
+    let (heavy_rate, _, _) = calibrate(&reg, 0);
+    let (mid_rate, _, _) = calibrate(&reg, 1);
+    let routers = [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::JoinShortestQueue,
+        RouterPolicy::CostAware,
+    ];
+    let sheds = [
+        ShedPolicy::RejectNew,
+        ShedPolicy::ShedOldest,
+        ShedPolicy::ShedLowestClass,
+    ];
+    prop::check(
+        "fleet-conservation",
+        8,
+        4242,
+        |rng| {
+            let nb = 2 + rng.below(3);
+            let router = routers[rng.below(3)];
+            let shed = sheds[rng.below(3)];
+            // Random replica spread, every model covered by
+            // construction.
+            let reps = [
+                1 + rng.below(nb),
+                1 + rng.below(nb),
+                1 + rng.below(nb),
+            ];
+            // Overload factor 0.3..2.5x of the hosted capacity.
+            let load = rng.range(0.3, 2.5);
+            let seed = rng.next_u64() % 10_000;
+            (nb, router, shed, reps, load, seed)
+        },
+        |&(nb, router, shed, reps, load, seed)| {
+            let tenants = vec![
+                Tenant {
+                    name: "heavy-std".into(),
+                    model: "heavy".into(),
+                    class: 1,
+                    pattern: ArrivalPattern::Poisson {
+                        rate_per_s: load * heavy_rate * reps[0] as f64,
+                        n: 120,
+                    },
+                },
+                Tenant {
+                    name: "mid-inter".into(),
+                    model: "mid".into(),
+                    class: 0,
+                    pattern: ArrivalPattern::Mmpp {
+                        rate_lo_per_s: 0.05 * mid_rate,
+                        rate_hi_per_s: 0.6 * mid_rate * load,
+                        mean_dwell_s: 0.05,
+                        n: 120,
+                    },
+                },
+                Tenant {
+                    name: "light-be".into(),
+                    model: "light".into(),
+                    class: 2,
+                    pattern: ArrivalPattern::Poisson {
+                        rate_per_s: load * heavy_rate,
+                        n: 80,
+                    },
+                },
+            ];
+            let arrivals = merge_arrivals(&tenants, seed);
+            let opts = FleetOptions {
+                router,
+                shed,
+                placement: spread_placement(nb, &reps),
+                ..FleetOptions::new(nb, 3)
+            };
+            let snap =
+                run_fleet(&reg, &classes, &tenants, &arrivals, &opts)
+                    .map_err(|e| e.to_string())?;
+            let n = arrivals.len();
+            if snap.aggregate.total_offered() as usize != n {
+                return Err(format!(
+                    "offered {} != arrivals {n}",
+                    snap.aggregate.total_offered()
+                ));
+            }
+            if snap.aggregate.total_served()
+                + snap.aggregate.total_shed()
+                != snap.aggregate.total_offered()
+            {
+                return Err("lost requests".into());
+            }
+            let per_board: u64 = snap
+                .boards
+                .iter()
+                .map(|b| b.total_offered())
+                .sum();
+            if per_board != snap.aggregate.total_offered() {
+                return Err("board/aggregate mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cost_aware_routing_beats_round_robin_under_skew() {
+    // Skew: the heavy model lives only on boards 0 and 1 and keeps
+    // their GPUs busy with full batches; interactive mid traffic is
+    // hosted everywhere.  Round-robin blindly sends half the
+    // interactive stream onto the backlogged heavy boards; cost-aware
+    // steers it to the idle ones.
+    let reg = registry3();
+    let classes = classes_for(&reg);
+    let (heavy_rate, _, _) = calibrate(&reg, 0);
+    let (mid_rate, _, _) = calibrate(&reg, 1);
+    let (light_rate, _, _) = calibrate(&reg, 2);
+    let placement = vec![
+        vec![0, 1, 2],
+        vec![0, 1, 2],
+        vec![1, 2],
+        vec![1, 2],
+    ];
+    // Heavy: 85% of its two hosts' combined best-lane capacity.
+    let heavy_per_s = 0.85 * 2.0 * heavy_rate;
+    let n_heavy = 900usize;
+    let horizon_s = n_heavy as f64 / heavy_per_s;
+    let mid_per_s = 0.05 * 4.0 * mid_rate;
+    let light_per_s = 0.015 * 4.0 * light_rate;
+    let n_mid = ((mid_per_s * horizon_s) as usize).max(200);
+    let n_light = ((light_per_s * horizon_s) as usize).max(120);
+
+    let mut met = std::collections::HashMap::new();
+    for router in [RouterPolicy::RoundRobin, RouterPolicy::CostAware] {
+        let mut total_met = 0u64;
+        for seed in [3u64, 7u64, 11u64] {
+            let tenants = vec![
+                Tenant {
+                    name: "heavy-std".into(),
+                    model: "heavy".into(),
+                    class: 1,
+                    pattern: ArrivalPattern::Poisson {
+                        rate_per_s: heavy_per_s,
+                        n: n_heavy,
+                    },
+                },
+                Tenant {
+                    name: "mid-inter".into(),
+                    model: "mid".into(),
+                    class: 0,
+                    pattern: ArrivalPattern::Poisson {
+                        rate_per_s: mid_per_s,
+                        n: n_mid,
+                    },
+                },
+                Tenant {
+                    name: "light-be".into(),
+                    model: "light".into(),
+                    class: 2,
+                    pattern: ArrivalPattern::Poisson {
+                        rate_per_s: light_per_s,
+                        n: n_light,
+                    },
+                },
+            ];
+            let arrivals = merge_arrivals(&tenants, seed);
+            let opts = FleetOptions {
+                router,
+                placement: placement.clone(),
+                ..FleetOptions::new(4, 3)
+            };
+            let snap =
+                run_fleet(&reg, &classes, &tenants, &arrivals, &opts)
+                    .unwrap();
+            check_conserved(&snap, arrivals.len());
+            total_met += snap.aggregate.total_met();
+        }
+        met.insert(router.name(), total_met);
+    }
+    assert!(
+        met["cost-aware"] > met["round-robin"],
+        "cost-aware met {} <= round-robin met {}",
+        met["cost-aware"], met["round-robin"]
+    );
+}
+
+#[test]
+fn autoscaler_converges_under_steady_load() {
+    // Steady heavy overload needing ~2 replicas from an initial 1: the
+    // autoscaler must ramp up early and then hold the replica map
+    // steady (no events in the tail, stable timeline).
+    let reg = registry3();
+    let classes = classes_for(&reg);
+    let (heavy_rate, _, _) = calibrate(&reg, 0);
+    let (light_rate, _, _) = calibrate(&reg, 2);
+    let heavy_per_s = 1.5 * heavy_rate;
+    let n_heavy = 1800usize;
+    let horizon_s = n_heavy as f64 / heavy_per_s;
+    // ~25 control ticks over the run, independent of the models'
+    // batch caps.
+    let interval_us = horizon_s * 1e6 / 25.0;
+    let light_per_s = 0.05 * light_rate;
+    let n_light = ((light_per_s * horizon_s) as usize).max(150);
+    let tenants = vec![
+        Tenant {
+            name: "heavy-std".into(),
+            model: "heavy".into(),
+            class: 1,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: heavy_per_s,
+                n: n_heavy,
+            },
+        },
+        Tenant {
+            name: "light-inter".into(),
+            model: "light".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: light_per_s,
+                n: n_light,
+            },
+        },
+    ];
+    let arrivals = merge_arrivals(&tenants, 5);
+    let opts = FleetOptions {
+        placement: vec![
+            vec![0, 1, 2],
+            vec![2],
+            vec![2],
+            vec![],
+        ],
+        autoscale: Some(AutoscalePolicy {
+            interval_us,
+            warmup_us: 0.5 * interval_us,
+            ..Default::default()
+        }),
+        ..FleetOptions::new(4, 3)
+    };
+    let snap =
+        run_fleet(&reg, &classes, &tenants, &arrivals, &opts).unwrap();
+    check_conserved(&snap, arrivals.len());
+    let ups = snap.scale_events.iter().filter(|e| e.up).count();
+    assert!(ups >= 1, "steady overload never scaled up");
+    // Convergence = the replica map stabilizes: constant across the
+    // whole timeline tail (last quarter of the control ticks).
+    assert!(snap.replica_timeline.len() >= 8,
+            "timeline too short: {}", snap.replica_timeline.len());
+    let tail = (snap.replica_timeline.len() / 4).max(2);
+    let last = &snap.replica_timeline[snap.replica_timeline.len() - 1];
+    for s in &snap.replica_timeline[snap.replica_timeline.len() - tail..]
+    {
+        assert_eq!(s.per_model, last.per_model,
+                   "replica map still moving in the tail: {:?}",
+                   snap.scale_events);
+    }
+    assert!(last.per_model[0] >= 2,
+            "heavy model never gained a second replica");
+}
+
+#[test]
+fn autoscaled_fleet_sheds_less_than_static_under_diurnal() {
+    // Diurnal heavy trace: peak demand needs ~4 replicas, the trough
+    // none.  The autoscaler rides the curve; a static fleet pinned at
+    // the autoscaled run's mean replica count is peak-underprovisioned
+    // and sheds more.
+    let reg = registry3();
+    let classes = classes_for(&reg);
+    let (heavy_rate, _, _) = calibrate(&reg, 0);
+    let (light_rate, _, _) = calibrate(&reg, 2);
+    let base_per_s = 2.1 * heavy_rate;
+    let n_heavy = 4000usize;
+    let horizon_s = n_heavy as f64 / base_per_s;
+    let period_s = horizon_s / 2.0;
+    // ~80 control ticks (40 per diurnal cycle), independent of the
+    // models' batch caps.
+    let interval_us = horizon_s * 1e6 / 80.0;
+    let light_per_s = 0.02 * light_rate;
+    let n_light = ((light_per_s * horizon_s) as usize).max(150);
+    let tenants = vec![
+        Tenant {
+            name: "heavy-diurnal".into(),
+            model: "heavy".into(),
+            class: 1,
+            pattern: ArrivalPattern::Diurnal {
+                base_rate_per_s: base_per_s,
+                amplitude: 1.0,
+                period_s,
+                n: n_heavy,
+            },
+        },
+        Tenant {
+            name: "light-inter".into(),
+            model: "light".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: light_per_s,
+                n: n_light,
+            },
+        },
+    ];
+    let arrivals = merge_arrivals(&tenants, 2);
+    let auto_opts = FleetOptions {
+        placement: vec![
+            vec![0, 1, 2],
+            vec![0, 2],
+            vec![],
+            vec![],
+        ],
+        autoscale: Some(AutoscalePolicy {
+            interval_us,
+            warmup_us: 0.5 * interval_us,
+            ..Default::default()
+        }),
+        ..FleetOptions::new(4, 3)
+    };
+    let auto =
+        run_fleet(&reg, &classes, &tenants, &arrivals, &auto_opts)
+            .unwrap();
+    check_conserved(&auto, arrivals.len());
+    assert!(auto.scale_events.iter().any(|e| e.up),
+            "diurnal peaks never scaled up");
+
+    // Static fleet at the autoscaled run's mean replica count.
+    let static_reps: Vec<usize> = auto
+        .mean_replicas
+        .iter()
+        .map(|&x| (x.round() as usize).clamp(1, 4))
+        .collect();
+    let static_opts = FleetOptions {
+        placement: spread_placement(4, &static_reps),
+        ..FleetOptions::new(4, 3)
+    };
+    let stat =
+        run_fleet(&reg, &classes, &tenants, &arrivals, &static_opts)
+            .unwrap();
+    check_conserved(&stat, arrivals.len());
+
+    assert!(
+        auto.total_shed() < stat.total_shed(),
+        "autoscaled shed {} (attainment {:.3}, mean replicas {:?}) \
+         >= static {:?} shed {} (attainment {:.3})",
+        auto.total_shed(),
+        auto.aggregate_attainment(),
+        auto.mean_replicas,
+        static_reps,
+        stat.total_shed(),
+        stat.aggregate_attainment()
+    );
+    assert!(
+        auto.aggregate_attainment() > stat.aggregate_attainment(),
+        "autoscaled attainment {:.3} <= static {:.3}",
+        auto.aggregate_attainment(),
+        stat.aggregate_attainment()
+    );
+}
+
+#[test]
+fn fleet_json_report_roundtrips() {
+    let reg = registry3();
+    let classes = classes_for(&reg);
+    let (heavy_rate, _, heavy_batch) = calibrate(&reg, 0);
+    let tenants = vec![Tenant {
+        name: "t".into(),
+        model: "heavy".into(),
+        class: 1,
+        pattern: ArrivalPattern::Poisson {
+            rate_per_s: 1.2 * heavy_rate,
+            n: 250,
+        },
+    }];
+    let arrivals = merge_arrivals(&tenants, 9);
+    let opts = FleetOptions {
+        autoscale: Some(AutoscalePolicy {
+            interval_us: 3.0 * heavy_batch,
+            ..Default::default()
+        }),
+        ..FleetOptions::new(3, 3)
+    };
+    let snap =
+        run_fleet(&reg, &classes, &tenants, &arrivals, &opts).unwrap();
+    let text = snap.to_json_string();
+    let v = json::parse(&text).expect("fleet report must parse back");
+
+    // Scalars round-trip exactly.
+    assert_eq!(v.str_of("router"), snap.router);
+    assert_eq!(v.get("autoscaled").as_bool(), Some(snap.autoscaled));
+    assert_eq!(v.get("n_boards").as_usize(), Some(snap.boards.len()));
+    assert_eq!(v.get("lanes_cpu").as_usize(), Some(snap.lanes.cpu));
+    assert_eq!(v.get("lanes_gpu").as_usize(), Some(snap.lanes.gpu));
+    let agg = v.get("aggregate");
+    assert!((agg.f64_of("aggregate_attainment")
+        - snap.aggregate_attainment())
+        .abs()
+        < 1e-12);
+    assert_eq!(agg.get("offered").as_usize(),
+               Some(snap.aggregate.total_offered() as usize));
+    assert_eq!(agg.get("served").as_usize(),
+               Some(snap.aggregate.total_served() as usize));
+    assert_eq!(agg.get("shed").as_usize(),
+               Some(snap.total_shed() as usize));
+    assert!((v.f64_of("mean_cpu_util") - snap.mean_cpu_util()).abs()
+        < 1e-12);
+    assert!((v.f64_of("mean_gpu_util") - snap.mean_gpu_util()).abs()
+        < 1e-12);
+
+    // Arrays keep their shapes and values.
+    let per_board = v.get("per_board").as_arr().unwrap();
+    assert_eq!(per_board.len(), snap.boards.len());
+    for (pb, b) in per_board.iter().zip(&snap.boards) {
+        assert_eq!(pb.get("offered").as_usize(),
+                   Some(b.total_offered() as usize));
+        assert_eq!(pb.str_of("policy"), b.policy);
+    }
+    let mean = v.get("mean_replicas").as_arr().unwrap();
+    assert_eq!(mean.len(), snap.mean_replicas.len());
+    for (jv, x) in mean.iter().zip(&snap.mean_replicas) {
+        assert!((jv.as_f64().unwrap() - x).abs() < 1e-12);
+    }
+    let tl = v.get("replica_timeline").as_arr().unwrap();
+    assert_eq!(tl.len(), snap.replica_timeline.len());
+    for (jv, s) in tl.iter().zip(&snap.replica_timeline) {
+        assert!((jv.f64_of("t_us") - s.t_us).abs() < 1e-9);
+        assert_eq!(jv.get("per_model").vec_usize(), s.per_model);
+    }
+    let ev = v.get("scale_events").as_arr().unwrap();
+    assert_eq!(ev.len(), snap.scale_events.len());
+    for (jv, e) in ev.iter().zip(&snap.scale_events) {
+        assert_eq!(jv.get("model").as_usize(), Some(e.model));
+        assert_eq!(jv.get("board").as_usize(), Some(e.board));
+        assert_eq!(jv.get("up").as_bool(), Some(e.up));
+    }
+}
+
+#[test]
+fn trace_from_json_rejects_malformed_records_with_context() {
+    use sparoa::serve::trace_from_json;
+    // A malformed entry names its index instead of panicking or
+    // silently truncating the workload.
+    let err = trace_from_json("[1.0, \"x\", 3.0]").unwrap_err();
+    assert!(format!("{err:#}").contains("entry 1"),
+            "unhelpful error: {err:#}");
+    // Wrong container shape names the expected key.
+    let err = trace_from_json("{\"wrong\": []}").unwrap_err();
+    assert!(format!("{err:#}").contains("arrivals_us"),
+            "unhelpful error: {err:#}");
+    // Garbage input fails in the parser, with context.
+    let err = trace_from_json("not json at all").unwrap_err();
+    assert!(format!("{err:#}").contains("parsing trace JSON"),
+            "unhelpful error: {err:#}");
+    // Truncated arrays and wrong scalar types are errors, not panics.
+    assert!(trace_from_json("[1.0, 2.0").is_err());
+    assert!(trace_from_json("42").is_err());
+    assert!(trace_from_json("[]").is_err());
+}
