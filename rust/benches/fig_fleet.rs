@@ -1,22 +1,58 @@
 //! Fleet extension figure: distributed multi-board serving under
 //! increasing load — router policies compared, autoscaled vs static
-//! replica placement.
+//! replica placement — plus the indexed-dispatch micro-bench
+//! (dispatch ns/req at Q = 10^2..10^4, the sorted-on-insert
+//! `AdmissionQueues` vs the flat clone+sort `ReferenceQueues`).
 //!
 //! Like `fig13_multimodel` this bench never skips: it uses the
 //! artifact models when `make artifacts` has run and the synthetic
 //! demo fleet otherwise.  Emits the fleet-level JSON report (aggregate
 //! + per-board attainment/utilization/shed rate, replica-count
-//! timeline) on stdout after the tables.
+//! timeline) on stdout after the tables, and writes the dispatch
+//! ns/req lines to `BENCH_fleet.json` at the repo root.
+//!
+//! Modes (mirroring the hotpath bench): `--ci` runs only the dispatch
+//! micro-bench with short iteration counts and fails on (a) a missing/
+//! empty/bootstrap baseline, (b) an indexed/reference dispatch ratio
+//! that regressed >2x against the committed one (hardware cancels out
+//! of the ratio), or (c) an indexed path less than 5x faster than the
+//! reference at Q = 10^4 (the PR acceptance floor — the real margin is
+//! orders of magnitude).  `--write-baseline` regenerates the JSON with
+//! short counts (how CI bootstraps a placeholder baseline).
 
-use sparoa::bench_support::Table;
+use sparoa::bench_support::{baseline, bench, BenchResult, Table};
+use sparoa::serve::slo::ReferenceQueues;
 use sparoa::serve::{
-    demo, merge_arrivals, run_fleet, AutoscalePolicy, FleetOptions,
-    RouterPolicy,
+    demo, merge_arrivals, run_fleet, AdmissionQueues, AutoscalePolicy,
+    FleetOptions, QueuedReq, RouterPolicy, ShedPolicy, SloClass,
 };
 use sparoa::util::json::{self, Value};
 use std::collections::BTreeMap;
 
+/// Queue depths the dispatch micro-bench measures.
+const DISPATCH_QS: [usize; 3] = [100, 1_000, 10_000];
+/// Requests drained per dispatch cycle (a realistic Alg. 2 batch).
+const DISPATCH_BATCH: usize = 32;
+/// Models the backlog is spread over (the demo-fleet shape).
+const DISPATCH_MODELS: usize = 3;
+/// `--ci` regression budget on the indexed/reference ratio.
+const CI_REGRESSION_FACTOR: f64 = 2.0;
+/// `--ci` acceptance floor: indexed must beat reference by at least
+/// this factor at the largest queue depth.
+const CI_SPEEDUP_FLOOR: f64 = 5.0;
+const CI_IDX_KEY: &str = "dispatch_indexed_q10000";
+const CI_REF_KEY: &str = "dispatch_reference_q10000";
+
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let ci = args.iter().any(|a| a == "--ci");
+    let write_baseline = args.iter().any(|a| a == "--write-baseline");
+    if ci || write_baseline {
+        // Gate/bootstrap mode: dispatch micro-bench only, short iters.
+        dispatch_bench(true, ci);
+        return;
+    }
+
     let device = "agx_orin";
     let boards = 4usize;
     let registry = demo::registry(&sparoa::artifacts_dir(), device)
@@ -94,6 +130,9 @@ fn main() {
         top.1[3].total_shed(),
     );
 
+    // Dispatch micro-bench (full iteration counts) + baseline refresh.
+    dispatch_bench(false, false);
+
     // Machine-readable fleet report.
     let report = Value::Obj(
         [
@@ -125,4 +164,188 @@ fn main() {
         .collect(),
     );
     println!("\n{}", json::to_string(&report));
+}
+
+/// SLO classes for the dispatch micro-bench: caps sized to hold the
+/// whole backlog, deadlines far out so the cycle times dispatch, not
+/// expiry.
+fn dispatch_classes(q: usize) -> Vec<SloClass> {
+    vec![
+        SloClass::new("interactive", 1e12, q, 4.0),
+        SloClass::new("standard", 2e12, q, 2.0),
+        SloClass::new("best-effort", 4e12, q, 1.0),
+    ]
+}
+
+/// One indexed dispatch cycle: score every model off the borrowing
+/// view + O(1)/O(classes) aggregates (the `BoardSim::pump` shape),
+/// drain the winner's heads, re-offer to hold Q steady.  Returns the
+/// drained count.
+fn indexed_cycle(
+    q: &mut AdmissionQueues,
+    classes: &[SloClass],
+    now: &mut f64,
+) -> usize {
+    let mut best_m = 0usize;
+    let mut best_s = f64::NEG_INFINITY;
+    for m in 0..DISPATCH_MODELS {
+        if q.queue_len(m) == 0 {
+            continue;
+        }
+        let head = q.head_arrival_us(m);
+        let finish = *now + 5_000.0;
+        let met: f64 = q
+            .dispatch_view(m)
+            .take(DISPATCH_BATCH)
+            .filter(|r| r.deadline_us >= finish)
+            .map(|r| classes[r.class].weight)
+            .sum();
+        let s = met - 1e-9 * head;
+        if s > best_s {
+            best_s = s;
+            best_m = m;
+        }
+    }
+    let taken = q.take_batch(best_m, DISPATCH_BATCH, true);
+    let n = taken.len();
+    for r in &taken {
+        *now += 1.0;
+        q.offer(r.req, r.tenant, r.model, r.class, *now);
+    }
+    n
+}
+
+/// The same dispatch cycle through the reference path: clone+sort per
+/// scored model, sort again inside `take_batch` — the O(Q log Q) cost
+/// the indexed core removes.
+fn reference_cycle(
+    q: &mut ReferenceQueues,
+    classes: &[SloClass],
+    now: &mut f64,
+) -> usize {
+    let mut best_m = 0usize;
+    let mut best_s = f64::NEG_INFINITY;
+    for m in 0..DISPATCH_MODELS {
+        if q.queue_len(m) == 0 {
+            continue;
+        }
+        let sorted: Vec<QueuedReq> = q.sorted_queue(m);
+        let head = sorted
+            .iter()
+            .map(|r| r.arrival_us)
+            .fold(f64::INFINITY, f64::min);
+        let finish = *now + 5_000.0;
+        let met: f64 = sorted
+            .iter()
+            .take(DISPATCH_BATCH)
+            .filter(|r| r.deadline_us >= finish)
+            .map(|r| classes[r.class].weight)
+            .sum();
+        let s = met - 1e-9 * head;
+        if s > best_s {
+            best_s = s;
+            best_m = m;
+        }
+    }
+    let taken = q.take_batch(best_m, DISPATCH_BATCH, true);
+    let n = taken.len();
+    for r in &taken {
+        *now += 1.0;
+        q.offer(r.req, r.tenant, r.model, r.class, *now);
+    }
+    n
+}
+
+/// The dispatch ns/req micro-bench: reference vs indexed at each queue
+/// depth, with table output and (write mode) the `BENCH_fleet.json`
+/// baseline, (gate mode) the `--ci` regression check.
+fn dispatch_bench(short: bool, gate: bool) {
+    let it = |n: usize| if short { (n / 10).max(5) } else { n };
+    let mut t = Table::new(
+        "indexed dispatch core — ns per dispatched request",
+        &["queue depth", "reference", "indexed", "speedup"],
+    );
+    let mut lines: Vec<(String, f64)> = Vec::new();
+    for &qd in &DISPATCH_QS {
+        let classes = dispatch_classes(qd);
+        let mut iq = AdmissionQueues::new(
+            &classes, ShedPolicy::RejectNew, DISPATCH_MODELS);
+        let mut rq = ReferenceQueues::new(
+            &classes, ShedPolicy::RejectNew, DISPATCH_MODELS);
+        let mut now = 0.0f64;
+        for i in 0..qd {
+            now += 1.0;
+            let (m, c) = (i % DISPATCH_MODELS, (i / DISPATCH_MODELS) % 3);
+            iq.offer(i, 0, m, c, now);
+            rq.offer(i, 0, m, c, now);
+        }
+        // Iteration budget shrinks with depth (the reference cycle is
+        // O(Q log Q)); both sides use the same count for fairness.
+        let iters = it(match qd {
+            100 => 20_000,
+            1_000 => 4_000,
+            _ => 400,
+        });
+        let mut rnow = now;
+        let rres: BenchResult = bench(
+            &format!("reference dispatch (Q={qd})"), 20, iters, || {
+                std::hint::black_box(reference_cycle(
+                    &mut rq, &classes, &mut rnow));
+            });
+        let mut inow = now;
+        let ires: BenchResult = bench(
+            &format!("indexed dispatch (Q={qd})"), 20, iters, || {
+                std::hint::black_box(indexed_cycle(
+                    &mut iq, &classes, &mut inow));
+            });
+        let ref_ns = rres.mean_us * 1000.0 / DISPATCH_BATCH as f64;
+        let idx_ns = ires.mean_us * 1000.0 / DISPATCH_BATCH as f64;
+        t.row(vec![
+            format!("{qd}"),
+            format!("{ref_ns:.0} ns/req"),
+            format!("{idx_ns:.0} ns/req"),
+            format!("{:.1}x", ref_ns / idx_ns.max(1e-9)),
+        ]);
+        lines.push((format!("dispatch_reference_q{qd}"), ref_ns));
+        lines.push((format!("dispatch_indexed_q{qd}"), idx_ns));
+    }
+    t.print();
+
+    let baseline_path = sparoa::repo_root().join("BENCH_fleet.json");
+    let find = |key: &str| -> Option<f64> {
+        lines.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    };
+    if gate {
+        // Mirror of the hotpath gate: compare indexed/reference ratios
+        // so runner hardware cancels; refuse missing/empty/bootstrap
+        // baselines (`baseline::refuse` — CI regenerates one first,
+        // see ci.yml).
+        let Some((_, old_ratio)) = baseline::committed(
+            &baseline_path, CI_IDX_KEY, CI_REF_KEY) else {
+            baseline::refuse(&baseline_path, "fig_fleet",
+                             CI_IDX_KEY, CI_REF_KEY);
+        };
+        let (idx, rf) = (find(CI_IDX_KEY).unwrap(),
+                         find(CI_REF_KEY).unwrap());
+        baseline::gate_ratio(
+            "fig_fleet",
+            &format!("{CI_IDX_KEY}/{CI_REF_KEY}"),
+            idx / rf,
+            old_ratio,
+            CI_REGRESSION_FACTOR,
+        );
+        if rf < CI_SPEEDUP_FLOOR * idx {
+            eprintln!(
+                "fleet dispatch floor: indexed path only {:.1}x faster \
+                 than the reference clone+sort at Q=10^4 \
+                 (acceptance floor {CI_SPEEDUP_FLOOR}x)",
+                rf / idx.max(1e-9)
+            );
+            std::process::exit(1);
+        }
+    } else {
+        // Refresh the committed baseline; `baseline::write` refuses an
+        // empty map (a `{}` placeholder silently disarms the gate).
+        baseline::write(&baseline_path, "indexed-dispatch", &lines);
+    }
 }

@@ -15,7 +15,7 @@
 //! The SPAROA_DISPATCH_US constant in the device simulator must stay
 //! honest against the `env.step + sac.act` line below.
 
-use sparoa::bench_support::{bench, load_env, BenchResult};
+use sparoa::bench_support::{baseline, bench, load_env, BenchResult};
 use sparoa::device::Proc;
 use sparoa::engine::costs::{CostTable, SimScratch};
 use sparoa::engine::sim::{
@@ -38,10 +38,16 @@ const CI_GATE_KEY: &str = "simulate_fastpath";
 const CI_REF_KEY: &str = "simulate_reference";
 
 fn main() {
-    let ci = std::env::args().any(|a| a == "--ci");
-    // CI runs short: the gate tolerates 2x, so ~1/10 the samples is
+    let args: Vec<String> = std::env::args().collect();
+    let ci = args.iter().any(|a| a == "--ci");
+    // `--write-baseline`: CI-short iteration counts but the write path
+    // instead of the gate — how CI bootstraps a usable baseline when
+    // the committed one is a placeholder (the gate refuses those).
+    let write_baseline = args.iter().any(|a| a == "--write-baseline");
+    // Short runs: the gate tolerates 2x, so ~1/10 the samples is
     // plenty of signal.
-    let it = |n: usize| if ci { (n / 10).max(5) } else { n };
+    let short = ci || write_baseline;
+    let it = |n: usize| if short { (n / 10).max(5) } else { n };
 
     let env_data = load_env();
     let have_artifacts = env_data.is_some();
@@ -93,6 +99,14 @@ fn main() {
         &format!("simulate() one-shot wrapper ({n_ops} ops)"), 20, it(400),
         || {
             std::hint::black_box(simulate(&g, &dev, &sched, &fast_opts));
+        })));
+
+    // 2d. Table build alone — the batched (SoA, hoisted-constant)
+    //     roofline pass; what separates the one-shot wrapper from the
+    //     cached fast path.
+    results.push(("cost_table_build", bench(
+        &format!("CostTable::build ({n_ops} ops)"), 20, it(2000), || {
+            std::hint::black_box(CostTable::build(&g, &dev, &fast_opts));
         })));
 
     // 3. Incremental single-flip evaluation (suffix re-timing only).
@@ -209,72 +223,58 @@ fn main() {
 
     let baseline_path = sparoa::repo_root().join("BENCH_hotpath.json");
     if ci {
-        // Gate against the committed baseline; a missing/empty baseline
-        // passes (bootstrap) and is reported, not silently skipped.
-        // Hardware-independent comparison: committed fast/ref ratio vs
-        // this run's fast/ref ratio (absolute ns would make the gate
-        // flaky whenever the committing machine and the CI runner
-        // differ, which is always).
-        // ... and only against the same workload: a baseline committed
+        // Gate against the committed baseline.  Hardware-independent
+        // comparison: committed fast/ref ratio vs this run's fast/ref
+        // ratio (absolute ns would make the gate flaky whenever the
+        // committing machine and the CI runner differ, which is
+        // always).  A missing, empty or bootstrap-placeholder baseline
+        // FAILS the gate (`baseline::refuse`); CI regenerates a usable
+        // baseline first (see .github/workflows/ci.yml) so this only
+        // trips when that step is broken too.
+        let Some((v, old)) = baseline::committed(
+            &baseline_path, CI_GATE_KEY, CI_REF_KEY) else {
+            baseline::refuse(&baseline_path, "hotpath",
+                             CI_GATE_KEY, CI_REF_KEY);
+        };
+        // Only gate against the same workload: a baseline committed
         // from an artifacts checkout benches mobilenet_v3_small while
-        // an artifact-less runner benches the synthetic fallback; their
-        // ratios are not comparable.
-        let committed = std::fs::read_to_string(&baseline_path)
-            .ok()
-            .and_then(|t| sparoa::util::json::parse(&t).ok())
-            .and_then(|v| {
-                if v.get("workload").as_str() != Some(g.model.as_str()) {
-                    return None;
-                }
-                match (v.get(CI_GATE_KEY).as_f64(),
-                       v.get(CI_REF_KEY).as_f64()) {
-                    (Some(f), Some(r)) if f > 0.0 && r > 0.0 => {
-                        Some(f / r)
-                    }
-                    _ => None,
-                }
-            });
+        // an artifact-less runner benches the synthetic fallback;
+        // their ratios are not comparable.
+        let same_workload =
+            v.get("workload").as_str() == Some(g.model.as_str());
         let measured = match (ns(CI_GATE_KEY), ns(CI_REF_KEY)) {
             (Some(f), Some(r)) if r > 0.0 => Some(f / r),
             _ => None,
         };
-        match (committed, measured) {
-            (Some(old), Some(new)) => {
-                println!("\nci gate: {CI_GATE_KEY}/{CI_REF_KEY} ratio \
-                          {new:.3} vs committed {old:.3}");
-                if new > CI_REGRESSION_FACTOR * old {
-                    eprintln!(
-                        "hotpath regression: {CI_GATE_KEY} slowed \
-                         {:.1}x relative to the reference walk \
-                         (> {CI_REGRESSION_FACTOR}x budget)",
-                        new / old
-                    );
-                    std::process::exit(1);
-                }
-            }
-            _ => println!(
-                "\nci gate: no committed {CI_GATE_KEY}/{CI_REF_KEY} \
-                 baseline for workload `{}` in BENCH_hotpath.json; run \
-                 `cargo bench --bench hotpath` locally and commit the \
-                 refreshed file",
+        match (same_workload, measured) {
+            (true, Some(new)) => baseline::gate_ratio(
+                "hotpath",
+                &format!("{CI_GATE_KEY}/{CI_REF_KEY}"),
+                new,
+                old,
+                CI_REGRESSION_FACTOR,
+            ),
+            (false, _) => println!(
+                "\nci gate: baseline measured on a different workload \
+                 than `{}` — ratios not comparable, comparison skipped \
+                 (baseline is non-empty, so the gate stays green)",
                 g.model
             ),
+            (_, None) => {
+                eprintln!("hotpath ci gate: this run produced no \
+                           {CI_GATE_KEY}/{CI_REF_KEY} lines");
+                std::process::exit(1);
+            }
         }
     } else {
-        // Full local runs refresh the committed perf trajectory.
-        let mut out = String::from("{\n");
-        out.push_str(&format!("  \"workload\": \"{}\",\n", g.model));
-        for (i, (k, r)) in results.iter().enumerate() {
-            let comma = if i + 1 < results.len() { "," } else { "" };
-            out.push_str(&format!("  \"{}\": {:.1}{}\n",
-                                  k, r.mean_us * 1000.0, comma));
-        }
-        out.push_str("}\n");
-        match std::fs::write(&baseline_path, out) {
-            Ok(()) => println!("\nwrote {}", baseline_path.display()),
-            Err(e) => eprintln!("\ncould not write {}: {e}",
-                                baseline_path.display()),
-        }
+        // Full local runs (and CI's `--write-baseline` bootstrap)
+        // refresh the committed perf trajectory; `baseline::write`
+        // refuses an empty map (a `{}` file silently disarms the gate).
+        let lines: Vec<(String, f64)> = results
+            .iter()
+            .map(|(k, r)| (k.to_string(), r.mean_us * 1000.0))
+            .collect();
+        baseline::write(&baseline_path, &g.model, &lines);
     }
 }
 

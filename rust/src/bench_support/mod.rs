@@ -180,6 +180,88 @@ impl Table {
     }
 }
 
+/// Committed-baseline plumbing shared by the perf-gated benches
+/// (hotpath, fig_fleet): flat `name -> ns` JSON files at the repo root,
+/// gated in CI on a fast/reference *ratio* (runner hardware cancels
+/// out).  One copy of the refuse/compare/write logic so the two gates
+/// cannot drift.
+pub mod baseline {
+    use crate::util::json::{self, Value};
+    use std::path::Path;
+
+    /// Parse the committed baseline and extract its `num_key/den_key`
+    /// ratio.  `None` when the file is missing, unparsable, or lacks
+    /// positive values for either key — i.e. an empty `{}` or a
+    /// bootstrap placeholder.
+    pub fn committed(path: &Path, num_key: &str, den_key: &str)
+        -> Option<(Value, f64)>
+    {
+        let v = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|t| json::parse(&t).ok())?;
+        let n = v.get(num_key).as_f64().filter(|&x| x > 0.0)?;
+        let d = v.get(den_key).as_f64().filter(|&x| x > 0.0)?;
+        Some((v, n / d))
+    }
+
+    /// Exit non-zero with the standard unusable-baseline message.  An
+    /// empty baseline must FAIL the gate, not skip it: a committed `{}`
+    /// once silently disarmed the hotpath gate.
+    pub fn refuse(path: &Path, bench: &str, num_key: &str,
+                  den_key: &str) -> ! {
+        eprintln!(
+            "{bench} ci gate: {} is missing, empty or a bootstrap \
+             placeholder (no positive {num_key} / {den_key} lines) — \
+             the gate refuses to pass without a baseline.  Regenerate \
+             one with `cargo bench --bench {bench} -- --write-baseline` \
+             and commit it.",
+            path.display()
+        );
+        std::process::exit(1);
+    }
+
+    /// Compare this run's ratio against the committed one and exit
+    /// non-zero on a regression beyond `budget`x.
+    pub fn gate_ratio(bench: &str, what: &str, new_ratio: f64,
+                      old_ratio: f64, budget: f64) {
+        println!("\nci gate: {what} ratio {new_ratio:.4} vs committed \
+                  {old_ratio:.4}");
+        if new_ratio > budget * old_ratio {
+            eprintln!(
+                "{bench} regression: {what} ratio slowed {:.1}x \
+                 (> {budget}x budget)",
+                new_ratio / old_ratio
+            );
+            std::process::exit(1);
+        }
+    }
+
+    /// Write a baseline file (`workload` + flat `name -> ns` lines).
+    /// Refusing an empty map and failing loudly on write errors are
+    /// part of the contract — see [`refuse`].
+    pub fn write(path: &Path, workload: &str, lines: &[(String, f64)]) {
+        if lines.is_empty() {
+            eprintln!("refusing to write an empty benchmark map to {}",
+                      path.display());
+            std::process::exit(1);
+        }
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"workload\": \"{workload}\",\n"));
+        for (i, (k, v)) in lines.iter().enumerate() {
+            let comma = if i + 1 < lines.len() { "," } else { "" };
+            out.push_str(&format!("  \"{k}\": {v:.1}{comma}\n"));
+        }
+        out.push_str("}\n");
+        match std::fs::write(path, out) {
+            Ok(()) => println!("\nwrote {}", path.display()),
+            Err(e) => {
+                eprintln!("\ncould not write {}: {e}", path.display());
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
 /// Property-testing loop: runs `prop` against `cases` random inputs drawn
 /// by `gen`; on failure, reports the failing seed/case for reproduction.
 pub mod prop {

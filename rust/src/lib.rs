@@ -45,6 +45,14 @@
 //!                      co-schedules CPU/GPU capacity across models
 //!                      using the paper's sparsity/intensity signals
 //!                      (`serve-multi` CLI, `fig13_multimodel` bench).
+//!                      The dispatch core is indexed: per-(model,
+//!                      class) queues sorted on insert (borrowing
+//!                      `dispatch_view`, sort-free `take_batch`,
+//!                      head-pop expiry), per-board lane-event heaps,
+//!                      and epoch-cached router scores — pinned
+//!                      bit-identical to the flat clone+sort spec
+//!                      (`serve::slo::ReferenceQueues`) by
+//!                      `rust/tests/slo_indexed.rs`.
 //!     * `serve::fleet` — distributed multi-board serving: N board
 //!                      schedulers (per-board `LaneMatrix` + admission
 //!                      queues) in one virtual clock behind a front-tier

@@ -40,6 +40,9 @@ use crate::serve::report::PerfSnapshot;
 use crate::serve::slo::{AdmissionQueues, ShedPolicy, SloClass};
 use crate::serve::workload::{Arrival, Tenant};
 use anyhow::Result;
+use std::cell::Cell;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Cross-model scheduling discipline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -109,12 +112,19 @@ impl LaneMatrix {
 }
 
 /// Mutable lane occupancy for one board: per-lane free-at time and
-/// accumulated busy time, both microseconds of virtual time.
+/// accumulated busy time, both microseconds of virtual time, plus a
+/// min-heap of pending lane-free events so the dispatch loop's "when
+/// does the next busy lane free" question is a heap peek, not a scan.
 #[derive(Debug, Clone)]
 struct LaneState {
     procs: Vec<Proc>,
     free: Vec<f64>,
     busy: Vec<f64>,
+    /// Pending lane-free events as (free-at bit pattern, lane), lazily
+    /// invalidated: an entry is live iff its time still equals
+    /// `free[lane]`.  Free times are non-negative, so the IEEE bit
+    /// pattern orders exactly like the float.
+    events: BinaryHeap<Reverse<(u64, usize)>>,
 }
 
 impl LaneState {
@@ -122,7 +132,12 @@ impl LaneState {
         let mut procs = vec![Proc::Cpu; m.cpu.max(1)];
         procs.extend(vec![Proc::Gpu; m.gpu.max(1)]);
         let n = procs.len();
-        LaneState { procs, free: vec![0.0; n], busy: vec![0.0; n] }
+        LaneState {
+            procs,
+            free: vec![0.0; n],
+            busy: vec![0.0; n],
+            events: BinaryHeap::new(),
+        }
     }
 
     /// Earliest-free lane of `proc`: (lane index, free-at time in us).
@@ -142,6 +157,32 @@ impl LaneState {
     fn occupy(&mut self, lane: usize, start_us: f64, finish_us: f64) {
         self.free[lane] = finish_us;
         self.busy[lane] += finish_us - start_us;
+        self.events.push(Reverse((finish_us.to_bits(), lane)));
+        // Lazy invalidation leaves one stale entry per overwrite, and
+        // entries only drain on the wait branch — compact by rebuilding
+        // from the live lane states once the debris outgrows a small
+        // multiple of the lane count (amortized O(log lanes) per
+        // occupy, bounded memory over any run length).
+        if self.events.len() > 4 * self.free.len().max(1) {
+            self.events.clear();
+            for (l, &f) in self.free.iter().enumerate() {
+                self.events.push(Reverse((f.to_bits(), l)));
+            }
+        }
+    }
+
+    /// Earliest lane-free event strictly after `now_us`, popping stale
+    /// (overwritten or already-past) entries on the way.
+    fn next_event_after(&mut self, now_us: f64) -> Option<f64> {
+        while let Some(&Reverse((bits, lane))) = self.events.peek() {
+            let t = f64::from_bits(bits);
+            if self.free[lane].to_bits() != bits || t <= now_us {
+                self.events.pop();
+                continue;
+            }
+            return Some(t);
+        }
+        None
     }
 
     fn busy_us(&self, proc: Proc) -> f64 {
@@ -175,6 +216,16 @@ pub(crate) struct BoardSim<'a> {
     static_lane: Vec<Proc>,
     lanes: LaneState,
     q: AdmissionQueues,
+    /// Router price table: per-model cheapest batch-1 latency (us),
+    /// installed by the fleet driver (`set_price_table`).  Empty on a
+    /// plain `run_cluster` board, which never asks for a backlog score.
+    price: Vec<f64>,
+    /// Bumped on every queue mutation (offer, expiry shed, dispatch);
+    /// the router's cached queued-work score re-prices only when this
+    /// moves — the fleet's dirty-flag.
+    epoch: u64,
+    /// (epoch the cached value was computed at, queued work in us).
+    work_cache: Cell<(u64, f64)>,
     snap: PerfSnapshot,
     shed_seen: usize,
     last_finish: f64,
@@ -244,6 +295,9 @@ impl<'a> BoardSim<'a> {
             static_lane,
             lanes: LaneState::new(lanes),
             q: AdmissionQueues::new(classes, opts.shed, nm),
+            price: Vec::new(),
+            epoch: 1,
+            work_cache: Cell::new((0, 0.0)),
             snap: PerfSnapshot::new(
                 label,
                 opts.shed.name(),
@@ -262,7 +316,22 @@ impl<'a> BoardSim<'a> {
     pub(crate) fn offer(&mut self, req: usize, tenant: usize,
                         model: usize, class: usize, now_us: f64) {
         self.snap.record_offered(class, model);
+        let admitted_before = self.q.admitted;
         self.q.offer(req, tenant, model, class, now_us);
+        // An admission always changes some queue (plain admit, or
+        // evict-then-admit under the shed policies); a rejection
+        // provably does not — keep the router's priced-work cache warm
+        // under overload, when routing is hottest.
+        if self.q.admitted != admitted_before {
+            self.epoch += 1;
+        }
+    }
+
+    /// Install the fleet router's per-model price table (cheapest
+    /// batch-1 latency, us) backing the cached backlog score.
+    pub(crate) fn set_price_table(&mut self, lat1_us: Vec<f64>) {
+        debug_assert_eq!(lat1_us.len(), self.registry.len());
+        self.price = lat1_us;
     }
 
     /// Outstanding queued requests across all models.
@@ -283,13 +352,16 @@ impl<'a> BoardSim<'a> {
 
     /// Estimated microseconds of work standing between a new arrival
     /// and a free lane: in-flight residual (lane free-at times past
-    /// `now`) plus queued work priced by `lat1_us[model]` (each
-    /// model's cheapest batch-1 latency, precomputed by the caller so
-    /// the per-arrival hot path never touches the probe cache),
-    /// averaged over the lane count.  The cost-aware router's board
-    /// score.
-    pub(crate) fn backlog_residual_us(&self, now_us: f64,
-                                      lat1_us: &[f64]) -> f64 {
+    /// `now`, O(lanes) — it decays with `now`, so it is always priced
+    /// fresh) plus queued work priced by the installed table (each
+    /// model's cheapest batch-1 latency; see `set_price_table`),
+    /// averaged over the lane count.  The queued-work term is cached
+    /// against the board's mutation epoch, so the cost-aware router
+    /// only re-prices boards whose queues actually changed since the
+    /// last route.
+    pub(crate) fn backlog_residual_us(&self, now_us: f64) -> f64 {
+        debug_assert_eq!(self.price.len(), self.registry.len(),
+                         "backlog scored before set_price_table");
         let n = self.lanes.procs.len() as f64;
         let resid: f64 = self
             .lanes
@@ -297,13 +369,20 @@ impl<'a> BoardSim<'a> {
             .iter()
             .map(|&f| (f - now_us).max(0.0))
             .sum();
-        let mut work = 0.0;
-        for (m, &lat) in lat1_us.iter().enumerate() {
-            let ql = self.q.queue_len(m);
-            if ql > 0 {
-                work += ql as f64 * lat;
+        let (cached_epoch, cached_work) = self.work_cache.get();
+        let work = if cached_epoch == self.epoch {
+            cached_work
+        } else {
+            let mut w = 0.0;
+            for (m, &lat) in self.price.iter().enumerate() {
+                let ql = self.q.queue_len(m);
+                if ql > 0 {
+                    w += ql as f64 * lat;
+                }
             }
-        }
+            self.work_cache.set((self.epoch, w));
+            w
+        };
         (resid + work) / n
     }
 
@@ -328,8 +407,14 @@ impl<'a> BoardSim<'a> {
     pub(crate) fn pump(&mut self, now_us: f64) -> Result<Option<f64>> {
         let now = now_us;
         // The dynamic tier refuses to burn capacity on doomed requests.
+        // Expiry is an O(1) head-deadline check when nothing is due,
+        // head pops otherwise (see `AdmissionQueues::drop_expired`).
         if self.sparsity_aware {
+            let shed_before = self.q.shed.len();
             self.q.drop_expired(now);
+            if self.q.shed.len() != shed_before {
+                self.epoch += 1;
+            }
         }
         self.settle_sheds();
         loop {
@@ -345,21 +430,19 @@ impl<'a> BoardSim<'a> {
             // slots one by one degenerates into FIFO).  Busy-lane
             // options are still scored: they tell the wait heuristic
             // whether patience would save deadlines that an immediate
-            // doomed dispatch would burn.
+            // doomed dispatch would burn.  Scoring reads the queues
+            // through the borrowing `dispatch_view` — no clones, no
+            // sorts — and the per-model head/length aggregates the
+            // indexed queues keep in O(1)/O(classes).
             let mut best_now: Option<Candidate> = None;
             let mut best_any: Option<Candidate> = None;
-            let mut next_free = f64::INFINITY;
             for m in 0..self.registry.len() {
                 let qlen = self.q.queue_len(m);
                 if qlen == 0 {
                     continue;
                 }
                 let entry = self.registry.get(m);
-                let sorted = self.q.sorted_queue(m);
-                let head_arrival = sorted
-                    .iter()
-                    .map(|r| r.arrival_us)
-                    .fold(f64::INFINITY, f64::min);
+                let head_arrival = self.q.head_arrival_us(m);
                 let both = [Proc::Cpu, Proc::Gpu];
                 let procs: &[Proc] = if self.sparsity_aware {
                     &both
@@ -368,9 +451,6 @@ impl<'a> BoardSim<'a> {
                 };
                 for &proc in procs {
                     let (lane, lane_free) = self.lanes.earliest(proc);
-                    if lane_free > now {
-                        next_free = next_free.min(lane_free);
-                    }
                     let cap = entry.batch_cap(proc).max(1);
                     let start = now.max(lane_free);
                     // Candidate batch sizes: powers of two up to the
@@ -391,8 +471,9 @@ impl<'a> BoardSim<'a> {
                     for &b in &sizes {
                         let l = entry.latency_us(proc, b)?;
                         let finish = start + l;
-                        let met_w: f64 = sorted
-                            .iter()
+                        let met_w: f64 = self
+                            .q
+                            .dispatch_view(m)
                             .take(b)
                             .filter(|r| r.deadline_us >= finish)
                             .map(|r| self.classes[r.class].weight)
@@ -455,17 +536,25 @@ impl<'a> BoardSim<'a> {
                 _ => false,
             };
             if wait {
+                // Wake at the next lane-free event — a heap peek over
+                // the pending occupancies, not a lane scan.
+                let next_free = self.lanes.next_event_after(now);
                 debug_assert!(
-                    next_free.is_finite() && next_free > now,
+                    matches!(next_free, Some(t) if t > now),
                     "wait must have a busy lane to wake on"
                 );
-                return Ok(Some(next_free));
+                anyhow::ensure!(
+                    next_free.is_some(),
+                    "board waited with no pending lane event"
+                );
+                return Ok(next_free);
             }
 
             let c = best_now.expect("non-wait iterations dispatch");
             let taken =
                 self.q.take_batch(c.m, c.b, self.sparsity_aware);
             debug_assert!(!taken.is_empty());
+            self.epoch += 1;
             self.lanes.occupy(c.lane, c.start, c.finish);
             self.last_finish = self.last_finish.max(c.finish);
             self.snap.n_batches += 1;

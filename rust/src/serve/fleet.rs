@@ -16,7 +16,15 @@
 //!   `JoinShortestQueue` (fewest queued requests), or `CostAware`
 //!   (least estimated microseconds of standing work, pricing each
 //!   board's queues through the registry's memoized latency oracle
-//!   plus its in-flight lane residuals).
+//!   plus its in-flight lane residuals).  Cost-aware scores are
+//!   dirty-flagged: each board caches its priced queued work against a
+//!   mutation epoch, so routing only re-prices boards whose queues
+//!   changed since the last route.
+//! * **Event-heap clock.**  `run_fleet` advances virtual time off a
+//!   min-heap of board wake-ups (lazily invalidated by a per-board
+//!   generation); boards with no standing work and no fresh offers are
+//!   never pumped, so a mostly-idle fleet costs only its active
+//!   boards.
 //! * **Replica autoscaler.**  A periodic control loop reads per-model
 //!   attainment and queue-pressure windows from the per-board
 //!   [`PerfSnapshot`]s and scales replicas up (warm a session on the
@@ -41,7 +49,8 @@ use crate::serve::slo::{ShedPolicy, SloClass};
 use crate::serve::workload::{Arrival, Tenant};
 use crate::util::json::{self, Value};
 use anyhow::Result;
-use std::collections::BTreeMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
 
 /// Front-tier request placement policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -464,6 +473,14 @@ pub fn run_fleet(
         policy: ClusterPolicy::SparsityAware,
         shed: opts.shed,
     };
+    // Per-model price tables, probed once so neither the per-arrival
+    // routing hot path nor the control loop touches the probe cache:
+    // cheapest batch-1 latency (router backlog pricing, installed into
+    // every board so its cached work score can use it) and per-request
+    // cost at the full batch (autoscaler load signal).
+    let lat1_us: Vec<f64> = registry.lat1_table()?;
+    let eff_cost_us: Vec<f64> = registry.efficient_cost_table()?;
+
     let mut boards: Vec<BoardSim> = (0..nb)
         .map(|b| {
             BoardSim::new(
@@ -475,6 +492,9 @@ pub fn run_fleet(
             )
         })
         .collect::<Result<_>>()?;
+    for board in boards.iter_mut() {
+        board.set_price_table(lat1_us.clone());
+    }
 
     let mut rr = vec![0usize; nm];
     let mut auto_state = AutoState {
@@ -496,20 +516,20 @@ pub fn run_fleet(
             per_model: count_active(&replicas, nm),
         });
     }
-    // Per-model price tables, probed once so neither the per-arrival
-    // routing hot path nor the control loop touches the probe cache:
-    // cheapest batch-1 latency (router backlog pricing) and per-request
-    // cost at the full batch (autoscaler load signal).
-    let lat1_us: Vec<f64> = (0..nm)
-        .map(|m| registry.get(m).cheapest_latency_us(1))
-        .collect::<Result<_>>()?;
-    let eff_cost_us: Vec<f64> = (0..nm)
-        .map(|m| registry.get(m).efficient_cost_us())
-        .collect::<Result<_>>()?;
-
     let mut now = 0.0f64;
     let mut ai = 0usize;
     let mut elig: Vec<usize> = Vec::with_capacity(nb);
+    // Event-heap clock: every pumped board's wake-up lands in a
+    // min-heap keyed by time, lazily invalidated by a per-board
+    // generation (a board's entries go stale the moment it is pumped
+    // again).  `touched[b]` marks boards that received an offer since
+    // their last pump; boards with no standing work and no fresh offer
+    // are provable no-ops (`pump` on an empty, untouched board returns
+    // `None`) and are skipped entirely, so idle boards cost nothing.
+    let mut touched = vec![false; nb];
+    let mut wake_gen = vec![0u64; nb];
+    let mut wakes: BinaryHeap<Reverse<(u64, usize, u64)>> =
+        BinaryHeap::new();
     loop {
         // Ingest and route everything that has arrived by `now`.
         while ai < arrivals.len() && arrivals[ai].at_us <= now {
@@ -518,11 +538,11 @@ pub fn run_fleet(
             let m = model_of[a.tenant];
             eligible_boards_into(m, now, &replicas, &mut elig);
             let b = route(
-                opts.router, m, now, &lat1_us, &boards, &elig,
-                &mut rr,
+                opts.router, m, now, &boards, &elig, &mut rr,
             )?;
             boards[b].offer(a.req, a.tenant, m,
                             tenants[a.tenant].class, a.at_us);
+            touched[b] = true;
         }
         // Autoscaler tick.  The schedule only drives the clock while
         // work is standing (see below), so after an idle gap in the
@@ -532,7 +552,7 @@ pub fn run_fleet(
         if let Some(auto) = &opts.autoscale {
             if now >= auto_state.next_tick_us {
                 autoscale_tick(
-                    now, auto, &eff_cost_us, &lat1_us, &mut boards,
+                    now, auto, &eff_cost_us, &mut boards,
                     &mut replicas, &mut auto_state, &mut scale_events,
                     &mut timeline,
                 );
@@ -542,12 +562,33 @@ pub fn run_fleet(
                 }
             }
         }
-        // Let every board dispatch at `now`; collect wake-ups.
-        let mut t_next = f64::INFINITY;
-        for board in boards.iter_mut() {
-            if let Some(wake) = board.pump(now)? {
-                t_next = t_next.min(wake);
+        // Let every board with standing or fresh work dispatch at
+        // `now`; push wake-ups into the fleet heap and keep the
+        // standing-work count incrementally (skipped boards are empty
+        // by construction).
+        let mut standing = 0usize;
+        for (b, board) in boards.iter_mut().enumerate() {
+            if !touched[b] && board.total_queued() == 0 {
+                continue;
             }
+            touched[b] = false;
+            wake_gen[b] += 1;
+            if let Some(wake) = board.pump(now)? {
+                wakes.push(Reverse((wake.to_bits(), b, wake_gen[b])));
+            }
+            standing += board.total_queued();
+        }
+        // Clock advance: earliest live board wake from the heap,
+        // merged with the next arrival and (while work is standing)
+        // the next autoscaler tick.
+        let mut t_next = f64::INFINITY;
+        while let Some(&Reverse((bits, b, gen))) = wakes.peek() {
+            if gen != wake_gen[b] {
+                wakes.pop();
+                continue;
+            }
+            t_next = f64::from_bits(bits);
+            break;
         }
         if ai < arrivals.len() {
             t_next = t_next.min(arrivals[ai].at_us);
@@ -556,9 +597,7 @@ pub fn run_fleet(
         // idle arrival gap the clock jumps straight to the next
         // arrival (ticks resume there via the catch-up above) instead
         // of stepping through thousands of no-op control intervals.
-        let queued: usize =
-            boards.iter().map(|b| b.total_queued()).sum();
-        if opts.autoscale.is_some() && queued > 0 {
+        if opts.autoscale.is_some() && standing > 0 {
             t_next = t_next.min(auto_state.next_tick_us);
         }
         if !t_next.is_finite() {
@@ -681,13 +720,14 @@ fn eligible_boards_into(
 }
 
 /// Pick the board for one model-`m` arrival from the eligible set.
-/// `lat1_us` is the precomputed per-model cheapest batch-1 latency
-/// table pricing each board's backlog.
+/// Cost-aware scores come from each board's epoch-cached backlog
+/// estimate: only boards whose queues changed since the last route
+/// re-price their queued work (lane residuals are O(lanes) and always
+/// fresh — they decay with `now`).
 fn route(
     policy: RouterPolicy,
     m: usize,
     now: f64,
-    lat1_us: &[f64],
     boards: &[BoardSim],
     elig: &[usize],
     rr: &mut [usize],
@@ -710,8 +750,7 @@ fn route(
             let mut best = elig[0];
             let mut best_score = f64::INFINITY;
             for &b in elig {
-                let score =
-                    boards[b].backlog_residual_us(now, lat1_us);
+                let score = boards[b].backlog_residual_us(now);
                 if score < best_score {
                     best = b;
                     best_score = score;
@@ -729,7 +768,6 @@ fn autoscale_tick(
     now: f64,
     auto: &AutoscalePolicy,
     eff_cost_us: &[f64],
-    lat1_us: &[f64],
     boards: &mut [BoardSim],
     replicas: &mut [Vec<Replica>],
     state: &mut AutoState,
@@ -817,8 +855,7 @@ fn autoscale_tick(
                     if replicas[b].iter().any(|r| r.model == m) {
                         continue;
                     }
-                    let load_b =
-                        boards[b].backlog_residual_us(now, lat1_us);
+                    let load_b = boards[b].backlog_residual_us(now);
                     if target.map_or(true, |(_, best)| load_b < best) {
                         target = Some((b, load_b));
                     }

@@ -183,6 +183,25 @@ impl ModelRegistry {
         &self.entries
     }
 
+    /// Per-model cheapest batch-1 latency table (us), probed once —
+    /// the price table the fleet router's cached backlog scores and
+    /// the dispatch benches share.  Index == registry index.
+    pub fn lat1_table(&self) -> Result<Vec<f64>> {
+        self.entries
+            .iter()
+            .map(|e| e.cheapest_latency_us(1))
+            .collect()
+    }
+
+    /// Per-model per-request cost (us) at the efficient Alg. 2 batch —
+    /// the autoscaler's load-signal table.  Index == registry index.
+    pub fn efficient_cost_table(&self) -> Result<Vec<f64>> {
+        self.entries
+            .iter()
+            .map(|e| e.efficient_cost_us())
+            .collect()
+    }
+
     /// Registry index of the model named `name`.
     pub fn index_of(&self, name: &str) -> Result<usize> {
         self.entries
@@ -277,5 +296,21 @@ mod tests {
         assert!(eff > 0.0);
         assert!(eff <= cheapest * 1.1,
                 "efficient {eff} > batch-1 {cheapest}");
+    }
+
+    #[test]
+    fn price_tables_match_per_entry_helpers() {
+        let mut reg = ModelRegistry::new();
+        reg.register(session("pt_a", 2.0, 0.3)).unwrap();
+        reg.register(session("pt_b", 0.5, 0.6)).unwrap();
+        let lat1 = reg.lat1_table().unwrap();
+        let eff = reg.efficient_cost_table().unwrap();
+        assert_eq!(lat1.len(), 2);
+        assert_eq!(eff.len(), 2);
+        for m in 0..2 {
+            assert_eq!(lat1[m],
+                       reg.get(m).cheapest_latency_us(1).unwrap());
+            assert_eq!(eff[m], reg.get(m).efficient_cost_us().unwrap());
+        }
     }
 }

@@ -10,6 +10,36 @@
 //! admitted (and later served or shed-expired) or shed at admission —
 //! nothing is lost, nothing is served twice (property-tested in
 //! `rust/tests/serve_multitenant.rs`).
+//!
+//! # The indexed core
+//!
+//! [`AdmissionQueues`] stores each model's backlog as per-(model, class)
+//! `VecDeque` rings that are *sorted by construction* under the dispatch
+//! comparator (class-priority ladder, FIFO within a class):
+//!
+//! * [`AdmissionQueues::dispatch_view`] is a borrowing iterator in
+//!   dispatch order — zero clones, zero sorts (the board scheduler's
+//!   scoring loop reads it directly);
+//! * [`AdmissionQueues::take_batch`] drains ring heads in order, no sort;
+//! * shed-policy evictions and expiry sweeps are head-pops (plus an O(1)
+//!   head-deadline early-out for the no-expiry common case), not scans.
+//!
+//! The original flat-vec clone+sort implementation survives verbatim as
+//! [`ReferenceQueues`] — the readable spec.  `rust/tests/slo_indexed.rs`
+//! drives both through randomized offer/take/shed/expire interleavings
+//! and pins the indexed path bit-identical: same admissions, same
+//! sorted queues, same take-batch drains, same shed victims.  Two
+//! reference behaviors are permutation artifacts of its in-place sorts
+//! rather than specified semantics, and the indexed path canonicalizes
+//! them to admission order: the emission order of shed records *within
+//! one expiry sweep* (every downstream consumer is a counter, so the
+//! pin compares shed logs as multisets plus exact admission-shed
+//! order), and the strict-FIFO tie-break between requests with exactly
+//! equal arrival times (the indexed drain uses admission order).  The
+//! `fig_fleet` bench times the two implementations against each other
+//! (dispatch ns/req at Q = 10^2..10^4).
+
+use std::collections::VecDeque;
 
 /// One service class.
 #[derive(Debug, Clone)]
@@ -77,7 +107,7 @@ impl ShedPolicy {
 }
 
 /// One admitted, not-yet-served request.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QueuedReq {
     /// Global request id (index into the merged arrival stream).
     pub req: usize,
@@ -94,7 +124,7 @@ pub struct QueuedReq {
 }
 
 /// A request shed before service, and why.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShedReq {
     /// Global request id (index into the merged arrival stream).
     pub req: usize,
@@ -109,16 +139,353 @@ pub struct ShedReq {
 }
 
 /// Dispatch order: class priority first, FIFO within a class — the one
-/// comparator both the scoring snapshot and the dispatch drain use.
+/// comparator both the scoring view and the dispatch drain realize.
 fn class_then_arrival(a: &QueuedReq, b: &QueuedReq) -> std::cmp::Ordering {
     a.class
         .cmp(&b.class)
         .then(a.arrival_us.partial_cmp(&b.arrival_us).unwrap())
 }
 
-/// Bounded multi-model queues with per-class admission budgets.
+/// One ring entry: the request plus its global admission sequence
+/// number.  The sequence number reproduces the reference flat-vec
+/// insertion order exactly wherever the dispatch comparator ties
+/// (equal arrivals within a class, FIFO merges across classes).
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    req: QueuedReq,
+    seq: u64,
+}
+
+/// Bounded multi-model queues with per-class admission budgets, indexed
+/// for O(1)/O(log Q) dispatch (see the module docs).  Pin spec:
+/// [`ReferenceQueues`].
 #[derive(Debug, Clone)]
 pub struct AdmissionQueues {
+    classes: Vec<SloClass>,
+    policy: ShedPolicy,
+    /// `rings[model][class]`: sorted by (arrival, admission seq) by
+    /// construction, so chaining rings in class order yields the
+    /// dispatch order with no sort.
+    rings: Vec<Vec<VecDeque<Slot>>>,
+    /// Outstanding queued requests per class (across models).
+    outstanding: Vec<usize>,
+    /// Outstanding queued requests per model (across classes).
+    model_len: Vec<usize>,
+    /// Outstanding queued requests in total.
+    total: usize,
+    /// `ShedLowestClass` shared-pool bound: sum of all class caps,
+    /// precomputed once at construction.
+    pool_cap: usize,
+    /// Earliest absolute deadline over all queued requests; `None` when
+    /// unknown (recomputed lazily by the expiry sweep).  Lets
+    /// [`AdmissionQueues::drop_expired`] return in O(1) when nothing
+    /// has expired — the common case on every board pump.
+    earliest_deadline: Option<f64>,
+    /// Monotonic admission counter backing the `Slot` sequence numbers.
+    next_seq: u64,
+    /// Requests admitted so far (count).
+    pub admitted: u64,
+    /// Everything shed so far (admission rejections + queue expiries).
+    pub shed: Vec<ShedReq>,
+}
+
+impl AdmissionQueues {
+    /// Empty queues for `n_models` models under `classes` budgets.
+    pub fn new(classes: &[SloClass], policy: ShedPolicy,
+               n_models: usize) -> Self {
+        AdmissionQueues {
+            pool_cap: classes.iter().map(|c| c.queue_cap).sum(),
+            rings: (0..n_models)
+                .map(|_| vec![VecDeque::new(); classes.len()])
+                .collect(),
+            outstanding: vec![0; classes.len()],
+            model_len: vec![0; n_models],
+            total: 0,
+            earliest_deadline: Some(f64::INFINITY),
+            next_seq: 0,
+            classes: classes.to_vec(),
+            policy,
+            admitted: 0,
+            shed: Vec::new(),
+        }
+    }
+
+    /// The configured SLO class table.
+    pub fn classes(&self) -> &[SloClass] {
+        &self.classes
+    }
+
+    /// Outstanding (queued, unserved) requests across all models, O(1).
+    pub fn total_queued(&self) -> usize {
+        self.total
+    }
+
+    /// Outstanding requests queued for one model, O(1).
+    pub fn queue_len(&self, model: usize) -> usize {
+        self.model_len[model]
+    }
+
+    /// Borrowing dispatch view of one model's queue: class-priority
+    /// first, FIFO within a class — the exact order
+    /// [`AdmissionQueues::take_batch`] drains in.  Zero clones, zero
+    /// sorts; the rings are sorted by construction.
+    pub fn dispatch_view(&self, model: usize)
+        -> impl Iterator<Item = &QueuedReq> + '_
+    {
+        self.rings[model]
+            .iter()
+            .flat_map(|ring| ring.iter().map(|s| &s.req))
+    }
+
+    /// Oldest arrival time queued for one model (the FIFO head), or
+    /// `INFINITY` when the model's queue is empty.  O(classes): the min
+    /// over the ring heads.
+    pub fn head_arrival_us(&self, model: usize) -> f64 {
+        self.rings[model]
+            .iter()
+            .filter_map(|ring| ring.front())
+            .map(|s| s.req.arrival_us)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// The dispatch view materialized through the reference clone+sort
+    /// path (the old `sorted_queue`): equal to
+    /// [`AdmissionQueues::dispatch_view`] by the ring invariant — the
+    /// pin tests assert exactly that.
+    pub fn sorted_queue_reference(&self, model: usize) -> Vec<QueuedReq> {
+        let mut slots: Vec<Slot> = self.rings[model]
+            .iter()
+            .flat_map(|ring| ring.iter().copied())
+            .collect();
+        slots.sort_by(|a, b| {
+            class_then_arrival(&a.req, &b.req).then(a.seq.cmp(&b.seq))
+        });
+        slots.into_iter().map(|s| s.req).collect()
+    }
+
+    /// Offer one arriving request; admits it or sheds per policy.  O(1)
+    /// plus, under a full budget, one O(models) head-peek eviction.
+    pub fn offer(&mut self, req: usize, tenant: usize, model: usize,
+                 class: usize, now_us: f64) {
+        let full = match self.policy {
+            ShedPolicy::RejectNew | ShedPolicy::ShedOldest => {
+                self.outstanding[class] >= self.classes[class].queue_cap
+            }
+            // Shared pool bound precomputed at construction.
+            ShedPolicy::ShedLowestClass => self.total >= self.pool_cap,
+        };
+        if full {
+            match self.policy {
+                ShedPolicy::RejectNew => {
+                    self.shed.push(ShedReq {
+                        req, tenant, model, class, at_admission: true });
+                    return;
+                }
+                ShedPolicy::ShedOldest => {
+                    if !self.evict_oldest_of_class(class) {
+                        self.shed.push(ShedReq {
+                            req, tenant, model, class,
+                            at_admission: true });
+                        return;
+                    }
+                }
+                ShedPolicy::ShedLowestClass => {
+                    // Victim class: lowest priority (highest index) with
+                    // queued work, but never a class above the newcomer.
+                    let victim = (class..self.classes.len())
+                        .rev()
+                        .find(|&c| self.outstanding[c] > 0);
+                    match victim {
+                        Some(vc) if self.evict_oldest_of_class(vc) => {}
+                        _ => {
+                            self.shed.push(ShedReq {
+                                req, tenant, model, class,
+                                at_admission: true });
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+        self.outstanding[class] += 1;
+        self.model_len[model] += 1;
+        self.total += 1;
+        self.admitted += 1;
+        let r = QueuedReq {
+            req,
+            tenant,
+            model,
+            class,
+            arrival_us: now_us,
+            deadline_us: now_us + self.classes[class].deadline_us,
+        };
+        if let Some(d) = self.earliest_deadline {
+            self.earliest_deadline = Some(d.min(r.deadline_us));
+        }
+        let slot = Slot { req: r, seq: self.next_seq };
+        self.next_seq += 1;
+        let ring = &mut self.rings[model][class];
+        match ring.back() {
+            // Out-of-order admission: keep the ring sorted by
+            // (arrival, seq) — binary-search insert, O(1) for the
+            // in-order protocol every driver follows.
+            Some(b) if b.req.arrival_us > now_us => {
+                let i = ring
+                    .partition_point(|s| s.req.arrival_us <= now_us);
+                ring.insert(i, slot);
+            }
+            _ => ring.push_back(slot),
+        }
+    }
+
+    /// Remove a queued request from the aggregate accounting (the ring
+    /// pop itself happens at the call site).
+    fn account_removed(&mut self, r: &QueuedReq) {
+        self.outstanding[r.class] -= 1;
+        self.model_len[r.model] -= 1;
+        self.total -= 1;
+        // Removal can only raise the earliest deadline; recompute lazily.
+        self.earliest_deadline = None;
+    }
+
+    /// Shed the oldest queued request of `class`: O(models) head peeks
+    /// (each ring head is its (model, class) minimum by construction),
+    /// one head pop.
+    fn evict_oldest_of_class(&mut self, class: usize) -> bool {
+        let mut best: Option<(usize, f64)> = None; // (model, arrival)
+        for (m, rings) in self.rings.iter().enumerate() {
+            if let Some(s) = rings[class].front() {
+                if best.map_or(true, |(_, t)| s.req.arrival_us < t) {
+                    best = Some((m, s.req.arrival_us));
+                }
+            }
+        }
+        let Some((m, _)) = best else { return false };
+        let victim = self.rings[m][class].pop_front().unwrap().req;
+        self.account_removed(&victim);
+        self.shed.push(ShedReq {
+            req: victim.req,
+            tenant: victim.tenant,
+            model: victim.model,
+            class: victim.class,
+            at_admission: true,
+        });
+        true
+    }
+
+    /// Shed every queued request whose deadline has already passed (the
+    /// dynamic tier's "don't burn capacity on doomed work" rule).  O(1)
+    /// when nothing has expired (head-deadline early-out); otherwise
+    /// head pops only — expired requests form a prefix of every ring
+    /// (deadline = arrival + class constant, rings sorted by arrival).
+    pub fn drop_expired(&mut self, now_us: f64) {
+        if let Some(d) = self.earliest_deadline {
+            if d > now_us {
+                return;
+            }
+        }
+        let mut victims: Vec<Slot> = Vec::new();
+        for m in 0..self.rings.len() {
+            // Pop each ring's expired prefix, then shed in admission
+            // (seq) order — deterministic and content-defined, unlike
+            // the reference's within-sweep emission order, which is an
+            // artifact of its in-place sorts (the pin compares shed
+            // logs as multisets for exactly this reason; every counter
+            // downstream is order-insensitive).
+            victims.clear();
+            for ring in self.rings[m].iter_mut() {
+                while ring
+                    .front()
+                    .map_or(false, |s| s.req.deadline_us <= now_us)
+                {
+                    victims.push(ring.pop_front().unwrap());
+                }
+            }
+            victims.sort_by_key(|s| s.seq);
+            for s in &victims {
+                let victim = s.req;
+                self.account_removed(&victim);
+                self.shed.push(ShedReq {
+                    req: victim.req,
+                    tenant: victim.tenant,
+                    model: victim.model,
+                    class: victim.class,
+                    at_admission: false,
+                });
+            }
+        }
+        // Refresh the head-deadline aggregate from the surviving ring
+        // heads (each head is its ring's minimum deadline).
+        let mut d = f64::INFINITY;
+        for rings in &self.rings {
+            for ring in rings {
+                if let Some(s) = ring.front() {
+                    d = d.min(s.req.deadline_us);
+                }
+            }
+        }
+        self.earliest_deadline = Some(d);
+    }
+
+    /// Remove up to `max` requests of one model for dispatch.  With
+    /// `class_order`, higher-priority classes leave the queue first
+    /// (FIFO within a class); otherwise strict FIFO.  Head pops in both
+    /// cases — the FIFO path is a k-way merge over the class rings by
+    /// (arrival, admission seq).
+    pub fn take_batch(&mut self, model: usize, max: usize,
+                      class_order: bool) -> Vec<QueuedReq> {
+        let mut taken: Vec<QueuedReq> = Vec::new();
+        if class_order {
+            for c in 0..self.classes.len() {
+                while taken.len() < max {
+                    let Some(s) = self.rings[model][c].pop_front() else {
+                        break;
+                    };
+                    taken.push(s.req);
+                }
+                if taken.len() >= max {
+                    break;
+                }
+            }
+        } else {
+            while taken.len() < max {
+                let mut best: Option<(usize, f64, u64)> = None;
+                for (c, ring) in self.rings[model].iter().enumerate() {
+                    if let Some(s) = ring.front() {
+                        let better = best.map_or(true, |(_, a, q)| {
+                            (s.req.arrival_us, s.seq) < (a, q)
+                        });
+                        if better {
+                            best = Some((c, s.req.arrival_us, s.seq));
+                        }
+                    }
+                }
+                let Some((c, _, _)) = best else { break };
+                taken.push(self.rings[model][c].pop_front().unwrap().req);
+            }
+        }
+        for r in &taken {
+            self.outstanding[r.class] -= 1;
+        }
+        self.model_len[model] -= taken.len();
+        self.total -= taken.len();
+        if !taken.is_empty() {
+            self.earliest_deadline = None;
+        }
+        taken
+    }
+}
+
+/// The original flat-vec admission queues — the readable spec the
+/// indexed [`AdmissionQueues`] is pinned against (dispatch/take/evict/
+/// expiry order and shed accounting bit-identical; see
+/// `rust/tests/slo_indexed.rs`).  Also the reference side of the
+/// `fig_fleet` dispatch bench: its `sorted_queue` clones and sorts the
+/// whole backlog per call and `take_batch` sorts again, the O(Q log Q)
+/// cost the indexed core removes.  Semantics are documented on the
+/// indexed struct; this one exists to stay unchanged.
+#[derive(Debug, Clone)]
+pub struct ReferenceQueues {
     classes: Vec<SloClass>,
     policy: ShedPolicy,
     /// Per-model FIFO queues (arrival order within a model).
@@ -131,11 +498,11 @@ pub struct AdmissionQueues {
     pub shed: Vec<ShedReq>,
 }
 
-impl AdmissionQueues {
+impl ReferenceQueues {
     /// Empty queues for `n_models` models under `classes` budgets.
     pub fn new(classes: &[SloClass], policy: ShedPolicy,
                n_models: usize) -> Self {
-        AdmissionQueues {
+        ReferenceQueues {
             classes: classes.to_vec(),
             policy,
             queues: vec![Vec::new(); n_models],
@@ -143,11 +510,6 @@ impl AdmissionQueues {
             admitted: 0,
             shed: Vec::new(),
         }
-    }
-
-    /// The configured SLO class table.
-    pub fn classes(&self) -> &[SloClass] {
-        &self.classes
     }
 
     /// Outstanding (queued, unserved) requests across all models.
@@ -161,7 +523,8 @@ impl AdmissionQueues {
     }
 
     /// Sorted dispatch view of one model's queue: class-priority first,
-    /// FIFO within a class.
+    /// FIFO within a class.  Clones and sorts per call — the cost the
+    /// indexed `dispatch_view` removes.
     pub fn sorted_queue(&self, model: usize) -> Vec<QueuedReq> {
         let mut q = self.queues[model].clone();
         q.sort_by(class_then_arrival);
@@ -197,8 +560,6 @@ impl AdmissionQueues {
                     }
                 }
                 ShedPolicy::ShedLowestClass => {
-                    // Victim class: lowest priority (highest index) with
-                    // queued work, but never a class above the newcomer.
                     let victim = (class..self.classes.len())
                         .rev()
                         .find(|&c| self.outstanding[c] > 0);
@@ -250,8 +611,7 @@ impl AdmissionQueues {
         true
     }
 
-    /// Shed every queued request whose deadline has already passed (the
-    /// dynamic tier's "don't burn capacity on doomed work" rule).
+    /// Shed every queued request whose deadline has already passed.
     pub fn drop_expired(&mut self, now_us: f64) {
         for q in &mut self.queues {
             let mut i = 0;
@@ -273,9 +633,8 @@ impl AdmissionQueues {
         }
     }
 
-    /// Remove up to `max` requests of one model for dispatch.  With
-    /// `class_order`, higher-priority classes leave the queue first
-    /// (FIFO within a class); otherwise strict FIFO.
+    /// Remove up to `max` requests of one model for dispatch (sorts the
+    /// model's whole queue per call).
     pub fn take_batch(&mut self, model: usize, max: usize,
                       class_order: bool) -> Vec<QueuedReq> {
         let q = &mut self.queues[model];
@@ -377,6 +736,13 @@ mod tests {
         assert_eq!(q.total_queued(), 1);
         assert_eq!(q.queue_len(0), 0);
         assert_eq!(q.queue_len(1), 1);
+        // The head-deadline early-out: nothing more expires below the
+        // surviving deadline, and the sweep stays accounting-exact.
+        q.drop_expired(60_000.0);
+        assert_eq!(q.shed.len(), 1);
+        q.drop_expired(100_000.0);
+        assert_eq!(q.shed.len(), 2);
+        assert_eq!(q.total_queued(), 0);
     }
 
     #[test]
@@ -391,5 +757,84 @@ mod tests {
         assert_eq!(taken.iter().map(|r| r.req).collect::<Vec<_>>(),
                    vec![1, 3, 0]);
         assert_eq!(q.total_queued(), 1);
+    }
+
+    #[test]
+    fn dispatch_view_is_the_sorted_order_without_clones() {
+        let cls = classes();
+        let mut q = AdmissionQueues::new(&cls, ShedPolicy::RejectNew, 2);
+        q.offer(0, 0, 0, 1, 0.0);
+        q.offer(1, 0, 0, 0, 1.0);
+        q.offer(2, 0, 1, 0, 1.5);
+        q.offer(3, 0, 0, 0, 2.0);
+        let view: Vec<QueuedReq> = q.dispatch_view(0).copied().collect();
+        assert_eq!(view, q.sorted_queue_reference(0));
+        assert_eq!(view.iter().map(|r| r.req).collect::<Vec<_>>(),
+                   vec![1, 3, 0]);
+        assert_eq!(q.head_arrival_us(0), 0.0);
+        assert_eq!(q.head_arrival_us(1), 1.5);
+    }
+
+    #[test]
+    fn out_of_order_offers_keep_rings_sorted() {
+        let cls = classes();
+        let mut q = AdmissionQueues::new(&cls, ShedPolicy::RejectNew, 1);
+        q.offer(0, 0, 0, 1, 5.0);
+        q.offer(1, 0, 0, 1, 2.0); // behind the back of the ring
+        q.offer(2, 0, 0, 1, 2.0); // tie: admission order breaks it
+        let view: Vec<usize> =
+            q.dispatch_view(0).map(|r| r.req).collect();
+        assert_eq!(view, vec![1, 2, 0]);
+        assert_eq!(q.head_arrival_us(0), 2.0);
+        // FIFO take follows (arrival, admission) order too.
+        let taken = q.take_batch(0, 2, false);
+        assert_eq!(taken.iter().map(|r| r.req).collect::<Vec<_>>(),
+                   vec![1, 2]);
+    }
+
+    #[test]
+    fn shared_pool_cap_is_precomputed_and_enforced() {
+        let cls = classes(); // caps 2 + 3 = 5
+        let mut q =
+            AdmissionQueues::new(&cls, ShedPolicy::ShedLowestClass, 1);
+        for i in 0..7 {
+            q.offer(i, 0, 0, 1, i as f64);
+        }
+        // Pool bound (5) held: two oldest batch requests displaced.
+        assert_eq!(q.total_queued(), 5);
+        assert_eq!(q.shed.len(), 2);
+        assert_eq!(q.shed[0].req, 0);
+        assert_eq!(q.shed[1].req, 1);
+    }
+
+    #[test]
+    fn reference_queues_mirror_the_indexed_semantics() {
+        // A quick inline pin (the full randomized pin lives in
+        // rust/tests/slo_indexed.rs): same op sequence, same outcomes.
+        let cls = classes();
+        for policy in [
+            ShedPolicy::RejectNew,
+            ShedPolicy::ShedOldest,
+            ShedPolicy::ShedLowestClass,
+        ] {
+            let mut a = AdmissionQueues::new(&cls, policy, 2);
+            let mut b = ReferenceQueues::new(&cls, policy, 2);
+            for i in 0..12 {
+                let (m, c, t) = (i % 2, (i / 2) % 2, i as f64 * 3.0);
+                a.offer(i, 0, m, c, t);
+                b.offer(i, 0, m, c, t);
+            }
+            a.drop_expired(25_000.0);
+            b.drop_expired(25_000.0);
+            assert_eq!(a.admitted, b.admitted);
+            assert_eq!(a.shed, b.shed);
+            assert_eq!(a.total_queued(), b.total_queued());
+            for m in 0..2 {
+                assert_eq!(a.sorted_queue_reference(m),
+                           b.sorted_queue(m));
+                assert_eq!(a.take_batch(m, 3, true),
+                           b.take_batch(m, 3, true));
+            }
+        }
     }
 }
