@@ -42,6 +42,12 @@ pub struct Config {
     pub router: String,
     /// serve-fleet: run the replica autoscaler; bare `--autoscale`.
     pub autoscale: bool,
+    /// serve-fleet: DVFS governor (race-to-idle | stretch-to-deadline |
+    /// fixed:N | off).  `off` disables energy accounting entirely
+    /// (boards dispatch at full frequency, no energy columns).
+    pub governor: String,
+    /// serve-fleet: per-board power cap in watts (0 = uncapped).
+    pub power_cap_w: f64,
 }
 
 impl Default for Config {
@@ -68,8 +74,21 @@ impl Default for Config {
             boards: 4,
             router: "cost-aware".into(),
             autoscale: false,
+            governor: "race-to-idle".into(),
+            power_cap_w: 0.0,
         }
     }
+}
+
+/// Validate a `governor` spelling: `off` or anything
+/// [`crate::power::Governor::parse`] accepts.
+fn check_governor(s: &str) -> Result<()> {
+    anyhow::ensure!(
+        s == "off" || crate::power::Governor::parse(s).is_ok(),
+        "governor must be race-to-idle|stretch-to-deadline|fixed:N|off, \
+         got `{s}`"
+    );
+    Ok(())
 }
 
 impl Config {
@@ -95,6 +114,9 @@ impl Config {
                     "router must be round-robin|jsq|cost-aware, got `{r}`"
                 );
             }
+        }
+        if let Some(g) = v.get("governor").as_str() {
+            check_governor(g)?;
         }
         let d = Config::default();
         Ok(Config {
@@ -132,6 +154,15 @@ impl Config {
                 .get("autoscale")
                 .as_bool()
                 .unwrap_or(d.autoscale),
+            governor: v
+                .get("governor")
+                .as_str()
+                .unwrap_or(&d.governor)
+                .into(),
+            power_cap_w: v
+                .get("power_cap_w")
+                .as_f64()
+                .unwrap_or(d.power_cap_w),
         })
     }
 
@@ -168,6 +199,18 @@ impl Config {
                 self.router = value.into();
             }
             "autoscale" => self.autoscale = parse_bool(value)?,
+            "governor" => {
+                check_governor(value)?;
+                self.governor = value.into();
+            }
+            "power_cap_w" => {
+                let w: f64 = value.parse()?;
+                anyhow::ensure!(
+                    w.is_finite() && w >= 0.0,
+                    "power_cap_w must be >= 0 (0 = uncapped), got `{value}`"
+                );
+                self.power_cap_w = w;
+            }
             other => anyhow::bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -248,6 +291,25 @@ mod tests {
         let cr = Config::from_json(&good_router).unwrap();
         assert_eq!(cr.router, "round-robin");
         assert_eq!(cr.boards, 2);
+        // power knobs
+        assert_eq!(c.governor, "race-to-idle");
+        assert_eq!(c.power_cap_w, 0.0); // uncapped
+        c.apply_override("governor", "stretch-to-deadline").unwrap();
+        assert_eq!(c.governor, "stretch-to-deadline");
+        c.apply_override("governor", "fixed:2").unwrap();
+        c.apply_override("governor", "off").unwrap();
+        assert!(c.apply_override("governor", "warp-speed").is_err());
+        c.apply_override("power_cap_w", "25.5").unwrap();
+        assert!((c.power_cap_w - 25.5).abs() < 1e-12);
+        assert!(c.apply_override("power_cap_w", "-3").is_err());
+        let bad_gov = json::parse(r#"{"governor": "dice"}"#).unwrap();
+        assert!(Config::from_json(&bad_gov).is_err());
+        let good_gov = json::parse(
+            r#"{"governor": "stretch-to-deadline", "power_cap_w": 40}"#)
+            .unwrap();
+        let cg = Config::from_json(&good_gov).unwrap();
+        assert_eq!(cg.governor, "stretch-to-deadline");
+        assert!((cg.power_cap_w - 40.0).abs() < 1e-12);
         // Config files get the same backend validation as the CLI.
         let bad = json::parse(r#"{"backend": "cuda"}"#).unwrap();
         assert!(Config::from_json(&bad).is_err());

@@ -33,6 +33,31 @@ impl Proc {
     }
 }
 
+/// One DVFS operating point of a processor: run everything
+/// `latency_scale`× slower than the calibrated roofline in exchange for a
+/// lower power draw.  The calibrated profile (`power_static_w` /
+/// `power_dyn_w` on [`ProcModel`]) is the `latency_scale == 1.0` point.
+#[derive(Debug, Clone)]
+pub struct FreqState {
+    /// Human-readable state name ("max", "mid", "low", ...).
+    pub name: String,
+    /// Latency multiplier relative to the calibrated roofline, >= 1.0
+    /// (dimensionless; 1.0 == full frequency).
+    pub latency_scale: f64,
+    /// Static (leakage + always-on) power at this frequency, watts.
+    pub static_w: f64,
+    /// Dynamic power when the processor is busy at this frequency, watts.
+    pub dyn_w: f64,
+}
+
+impl FreqState {
+    /// Total draw while a lane is executing at this state, watts
+    /// (`static_w + dyn_w`).
+    pub fn busy_power_w(&self) -> f64 {
+        self.static_w + self.dyn_w
+    }
+}
+
 /// Per-processor roofline parameters.
 #[derive(Debug, Clone)]
 pub struct ProcModel {
@@ -43,6 +68,10 @@ pub struct ProcModel {
     pub sparsity_elasticity: BTreeMap<String, f64>,
     pub power_static_w: f64,
     pub power_dyn_w: f64,
+    /// Optional DVFS ladder (fastest first).  Empty when the profile
+    /// predates frequency states; `power::LanePowerModel::from_proc`
+    /// synthesizes a default ladder in that case.
+    pub freq_states: Vec<FreqState>,
 }
 
 impl ProcModel {
@@ -57,6 +86,20 @@ impl ProcModel {
                 })
                 .unwrap_or_default()
         };
+        let freq_states = v
+            .get("freq_states")
+            .as_arr()
+            .map(|arr| {
+                arr.iter()
+                    .map(|s| FreqState {
+                        name: s.str_of("name").to_string(),
+                        latency_scale: s.f64_of("latency_scale"),
+                        static_w: s.f64_of("static_w"),
+                        dyn_w: s.f64_of("dyn_w"),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
         Ok(ProcModel {
             peak_gflops: v.f64_of("peak_gflops"),
             mem_bw_gbps: v.f64_of("mem_bw_gbps"),
@@ -65,6 +108,7 @@ impl ProcModel {
             sparsity_elasticity: map("sparsity_elasticity"),
             power_static_w: v.f64_of("power_static_w"),
             power_dyn_w: v.f64_of("power_dyn_w"),
+            freq_states,
         })
     }
 }
@@ -329,6 +373,34 @@ mod tests {
         assert!(agx.gpu.peak_gflops > agx.cpu.peak_gflops);
         assert!(reg.get("orin_nano").is_ok());
         assert!(reg.get("nonexistent").is_err());
+    }
+
+    #[test]
+    fn freq_states_parse_as_a_well_formed_ladder() {
+        let reg = test_registry();
+        for id in ["agx_orin", "orin_nano"] {
+            let d = reg.get(id).unwrap();
+            for p in [&d.cpu, &d.gpu] {
+                let s = &p.freq_states;
+                assert_eq!(s.len(), 3, "{id}: expected 3-state ladder");
+                assert_eq!(s[0].name, "max");
+                assert_eq!(s[0].latency_scale, 1.0);
+                assert_eq!(s[0].static_w, p.power_static_w);
+                assert_eq!(s[0].dyn_w, p.power_dyn_w);
+                for w in s.windows(2) {
+                    // Slower states must trade latency for power AND
+                    // energy (scale x busy power strictly decreasing),
+                    // or a governor would never have a reason to pick
+                    // them.
+                    assert!(w[1].latency_scale > w[0].latency_scale);
+                    assert!(w[1].busy_power_w() < w[0].busy_power_w());
+                    assert!(
+                        w[1].latency_scale * w[1].busy_power_w()
+                            < w[0].latency_scale * w[0].busy_power_w()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -36,11 +36,23 @@ impl EnergyLedger {
 
     /// Mean power draw over the inference, watts.
     pub fn mean_power_w(&self, dev: &DeviceModel) -> f64 {
-        if self.makespan_us <= 0.0 {
+        self.mean_power_w_over(dev, self.makespan_us)
+    }
+
+    /// Mean power draw over an observation window of `horizon_us`
+    /// microseconds, watts.  In the serving context a board sits idle
+    /// between batches; static power (SoC + per-processor leakage) keeps
+    /// accruing over the whole window while dynamic power only accrues
+    /// over busy time.  `horizon_us` is clamped up to the ledger's own
+    /// makespan so a too-short window can never report utilization > 1.
+    pub fn mean_power_w_over(&self, dev: &DeviceModel,
+                             horizon_us: f64) -> f64 {
+        let h = horizon_us.max(self.makespan_us);
+        if h <= 0.0 {
             return 0.0;
         }
-        let cpu_util = (self.cpu_busy_us / self.makespan_us).min(1.0);
-        let gpu_util = (self.gpu_busy_us / self.makespan_us).min(1.0);
+        let cpu_util = (self.cpu_busy_us / h).min(1.0);
+        let gpu_util = (self.gpu_busy_us / h).min(1.0);
         dev.soc_static_w
             + dev.cpu.power_static_w
             + dev.cpu.power_dyn_w * cpu_util
@@ -51,6 +63,15 @@ impl EnergyLedger {
     /// Energy per inference, millijoules.
     pub fn energy_mj(&self, dev: &DeviceModel) -> f64 {
         self.mean_power_w(dev) * self.makespan_us / 1e3
+    }
+
+    /// Energy over an observation window of `horizon_us` microseconds,
+    /// millijoules — busy energy plus the static floor across idle gaps
+    /// (the serving-tier accounting; see `sparoa::power`).
+    pub fn energy_mj_over(&self, dev: &DeviceModel,
+                          horizon_us: f64) -> f64 {
+        let h = horizon_us.max(self.makespan_us);
+        self.mean_power_w_over(dev, h) * h / 1e3
     }
 }
 
@@ -102,6 +123,33 @@ mod tests {
         };
         assert!(hybrid.mean_power_w(&dev) > gpu_only.mean_power_w(&dev));
         assert!(hybrid.energy_mj(&dev) < gpu_only.energy_mj(&dev));
+    }
+
+    #[test]
+    fn idle_gaps_accrue_static_power_over_a_longer_horizon() {
+        // Regression: the dense-inference accessors spread dynamic power
+        // over the makespan only; a serving window with idle gaps must
+        // keep paying the static floor over the whole horizon while
+        // dynamic energy stays pinned to busy time.
+        let dev = agx();
+        let l = EnergyLedger {
+            gpu_busy_us: 1_000.0,
+            makespan_us: 1_000.0,
+            ..Default::default()
+        };
+        let horizon = 10_000.0;
+        let statics =
+            dev.soc_static_w + dev.cpu.power_static_w + dev.gpu.power_static_w;
+        let expect_mj = statics * horizon / 1e3
+            + dev.gpu.power_dyn_w * l.gpu_busy_us / 1e3;
+        assert!((l.energy_mj_over(&dev, horizon) - expect_mj).abs() < 1e-9);
+        // The idle tail costs energy: windowed > dense.
+        assert!(l.energy_mj_over(&dev, horizon) > l.energy_mj(&dev));
+        // But mean power drops as the busy fraction shrinks.
+        assert!(l.mean_power_w_over(&dev, horizon) < l.mean_power_w(&dev));
+        // Degenerate horizons fall back to the dense accounting.
+        assert_eq!(l.energy_mj_over(&dev, 0.0), l.energy_mj(&dev));
+        assert_eq!(l.mean_power_w_over(&dev, 500.0), l.mean_power_w(&dev));
     }
 
     #[test]

@@ -315,6 +315,28 @@ impl CostTable {
         self.entries[id].params_bytes
     }
 
+    /// Derive the table at a slower DVFS rung: every compute-side cost
+    /// (CPU/GPU latency and launch) is multiplied by `latency_scale`
+    /// (the frequency state's dimensionless slowdown, >= 1.0; see
+    /// [`crate::device::FreqState::latency_scale`]), while cross-device
+    /// transfer costs are left untouched — DMA bandwidth is independent
+    /// of the compute clocks in this model.  `scaled(1.0)` reproduces
+    /// the original table bit-for-bit.
+    pub fn scaled(&self, latency_scale: f64) -> CostTable {
+        assert!(
+            latency_scale.is_finite() && latency_scale > 0.0,
+            "latency_scale must be finite and positive, got {latency_scale}"
+        );
+        let mut t = self.clone();
+        for e in &mut t.entries {
+            e.cpu_lat *= latency_scale;
+            e.cpu_launch *= latency_scale;
+            e.gpu_lat *= latency_scale;
+            e.gpu_launch *= latency_scale;
+        }
+        t
+    }
+
     /// Simulate one inference under `schedule` into reusable buffers.
     /// Identical timeline to the reference simulator — same hardware
     /// state, same RNG draw order, same accounting — minus all per-call
@@ -927,6 +949,41 @@ mod tests {
                            "op {i} transfer drifted");
             }
         }
+    }
+
+    #[test]
+    fn scaled_table_slows_compute_but_not_dma() {
+        let (g, dev, opts) = fixture();
+        let table = CostTable::build(&g, &dev, &opts);
+        // Identity scale is bit-exact.
+        let same = table.scaled(1.0);
+        for i in 0..table.len() {
+            for proc in [Proc::Cpu, Proc::Gpu] {
+                assert_eq!(same.lat(i, proc).to_bits(),
+                           table.lat(i, proc).to_bits());
+            }
+            assert_eq!(same.xfer_out(i).to_bits(),
+                       table.xfer_out(i).to_bits());
+        }
+        // A slower rung scales every compute cost and leaves DMA alone.
+        let slow = table.scaled(1.8);
+        for i in 0..table.len() {
+            for proc in [Proc::Cpu, Proc::Gpu] {
+                assert_eq!(slow.lat(i, proc), table.lat(i, proc) * 1.8);
+                assert_eq!(slow.launch(i, proc),
+                           table.launch(i, proc) * 1.8);
+            }
+            assert_eq!(slow.xfer_out(i).to_bits(),
+                       table.xfer_out(i).to_bits(),
+                       "DMA cost must be frequency-independent");
+        }
+        // And the simulated makespan strictly grows on a real graph.
+        let sched = mixed_schedule(g.ops.len());
+        let mut scratch = SimScratch::new();
+        table.simulate_into(&sched, &mut scratch);
+        let fast = scratch.report.makespan_us;
+        slow.simulate_into(&sched, &mut scratch);
+        assert!(scratch.report.makespan_us > fast);
     }
 
     #[test]

@@ -60,6 +60,15 @@
 //!                      replica autoscaling from per-board attainment /
 //!                      queue-pressure windows (`serve-fleet` CLI,
 //!                      `fig_fleet` bench).
+//!     * `power`      — DVFS governor subsystem for the serving tier:
+//!                      per-lane frequency ladders from
+//!                      `config/devices.json`, race-to-idle /
+//!                      stretch-to-deadline / fixed governors picking a
+//!                      state per dispatched batch, board power caps
+//!                      with throttle accounting, and the busy/idle/SoC
+//!                      energy model behind `PerfSnapshot`'s
+//!                      J-per-inference (`serve-fleet --governor`,
+//!                      `fig_energy_serve` bench).
 //!     * `runtime`    — the PJRT bridge (optional `pjrt` cargo feature)
 //!                      and host tensors / weight stores.
 //!     * `device`/`energy`/`graph`/`profiler` — calibrated device models,
@@ -131,6 +140,7 @@ pub mod energy;
 pub mod engine;
 pub mod graph;
 pub mod nn;
+pub mod power;
 pub mod predictor;
 pub mod profiler;
 pub mod rl;

@@ -6,6 +6,7 @@
 //!   serve       — serve a Poisson request stream with dynamic batching
 //!   serve-multi — multi-tenant SLO-aware serving across models
 //!   serve-fleet — distributed multi-board serving: router + autoscaler
+//!                 + DVFS governor (energy/J-per-inference reporting)
 //!   train       — train the SAC scheduler, print the convergence trace
 //!   compare     — run all baselines on one model/device (Fig. 5 row)
 //!   predict     — query the threshold predictor for a model
@@ -24,6 +25,7 @@ use sparoa::baselines::{Baseline, ALL};
 use sparoa::bench_support::Table;
 use sparoa::config::Config;
 use sparoa::graph::ModelZoo;
+use sparoa::power::{Governor, PowerConfig, PowerProfile};
 use sparoa::profiler;
 use sparoa::scheduler::sac_sched::{SacScheduler, SacSchedulerConfig};
 use sparoa::scheduler::{ScheduleCtx, Scheduler};
@@ -77,6 +79,8 @@ fn usage(cmd: &str) -> String {
         "serve-fleet" => format!(
             "sparoa serve-fleet [{common}] [--boards=N] \
              [--router=round-robin|jsq|cost-aware] [--autoscale] \
+             [--governor=race-to-idle|stretch-to-deadline|fixed:N|off] \
+             [--power_cap_w=W] \
              [--load=X] [--num_requests=N] [--trace=FILE.json] \
              [--json]\n  \
              Distributed multi-board serving: the serve-multi tenant \
@@ -84,7 +88,11 @@ fn usage(cmd: &str) -> String {
              simulated boards by a front-tier router, with optional \
              replica autoscaling\n  \
              from per-board attainment/queue-pressure signals.  \
-             Compares all three routers."
+             Compares all three routers.\n  \
+             Boards run under a DVFS governor (energy columns in every \
+             table; --governor=off\n  \
+             disables accounting); --power_cap_w bounds per-board \
+             instantaneous draw."
         ),
         "train" => format!(
             "sparoa train [{common}] [--episodes=N] [--noise=X] \
@@ -377,12 +385,34 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
                 cfg.router)
     })?;
 
+    // Energy accounting is on unless --governor=off: the boards' DVFS
+    // ladders come from the same calibrated device profile the demo
+    // registry was built on.
+    let power = if cfg.governor == "off" {
+        None
+    } else {
+        let governor = Governor::parse(&cfg.governor)?;
+        let profile =
+            PowerProfile::from_device(registry.get(0).session.device())?;
+        let mut pc = PowerConfig::new(profile, governor);
+        if cfg.power_cap_w > 0.0 {
+            pc.cap_w = Some(cfg.power_cap_w);
+        }
+        Some(pc)
+    };
+
     if !cfg.json {
         println!(
             "fleet — {} boards (1 cpu + 1 gpu lane each), {} models, \
-             load x{:.1}, {} requests, autoscale {}",
+             load x{:.1}, {} requests, autoscale {}, governor {}{}",
             n_boards, registry.len(), cfg.load, arrivals.len(),
             if cfg.autoscale { "on" } else { "off" },
+            if cfg.governor == "off" { "off" } else { &cfg.governor },
+            match cfg.power_cap_w {
+                w if w > 0.0 && power.is_some() =>
+                    format!(", cap {w:.1} W/board"),
+                _ => String::new(),
+            },
         );
     }
 
@@ -397,6 +427,7 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
     for router in routers {
         let mut opts = FleetOptions::new(n_boards, registry.len());
         opts.router = router;
+        opts.power = power.clone();
         if cfg.autoscale {
             opts.autoscale = Some(AutoscalePolicy::default());
         }
@@ -411,13 +442,17 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
         return Ok(());
     }
 
-    let mut t = Table::new(
-        "front-tier router comparison",
-        &["router", "attainment", "shed", "mean batch", "cpu util",
-          "gpu util", "scale events"],
-    );
+    let energy_on = power.is_some();
+    let mut headers = vec![
+        "router", "attainment", "shed", "mean batch", "cpu util",
+        "gpu util", "scale events",
+    ];
+    if energy_on {
+        headers.extend(["mJ/inf", "mean W", "throttles"]);
+    }
+    let mut t = Table::new("front-tier router comparison", &headers);
     for s in &snapshots {
-        t.row(vec![
+        let mut row = vec![
             s.router.clone(),
             format!("{:.1}%", 100.0 * s.aggregate_attainment()),
             s.total_shed().to_string(),
@@ -425,7 +460,15 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
             format!("{:.0}%", 100.0 * s.mean_cpu_util()),
             format!("{:.0}%", 100.0 * s.mean_gpu_util()),
             s.scale_events.len().to_string(),
-        ]);
+        ];
+        if energy_on {
+            row.extend([
+                format!("{:.2}", s.energy_per_inference_mj()),
+                format!("{:.1}", s.mean_power_w()),
+                s.total_throttles().to_string(),
+            ]);
+        }
+        t.row(row);
     }
     t.print();
 
@@ -433,13 +476,19 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
         .iter()
         .find(|s| s.router == chosen.name())
         .expect("configured router was run");
+    let mut headers = vec![
+        "board", "offered", "served", "met", "shed", "cpu util",
+        "gpu util",
+    ];
+    if energy_on {
+        headers.extend(["mJ/inf", "mean W", "throttles"]);
+    }
     let mut bt = Table::new(
         &format!("per-board outcomes — {}", detail.router),
-        &["board", "offered", "served", "met", "shed", "cpu util",
-          "gpu util"],
+        &headers,
     );
     for (b, snap) in detail.boards.iter().enumerate() {
-        bt.row(vec![
+        let mut row = vec![
             b.to_string(),
             snap.total_offered().to_string(),
             snap.total_served().to_string(),
@@ -447,7 +496,15 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
             snap.total_shed().to_string(),
             format!("{:.0}%", 100.0 * snap.cpu_util()),
             format!("{:.0}%", 100.0 * snap.gpu_util()),
-        ]);
+        ];
+        if energy_on {
+            row.extend([
+                format!("{:.2}", snap.energy_per_inference_mj()),
+                format!("{:.1}", snap.mean_power_w()),
+                snap.throttle_events.to_string(),
+            ]);
+        }
+        bt.row(row);
     }
     bt.print();
     detail

@@ -1,0 +1,621 @@
+//! DVFS governor subsystem for the serving tier (the SparseDVFS sequel
+//! to SparOA's scheduler — PAPERS.md).
+//!
+//! Each lane of a board's [`LaneMatrix`](crate::serve::LaneMatrix) owns a
+//! small ladder of frequency states ([`FreqState`]: a latency-scale /
+//! static-W / dyn-W point, loaded from `config/devices.json` or
+//! synthesized from the calibrated profile).  A per-board [`Governor`]
+//! picks one state per dispatched batch:
+//!
+//! * [`Governor::RaceToIdle`] — always run at max frequency and let the
+//!   lane fall back to its idle floor as early as possible;
+//! * [`Governor::StretchToDeadline`] — the slowest (cheapest-energy)
+//!   state whose projected finish still meets the batch's worst SLO
+//!   deadline, priced through the same `latency_us` probes the
+//!   dispatcher scores with;
+//! * [`Governor::FixedState`] — pin one ladder rung (the control arm).
+//!
+//! An optional per-board power cap (watts) bounds instantaneous draw:
+//! when the governor's pick would exceed the cap at dispatch time the
+//! state is clamped toward slower rungs (surfaced as *throttle events*),
+//! and when even the slowest rung does not fit the dispatch is deferred
+//! to the next lane-finish event.  Board power only steps up at dispatch
+//! starts, so enforcing the cap there bounds it at every instant.
+//!
+//! Accounting: busy intervals cost `busy_power_w` × duration; idle gaps
+//! cost the lane's idle floor (the slowest state's static draw); the SoC
+//! floor accrues over the whole horizon.  Totals land in
+//! [`PerfSnapshot`](crate::serve::PerfSnapshot) as mJ / mean W /
+//! J-per-inference.  All energies are millijoules, powers watts, times
+//! microseconds.
+
+use crate::device::{DeviceModel, Proc, ProcModel};
+use anyhow::Result;
+
+pub use crate::device::FreqState;
+
+/// Relative tolerance for cap comparisons (watts).
+const CAP_EPS_W: f64 = 1e-9;
+
+/// Latency-scale factors of the ladder synthesized for profiles without
+/// `freq_states` (fastest first; rung 0 is the calibrated point).
+const DEFAULT_SCALES: [f64; 3] = [1.0, 1.35, 1.8];
+/// Static-power factors of the synthesized ladder (× calibrated W).
+const DEFAULT_STATIC: [f64; 3] = [1.0, 0.7, 0.5];
+/// Dynamic-power factors of the synthesized ladder (× calibrated W).
+const DEFAULT_DYN: [f64; 3] = [1.0, 0.62, 0.39];
+const DEFAULT_NAMES: [&str; 3] = ["max", "mid", "low"];
+
+/// The DVFS ladder of one lane plus its idle floor.
+#[derive(Debug, Clone)]
+pub struct LanePowerModel {
+    /// Frequency states, fastest first (`states[0].latency_scale == 1.0`).
+    pub states: Vec<FreqState>,
+    /// Draw while the lane is idle, watts (the slowest state's static
+    /// power — an idle lane parks at its lowest frequency).
+    pub idle_w: f64,
+}
+
+impl LanePowerModel {
+    /// Build the ladder for one processor: the profile's `freq_states`
+    /// when present, else a default 3-rung ladder synthesized from the
+    /// calibrated (static, dyn) draw.  Validates DVFS physics: scales
+    /// strictly increasing from 1.0, busy power strictly decreasing,
+    /// and energy-per-op (scale × busy power) strictly decreasing —
+    /// otherwise a slower rung would never be worth picking.
+    pub fn from_proc(p: &ProcModel) -> Result<Self> {
+        let states: Vec<FreqState> = if p.freq_states.is_empty() {
+            (0..3)
+                .map(|i| FreqState {
+                    name: DEFAULT_NAMES[i].to_string(),
+                    latency_scale: DEFAULT_SCALES[i],
+                    static_w: p.power_static_w * DEFAULT_STATIC[i],
+                    dyn_w: p.power_dyn_w * DEFAULT_DYN[i],
+                })
+                .collect()
+        } else {
+            p.freq_states.clone()
+        };
+        anyhow::ensure!(!states.is_empty(), "empty frequency ladder");
+        anyhow::ensure!(
+            (states[0].latency_scale - 1.0).abs() < 1e-9,
+            "ladder rung 0 must be the full-frequency point \
+             (latency_scale 1.0), got {}",
+            states[0].latency_scale
+        );
+        for s in &states {
+            anyhow::ensure!(
+                s.latency_scale.is_finite()
+                    && s.static_w.is_finite()
+                    && s.dyn_w.is_finite()
+                    && s.latency_scale >= 1.0
+                    && s.static_w >= 0.0
+                    && s.dyn_w >= 0.0,
+                "frequency state `{}` has non-physical parameters",
+                s.name
+            );
+        }
+        for w in states.windows(2) {
+            anyhow::ensure!(
+                w[1].latency_scale > w[0].latency_scale,
+                "latency_scale must strictly increase down the ladder \
+                 ({} -> {})",
+                w[0].name,
+                w[1].name
+            );
+            anyhow::ensure!(
+                w[1].busy_power_w() < w[0].busy_power_w(),
+                "busy power must strictly decrease down the ladder \
+                 ({} -> {})",
+                w[0].name,
+                w[1].name
+            );
+            anyhow::ensure!(
+                w[1].latency_scale * w[1].busy_power_w()
+                    < w[0].latency_scale * w[0].busy_power_w(),
+                "energy per op (scale x busy W) must strictly decrease \
+                 down the ladder ({} -> {}), or the slow rung is never \
+                 worth picking",
+                w[0].name,
+                w[1].name
+            );
+        }
+        let idle_w = states.last().expect("non-empty").static_w;
+        Ok(LanePowerModel { states, idle_w })
+    }
+
+    /// Busy draw of rung `state`, watts.
+    pub fn busy_w(&self, state: usize) -> f64 {
+        self.states[state].busy_power_w()
+    }
+
+    /// Latency multiplier of rung `state` (dimensionless, >= 1.0).
+    pub fn scale(&self, state: usize) -> f64 {
+        self.states[state].latency_scale
+    }
+}
+
+/// Per-board power model: one ladder per processor kind plus the SoC
+/// floor (DRAM + carrier board, watts) that accrues regardless of lane
+/// activity.
+#[derive(Debug, Clone)]
+pub struct PowerProfile {
+    /// CPU-lane ladder.
+    pub cpu: LanePowerModel,
+    /// GPU-lane ladder.
+    pub gpu: LanePowerModel,
+    /// Always-on SoC draw, watts.
+    pub soc_static_w: f64,
+}
+
+impl PowerProfile {
+    /// Derive the board power model from a calibrated device profile.
+    pub fn from_device(dev: &DeviceModel) -> Result<Self> {
+        Ok(PowerProfile {
+            cpu: LanePowerModel::from_proc(&dev.cpu)?,
+            gpu: LanePowerModel::from_proc(&dev.gpu)?,
+            soc_static_w: dev.soc_static_w,
+        })
+    }
+
+    /// The ladder for lanes of processor kind `p`.
+    pub fn lane(&self, p: Proc) -> &LanePowerModel {
+        match p {
+            Proc::Cpu => &self.cpu,
+            Proc::Gpu => &self.gpu,
+        }
+    }
+}
+
+/// Frequency-selection policy applied per dispatched batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Governor {
+    /// Max frequency always; the lane idles (at its floor) as early as
+    /// possible.
+    RaceToIdle,
+    /// Slowest rung whose projected finish still meets the batch's
+    /// worst met-at-full-speed SLO deadline; falls back to max
+    /// frequency when nothing would be met anyway.
+    StretchToDeadline,
+    /// Pin rung `i` (clamped to the ladder length) — the control arm.
+    FixedState(usize),
+}
+
+impl Governor {
+    /// Parse a CLI/config spelling: `race-to-idle` (or `race`),
+    /// `stretch-to-deadline` (or `stretch`), `fixed:<rung>`.
+    pub fn parse(s: &str) -> Result<Governor> {
+        match s {
+            "race-to-idle" | "race" => Ok(Governor::RaceToIdle),
+            "stretch-to-deadline" | "stretch" => {
+                Ok(Governor::StretchToDeadline)
+            }
+            _ => {
+                if let Some(n) = s.strip_prefix("fixed:") {
+                    let i: usize = n.parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "bad fixed-state governor `{s}` (want \
+                             fixed:<rung index>)"
+                        )
+                    })?;
+                    return Ok(Governor::FixedState(i));
+                }
+                anyhow::bail!(
+                    "unknown governor `{s}` (race-to-idle | \
+                     stretch-to-deadline | fixed:<rung>)"
+                )
+            }
+        }
+    }
+
+    /// Canonical spelling (round-trips through [`Governor::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Governor::RaceToIdle => "race-to-idle".to_string(),
+            Governor::StretchToDeadline => "stretch-to-deadline".to_string(),
+            Governor::FixedState(i) => format!("fixed:{i}"),
+        }
+    }
+}
+
+/// Everything the serving tier needs to run a board energy-aware.
+#[derive(Debug, Clone)]
+pub struct PowerConfig {
+    /// Ladders + SoC floor.
+    pub profile: PowerProfile,
+    /// Per-batch frequency policy.
+    pub governor: Governor,
+    /// Optional instantaneous board power cap, watts (`None` =
+    /// uncapped).  Must admit the slowest rung on an otherwise-idle
+    /// board or `BoardSim` rejects it up front.
+    pub cap_w: Option<f64>,
+    /// Record a [`PowerEvent`] per dispatched batch (test/debug aid;
+    /// off by default — traces grow with request count).
+    pub trace: bool,
+}
+
+impl PowerConfig {
+    /// Uncapped, untraced config.
+    pub fn new(profile: PowerProfile, governor: Governor) -> Self {
+        PowerConfig { profile, governor, cap_w: None, trace: false }
+    }
+}
+
+/// One busy interval on one lane, for power-timeline reconstruction.
+/// While `[start_us, finish_us)` is in flight the lane draws `busy_w`
+/// watts instead of its `idle_w`-watt floor.
+#[derive(Debug, Clone)]
+pub struct PowerEvent {
+    /// Flat lane index within the board.
+    pub lane: usize,
+    /// Processor kind of the lane.
+    pub proc: Proc,
+    /// Dispatch start, us (virtual time).
+    pub start_us: f64,
+    /// Scaled finish, us (virtual time).
+    pub finish_us: f64,
+    /// Draw while busy at the chosen rung, watts.
+    pub busy_w: f64,
+    /// The lane's idle floor, watts.
+    pub idle_w: f64,
+}
+
+/// Governor decision: the slowest admissible rung for a batch whose
+/// full-speed latency is `base_latency_us` starting at `start_us`, given
+/// the worst (earliest) deadline among requests that would be met at
+/// full speed (`None` when nothing meets even then).
+pub fn pick_state(
+    model: &LanePowerModel,
+    governor: Governor,
+    start_us: f64,
+    base_latency_us: f64,
+    worst_deadline_us: Option<f64>,
+) -> usize {
+    match governor {
+        Governor::RaceToIdle => 0,
+        Governor::FixedState(i) => i.min(model.states.len() - 1),
+        Governor::StretchToDeadline => {
+            let Some(deadline) = worst_deadline_us else {
+                return 0;
+            };
+            let mut pick = 0;
+            for (i, s) in model.states.iter().enumerate() {
+                if start_us + base_latency_us * s.latency_scale <= deadline {
+                    pick = i;
+                } else {
+                    break;
+                }
+            }
+            pick
+        }
+    }
+}
+
+/// Per-board runtime power state: lane draws, the energy accumulator,
+/// throttle counter, and (optionally) the busy-interval trace.  Owned by
+/// `serve::cluster::BoardSim`.
+pub(crate) struct BoardPower {
+    profile: PowerProfile,
+    governor: Governor,
+    cap_w: Option<f64>,
+    trace_on: bool,
+    lane_proc: Vec<Proc>,
+    /// Busy draw of each lane's most recent dispatch, watts (meaningful
+    /// while that lane's `free` time is in the future).
+    lane_w: Vec<f64>,
+    /// Per-lane idle floor, watts.
+    lane_idle_w: Vec<f64>,
+    /// Σ busy-interval energy so far, mJ.
+    pub(crate) busy_energy_mj: f64,
+    /// Cap-binding events (state clamped or dispatch deferred).
+    pub(crate) throttles: u64,
+    /// Busy-interval trace (empty unless `PowerConfig::trace`).
+    pub(crate) trace: Vec<PowerEvent>,
+}
+
+impl BoardPower {
+    /// Build the runtime state for a board whose flat lane `i` runs on
+    /// `lane_proc[i]`.  Rejects a cap too tight to ever dispatch: an
+    /// otherwise-idle board must fit the *slowest* rung of every lane
+    /// kind, or a capped board with queued work could stall forever.
+    pub(crate) fn new(cfg: &PowerConfig, lane_proc: &[Proc]) -> Result<Self> {
+        let lane_idle_w: Vec<f64> = lane_proc
+            .iter()
+            .map(|&p| cfg.profile.lane(p).idle_w)
+            .collect();
+        if let Some(cap) = cfg.cap_w {
+            anyhow::ensure!(
+                cap.is_finite() && cap > 0.0,
+                "power cap must be a positive wattage, got {cap}"
+            );
+            let floor: f64 = lane_idle_w.iter().sum();
+            for (i, &p) in lane_proc.iter().enumerate() {
+                let lm = cfg.profile.lane(p);
+                let slowest = lm
+                    .states
+                    .last()
+                    .expect("validated non-empty")
+                    .busy_power_w();
+                let need = cfg.profile.soc_static_w + floor
+                    - lane_idle_w[i]
+                    + slowest;
+                anyhow::ensure!(
+                    need <= cap + CAP_EPS_W,
+                    "power cap {cap} W is infeasible: an idle board \
+                     needs {need:.3} W to run one {} lane at its \
+                     slowest rung",
+                    p.name()
+                );
+            }
+        }
+        Ok(BoardPower {
+            profile: cfg.profile.clone(),
+            governor: cfg.governor,
+            cap_w: cfg.cap_w,
+            trace_on: cfg.trace,
+            lane_proc: lane_proc.to_vec(),
+            lane_w: vec![0.0; lane_proc.len()],
+            lane_idle_w,
+            busy_energy_mj: 0.0,
+            throttles: 0,
+            trace: Vec::new(),
+        })
+    }
+
+    /// Canonical governor spelling, for reports.
+    pub(crate) fn governor_name(&self) -> String {
+        self.governor.name()
+    }
+
+    /// SoC floor, watts.
+    pub(crate) fn soc_w(&self) -> f64 {
+        self.profile.soc_static_w
+    }
+
+    /// Σ per-lane idle floors, watts — the board's all-idle draw minus
+    /// the SoC term.
+    pub(crate) fn idle_floor_w(&self) -> f64 {
+        self.lane_idle_w.iter().sum()
+    }
+
+    /// Idle floor of one lane, watts.
+    pub(crate) fn idle_w_of(&self, lane: usize) -> f64 {
+        self.lane_idle_w[lane]
+    }
+
+    /// Instantaneous board draw at time `t` if `lane` were running at
+    /// `busy_w`, watts.  `free` is the per-lane busy-until timeline.
+    fn power_if(&self, free: &[f64], t: f64, lane: usize, busy_w: f64)
+        -> f64
+    {
+        let mut w = self.profile.soc_static_w;
+        for j in 0..self.lane_proc.len() {
+            w += if j == lane {
+                busy_w
+            } else if free[j] > t {
+                self.lane_w[j]
+            } else {
+                self.lane_idle_w[j]
+            };
+        }
+        w
+    }
+
+    /// Governor + cap decision for a dispatch on `lane` starting at
+    /// `start_us` with full-speed latency `base_latency_us`.  Returns
+    /// `(scaled_latency_us, busy_w)` for the chosen rung, or `None`
+    /// when the cap does not admit even the slowest rung right now
+    /// (caller defers to the next lane-finish event).  Counts a
+    /// throttle event whenever the cap changes the outcome.
+    pub(crate) fn admit(
+        &mut self,
+        lane: usize,
+        free: &[f64],
+        start_us: f64,
+        base_latency_us: f64,
+        worst_deadline_us: Option<f64>,
+    ) -> Option<(f64, f64)> {
+        let lm = self.profile.lane(self.lane_proc[lane]);
+        let desired = pick_state(
+            lm,
+            self.governor,
+            start_us,
+            base_latency_us,
+            worst_deadline_us,
+        );
+        let chosen = match self.cap_w {
+            None => Some(desired),
+            Some(cap) => (desired..lm.states.len()).find(|&s| {
+                let w = lm.states[s].busy_power_w();
+                self.power_if(free, start_us, lane, w) <= cap + CAP_EPS_W
+            }),
+        };
+        match chosen {
+            Some(s) => {
+                if s != desired {
+                    self.throttles += 1;
+                }
+                let lm = self.profile.lane(self.lane_proc[lane]);
+                Some((
+                    base_latency_us * lm.states[s].latency_scale,
+                    lm.states[s].busy_power_w(),
+                ))
+            }
+            None => {
+                self.throttles += 1;
+                None
+            }
+        }
+    }
+
+    /// Account a dispatched busy interval: adds `busy_w` × duration to
+    /// the energy ledger, marks the lane's in-flight draw, and records
+    /// the trace event when tracing is on.
+    pub(crate) fn commit(&mut self, lane: usize, start_us: f64,
+                         finish_us: f64, busy_w: f64) {
+        self.busy_energy_mj += busy_w * (finish_us - start_us) / 1e3;
+        self.lane_w[lane] = busy_w;
+        if self.trace_on {
+            self.trace.push(PowerEvent {
+                lane,
+                proc: self.lane_proc[lane],
+                start_us,
+                finish_us,
+                busy_w,
+                idle_w: self.lane_idle_w[lane],
+            });
+        }
+    }
+
+    /// Busy draw of the full-frequency rung on `lane`, watts — what a
+    /// cap-exempt warmup charge runs at.
+    pub(crate) fn max_busy_w(&self, lane: usize) -> f64 {
+        self.profile.lane(self.lane_proc[lane]).busy_w(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::device_profile;
+
+    fn agx_profile() -> PowerProfile {
+        PowerProfile::from_device(&device_profile("agx_orin")).unwrap()
+    }
+
+    #[test]
+    fn governor_spellings_round_trip() {
+        for s in ["race-to-idle", "stretch-to-deadline", "fixed:2"] {
+            assert_eq!(Governor::parse(s).unwrap().name(), s);
+        }
+        assert_eq!(Governor::parse("race").unwrap(), Governor::RaceToIdle);
+        assert_eq!(
+            Governor::parse("stretch").unwrap(),
+            Governor::StretchToDeadline
+        );
+        assert!(Governor::parse("turbo").is_err());
+        assert!(Governor::parse("fixed:x").is_err());
+    }
+
+    #[test]
+    fn ladder_loads_from_config_and_synthesizes_without_one() {
+        let dev = device_profile("agx_orin");
+        let from_json = LanePowerModel::from_proc(&dev.gpu).unwrap();
+        assert_eq!(from_json.states.len(), 3);
+        assert_eq!(from_json.idle_w, dev.gpu.freq_states[2].static_w);
+        // Strip the ladder: from_proc synthesizes a valid default.
+        let mut bare = dev.cpu.clone();
+        bare.freq_states.clear();
+        let synth = LanePowerModel::from_proc(&bare).unwrap();
+        assert_eq!(synth.states.len(), 3);
+        assert_eq!(synth.states[0].latency_scale, 1.0);
+        assert_eq!(synth.states[0].busy_power_w(),
+                   bare.power_static_w + bare.power_dyn_w);
+    }
+
+    #[test]
+    fn ladder_validation_rejects_non_physical_rungs() {
+        let dev = device_profile("agx_orin");
+        // Rung 0 must be the full-frequency point.
+        let mut p = dev.cpu.clone();
+        p.freq_states[0].latency_scale = 1.2;
+        assert!(LanePowerModel::from_proc(&p).is_err());
+        // Busy power must strictly decrease.
+        let mut p = dev.cpu.clone();
+        p.freq_states[1].dyn_w = p.freq_states[0].dyn_w + 5.0;
+        assert!(LanePowerModel::from_proc(&p).is_err());
+        // Energy per op must strictly decrease (slow rung that saves
+        // almost no power is not worth a ladder slot).
+        let mut p = dev.cpu.clone();
+        p.freq_states[1].static_w = p.freq_states[0].static_w;
+        p.freq_states[1].dyn_w = p.freq_states[0].dyn_w - 1e-6;
+        assert!(LanePowerModel::from_proc(&p).is_err());
+    }
+
+    #[test]
+    fn pick_state_per_governor() {
+        let lm = agx_profile().gpu;
+        // Race: always rung 0.
+        assert_eq!(
+            pick_state(&lm, Governor::RaceToIdle, 0.0, 100.0, Some(1e9)),
+            0
+        );
+        // Fixed: clamped to the ladder.
+        assert_eq!(
+            pick_state(&lm, Governor::FixedState(7), 0.0, 100.0, None),
+            lm.states.len() - 1
+        );
+        // Stretch with ample slack: slowest rung.
+        let g = Governor::StretchToDeadline;
+        assert_eq!(pick_state(&lm, g, 0.0, 100.0, Some(1e9)),
+                   lm.states.len() - 1);
+        // Stretch with slack for the mid rung only (scales 1.0/1.4/2.0).
+        assert_eq!(pick_state(&lm, g, 0.0, 100.0, Some(150.0)), 1);
+        // No slack, or nothing met even at full speed: full frequency.
+        assert_eq!(pick_state(&lm, g, 0.0, 100.0, Some(50.0)), 0);
+        assert_eq!(pick_state(&lm, g, 0.0, 100.0, None), 0);
+    }
+
+    #[test]
+    fn infeasible_cap_is_rejected_up_front() {
+        let prof = agx_profile();
+        let lanes = [Proc::Cpu, Proc::Gpu];
+        let mut cfg = PowerConfig::new(prof.clone(), Governor::RaceToIdle);
+        // All-idle board + slowest GPU rung is the binding need.
+        let need = prof.soc_static_w
+            + prof.cpu.idle_w
+            + prof.gpu.states.last().unwrap().busy_power_w();
+        cfg.cap_w = Some(need - 0.1);
+        assert!(BoardPower::new(&cfg, &lanes).is_err());
+        cfg.cap_w = Some(need + 0.1);
+        assert!(BoardPower::new(&cfg, &lanes).is_ok());
+        cfg.cap_w = Some(-3.0);
+        assert!(BoardPower::new(&cfg, &lanes).is_err());
+    }
+
+    #[test]
+    fn cap_clamps_then_defers_and_counts_throttles() {
+        let prof = agx_profile();
+        let lanes = [Proc::Gpu, Proc::Gpu];
+        let mid_w = prof.gpu.states[1].busy_power_w();
+        let low_w = prof.gpu.states[2].busy_power_w();
+        // Cap fits {one busy mid rung + one idle lane} but not
+        // {busy max + idle} — RaceToIdle's pick gets clamped to mid.
+        let mut cfg = PowerConfig::new(prof.clone(), Governor::RaceToIdle);
+        cfg.cap_w =
+            Some(prof.soc_static_w + prof.gpu.idle_w + mid_w + 0.01);
+        let mut bp = BoardPower::new(&cfg, &lanes).unwrap();
+        let free = [0.0, 0.0];
+        let (lat, w) = bp.admit(0, &free, 0.0, 100.0, None).unwrap();
+        assert_eq!(w, mid_w);
+        assert_eq!(lat, 100.0 * prof.gpu.states[1].latency_scale);
+        assert_eq!(bp.throttles, 1);
+        bp.commit(0, 0.0, lat, w);
+        // With lane 0 busy at mid, lane 1 cannot fit even the slowest
+        // rung (mid + low > mid + idle + 0.01) — deferral.
+        assert!(mid_w + low_w > mid_w + prof.gpu.idle_w + 0.01);
+        let free = [lat, 0.0];
+        assert!(bp.admit(1, &free, 10.0, 100.0, None).is_none());
+        assert_eq!(bp.throttles, 2);
+        // After lane 0 finishes, the same dispatch is admitted again
+        // (still clamped to mid under this cap, so one more throttle).
+        let (_, w1) = bp.admit(1, &free, lat + 1.0, 100.0, None).unwrap();
+        assert_eq!(w1, mid_w);
+        assert_eq!(bp.throttles, 3);
+    }
+
+    #[test]
+    fn commit_accumulates_busy_energy_and_traces() {
+        let prof = agx_profile();
+        let mut cfg = PowerConfig::new(prof.clone(), Governor::RaceToIdle);
+        cfg.trace = true;
+        let mut bp = BoardPower::new(&cfg, &[Proc::Gpu]).unwrap();
+        let w = prof.gpu.states[0].busy_power_w();
+        bp.commit(0, 100.0, 600.0, w);
+        bp.commit(0, 700.0, 1200.0, w);
+        assert!((bp.busy_energy_mj - 2.0 * w * 500.0 / 1e3).abs() < 1e-12);
+        assert_eq!(bp.trace.len(), 2);
+        assert_eq!(bp.trace[0].idle_w, prof.gpu.idle_w);
+        assert_eq!(bp.trace[1].start_us, 700.0);
+    }
+}

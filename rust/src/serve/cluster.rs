@@ -35,6 +35,7 @@
 //! static capacity split.
 
 use crate::device::Proc;
+use crate::power::{BoardPower, PowerConfig};
 use crate::serve::registry::ModelRegistry;
 use crate::serve::report::PerfSnapshot;
 use crate::serve::slo::{AdmissionQueues, ShedPolicy, SloClass};
@@ -229,6 +230,10 @@ pub(crate) struct BoardSim<'a> {
     snap: PerfSnapshot,
     shed_seen: usize,
     last_finish: f64,
+    /// Energy-aware boards carry the DVFS governor's runtime state
+    /// (`set_power`); `None` boards dispatch at full frequency with no
+    /// energy accounting — bit-identical to the pre-power scheduler.
+    power: Option<BoardPower>,
     #[cfg(debug_assertions)]
     settled: std::collections::HashSet<usize>,
 }
@@ -306,9 +311,19 @@ impl<'a> BoardSim<'a> {
             ),
             shed_seen: 0,
             last_finish: 0.0,
+            power: None,
             #[cfg(debug_assertions)]
             settled: std::collections::HashSet::new(),
         })
+    }
+
+    /// Make this board energy-aware: install the DVFS governor, ladders
+    /// and (optional) power cap.  Fails when the cap cannot admit the
+    /// slowest rung on an otherwise-idle board (such a board could
+    /// stall forever with queued work).  Call before the first `pump`.
+    pub(crate) fn set_power(&mut self, cfg: &PowerConfig) -> Result<()> {
+        self.power = Some(BoardPower::new(cfg, &self.lanes.procs)?);
+        Ok(())
     }
 
     /// Offer one arriving request to admission control and record it as
@@ -395,6 +410,14 @@ impl<'a> BoardSim<'a> {
         let (lane, free) = self.lanes.earliest(Proc::Gpu);
         let start = now_us.max(free);
         self.lanes.occupy(lane, start, start + warmup_us);
+        // Warm-ups burn energy at full frequency and are cap-exempt:
+        // weight loading is DMA/alloc-bound, not a governed kernel, and
+        // deferring a scale-up decision the autoscaler already committed
+        // to would deadlock the replica.
+        if let Some(bp) = self.power.as_mut() {
+            let w = bp.max_busy_w(lane);
+            bp.commit(lane, start, start + warmup_us, w);
+        }
         start + warmup_us
     }
 
@@ -551,16 +574,56 @@ impl<'a> BoardSim<'a> {
             }
 
             let c = best_now.expect("non-wait iterations dispatch");
+            // Governor decision point (energy-aware boards): placement
+            // and batch size are already fixed by the score above at
+            // full-frequency prices; the governor only chooses how fast
+            // to run the chosen batch.  StretchToDeadline slows it to
+            // the cheapest rung that still meets the worst deadline it
+            // would meet at full speed; a binding power cap clamps
+            // further (throttle event) or defers the dispatch to the
+            // next lane-free event.
+            let mut finish = c.finish;
+            if let Some(bp) = self.power.as_mut() {
+                let worst = self
+                    .q
+                    .dispatch_view(c.m)
+                    .take(c.b)
+                    .filter(|r| r.deadline_us >= c.finish)
+                    .map(|r| r.deadline_us)
+                    .fold(f64::INFINITY, f64::min);
+                let worst = worst.is_finite().then_some(worst);
+                match bp.admit(c.lane, &self.lanes.free, c.start,
+                               c.finish - c.start, worst) {
+                    Some((scaled_lat, busy_w)) => {
+                        finish = c.start + scaled_lat;
+                        bp.commit(c.lane, c.start, finish, busy_w);
+                    }
+                    None => {
+                        // Cap-bound: every admissible rung would push
+                        // board draw over the cap while other lanes are
+                        // busy.  A busy lane must exist (the cap was
+                        // validated feasible on an idle board), so wake
+                        // when it frees and headroom returns.
+                        let next_free = self.lanes.next_event_after(now);
+                        anyhow::ensure!(
+                            next_free.is_some(),
+                            "cap-deferred dispatch with no pending \
+                             lane event"
+                        );
+                        return Ok(next_free);
+                    }
+                }
+            }
             let taken =
                 self.q.take_batch(c.m, c.b, self.sparsity_aware);
             debug_assert!(!taken.is_empty());
             self.epoch += 1;
-            self.lanes.occupy(c.lane, c.start, c.finish);
-            self.last_finish = self.last_finish.max(c.finish);
+            self.lanes.occupy(c.lane, c.start, finish);
+            self.last_finish = self.last_finish.max(finish);
             self.snap.n_batches += 1;
             self.snap.dispatched += taken.len() as u64;
             for r in &taken {
-                let latency = c.finish - r.arrival_us;
+                let latency = finish - r.arrival_us;
                 #[cfg(debug_assertions)]
                 debug_assert!(self.settled.insert(r.req),
                               "request {} settled twice (served)", r.req);
@@ -568,7 +631,7 @@ impl<'a> BoardSim<'a> {
                     r.class,
                     r.model,
                     latency,
-                    c.finish <= r.deadline_us,
+                    finish <= r.deadline_us,
                 );
             }
         }
@@ -600,6 +663,31 @@ impl<'a> BoardSim<'a> {
         self.snap.makespan_us = self.last_finish.max(now_us);
         self.snap.cpu_busy_us = self.lanes.busy_us(Proc::Cpu);
         self.snap.gpu_busy_us = self.lanes.busy_us(Proc::Gpu);
+        if let Some(mut bp) = self.power.take() {
+            // Horizon: warm-up occupancies extend lane free times past
+            // the last *dispatch* finish without touching last_finish,
+            // so take the max over both — otherwise a lane could log
+            // more busy time than the window it idles against.
+            let horizon = self
+                .lanes
+                .free
+                .iter()
+                .fold(self.snap.makespan_us, |h, &f| h.max(f));
+            let mut e_mj =
+                bp.busy_energy_mj + bp.soc_w() * horizon / 1e3;
+            for (lane, &busy) in self.lanes.busy.iter().enumerate() {
+                e_mj +=
+                    (horizon - busy).max(0.0) * bp.idle_w_of(lane) / 1e3;
+            }
+            self.snap.energy_mj = e_mj;
+            self.snap.busy_energy_mj = bp.busy_energy_mj;
+            self.snap.power_horizon_us = horizon;
+            self.snap.idle_floor_w = bp.idle_floor_w();
+            self.snap.soc_w = bp.soc_w();
+            self.snap.governor = bp.governor_name();
+            self.snap.throttle_events = bp.throttles;
+            self.snap.power_trace = std::mem::take(&mut bp.trace);
+        }
         self.snap
     }
 }
@@ -823,6 +911,69 @@ mod tests {
         assert_eq!(snap.policy, "static-split");
         assert_eq!(snap.total_served() + snap.total_shed(),
                    snap.total_offered());
+    }
+
+    #[test]
+    fn energy_aware_board_accounts_power_and_keeps_conservation() {
+        use crate::power::{Governor, PowerConfig, PowerProfile};
+        let reg = registry();
+        let cls = classes();
+        let tenants = vec![Tenant {
+            name: "t".into(),
+            model: "light".into(),
+            class: 1,
+            pattern: ArrivalPattern::Poisson { rate_per_s: 40.0, n: 120 },
+        }];
+        let arrivals = merge_arrivals(&tenants, 29);
+        let dev = crate::bench_support::device_profile("agx_orin");
+        let profile = PowerProfile::from_device(&dev).unwrap();
+        let mut cfg =
+            PowerConfig::new(profile, Governor::StretchToDeadline);
+        cfg.trace = true;
+        let mut board = BoardSim::new(
+            &reg, &cls, &ClusterOptions::default(), LaneMatrix::duo(),
+            "t")
+            .unwrap();
+        board.set_power(&cfg).unwrap();
+        let mut now = 0.0;
+        let mut ai = 0;
+        loop {
+            while ai < arrivals.len() && arrivals[ai].at_us <= now {
+                let a = arrivals[ai];
+                ai += 1;
+                board.offer(a.req, a.tenant, 1, 1, a.at_us);
+            }
+            match board.pump(now).unwrap() {
+                None => {
+                    if ai >= arrivals.len() {
+                        break;
+                    }
+                    now = arrivals[ai].at_us;
+                }
+                Some(w) => {
+                    now = if ai < arrivals.len() {
+                        w.min(arrivals[ai].at_us)
+                    } else {
+                        w
+                    };
+                }
+            }
+        }
+        let snap = board.finish(now);
+        assert_eq!(snap.total_served() + snap.total_shed(),
+                   snap.total_offered());
+        assert_eq!(snap.governor, "stretch-to-deadline");
+        assert!(snap.energy_mj > 0.0);
+        assert!(snap.busy_energy_mj > 0.0);
+        assert!(snap.busy_energy_mj < snap.energy_mj,
+                "idle + SoC floors must add energy on a lightly loaded \
+                 board");
+        assert!(snap.power_horizon_us >= snap.makespan_us);
+        assert_eq!(snap.throttle_events, 0, "uncapped run throttled");
+        assert!(!snap.power_trace.is_empty());
+        assert!(snap.energy_per_inference_mj() > 0.0);
+        assert!(snap.mean_power_w() > snap.soc_w + snap.idle_floor_w,
+                "mean power must sit above the all-idle floor");
     }
 
     #[test]

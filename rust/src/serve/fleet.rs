@@ -40,6 +40,7 @@
 //! `rust/tests/serve_fleet.rs` property-tests conservation, the
 //! router ordering under skew, and autoscaler convergence/shedding.
 
+use crate::power::PowerConfig;
 use crate::serve::cluster::{
     BoardSim, ClusterOptions, ClusterPolicy, LaneMatrix,
 };
@@ -148,6 +149,14 @@ pub struct FleetOptions {
     pub placement: Vec<Vec<usize>>,
     /// Autoscaler; `None` pins the placement for the whole run.
     pub autoscale: Option<AutoscalePolicy>,
+    /// Per-board cluster discipline: the SparOA co-execution tier
+    /// (default) or the static-split ablation — the fleet-scale
+    /// energy comparison runs both (`fig_energy_serve`).
+    pub policy: ClusterPolicy,
+    /// Energy-aware serving: install this DVFS governor + ladder (and
+    /// optional power cap, watts) on every board.  `None` serves at
+    /// full frequency with no energy accounting.
+    pub power: Option<PowerConfig>,
 }
 
 impl FleetOptions {
@@ -162,6 +171,8 @@ impl FleetOptions {
             placement: spread_placement(
                 n_boards, &vec![1; n_models]),
             autoscale: None,
+            policy: ClusterPolicy::SparsityAware,
+            power: None,
         }
     }
 }
@@ -212,6 +223,9 @@ pub struct ReplicaSample {
 pub struct FleetSnapshot {
     /// Router policy name.
     pub router: String,
+    /// Governor name when the fleet ran energy-aware
+    /// ([`FleetOptions::power`]); empty otherwise.
+    pub governor: String,
     /// Whether the autoscaler ran.
     pub autoscaled: bool,
     /// Per-board lane matrix.
@@ -243,6 +257,23 @@ impl FleetSnapshot {
     /// Requests shed fleet-wide (admission + expiry).
     pub fn total_shed(&self) -> u64 {
         self.aggregate.total_shed()
+    }
+
+    /// Fleet-wide energy per served inference, millijoules (0 unless
+    /// energy-aware).  Board energies sum in the merged aggregate.
+    pub fn energy_per_inference_mj(&self) -> f64 {
+        self.aggregate.energy_per_inference_mj()
+    }
+
+    /// Fleet-total mean draw, watts: summed board energies over the
+    /// shared virtual-time horizon (0 unless energy-aware).
+    pub fn mean_power_w(&self) -> f64 {
+        self.aggregate.mean_power_w()
+    }
+
+    /// Cap-binding events across all boards.
+    pub fn total_throttles(&self) -> u64 {
+        self.aggregate.throttle_events
     }
 
     /// Mean per-board CPU busy fraction over the makespan, [0, 1].
@@ -277,6 +308,7 @@ impl FleetSnapshot {
     pub fn to_json(&self) -> Value {
         let mut o = BTreeMap::new();
         o.insert("router".into(), Value::Str(self.router.clone()));
+        o.insert("governor".into(), Value::Str(self.governor.clone()));
         o.insert("autoscaled".into(), Value::Bool(self.autoscaled));
         o.insert("n_boards".into(),
                  Value::Num(self.boards.len() as f64));
@@ -362,9 +394,10 @@ impl FleetSnapshot {
         json::to_string(&self.to_json())
     }
 
-    /// One-line summary for logs.
+    /// One-line summary for logs (energy tail only on energy-aware
+    /// runs).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "[fleet/{}{}] {} boards: attainment {:.1}% ({} met / {} \
              offered, {} shed) cpu {:.0}% gpu {:.0}% scale events {}",
             self.router,
@@ -377,7 +410,17 @@ impl FleetSnapshot {
             100.0 * self.mean_cpu_util(),
             100.0 * self.mean_gpu_util(),
             self.scale_events.len(),
-        )
+        );
+        if !self.governor.is_empty() {
+            s.push_str(&format!(
+                " | {} {:.1} mJ/inf {:.1} W fleet, {} throttles",
+                self.governor,
+                self.energy_per_inference_mj(),
+                self.mean_power_w(),
+                self.total_throttles()
+            ));
+        }
+        s
     }
 }
 
@@ -470,7 +513,7 @@ pub fn run_fleet(
     }
 
     let cluster_opts = ClusterOptions {
-        policy: ClusterPolicy::SparsityAware,
+        policy: opts.policy,
         shed: opts.shed,
     };
     // Per-model price tables, probed once so neither the per-arrival
@@ -494,6 +537,9 @@ pub fn run_fleet(
         .collect::<Result<_>>()?;
     for board in boards.iter_mut() {
         board.set_price_table(lat1_us.clone());
+        if let Some(pc) = &opts.power {
+            board.set_power(pc)?;
+        }
     }
 
     let mut rr = vec![0usize; nm];
@@ -668,6 +714,11 @@ pub fn run_fleet(
 
     Ok(FleetSnapshot {
         router: opts.router.name().into(),
+        governor: opts
+            .power
+            .as_ref()
+            .map(|p| p.governor.name())
+            .unwrap_or_default(),
         autoscaled: opts.autoscale.is_some(),
         lanes: opts.lanes,
         boards: board_snaps,
@@ -999,6 +1050,8 @@ mod tests {
         assert_eq!(o.placement.len(), 3);
         assert_eq!(o.router, RouterPolicy::CostAware);
         assert!(o.autoscale.is_none());
+        assert!(o.power.is_none(), "energy accounting must be opt-in");
+        assert_eq!(o.policy, ClusterPolicy::SparsityAware);
         let covered: Vec<usize> =
             o.placement.iter().flatten().copied().collect();
         assert!(covered.contains(&0) && covered.contains(&1));

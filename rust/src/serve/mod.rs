@@ -21,7 +21,11 @@
 //! * [`ArrivalPattern`] / [`Tenant`] — Poisson, bursty MMPP, diurnal
 //!   and JSON-trace-replay workload generators (workload).
 //! * [`PerfSnapshot`] — per-class/per-model p50/p95/p99, shed rate,
-//!   attainment and utilization, with JSON output (report).
+//!   attainment and utilization, with JSON output (report).  When a
+//!   board runs energy-aware (a [`crate::power::PowerConfig`] installed
+//!   via [`FleetOptions`]), the snapshot also carries joules, mean
+//!   watts and throttle counts, judged against an [`EnergySlo`]
+//!   budget alongside the latency classes.
 //!
 //! The `serve-multi` / `serve-fleet` CLI subcommands and the
 //! `fig13_multimodel` / `fig_fleet` benches drive the [`demo`] fleet
@@ -45,7 +49,9 @@ pub use fleet::{
 };
 pub use registry::{ModelEntry, ModelRegistry};
 pub use report::{GroupStats, PerfSnapshot};
-pub use slo::{AdmissionQueues, QueuedReq, ShedPolicy, ShedReq, SloClass};
+pub use slo::{
+    AdmissionQueues, EnergySlo, QueuedReq, ShedPolicy, ShedReq, SloClass,
+};
 pub use workload::{
     merge_arrivals, trace_from_json, trace_to_json, Arrival,
     ArrivalPattern, Tenant,

@@ -4,6 +4,7 @@
 //! output for benches and dashboards.
 
 use crate::bench_support::Table;
+use crate::power::PowerEvent;
 use crate::server::LatencyHistogram;
 use crate::util::json::{self, Value};
 use std::collections::BTreeMap;
@@ -114,6 +115,30 @@ pub struct PerfSnapshot {
     pub per_class: Vec<GroupStats>,
     /// Outcomes grouped by model.
     pub per_model: Vec<GroupStats>,
+    /// Governor name ("race-to-idle" / "stretch-to-deadline" /
+    /// "fixed:N"); empty when the run was not energy-aware, which also
+    /// gates the energy keys out of [`PerfSnapshot::to_json`].
+    pub governor: String,
+    /// Total board energy over the power horizon, millijoules
+    /// (busy + idle floors + SoC).
+    pub energy_mj: f64,
+    /// Busy-interval energy only, millijoules (Σ batch duration × rung
+    /// busy power).
+    pub busy_energy_mj: f64,
+    /// Window the energy integral covers, microseconds (>= makespan;
+    /// warm-up occupancies can extend it).
+    pub power_horizon_us: f64,
+    /// Σ per-lane idle floors, watts (all-idle board draw minus SoC).
+    pub idle_floor_w: f64,
+    /// SoC static draw, watts.
+    pub soc_w: f64,
+    /// Cap-binding events (governor state clamped or dispatch
+    /// deferred).
+    pub throttle_events: u64,
+    /// Per-batch busy intervals for power-timeline reconstruction;
+    /// populated only under `PowerConfig::trace` (tests), excluded from
+    /// JSON, and deliberately not merged across boards.
+    pub power_trace: Vec<PowerEvent>,
 }
 
 impl PerfSnapshot {
@@ -140,6 +165,14 @@ impl PerfSnapshot {
                 .iter()
                 .map(|l| GroupStats::new(l))
                 .collect(),
+            governor: String::new(),
+            energy_mj: 0.0,
+            busy_energy_mj: 0.0,
+            power_horizon_us: 0.0,
+            idle_floor_w: 0.0,
+            soc_w: 0.0,
+            throttle_events: 0,
+            power_trace: Vec::new(),
         }
     }
 
@@ -188,6 +221,20 @@ impl PerfSnapshot {
         self.gpu_busy_us += other.gpu_busy_us;
         self.n_batches += other.n_batches;
         self.dispatched += other.dispatched;
+        // Energy: joules add across boards, the horizon is shared
+        // virtual time (max), and per-board floor wattages add so the
+        // aggregate's mean_power_w stays the fleet's total draw.  The
+        // per-batch trace stays per-board.
+        self.energy_mj += other.energy_mj;
+        self.busy_energy_mj += other.busy_energy_mj;
+        self.power_horizon_us =
+            self.power_horizon_us.max(other.power_horizon_us);
+        self.idle_floor_w += other.idle_floor_w;
+        self.soc_w += other.soc_w;
+        self.throttle_events += other.throttle_events;
+        if self.governor.is_empty() {
+            self.governor = other.governor.clone();
+        }
         for (dst, src) in self
             .per_class
             .iter_mut()
@@ -258,6 +305,28 @@ impl PerfSnapshot {
         }
     }
 
+    /// Mean board draw over the power horizon, watts (0 when the run
+    /// was not energy-aware).
+    pub fn mean_power_w(&self) -> f64 {
+        if self.power_horizon_us > 0.0 {
+            self.energy_mj * 1e3 / self.power_horizon_us
+        } else {
+            0.0
+        }
+    }
+
+    /// Energy per served inference, millijoules (total board energy —
+    /// including idle/SoC floors — over requests served to completion;
+    /// 0 when nothing was served or the run was not energy-aware).
+    pub fn energy_per_inference_mj(&self) -> f64 {
+        let served = self.total_served();
+        if served > 0 {
+            self.energy_mj / served as f64
+        } else {
+            0.0
+        }
+    }
+
     /// Full JSON object: scalars (us, rates in [0, 1]) plus per-class
     /// and per-model group arrays.
     pub fn to_json(&self) -> Value {
@@ -274,6 +343,17 @@ impl PerfSnapshot {
         o.insert("offered".into(), Value::Num(self.total_offered() as f64));
         o.insert("served".into(), Value::Num(self.total_served() as f64));
         o.insert("shed".into(), Value::Num(self.total_shed() as f64));
+        if !self.governor.is_empty() {
+            o.insert("governor".into(),
+                     Value::Str(self.governor.clone()));
+            o.insert("energy_mj".into(), Value::Num(self.energy_mj));
+            o.insert("energy_per_inference_mj".into(),
+                     Value::Num(self.energy_per_inference_mj()));
+            o.insert("mean_power_w".into(),
+                     Value::Num(self.mean_power_w()));
+            o.insert("throttle_events".into(),
+                     Value::Num(self.throttle_events as f64));
+        }
         o.insert(
             "per_class".into(),
             Value::Arr(self.per_class.iter().map(|g| g.to_json()).collect()),
@@ -313,9 +393,10 @@ impl PerfSnapshot {
         t
     }
 
-    /// One-line summary for logs.
+    /// One-line summary for logs (energy tail only on energy-aware
+    /// runs).
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "[{}] attainment {:.1}% ({} met / {} offered, {} shed) \
              cpu {:.0}% gpu {:.0}% mean batch {:.1}",
             self.policy,
@@ -326,7 +407,17 @@ impl PerfSnapshot {
             100.0 * self.cpu_util(),
             100.0 * self.gpu_util(),
             self.mean_batch()
-        )
+        );
+        if !self.governor.is_empty() {
+            s.push_str(&format!(
+                " | {} {:.1} mJ/inf {:.1} W mean, {} throttles",
+                self.governor,
+                self.energy_per_inference_mj(),
+                self.mean_power_w(),
+                self.throttle_events
+            ));
+        }
+        s
     }
 }
 
@@ -415,5 +506,51 @@ mod tests {
         assert_eq!(a.per_class[0].hist.count()
                    + a.per_class[1].hist.count(), 2);
         assert_eq!(a.per_model[0].hist.count(), 2);
+    }
+
+    #[test]
+    fn energy_fields_merge_and_gate_json_keys() {
+        let labels =
+            (vec!["c".to_string()], vec!["m".to_string()]);
+        let mut a = PerfSnapshot::new("fleet", "reject-new",
+                                      &labels.0, &labels.1);
+        // Not energy-aware: keys absent, derived metrics zero.
+        let v = json::parse(&a.to_json_string()).unwrap();
+        assert!(v.get("energy_mj").as_f64().is_none());
+        assert_eq!(a.mean_power_w(), 0.0);
+        assert_eq!(a.energy_per_inference_mj(), 0.0);
+
+        let mut b = a.clone();
+        for (s, e, h) in
+            [(&mut a, 120.0, 10_000.0), (&mut b, 80.0, 8_000.0)]
+        {
+            s.governor = "race-to-idle".into();
+            s.energy_mj = e;
+            s.busy_energy_mj = e / 2.0;
+            s.power_horizon_us = h;
+            s.idle_floor_w = 2.0;
+            s.soc_w = 8.0;
+            s.throttle_events = 3;
+            s.record_offered(0, 0);
+            s.record_served(0, 0, 1_000.0, true);
+        }
+        a.merge_from(&b);
+        assert!((a.energy_mj - 200.0).abs() < 1e-12);
+        assert!((a.busy_energy_mj - 100.0).abs() < 1e-12);
+        assert_eq!(a.power_horizon_us, 10_000.0);
+        assert!((a.idle_floor_w - 4.0).abs() < 1e-12);
+        assert!((a.soc_w - 16.0).abs() < 1e-12);
+        assert_eq!(a.throttle_events, 6);
+        // 200 mJ over 10 ms = 20 W; 2 served -> 100 mJ/inference.
+        assert!((a.mean_power_w() - 20.0).abs() < 1e-12);
+        assert!((a.energy_per_inference_mj() - 100.0).abs() < 1e-12);
+        let v = json::parse(&a.to_json_string()).unwrap();
+        assert_eq!(v.str_of("governor"), "race-to-idle");
+        assert!((v.get("energy_mj").as_f64().unwrap() - 200.0).abs()
+                < 1e-9);
+        assert!((v.get("mean_power_w").as_f64().unwrap() - 20.0).abs()
+                < 1e-9);
+        assert_eq!(v.get("throttle_events").as_f64().unwrap(), 6.0);
+        assert!(a.summary().contains("mJ/inf"));
     }
 }

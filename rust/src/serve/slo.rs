@@ -65,6 +65,35 @@ impl SloClass {
     }
 }
 
+/// An energy service-level objective: a budget on mean energy per
+/// served inference, in millijoules.
+///
+/// Latency SLOs ([`SloClass::deadline_us`]) bound *when* a request
+/// finishes; an `EnergySlo` bounds *what it costs* to finish it.  The
+/// fleet reports both so a governor can be judged on the full trade:
+/// attainment (latency side) and joules per inference (energy side).
+/// Checked against [`crate::serve::PerfSnapshot::energy_per_inference_mj`]
+/// after a run — it is an observability target, not an admission gate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergySlo {
+    /// Mean-energy budget per served inference, millijoules.
+    pub budget_mj_per_inference: f64,
+}
+
+impl EnergySlo {
+    /// Build an energy SLO with the given per-inference budget
+    /// (millijoules; must be finite and positive to be meaningful).
+    pub fn new(budget_mj_per_inference: f64) -> Self {
+        EnergySlo { budget_mj_per_inference }
+    }
+
+    /// Whether a measured mean energy per inference (millijoules, e.g.
+    /// from `PerfSnapshot::energy_per_inference_mj()`) meets the budget.
+    pub fn met(&self, energy_per_inference_mj: f64) -> bool {
+        energy_per_inference_mj <= self.budget_mj_per_inference
+    }
+}
+
 /// What to do when the queue budget is exhausted.
 ///
 /// `RejectNew` and `ShedOldest` enforce each class's `queue_cap`
@@ -663,6 +692,17 @@ mod tests {
             SloClass::new("interactive", 20_000.0, 2, 4.0),
             SloClass::new("batch", 100_000.0, 3, 1.0),
         ]
+    }
+
+    #[test]
+    fn energy_slo_gates_on_the_mj_budget() {
+        let slo = EnergySlo::new(50.0);
+        assert!(slo.met(49.9));
+        assert!(slo.met(50.0), "budget boundary is inclusive");
+        assert!(!slo.met(50.1));
+        // Zero measured energy (e.g. a run with no served requests)
+        // trivially meets any positive budget.
+        assert!(slo.met(0.0));
     }
 
     #[test]
