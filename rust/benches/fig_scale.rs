@@ -1,0 +1,259 @@
+//! fig_scale — the million-request scale harness for the virtual-time
+//! profiler (`sparoa::obs`).
+//!
+//! Pushes `run_fleet` to 1e6 requests across 64 boards twice — tracer
+//! off, then tracer on (bounded per-board rings) — and reports:
+//!
+//! * wall time + virtual-requests/sec of both runs and their ratio
+//!   (`trace_overhead_ratio`, the cost of *enabled* tracing);
+//! * trace ingest rate (`events_per_sec`) and `bytes_per_request`
+//!   of the retained ring contents;
+//! * `tracer_disabled_overhead`: a p50 micro-pair (hot simulate loop
+//!   with vs without a disabled `Tracer::record` call) — the
+//!   "zero cost when off" claim, measured.
+//!
+//! Modes (mirroring the hotpath bench): full runs refresh
+//! `BENCH_scale.json` at the repo root; `--write-baseline` bootstraps
+//! it; `--ci` additionally gates: the disabled-tracer micro ratio must
+//! come in <= 1.05x (best of three attempts, p50 — single-sample noise
+//! must not fail CI) and the traced run must ingest >= 10k events/sec.
+
+use sparoa::api::SessionBuilder;
+use sparoa::bench_support::{baseline, bench, device_profile};
+use sparoa::device::Proc;
+use sparoa::engine::costs::{CostTable, SimScratch};
+use sparoa::engine::sim::SimOptions;
+use sparoa::graph::ModelGraph;
+use sparoa::obs::{TraceConfig, TraceEvent, TraceRecord, Tracer, NONE};
+use sparoa::scheduler::Schedule;
+use sparoa::serve::{
+    merge_arrivals, run_fleet, spread_placement, ArrivalPattern,
+    FleetOptions, FleetSnapshot, ModelRegistry, SloClass, Tenant,
+};
+
+const BOARDS: usize = 64;
+const TOTAL_REQUESTS: usize = 1_000_000;
+/// Per-board ring capacity for the traced run: 64 boards at the
+/// default 256k-record ring would hold ~512 MB of records; 16k/board
+/// (~32 MB total) exercises the drop-and-count path at this scale.
+const RING_CAPACITY: usize = 16_384;
+/// `--ci` floor on the traced run's event ingest rate.  Deliberately
+/// conservative (real runs ingest orders of magnitude more): it only
+/// trips when tracing collapses, not when the runner is slow.
+const EVENTS_PER_SEC_FLOOR: f64 = 10_000.0;
+/// `--ci` ceiling on the disabled-tracer micro ratio.
+const DISABLED_OVERHEAD_GATE: f64 = 1.05;
+const GATE_ATTEMPTS: usize = 3;
+
+/// Four light synthetic models sized so 1e6 requests stay in seconds
+/// of host time while keeping all 128 lanes busy.
+fn registry4() -> ModelRegistry {
+    let dev = device_profile("agx_orin");
+    let mut reg = ModelRegistry::new();
+    for (name, blocks, scale, sparsity) in [
+        ("s_a", 4, 0.4, 0.6),
+        ("s_b", 4, 0.6, 0.5),
+        ("s_c", 5, 0.8, 0.4),
+        ("s_d", 4, 0.3, 0.7),
+    ] {
+        let s = SessionBuilder::new()
+            .with_graph(ModelGraph::synthetic(name, blocks, scale, sparsity))
+            .with_device(dev.clone())
+            .policy("greedy")
+            .build()
+            .unwrap();
+        reg.register(s).unwrap();
+    }
+    reg
+}
+
+/// Max req/s of one replica's best lane at the full Alg. 2 batch.
+fn rate_of(reg: &ModelRegistry, m: usize) -> f64 {
+    let e = reg.get(m);
+    let gcap = e.gpu_batch_cap.max(1);
+    let gpu =
+        gcap as f64 / e.latency_us(Proc::Gpu, gcap).unwrap() * 1e6;
+    let ccap = e.cpu_batch_cap.max(1);
+    let cpu =
+        ccap as f64 / e.latency_us(Proc::Cpu, ccap).unwrap() * 1e6;
+    gpu.max(cpu)
+}
+
+fn workload(
+    reg: &ModelRegistry,
+) -> (Vec<SloClass>, Vec<Tenant>, Vec<sparoa::serve::Arrival>) {
+    let lat = reg.get(0).cheapest_latency_us(1).unwrap();
+    let classes = vec![
+        SloClass::new("standard", 200.0 * lat, 4096, 2.0),
+        SloClass::new("best-effort", 600.0 * lat, 8192, 1.0),
+    ];
+    let per_tenant = TOTAL_REQUESTS / 4;
+    let tenants: Vec<Tenant> = (0..4)
+        .map(|m| Tenant {
+            name: format!("t{m}"),
+            model: reg.get(m).name.clone(),
+            class: m % 2,
+            // ~half the fleet-wide capacity of each model once the
+            // four tenants share every board's two lanes.
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: 0.12 * BOARDS as f64 * rate_of(reg, m),
+                n: per_tenant,
+            },
+        })
+        .collect();
+    let arrivals = merge_arrivals(&tenants, 41);
+    assert_eq!(arrivals.len(), TOTAL_REQUESTS);
+    (classes, tenants, arrivals)
+}
+
+fn run_once(
+    reg: &ModelRegistry,
+    classes: &[SloClass],
+    tenants: &[Tenant],
+    arrivals: &[sparoa::serve::Arrival],
+    trace: Option<TraceConfig>,
+) -> (FleetSnapshot, f64) {
+    let mut opts = FleetOptions::new(BOARDS, reg.len());
+    opts.placement = spread_placement(BOARDS, &[BOARDS; 4]);
+    opts.trace = trace;
+    let t0 = std::time::Instant::now();
+    let snap = run_fleet(reg, classes, tenants, arrivals, &opts)
+        .expect("fleet run");
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        snap.aggregate.total_served() + snap.aggregate.total_shed(),
+        TOTAL_REQUESTS as u64,
+        "conservation broke at scale"
+    );
+    (snap, wall_s)
+}
+
+/// p50 micro-pair: the hot simulate loop with vs without one disabled
+/// `Tracer::record` per iteration.
+fn disabled_overhead_ratio() -> f64 {
+    let g = ModelGraph::synthetic("scale_syn", 50, 1.0, 0.4);
+    let dev = device_profile("agx_orin");
+    let opts = SimOptions { record_timings: false, ..Default::default() };
+    let table = CostTable::build(&g, &dev, &opts);
+    let sched = Schedule::uniform(&g, 1.0, "gpu");
+    let mut scratch = SimScratch::new();
+    let base = bench("fastpath (no tracer)", 50, 2000, || {
+        table.simulate_into(&sched, &mut scratch);
+        std::hint::black_box(scratch.report.makespan_us);
+    });
+    let mut tracer = Tracer::disabled();
+    let with = bench("fastpath + disabled tracer", 50, 2000, || {
+        tracer.record(0.0, NONE, NONE, TraceEvent::Admit);
+        table.simulate_into(&sched, &mut scratch);
+        std::hint::black_box(scratch.report.makespan_us);
+    });
+    with.p50_us / base.p50_us.max(1e-12)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let ci = args.iter().any(|a| a == "--ci");
+    let write_baseline = args.iter().any(|a| a == "--write-baseline");
+
+    let reg = registry4();
+    let (classes, tenants, arrivals) = workload(&reg);
+    println!(
+        "=== fig_scale — {} requests x {} boards ===",
+        TOTAL_REQUESTS, BOARDS
+    );
+
+    let (_plain, untraced_s) =
+        run_once(&reg, &classes, &tenants, &arrivals, None);
+    let (traced, traced_s) = run_once(
+        &reg,
+        &classes,
+        &tenants,
+        &arrivals,
+        Some(TraceConfig { capacity: RING_CAPACITY }),
+    );
+
+    let kept: usize =
+        traced.boards.iter().map(|b| b.trace_events.len()).sum();
+    let dropped: u64 =
+        traced.boards.iter().map(|b| b.trace_dropped).sum();
+    let recorded = kept as u64 + dropped;
+    let events_per_sec = recorded as f64 / traced_s.max(1e-9);
+    let bytes_per_request = (kept * std::mem::size_of::<TraceRecord>())
+        as f64
+        / TOTAL_REQUESTS as f64;
+    let trace_overhead = traced_s / untraced_s.max(1e-9);
+    for b in &traced.boards {
+        assert!(b.trace_events.len() <= RING_CAPACITY,
+                "ring exceeded its capacity");
+    }
+
+    println!(
+        "scale_untraced: {untraced_s:.2} s ({:.0} req/s)",
+        TOTAL_REQUESTS as f64 / untraced_s.max(1e-9)
+    );
+    println!(
+        "scale_traced:   {traced_s:.2} s ({:.0} req/s)",
+        TOTAL_REQUESTS as f64 / traced_s.max(1e-9)
+    );
+    println!("trace_overhead_ratio: {trace_overhead:.3}x (tracing on)");
+    println!(
+        "events: {recorded} recorded ({kept} kept, {dropped} dropped \
+         by the bounded rings) -> {events_per_sec:.0} events/sec"
+    );
+    println!("bytes_per_request: {bytes_per_request:.1} (retained)");
+
+    // Disabled-tracer micro-pair; best of three p50 attempts in gate
+    // modes so one noisy sample can't fail CI.
+    let attempts = if ci { GATE_ATTEMPTS } else { 1 };
+    let mut disabled_ratio = f64::INFINITY;
+    for _ in 0..attempts {
+        disabled_ratio = disabled_ratio.min(disabled_overhead_ratio());
+        if disabled_ratio <= DISABLED_OVERHEAD_GATE {
+            break;
+        }
+    }
+    println!(
+        "tracer_disabled_overhead: {disabled_ratio:.3}x (p50 micro \
+         pair, gate <= {DISABLED_OVERHEAD_GATE}x)"
+    );
+
+    if ci {
+        let mut failed = false;
+        if disabled_ratio > DISABLED_OVERHEAD_GATE {
+            eprintln!(
+                "fig_scale ci gate: disabled tracer costs \
+                 {disabled_ratio:.3}x > {DISABLED_OVERHEAD_GATE}x \
+                 on the hot loop"
+            );
+            failed = true;
+        }
+        if events_per_sec < EVENTS_PER_SEC_FLOOR {
+            eprintln!(
+                "fig_scale ci gate: ingest {events_per_sec:.0} \
+                 events/sec < floor {EVENTS_PER_SEC_FLOOR:.0}"
+            );
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!(
+            "ci gate: disabled-tracer {disabled_ratio:.3}x <= \
+             {DISABLED_OVERHEAD_GATE}x and ingest \
+             {events_per_sec:.0} >= {EVENTS_PER_SEC_FLOOR:.0} \
+             events/sec — green"
+        );
+    }
+    if !ci || write_baseline {
+        let lines = vec![
+            ("scale_untraced_ns".to_string(), untraced_s * 1e9),
+            ("scale_traced_ns".to_string(), traced_s * 1e9),
+            ("trace_overhead_ratio".to_string(), trace_overhead),
+            ("events_per_sec".to_string(), events_per_sec),
+            ("bytes_per_request".to_string(), bytes_per_request),
+            ("tracer_disabled_overhead".to_string(), disabled_ratio),
+        ];
+        let path = sparoa::repo_root().join("BENCH_scale.json");
+        baseline::write(&path, "scale_fleet", &lines);
+    }
+}

@@ -93,6 +93,20 @@ fn main() {
             std::hint::black_box(scratch.report.makespan_us);
         })));
 
+    // 2b'. The same fast-path walk with a disabled obs::Tracer poked
+    //      each iteration — measures the "zero cost when off" claim on
+    //      the hottest loop (printed as tracer_disabled_overhead below;
+    //      the enforced <= 1.05x gate lives in fig_scale --ci).
+    let mut off_tracer = sparoa::obs::Tracer::disabled();
+    results.push(("simulate_fastpath_traced_off", bench(
+        &format!("simulate() fast path + disabled tracer ({n_ops} ops)"),
+        20, it(4000), || {
+            off_tracer.record(0.0, sparoa::obs::NONE, sparoa::obs::NONE,
+                              sparoa::obs::TraceEvent::Admit);
+            table.simulate_into(&sched, &mut scratch);
+            std::hint::black_box(scratch.report.makespan_us);
+        })));
+
     // 2c. One-shot wrapper (table build + walk) — what `simulate()`
     //     costs a caller that doesn't reuse anything.
     results.push(("simulate_wrapper", bench(
@@ -202,6 +216,13 @@ fn main() {
         println!("\nsimulate fast-path speedup: {:.1}x \
                   (reference {:.0} ns -> fast {:.0} ns)",
                  rf / fp, rf, fp);
+    }
+    if let (Some(fp), Some(tr)) =
+        (ns("simulate_fastpath"), ns("simulate_fastpath_traced_off"))
+    {
+        println!("tracer_disabled_overhead: {:.3}x \
+                  (fast {:.0} ns -> with disabled tracer {:.0} ns)",
+                 tr / fp, fp, tr);
     }
     if let (Some(gr), Some(gf)) =
         (ns("greedy_schedule"), ns("greedy_fastpath"))

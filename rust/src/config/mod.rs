@@ -48,6 +48,13 @@ pub struct Config {
     pub governor: String,
     /// serve-fleet: per-board power cap in watts (0 = uncapped).
     pub power_cap_w: f64,
+    /// serve-fleet: write a virtual-time execution trace to this path
+    /// ("" = tracing disabled; zero overhead).
+    pub trace_out: String,
+    /// serve-fleet: trace export format (folded | chrome).  `folded` is
+    /// flamegraph.pl/inferno collapsed-stack text; `chrome` is Chrome
+    /// trace-event JSON loadable in Perfetto / chrome://tracing.
+    pub trace_format: String,
 }
 
 impl Default for Config {
@@ -76,6 +83,8 @@ impl Default for Config {
             autoscale: false,
             governor: "race-to-idle".into(),
             power_cap_w: 0.0,
+            trace_out: String::new(),
+            trace_format: "folded".into(),
         }
     }
 }
@@ -87,6 +96,16 @@ fn check_governor(s: &str) -> Result<()> {
         s == "off" || crate::power::Governor::parse(s).is_ok(),
         "governor must be race-to-idle|stretch-to-deadline|fixed:N|off, \
          got `{s}`"
+    );
+    Ok(())
+}
+
+/// Validate a `trace_format` spelling: the two exporters in
+/// [`crate::obs`].
+fn check_trace_format(s: &str) -> Result<()> {
+    anyhow::ensure!(
+        matches!(s, "folded" | "chrome"),
+        "trace_format must be folded|chrome, got `{s}`"
     );
     Ok(())
 }
@@ -117,6 +136,9 @@ impl Config {
         }
         if let Some(g) = v.get("governor").as_str() {
             check_governor(g)?;
+        }
+        if let Some(f) = v.get("trace_format").as_str() {
+            check_trace_format(f)?;
         }
         let d = Config::default();
         Ok(Config {
@@ -163,6 +185,16 @@ impl Config {
                 .get("power_cap_w")
                 .as_f64()
                 .unwrap_or(d.power_cap_w),
+            trace_out: v
+                .get("trace_out")
+                .as_str()
+                .unwrap_or(&d.trace_out)
+                .into(),
+            trace_format: v
+                .get("trace_format")
+                .as_str()
+                .unwrap_or(&d.trace_format)
+                .into(),
         })
     }
 
@@ -210,6 +242,11 @@ impl Config {
                     "power_cap_w must be >= 0 (0 = uncapped), got `{value}`"
                 );
                 self.power_cap_w = w;
+            }
+            "trace_out" => self.trace_out = value.into(),
+            "trace_format" => {
+                check_trace_format(value)?;
+                self.trace_format = value.into();
             }
             other => anyhow::bail!("unknown config key `{other}`"),
         }
@@ -310,6 +347,22 @@ mod tests {
         let cg = Config::from_json(&good_gov).unwrap();
         assert_eq!(cg.governor, "stretch-to-deadline");
         assert!((cg.power_cap_w - 40.0).abs() < 1e-12);
+        // trace knobs
+        assert!(c.trace_out.is_empty());
+        assert_eq!(c.trace_format, "folded");
+        c.apply_override("trace_out", "/tmp/t.folded").unwrap();
+        assert_eq!(c.trace_out, "/tmp/t.folded");
+        c.apply_override("trace_format", "chrome").unwrap();
+        assert_eq!(c.trace_format, "chrome");
+        assert!(c.apply_override("trace_format", "svg").is_err());
+        let bad_fmt = json::parse(r#"{"trace_format": "svg"}"#).unwrap();
+        assert!(Config::from_json(&bad_fmt).is_err());
+        let good_fmt = json::parse(
+            r#"{"trace_format": "chrome", "trace_out": "x.json"}"#)
+            .unwrap();
+        let cf = Config::from_json(&good_fmt).unwrap();
+        assert_eq!(cf.trace_format, "chrome");
+        assert_eq!(cf.trace_out, "x.json");
         // Config files get the same backend validation as the CLI.
         let bad = json::parse(r#"{"backend": "cuda"}"#).unwrap();
         assert!(Config::from_json(&bad).is_err());

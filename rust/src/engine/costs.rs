@@ -299,6 +299,21 @@ impl CostTable {
         self.entries[id].xfer_out
     }
 
+    /// Per-op phase split for trace attribution, microseconds:
+    /// `(compute, launch, transfer)`.  Compute is the pure kernel time
+    /// (`lat` minus the residual launch); transfer is the worst-case
+    /// cross-device cost of this op's output (only paid when a consumer
+    /// sits on the other processor).  Sums over a schedule reconcile
+    /// with [`crate::engine::sim::SimReport::phase_totals`].
+    pub fn op_phase_us(&self, id: usize, proc: Proc) -> (f64, f64, f64) {
+        let e = &self.entries[id];
+        let (lat, launch) = match proc {
+            Proc::Cpu => (e.cpu_lat, e.cpu_launch),
+            Proc::Gpu => (e.gpu_lat, e.gpu_launch),
+        };
+        ((lat - launch).max(0.0), launch, e.xfer_out)
+    }
+
     /// Whether op `id` emits bytes that a cross-device consumer must pay
     /// a transfer for.
     pub fn has_out_bytes(&self, id: usize) -> bool {
@@ -855,6 +870,26 @@ mod tests {
             assert_eq!(f.peak_gpu_mem_mb, r.peak_gpu_mem_mb);
             assert_eq!(f.cpu_mem_mb, r.cpu_mem_mb);
             assert_eq!(f.timings.len(), r.timings.len());
+        }
+    }
+
+    #[test]
+    fn op_phase_split_reconciles_with_latency() {
+        let (g, dev, opts) = fixture();
+        let table = CostTable::build(&g, &dev, &opts);
+        for id in 0..table.len() {
+            for proc in [Proc::Cpu, Proc::Gpu] {
+                let (compute, launch, xfer) = table.op_phase_us(id, proc);
+                assert!(compute >= 0.0 && launch >= 0.0 && xfer >= 0.0);
+                // compute + launch recomposes the contention-free
+                // latency exactly; xfer matches the table's column.
+                assert!(
+                    (compute + launch - table.lat(id, proc)).abs() < 1e-9,
+                    "op {id} {proc:?} phase split drifted"
+                );
+                assert_eq!(launch, table.launch(id, proc));
+                assert_eq!(xfer, table.xfer_out(id));
+            }
         }
     }
 

@@ -158,6 +158,20 @@ impl SimReport {
     pub fn total_mem_mb(&self) -> f64 {
         self.peak_gpu_mem_mb + self.cpu_mem_mb
     }
+    /// Phase totals for trace attribution, microseconds:
+    /// `(compute, transfer, launch, aggregation)`.  Compute is the sum
+    /// of both lanes' busy time; the components may overlap in wall
+    /// time, so their sum can exceed `makespan_us` — these are
+    /// attribution buckets (the serving tracer's per-op phase hook),
+    /// not a wall-clock decomposition.
+    pub fn phase_totals(&self) -> (f64, f64, f64, f64) {
+        (
+            self.cpu_busy_us + self.gpu_busy_us,
+            self.transfer_us,
+            self.launch_us,
+            self.aggregation_us,
+        )
+    }
 }
 
 /// Fixed cost of the weighted-average aggregation step (Eq. 14), us.

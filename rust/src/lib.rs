@@ -69,6 +69,15 @@
 //!                      energy model behind `PerfSnapshot`'s
 //!                      J-per-inference (`serve-fleet --governor`,
 //!                      `fig_energy_serve` bench).
+//!     * `obs`        — built-in virtual-time profiler: per-board
+//!                      `Tracer` (zero-cost when disabled) recording
+//!                      typed admit/dispatch/DMA/compute/shed/throttle
+//!                      events into a bounded buffer, exact
+//!                      per-(model, class) `PhaseBreakdown`
+//!                      accumulators on every `PerfSnapshot`, and
+//!                      folded-stack (flamegraph.pl/inferno) + Chrome
+//!                      trace-event (Perfetto) exporters
+//!                      (`serve-fleet --trace_out`, `fig_scale` bench).
 //!     * `runtime`    — the PJRT bridge (optional `pjrt` cargo feature)
 //!                      and host tensors / weight stores.
 //!     * `device`/`energy`/`graph`/`profiler` — calibrated device models,
@@ -140,6 +149,7 @@ pub mod energy;
 pub mod engine;
 pub mod graph;
 pub mod nn;
+pub mod obs;
 pub mod power;
 pub mod predictor;
 pub mod profiler;

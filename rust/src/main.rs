@@ -82,6 +82,7 @@ fn usage(cmd: &str) -> String {
              [--governor=race-to-idle|stretch-to-deadline|fixed:N|off] \
              [--power_cap_w=W] \
              [--load=X] [--num_requests=N] [--trace=FILE.json] \
+             [--trace_out=FILE] [--trace_format=folded|chrome] \
              [--json]\n  \
              Distributed multi-board serving: the serve-multi tenant \
              mix routed across N\n  \
@@ -92,7 +93,11 @@ fn usage(cmd: &str) -> String {
              Boards run under a DVFS governor (energy columns in every \
              table; --governor=off\n  \
              disables accounting); --power_cap_w bounds per-board \
-             instantaneous draw."
+             instantaneous draw.\n  \
+             --trace_out writes a virtual-time execution trace of the \
+             configured router's run\n  \
+             (folded = flamegraph.pl/inferno stacks, chrome = Perfetto \
+             JSON)."
         ),
         "train" => format!(
             "sparoa train [{common}] [--episodes=N] [--noise=X] \
@@ -431,8 +436,30 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
         if cfg.autoscale {
             opts.autoscale = Some(AutoscalePolicy::default());
         }
+        // Only the configured router's run pays for tracing; the two
+        // comparison runs stay on the disabled (zero-cost) tracer.
+        if !cfg.trace_out.is_empty() && router == chosen {
+            opts.trace = Some(sparoa::obs::TraceConfig::default());
+        }
         snapshots.push(run_fleet(
             &registry, &classes, &tenants, &arrivals, &opts)?);
+    }
+
+    if !cfg.trace_out.is_empty() {
+        let traced = snapshots
+            .iter()
+            .find(|s| s.router == chosen.name())
+            .expect("configured router was run");
+        let text = match cfg.trace_format.as_str() {
+            "chrome" => traced.chrome_trace(),
+            _ => traced.folded_trace(),
+        };
+        std::fs::write(&cfg.trace_out, text).with_context(|| {
+            format!("writing trace `{}`", cfg.trace_out)
+        })?;
+        if !cfg.json {
+            println!("trace ({}) -> {}", cfg.trace_format, cfg.trace_out);
+        }
     }
 
     if cfg.json {

@@ -1,0 +1,746 @@
+//! `sparoa::obs` — the built-in virtual-time profiler.
+//!
+//! A zero-cost-when-disabled tracing layer threaded through the
+//! serving stack (`serve::cluster`, `serve::fleet`, `power`): each
+//! board owns a [`Tracer`] that records typed [`TraceEvent`]s in
+//! *virtual* microseconds into a bounded buffer and accumulates exact
+//! per-(model, class) phase totals, sealed into a [`PhaseBreakdown`]
+//! on the board's [`crate::serve::PerfSnapshot`] at finish time.  Two
+//! exporters turn a run into standard profiler inputs:
+//!
+//! * [`folded`] — flamegraph.pl / inferno folded-stack text
+//!   (`board;model;class;phase count_us`), built from the exact phase
+//!   accumulators, so event-buffer drops never skew it;
+//! * [`chrome_trace`] — Chrome trace-event JSON (Perfetto-loadable),
+//!   one `pid` per board, one `tid` per lane, timestamps in
+//!   virtual-time microseconds.
+//!
+//! `sparoa serve-fleet --trace_out=FILE --trace_format=folded|chrome`
+//! wires both into the CLI, the `fig_scale` bench measures tracer
+//! throughput/overhead at 10^6 requests, and
+//! `rust/tests/obs_trace.rs` pins trace totals to the
+//! [`crate::serve::PerfSnapshot`] aggregates (every admitted request
+//! appears exactly once as served/shed/expired; phase sums equal the
+//! lane capacity to 1e-6 relative; `Throttle` events equal
+//! `throttle_events`).
+
+use std::fmt::Write as _;
+
+/// Sentinel index for "no model / class / lane attribution" on a
+/// [`TraceRecord`] (exporters drop the corresponding stack frame).
+pub const NONE: u32 = u32::MAX;
+
+/// Tracer configuration, carried by
+/// [`crate::serve::ClusterOptions`] / [`crate::serve::FleetOptions`].
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Per-board event-buffer capacity, in records.  Once full,
+    /// further records are dropped (newest-first) and counted in the
+    /// snapshot's `trace_dropped`; the [`PhaseBreakdown`] accumulators
+    /// keep exact totals regardless of drops.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { capacity: 262_144 }
+    }
+}
+
+/// One typed profiler event.  All durations/waits are virtual-time
+/// microseconds; `lane` indexes the board's
+/// [`crate::serve::LaneMatrix`] lanes; `freq_state` is the DVFS
+/// ladder rung chosen at dispatch ([`NONE`] when the board runs
+/// without a governor).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEvent {
+    /// A request passed admission control.
+    Admit,
+    /// A served request's arrival→dispatch wait, µs (recorded at
+    /// dispatch, so it doubles as the served-exactly-once marker).
+    QueueWait {
+        /// Arrival→dispatch wait, µs.
+        wait_us: f64,
+    },
+    /// A batch of `batch` requests was drained together.
+    BatchForm {
+        /// Requests in the batch.
+        batch: u32,
+    },
+    /// A batch started executing.
+    Dispatch {
+        /// Lane index the batch occupies.
+        lane: u32,
+        /// Requests in the batch.
+        batch: u32,
+        /// DVFS ladder rung (0 = fastest), [`NONE`] without a governor.
+        freq_state: u32,
+    },
+    /// Host↔device transfer share of a batch's lane occupancy
+    /// (span; recorded at its end time).
+    Dma {
+        /// Lane index.
+        lane: u32,
+        /// Span length, µs.
+        dur_us: f64,
+    },
+    /// Compute share of a batch's lane occupancy (span; recorded at
+    /// its end time).
+    Compute {
+        /// Lane index.
+        lane: u32,
+        /// Span length, µs.
+        dur_us: f64,
+    },
+    /// A request was shed at admission time (rejection or policy
+    /// eviction).
+    Shed,
+    /// A request was shed because its deadline expired in queue.
+    Expire,
+    /// The power cap clamped a dispatch to a slower rung or deferred
+    /// it (reconciles 1:1 with the snapshot's `throttle_events`).
+    Throttle,
+    /// The autoscaler added (or reclaimed) a replica of the record's
+    /// model on this board.
+    ScaleUp,
+    /// The autoscaler started draining a replica of the record's
+    /// model on this board.
+    ScaleDown,
+    /// A replica warm-up occupied a lane (span; recorded at its end
+    /// time).
+    WarmUp {
+        /// Lane index.
+        lane: u32,
+        /// Span length, µs.
+        dur_us: f64,
+    },
+}
+
+/// One buffered event: virtual time, (model, class) attribution
+/// ([`NONE`] = unattributed), payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    /// Virtual time the event was recorded, µs.  Span payloads
+    /// (`Dma`, `Compute`, `WarmUp`) are recorded at their *end*;
+    /// exporters recover the start as `t_us - dur_us`.
+    pub t_us: f64,
+    /// Registry index of the model, or [`NONE`].
+    pub model: u32,
+    /// SLO class index, or [`NONE`].
+    pub class: u32,
+    /// The event payload.
+    pub event: TraceEvent,
+}
+
+/// Exact phase totals for one (model, class) pair.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseRow {
+    /// Registry index of the model.
+    pub model: u32,
+    /// SLO class index.
+    pub class: u32,
+    /// Summed arrival→dispatch wait over served requests, µs.
+    /// Request-time, not lane-time: excluded from the capacity
+    /// identity below.
+    pub queue_wait_us: f64,
+    /// Summed per-request DMA share of lane occupancy, µs.
+    pub dma_us: f64,
+    /// Summed per-request compute share of lane occupancy, µs.
+    pub compute_us: f64,
+    /// Requests served.
+    pub served: u64,
+    /// Requests shed at admission.
+    pub shed: u64,
+    /// Requests expired in queue.
+    pub expired: u64,
+}
+
+impl PhaseRow {
+    /// Lane-time attributed to this row, µs (`dma_us + compute_us`).
+    pub fn service_us(&self) -> f64 {
+        self.dma_us + self.compute_us
+    }
+}
+
+/// A board's (after `merge_from`: a fleet's) sealed phase breakdown.
+///
+/// Capacity identity, pinned by `rust/tests/obs_trace.rs`:
+/// Σ rows [`PhaseRow::service_us`] + `warmup_us` + `idle_us` ==
+/// `capacity_us` to 1e-6 relative.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    /// One row per (model, class) pair with any activity.
+    pub rows: Vec<PhaseRow>,
+    /// Lane-µs no lane spent busy (capacity minus total busy time).
+    pub idle_us: f64,
+    /// Lane-µs spent on autoscaler replica warm-ups.
+    pub warmup_us: f64,
+    /// Total lane capacity, lane-µs: lanes × horizon, where horizon is
+    /// the later of the makespan and the last lane-free event.  Sums
+    /// across boards on merge.
+    pub capacity_us: f64,
+    /// Power-cap clamp/defer events (equals the snapshot's
+    /// `throttle_events` when sealed from the same run).
+    pub throttles: u64,
+}
+
+impl PhaseBreakdown {
+    /// True when no enabled tracer sealed into this breakdown.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty() && self.capacity_us == 0.0
+    }
+
+    /// Total lane-time attributed to request service, µs.
+    pub fn service_us(&self) -> f64 {
+        self.rows.iter().map(|r| r.service_us()).sum()
+    }
+
+    /// Fold `other` into `self`: rows summed by (model, class), the
+    /// idle/warmup/capacity/throttle totals added — the
+    /// fleet-aggregate path used by `PerfSnapshot::merge_from`.
+    pub fn merge_from(&mut self, other: &PhaseBreakdown) {
+        for o in &other.rows {
+            match self
+                .rows
+                .iter_mut()
+                .find(|r| r.model == o.model && r.class == o.class)
+            {
+                Some(r) => {
+                    r.queue_wait_us += o.queue_wait_us;
+                    r.dma_us += o.dma_us;
+                    r.compute_us += o.compute_us;
+                    r.served += o.served;
+                    r.shed += o.shed;
+                    r.expired += o.expired;
+                }
+                None => self.rows.push(*o),
+            }
+        }
+        self.idle_us += other.idle_us;
+        self.warmup_us += other.warmup_us;
+        self.capacity_us += other.capacity_us;
+        self.throttles += other.throttles;
+    }
+}
+
+/// Per-board event recorder + phase accumulator.
+///
+/// A disabled tracer costs one predictable branch per call site —
+/// every method early-returns on `enabled`, and callers gate derived
+/// work (e.g. the DMA-fraction probe) behind [`Tracer::is_enabled`].
+/// The claim is measured, not asserted: `hotpath` prints
+/// `tracer_disabled_overhead` and `fig_scale --ci` gates it at 1.05x.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    cap: usize,
+    buf: Vec<TraceRecord>,
+    dropped: u64,
+    /// nm × nc accumulators, class-major within model.
+    rows: Vec<PhaseRow>,
+    nc: usize,
+    warmup_us: f64,
+    throttles: u64,
+}
+
+impl Tracer {
+    /// The no-op tracer every board starts with.
+    pub fn disabled() -> Self {
+        Tracer {
+            enabled: false,
+            cap: 0,
+            buf: Vec::new(),
+            dropped: 0,
+            rows: Vec::new(),
+            nc: 0,
+            warmup_us: 0.0,
+            throttles: 0,
+        }
+    }
+
+    /// An enabled tracer for a board serving `nm` models × `nc` SLO
+    /// classes.
+    pub fn new(cfg: TraceConfig, nm: usize, nc: usize) -> Self {
+        let mut rows = Vec::with_capacity(nm * nc);
+        for m in 0..nm {
+            for c in 0..nc {
+                rows.push(PhaseRow {
+                    model: m as u32,
+                    class: c as u32,
+                    ..PhaseRow::default()
+                });
+            }
+        }
+        Tracer {
+            enabled: true,
+            cap: cfg.capacity.max(1),
+            buf: Vec::new(),
+            dropped: 0,
+            rows,
+            nc: nc.max(1),
+            warmup_us: 0.0,
+            throttles: 0,
+        }
+    }
+
+    /// True when recording.  Callers compute non-trivial derived
+    /// values (probe calls, per-request shares) only behind this.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one event at virtual time `t_us` (pass [`NONE`] for
+    /// unattributed model/class).  Past capacity the record is
+    /// dropped and counted; on a disabled tracer this is a single
+    /// branch.
+    #[inline]
+    pub fn record(
+        &mut self,
+        t_us: f64,
+        model: u32,
+        class: u32,
+        event: TraceEvent,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(TraceRecord { t_us, model, class, event });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Accumulate one served request's phase shares, µs.
+    #[inline]
+    pub fn acc_served(
+        &mut self,
+        model: usize,
+        class: usize,
+        wait_us: f64,
+        dma_us: f64,
+        compute_us: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let r = &mut self.rows[model * self.nc + class];
+        r.queue_wait_us += wait_us;
+        r.dma_us += dma_us;
+        r.compute_us += compute_us;
+        r.served += 1;
+    }
+
+    /// Accumulate one shed request (`expired = false`: admission-time
+    /// shed; `true`: deadline expiry in queue).
+    #[inline]
+    pub fn acc_shed(&mut self, model: usize, class: usize, expired: bool) {
+        if !self.enabled {
+            return;
+        }
+        let r = &mut self.rows[model * self.nc + class];
+        if expired {
+            r.expired += 1;
+        } else {
+            r.shed += 1;
+        }
+    }
+
+    /// Accumulate a replica warm-up's lane occupancy, µs.
+    #[inline]
+    pub fn acc_warmup(&mut self, dur_us: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.warmup_us += dur_us;
+    }
+
+    /// Count one power-cap clamp/defer (the `Throttle` event itself is
+    /// recorded separately via [`Tracer::record`]).
+    #[inline]
+    pub fn acc_throttle(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        self.throttles += 1;
+    }
+
+    /// Drain the event buffer: `(records, dropped_count)`.
+    pub fn take(&mut self) -> (Vec<TraceRecord>, u64) {
+        (std::mem::take(&mut self.buf), self.dropped)
+    }
+
+    /// Seal the phase accumulators into a [`PhaseBreakdown`].  The
+    /// board computes `idle_us` / `capacity_us` (both lane-µs,
+    /// capacity = lanes × horizon) at finish time; rows with no
+    /// activity are dropped.  A disabled tracer seals to the empty
+    /// breakdown.
+    pub fn seal(&mut self, idle_us: f64, capacity_us: f64) -> PhaseBreakdown {
+        if !self.enabled {
+            return PhaseBreakdown::default();
+        }
+        PhaseBreakdown {
+            rows: std::mem::take(&mut self.rows)
+                .into_iter()
+                .filter(|r| {
+                    r.served + r.shed + r.expired > 0
+                        || r.service_us() > 0.0
+                })
+                .collect(),
+            idle_us,
+            warmup_us: self.warmup_us,
+            capacity_us,
+            throttles: self.throttles,
+        }
+    }
+}
+
+/// Strip the folded-stack separator from a frame label.
+fn frame(label: &str) -> String {
+    label.replace(';', ":")
+}
+
+/// Render one board's [`PhaseBreakdown`] as flamegraph.pl / inferno
+/// folded-stack lines: `board;model;class;phase count` where count is
+/// rounded virtual-time µs (zero-count lines are skipped), plus
+/// `board;warmup` and `board;idle` frames.  Built from the exact
+/// phase accumulators, so event-buffer drops never skew the graph.
+pub fn folded(
+    board: &str,
+    phases: &PhaseBreakdown,
+    model_labels: &[String],
+    class_labels: &[String],
+) -> String {
+    let name = |labels: &[String], i: u32| -> String {
+        labels
+            .get(i as usize)
+            .map(|l| frame(l))
+            .unwrap_or_else(|| format!("#{i}"))
+    };
+    let board = frame(board);
+    let mut out = String::new();
+    for r in &phases.rows {
+        let stem = format!(
+            "{board};{};{}",
+            name(model_labels, r.model),
+            name(class_labels, r.class)
+        );
+        for (phase, us) in [
+            ("queue_wait", r.queue_wait_us),
+            ("dma", r.dma_us),
+            ("compute", r.compute_us),
+        ] {
+            let n = us.max(0.0).round() as u64;
+            if n > 0 {
+                let _ = writeln!(out, "{stem};{phase} {n}");
+            }
+        }
+    }
+    for (phase, us) in
+        [("warmup", phases.warmup_us), ("idle", phases.idle_us)]
+    {
+        let n = us.max(0.0).round() as u64;
+        if n > 0 {
+            let _ = writeln!(out, "{board};{phase} {n}");
+        }
+    }
+    out
+}
+
+/// Append one board's records as Chrome trace-event objects onto
+/// `out` (comma-separated; `first` tracks whether a separator is
+/// pending).  `pid` = board index; `tid` = lane for lane-carrying
+/// events, else the SLO class (0 when unattributed); `ts` =
+/// virtual-time µs.  Span payloads are buffered at their end time, so
+/// `ts = t_us - dur_us` and `dur = dur_us`.
+pub fn chrome_events_into(
+    out: &mut String,
+    first: &mut bool,
+    pid: usize,
+    records: &[TraceRecord],
+    model_labels: &[String],
+    class_labels: &[String],
+) {
+    use crate::util::json::{self, Value};
+    let label = |labels: &[String], i: u32| -> Option<String> {
+        if i == NONE {
+            None
+        } else {
+            Some(
+                labels
+                    .get(i as usize)
+                    .cloned()
+                    .unwrap_or_else(|| format!("#{i}")),
+            )
+        }
+    };
+    let num = |x: f64| json::to_string(&Value::Num(x));
+    for r in records {
+        let (kind, lane, dur_us, extra): (
+            &str,
+            Option<u32>,
+            Option<f64>,
+            Vec<(&str, f64)>,
+        ) = match r.event {
+            TraceEvent::Admit => ("admit", None, None, vec![]),
+            TraceEvent::QueueWait { wait_us } => {
+                ("queue_wait", None, None, vec![("wait_us", wait_us)])
+            }
+            TraceEvent::BatchForm { batch } => {
+                ("batch_form", None, None, vec![("batch", batch as f64)])
+            }
+            TraceEvent::Dispatch { lane, batch, freq_state } => (
+                "dispatch",
+                Some(lane),
+                None,
+                vec![
+                    ("batch", batch as f64),
+                    (
+                        "freq_state",
+                        if freq_state == NONE {
+                            -1.0
+                        } else {
+                            freq_state as f64
+                        },
+                    ),
+                ],
+            ),
+            TraceEvent::Dma { lane, dur_us } => {
+                ("dma", Some(lane), Some(dur_us), vec![])
+            }
+            TraceEvent::Compute { lane, dur_us } => {
+                ("compute", Some(lane), Some(dur_us), vec![])
+            }
+            TraceEvent::Shed => ("shed", None, None, vec![]),
+            TraceEvent::Expire => ("expire", None, None, vec![]),
+            TraceEvent::Throttle => ("throttle", None, None, vec![]),
+            TraceEvent::ScaleUp => ("scale_up", None, None, vec![]),
+            TraceEvent::ScaleDown => ("scale_down", None, None, vec![]),
+            TraceEvent::WarmUp { lane, dur_us } => {
+                ("warmup", Some(lane), Some(dur_us), vec![])
+            }
+        };
+        let name = match label(model_labels, r.model) {
+            Some(m) => format!("{kind}:{m}"),
+            None => kind.to_string(),
+        };
+        let tid =
+            lane.unwrap_or(if r.class == NONE { 0 } else { r.class });
+        let ts = r.t_us - dur_us.unwrap_or(0.0);
+        if !*first {
+            out.push(',');
+        }
+        *first = false;
+        let _ = write!(
+            out,
+            "{{\"name\":{},\"cat\":\"sparoa\",\"ph\":\"{}\",\"ts\":{},\
+             \"pid\":{},\"tid\":{}",
+            json::to_string(&Value::Str(name)),
+            if dur_us.is_some() { 'X' } else { 'i' },
+            num(ts),
+            pid,
+            tid
+        );
+        match dur_us {
+            Some(d) => {
+                let _ = write!(out, ",\"dur\":{}", num(d));
+            }
+            // Instant events: thread scope keeps Perfetto's marker
+            // rendering local to the tid.
+            None => out.push_str(",\"s\":\"t\""),
+        }
+        out.push_str(",\"args\":{");
+        let mut sep = false;
+        if let Some(c) = label(class_labels, r.class) {
+            let _ = write!(
+                out,
+                "\"class\":{}",
+                json::to_string(&Value::Str(c))
+            );
+            sep = true;
+        }
+        for (k, v) in extra {
+            if sep {
+                out.push(',');
+            }
+            sep = true;
+            let _ = write!(out, "\"{k}\":{}", num(v));
+        }
+        out.push_str("}}");
+    }
+}
+
+/// Wrap per-board record slices into one Perfetto-loadable Chrome
+/// trace document: `{"traceEvents":[...]}`, `pid` = slice index.
+pub fn chrome_trace(
+    boards: &[&[TraceRecord]],
+    model_labels: &[String],
+    class_labels: &[String],
+) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for (pid, records) in boards.iter().enumerate() {
+        chrome_events_into(
+            &mut out,
+            &mut first,
+            pid,
+            records,
+            model_labels,
+            class_labels,
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_and_seals_nothing() {
+        let mut t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        t.record(1.0, 0, 0, TraceEvent::Admit);
+        t.acc_served(0, 0, 1.0, 2.0, 3.0);
+        t.acc_shed(0, 0, false);
+        t.acc_warmup(5.0);
+        t.acc_throttle();
+        let (events, dropped) = t.take();
+        assert!(events.is_empty());
+        assert_eq!(dropped, 0);
+        let p = t.seal(10.0, 20.0);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn buffer_caps_and_counts_drops() {
+        let mut t = Tracer::new(TraceConfig { capacity: 3 }, 1, 1);
+        for i in 0..5 {
+            t.record(i as f64, 0, 0, TraceEvent::Admit);
+        }
+        let (events, dropped) = t.take();
+        assert_eq!(events.len(), 3);
+        assert_eq!(dropped, 2);
+        // Drop-newest: the earliest records survive.
+        assert_eq!(events[0].t_us, 0.0);
+        assert_eq!(events[2].t_us, 2.0);
+    }
+
+    #[test]
+    fn seal_keeps_the_capacity_identity() {
+        let mut t = Tracer::new(TraceConfig::default(), 2, 2);
+        t.acc_served(0, 1, 4.0, 1.0, 9.0);
+        t.acc_served(1, 0, 2.0, 0.5, 4.5);
+        t.acc_shed(1, 1, true);
+        t.acc_warmup(5.0);
+        t.acc_throttle();
+        // busy = 15 service + 5 warmup; capacity 100 -> idle 80.
+        let p = t.seal(80.0, 100.0);
+        assert_eq!(p.rows.len(), 3, "inactive rows dropped");
+        assert!(
+            (p.service_us() + p.warmup_us + p.idle_us - p.capacity_us)
+                .abs()
+                < 1e-9
+        );
+        assert_eq!(p.throttles, 1);
+        let expired: u64 = p.rows.iter().map(|r| r.expired).sum();
+        assert_eq!(expired, 1);
+    }
+
+    #[test]
+    fn merge_sums_rows_and_totals() {
+        let mut a = PhaseBreakdown::default();
+        let mut t = Tracer::new(TraceConfig::default(), 1, 2);
+        t.acc_served(0, 0, 1.0, 2.0, 3.0);
+        a.merge_from(&t.seal(5.0, 10.0));
+        let mut u = Tracer::new(TraceConfig::default(), 1, 2);
+        u.acc_served(0, 0, 1.0, 2.0, 3.0);
+        u.acc_served(0, 1, 4.0, 1.0, 1.0);
+        u.acc_throttle();
+        a.merge_from(&u.seal(3.0, 10.0));
+        assert_eq!(a.rows.len(), 2);
+        let r00 = a
+            .rows
+            .iter()
+            .find(|r| r.model == 0 && r.class == 0)
+            .unwrap();
+        assert_eq!(r00.served, 2);
+        assert!((r00.compute_us - 6.0).abs() < 1e-12);
+        assert!((a.capacity_us - 20.0).abs() < 1e-12);
+        assert!((a.idle_us - 8.0).abs() < 1e-12);
+        assert_eq!(a.throttles, 1);
+    }
+
+    #[test]
+    fn folded_lines_are_flamegraph_shaped() {
+        let mut t = Tracer::new(TraceConfig::default(), 1, 1);
+        t.acc_served(0, 0, 10.4, 3.6, 6.4);
+        let p = t.seal(90.0, 100.0);
+        let models = vec!["mnet;v3".to_string()];
+        let classes = vec!["interactive".to_string()];
+        let text = folded("board0", &p, &models, &classes);
+        for line in text.lines() {
+            let (stack, count) = line.rsplit_once(' ').unwrap();
+            assert!(count.parse::<u64>().unwrap() > 0);
+            assert!(stack.starts_with("board0;"));
+        }
+        // Separator in a label is sanitized, not a new frame.
+        assert!(text.contains("board0;mnet:v3;interactive;compute 6"));
+        assert!(text.contains("board0;idle 90"));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_required_keys() {
+        use crate::util::json::{parse, Value};
+        let records = vec![
+            TraceRecord {
+                t_us: 10.0,
+                model: 0,
+                class: 0,
+                event: TraceEvent::Dispatch {
+                    lane: 1,
+                    batch: 4,
+                    freq_state: NONE,
+                },
+            },
+            TraceRecord {
+                t_us: 30.0,
+                model: 0,
+                class: NONE,
+                event: TraceEvent::Compute { lane: 1, dur_us: 20.0 },
+            },
+            TraceRecord {
+                t_us: 5.0,
+                model: NONE,
+                class: NONE,
+                event: TraceEvent::Throttle,
+            },
+        ];
+        let models = vec!["m\"quote".to_string()];
+        let classes = vec!["interactive".to_string()];
+        let text = chrome_trace(&[&records], &models, &classes);
+        let doc = parse(&text).expect("chrome export must parse");
+        let Value::Obj(o) = &doc else { panic!("not an object") };
+        let Some(Value::Arr(events)) = o.get("traceEvents") else {
+            panic!("no traceEvents array")
+        };
+        assert_eq!(events.len(), 3);
+        for e in events {
+            let Value::Obj(e) = e else { panic!("event not object") };
+            for key in ["name", "ph", "ts", "pid", "tid"] {
+                assert!(e.contains_key(key), "missing {key}");
+            }
+        }
+        // The span event carries dur and ts = end - dur.
+        let Value::Obj(span) = &events[1] else { unreachable!() };
+        assert_eq!(span.get("ph"), Some(&Value::Str("X".into())));
+        assert_eq!(span.get("dur"), Some(&Value::Num(20.0)));
+        assert_eq!(span.get("ts"), Some(&Value::Num(10.0)));
+        // Instants carry the scope key.
+        let Value::Obj(inst) = &events[0] else { unreachable!() };
+        assert_eq!(inst.get("ph"), Some(&Value::Str("i".into())));
+        assert_eq!(inst.get("s"), Some(&Value::Str("t".into())));
+    }
+}

@@ -232,12 +232,24 @@ pub struct PowerConfig {
     /// Record a [`PowerEvent`] per dispatched batch (test/debug aid;
     /// off by default — traces grow with request count).
     pub trace: bool,
+    /// Upper bound on recorded [`PowerEvent`]s when `trace` is on.
+    /// Past it, events are dropped (newest-first) and counted in
+    /// `PerfSnapshot::power_trace_dropped` — the energy ledger stays
+    /// exact; only the reconstruction timeline is truncated.  Keeps
+    /// million-request scale runs from ballooning memory.
+    pub trace_cap: usize,
 }
 
 impl PowerConfig {
     /// Uncapped, untraced config.
     pub fn new(profile: PowerProfile, governor: Governor) -> Self {
-        PowerConfig { profile, governor, cap_w: None, trace: false }
+        PowerConfig {
+            profile,
+            governor,
+            cap_w: None,
+            trace: false,
+            trace_cap: 65_536,
+        }
     }
 }
 
@@ -258,6 +270,21 @@ pub struct PowerEvent {
     pub busy_w: f64,
     /// The lane's idle floor, watts.
     pub idle_w: f64,
+}
+
+/// One admitted dispatch's power decision, returned by
+/// `BoardPower::admit`.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerAdmit {
+    /// Batch latency at the chosen rung, µs.
+    pub scaled_lat_us: f64,
+    /// Lane draw while busy at the chosen rung, watts.
+    pub busy_w: f64,
+    /// Chosen ladder rung (0 = fastest).
+    pub state: usize,
+    /// True when the power cap forced a slower rung than the governor
+    /// wanted (already counted as a throttle event).
+    pub clamped: bool,
 }
 
 /// Governor decision: the slowest admissible rung for a batch whose
@@ -299,6 +326,7 @@ pub(crate) struct BoardPower {
     governor: Governor,
     cap_w: Option<f64>,
     trace_on: bool,
+    trace_cap: usize,
     lane_proc: Vec<Proc>,
     /// Busy draw of each lane's most recent dispatch, watts (meaningful
     /// while that lane's `free` time is in the future).
@@ -309,8 +337,11 @@ pub(crate) struct BoardPower {
     pub(crate) busy_energy_mj: f64,
     /// Cap-binding events (state clamped or dispatch deferred).
     pub(crate) throttles: u64,
-    /// Busy-interval trace (empty unless `PowerConfig::trace`).
+    /// Busy-interval trace (empty unless `PowerConfig::trace`; bounded
+    /// at `PowerConfig::trace_cap` events).
     pub(crate) trace: Vec<PowerEvent>,
+    /// Events dropped after `trace` hit `trace_cap`.
+    pub(crate) trace_dropped: u64,
 }
 
 impl BoardPower {
@@ -353,12 +384,14 @@ impl BoardPower {
             governor: cfg.governor,
             cap_w: cfg.cap_w,
             trace_on: cfg.trace,
+            trace_cap: cfg.trace_cap,
             lane_proc: lane_proc.to_vec(),
             lane_w: vec![0.0; lane_proc.len()],
             lane_idle_w,
             busy_energy_mj: 0.0,
             throttles: 0,
             trace: Vec::new(),
+            trace_dropped: 0,
         })
     }
 
@@ -403,10 +436,10 @@ impl BoardPower {
 
     /// Governor + cap decision for a dispatch on `lane` starting at
     /// `start_us` with full-speed latency `base_latency_us`.  Returns
-    /// `(scaled_latency_us, busy_w)` for the chosen rung, or `None`
-    /// when the cap does not admit even the slowest rung right now
-    /// (caller defers to the next lane-finish event).  Counts a
-    /// throttle event whenever the cap changes the outcome.
+    /// the chosen rung's [`PowerAdmit`], or `None` when the cap does
+    /// not admit even the slowest rung right now (caller defers to the
+    /// next lane-finish event).  Counts a throttle event whenever the
+    /// cap changes the outcome.
     pub(crate) fn admit(
         &mut self,
         lane: usize,
@@ -414,7 +447,7 @@ impl BoardPower {
         start_us: f64,
         base_latency_us: f64,
         worst_deadline_us: Option<f64>,
-    ) -> Option<(f64, f64)> {
+    ) -> Option<PowerAdmit> {
         let lm = self.profile.lane(self.lane_proc[lane]);
         let desired = pick_state(
             lm,
@@ -436,10 +469,13 @@ impl BoardPower {
                     self.throttles += 1;
                 }
                 let lm = self.profile.lane(self.lane_proc[lane]);
-                Some((
-                    base_latency_us * lm.states[s].latency_scale,
-                    lm.states[s].busy_power_w(),
-                ))
+                Some(PowerAdmit {
+                    scaled_lat_us: base_latency_us
+                        * lm.states[s].latency_scale,
+                    busy_w: lm.states[s].busy_power_w(),
+                    state: s,
+                    clamped: s != desired,
+                })
             }
             None => {
                 self.throttles += 1;
@@ -456,14 +492,18 @@ impl BoardPower {
         self.busy_energy_mj += busy_w * (finish_us - start_us) / 1e3;
         self.lane_w[lane] = busy_w;
         if self.trace_on {
-            self.trace.push(PowerEvent {
-                lane,
-                proc: self.lane_proc[lane],
-                start_us,
-                finish_us,
-                busy_w,
-                idle_w: self.lane_idle_w[lane],
-            });
+            if self.trace.len() < self.trace_cap {
+                self.trace.push(PowerEvent {
+                    lane,
+                    proc: self.lane_proc[lane],
+                    start_us,
+                    finish_us,
+                    busy_w,
+                    idle_w: self.lane_idle_w[lane],
+                });
+            } else {
+                self.trace_dropped += 1;
+            }
         }
     }
 
@@ -586,9 +626,12 @@ mod tests {
             Some(prof.soc_static_w + prof.gpu.idle_w + mid_w + 0.01);
         let mut bp = BoardPower::new(&cfg, &lanes).unwrap();
         let free = [0.0, 0.0];
-        let (lat, w) = bp.admit(0, &free, 0.0, 100.0, None).unwrap();
+        let adm = bp.admit(0, &free, 0.0, 100.0, None).unwrap();
+        let (lat, w) = (adm.scaled_lat_us, adm.busy_w);
         assert_eq!(w, mid_w);
         assert_eq!(lat, 100.0 * prof.gpu.states[1].latency_scale);
+        assert_eq!(adm.state, 1);
+        assert!(adm.clamped);
         assert_eq!(bp.throttles, 1);
         bp.commit(0, 0.0, lat, w);
         // With lane 0 busy at mid, lane 1 cannot fit even the slowest
@@ -599,8 +642,9 @@ mod tests {
         assert_eq!(bp.throttles, 2);
         // After lane 0 finishes, the same dispatch is admitted again
         // (still clamped to mid under this cap, so one more throttle).
-        let (_, w1) = bp.admit(1, &free, lat + 1.0, 100.0, None).unwrap();
-        assert_eq!(w1, mid_w);
+        let again = bp.admit(1, &free, lat + 1.0, 100.0, None).unwrap();
+        assert_eq!(again.busy_w, mid_w);
+        assert!(again.clamped);
         assert_eq!(bp.throttles, 3);
     }
 
@@ -617,5 +661,24 @@ mod tests {
         assert_eq!(bp.trace.len(), 2);
         assert_eq!(bp.trace[0].idle_w, prof.gpu.idle_w);
         assert_eq!(bp.trace[1].start_us, 700.0);
+        assert_eq!(bp.trace_dropped, 0);
+    }
+
+    #[test]
+    fn trace_is_bounded_and_overflow_is_counted() {
+        let prof = agx_profile();
+        let mut cfg = PowerConfig::new(prof.clone(), Governor::RaceToIdle);
+        cfg.trace = true;
+        cfg.trace_cap = 4;
+        let mut bp = BoardPower::new(&cfg, &[Proc::Gpu]).unwrap();
+        let w = prof.gpu.states[0].busy_power_w();
+        for i in 0..6 {
+            let t = 1000.0 * i as f64;
+            bp.commit(0, t, t + 500.0, w);
+        }
+        // The cap bounds the trace; the energy ledger stays exact.
+        assert_eq!(bp.trace.len(), 4);
+        assert_eq!(bp.trace_dropped, 2);
+        assert!((bp.busy_energy_mj - 6.0 * w * 500.0 / 1e3).abs() < 1e-12);
     }
 }

@@ -71,6 +71,11 @@ pub struct ClusterOptions {
     pub policy: ClusterPolicy,
     /// What admission control does when a queue budget fills.
     pub shed: ShedPolicy,
+    /// `Some` enables the virtual-time profiler: the board records
+    /// [`crate::obs::TraceEvent`]s into a bounded buffer and seals
+    /// exact phase accumulators into `PerfSnapshot::phases`.  `None`
+    /// (the default) costs one predictable branch per event site.
+    pub trace: Option<crate::obs::TraceConfig>,
 }
 
 impl Default for ClusterOptions {
@@ -78,6 +83,7 @@ impl Default for ClusterOptions {
         ClusterOptions {
             policy: ClusterPolicy::SparsityAware,
             shed: ShedPolicy::ShedLowestClass,
+            trace: None,
         }
     }
 }
@@ -234,6 +240,10 @@ pub(crate) struct BoardSim<'a> {
     /// (`set_power`); `None` boards dispatch at full frequency with no
     /// energy accounting — bit-identical to the pre-power scheduler.
     power: Option<BoardPower>,
+    /// The board's profiler (disabled unless `ClusterOptions::trace`).
+    /// Purely observational: records and accumulators only, never an
+    /// input to any scheduling decision.
+    tracer: crate::obs::Tracer,
     #[cfg(debug_assertions)]
     settled: std::collections::HashSet<usize>,
 }
@@ -312,6 +322,14 @@ impl<'a> BoardSim<'a> {
             shed_seen: 0,
             last_finish: 0.0,
             power: None,
+            tracer: match opts.trace {
+                Some(cfg) => crate::obs::Tracer::new(
+                    cfg,
+                    nm,
+                    classes.len(),
+                ),
+                None => crate::obs::Tracer::disabled(),
+            },
             #[cfg(debug_assertions)]
             settled: std::collections::HashSet::new(),
         })
@@ -339,7 +357,29 @@ impl<'a> BoardSim<'a> {
         // under overload, when routing is hottest.
         if self.q.admitted != admitted_before {
             self.epoch += 1;
+            self.tracer.record(
+                now_us,
+                model as u32,
+                class as u32,
+                crate::obs::TraceEvent::Admit,
+            );
         }
+    }
+
+    /// Record an autoscaler replica event against this board's trace
+    /// (`up`: a replica was added / un-drained vs. drain started).
+    pub(crate) fn trace_scale(&mut self, t_us: f64, model: usize,
+                              up: bool) {
+        self.tracer.record(
+            t_us,
+            model as u32,
+            crate::obs::NONE,
+            if up {
+                crate::obs::TraceEvent::ScaleUp
+            } else {
+                crate::obs::TraceEvent::ScaleDown
+            },
+        );
     }
 
     /// Install the fleet router's per-model price table (cheapest
@@ -418,6 +458,16 @@ impl<'a> BoardSim<'a> {
             let w = bp.max_busy_w(lane);
             bp.commit(lane, start, start + warmup_us, w);
         }
+        self.tracer.record(
+            start + warmup_us,
+            crate::obs::NONE,
+            crate::obs::NONE,
+            crate::obs::TraceEvent::WarmUp {
+                lane: lane as u32,
+                dur_us: warmup_us,
+            },
+        );
+        self.tracer.acc_warmup(warmup_us);
         start + warmup_us
     }
 
@@ -439,7 +489,7 @@ impl<'a> BoardSim<'a> {
                 self.epoch += 1;
             }
         }
-        self.settle_sheds();
+        self.settle_sheds(now);
         loop {
             if self.q.total_queued() == 0 {
                 return Ok(None);
@@ -583,6 +633,7 @@ impl<'a> BoardSim<'a> {
             // further (throttle event) or defers the dispatch to the
             // next lane-free event.
             let mut finish = c.finish;
+            let mut freq_state = crate::obs::NONE;
             if let Some(bp) = self.power.as_mut() {
                 let worst = self
                     .q
@@ -594,11 +645,28 @@ impl<'a> BoardSim<'a> {
                 let worst = worst.is_finite().then_some(worst);
                 match bp.admit(c.lane, &self.lanes.free, c.start,
                                c.finish - c.start, worst) {
-                    Some((scaled_lat, busy_w)) => {
-                        finish = c.start + scaled_lat;
-                        bp.commit(c.lane, c.start, finish, busy_w);
+                    Some(adm) => {
+                        finish = c.start + adm.scaled_lat_us;
+                        bp.commit(c.lane, c.start, finish, adm.busy_w);
+                        freq_state = adm.state as u32;
+                        if adm.clamped {
+                            self.tracer.record(
+                                c.start,
+                                c.m as u32,
+                                crate::obs::NONE,
+                                crate::obs::TraceEvent::Throttle,
+                            );
+                            self.tracer.acc_throttle();
+                        }
                     }
                     None => {
+                        self.tracer.record(
+                            now,
+                            c.m as u32,
+                            crate::obs::NONE,
+                            crate::obs::TraceEvent::Throttle,
+                        );
+                        self.tracer.acc_throttle();
                         // Cap-bound: every admissible rung would push
                         // board draw over the cap while other lanes are
                         // busy.  A busy lane must exist (the cap was
@@ -622,6 +690,40 @@ impl<'a> BoardSim<'a> {
             self.last_finish = self.last_finish.max(finish);
             self.snap.n_batches += 1;
             self.snap.dispatched += taken.len() as u64;
+            // Profiler: split the batch's lane occupancy into a DMA
+            // span followed by a compute span using the model's probed
+            // transfer share, and attribute per-request shares to the
+            // phase accumulators.  All derived work (the fraction
+            // probe, the share math) sits behind `is_enabled`.
+            let dma_frac = if self.tracer.is_enabled() {
+                use crate::obs::TraceEvent;
+                let f = self
+                    .registry
+                    .get(c.m)
+                    .dma_fraction(c.proc, taken.len())?;
+                let span = finish - c.start;
+                let lane = c.lane as u32;
+                let batch = taken.len() as u32;
+                let m = c.m as u32;
+                let none = crate::obs::NONE;
+                self.tracer.record(
+                    now, m, none, TraceEvent::BatchForm { batch });
+                self.tracer.record(
+                    c.start, m, none,
+                    TraceEvent::Dispatch { lane, batch, freq_state });
+                self.tracer.record(
+                    c.start + span * f, m, none,
+                    TraceEvent::Dma { lane, dur_us: span * f });
+                self.tracer.record(
+                    finish, m, none,
+                    TraceEvent::Compute {
+                        lane,
+                        dur_us: span * (1.0 - f),
+                    });
+                f
+            } else {
+                0.0
+            };
             for r in &taken {
                 let latency = finish - r.arrival_us;
                 #[cfg(debug_assertions)]
@@ -633,27 +735,57 @@ impl<'a> BoardSim<'a> {
                     latency,
                     finish <= r.deadline_us,
                 );
+                if self.tracer.is_enabled() {
+                    let wait = c.start - r.arrival_us;
+                    let share = (finish - c.start) / taken.len() as f64;
+                    self.tracer.record(
+                        c.start,
+                        r.model as u32,
+                        r.class as u32,
+                        crate::obs::TraceEvent::QueueWait {
+                            wait_us: wait,
+                        },
+                    );
+                    self.tracer.acc_served(
+                        r.model,
+                        r.class,
+                        wait,
+                        share * dma_frac,
+                        share * (1.0 - dma_frac),
+                    );
+                }
             }
         }
     }
 
     /// Record any newly shed requests (admission rejections + expiries)
-    /// into the snapshot, exactly once each.
-    fn settle_sheds(&mut self) {
-        while self.shed_seen < self.q.shed.len() {
-            let s = self.q.shed[self.shed_seen];
-            self.shed_seen += 1;
+    /// into the snapshot, exactly once each.  `now_us` timestamps the
+    /// trace events (sheds surface at the pump that settles them).
+    fn settle_sheds(&mut self, now_us: f64) {
+        for &s in self.q.shed_since(self.shed_seen) {
             #[cfg(debug_assertions)]
             debug_assert!(self.settled.insert(s.req),
                           "request {} settled twice (shed)", s.req);
             self.snap.record_shed(s.class, s.model, s.at_admission);
+            self.tracer.record(
+                now_us,
+                s.model as u32,
+                s.class as u32,
+                if s.at_admission {
+                    crate::obs::TraceEvent::Shed
+                } else {
+                    crate::obs::TraceEvent::Expire
+                },
+            );
+            self.tracer.acc_shed(s.model, s.class, !s.at_admission);
         }
+        self.shed_seen = self.q.shed.len();
     }
 
     /// Seal the run: `now_us` is the driver's final virtual time.
     /// Verifies (debug builds) that every request settled exactly once.
     pub(crate) fn finish(mut self, now_us: f64) -> PerfSnapshot {
-        self.settle_sheds();
+        self.settle_sheds(now_us);
         #[cfg(debug_assertions)]
         debug_assert_eq!(
             self.settled.len() as u64,
@@ -663,16 +795,26 @@ impl<'a> BoardSim<'a> {
         self.snap.makespan_us = self.last_finish.max(now_us);
         self.snap.cpu_busy_us = self.lanes.busy_us(Proc::Cpu);
         self.snap.gpu_busy_us = self.lanes.busy_us(Proc::Gpu);
+        // Horizon: warm-up occupancies extend lane free times past the
+        // last *dispatch* finish without touching last_finish, so take
+        // the max over both — otherwise a lane could log more busy
+        // time than the window it idles (and the profiler's capacity
+        // identity) is judged against.
+        let horizon = self
+            .lanes
+            .free
+            .iter()
+            .fold(self.snap.makespan_us, |h, &f| h.max(f));
+        if self.tracer.is_enabled() {
+            let capacity = self.lanes.procs.len() as f64 * horizon;
+            let busy: f64 = self.lanes.busy.iter().sum();
+            let idle = (capacity - busy).max(0.0);
+            let (events, dropped) = self.tracer.take();
+            self.snap.trace_events = events;
+            self.snap.trace_dropped = dropped;
+            self.snap.phases = self.tracer.seal(idle, capacity);
+        }
         if let Some(mut bp) = self.power.take() {
-            // Horizon: warm-up occupancies extend lane free times past
-            // the last *dispatch* finish without touching last_finish,
-            // so take the max over both — otherwise a lane could log
-            // more busy time than the window it idles against.
-            let horizon = self
-                .lanes
-                .free
-                .iter()
-                .fold(self.snap.makespan_us, |h, &f| h.max(f));
             let mut e_mj =
                 bp.busy_energy_mj + bp.soc_w() * horizon / 1e3;
             for (lane, &busy) in self.lanes.busy.iter().enumerate() {
@@ -687,6 +829,7 @@ impl<'a> BoardSim<'a> {
             self.snap.governor = bp.governor_name();
             self.snap.throttle_events = bp.throttles;
             self.snap.power_trace = std::mem::take(&mut bp.trace);
+            self.snap.power_trace_dropped = bp.trace_dropped;
         }
         self.snap
     }
@@ -902,6 +1045,7 @@ mod tests {
             &ClusterOptions {
                 policy: ClusterPolicy::StaticSplit,
                 shed: ShedPolicy::RejectNew,
+                trace: None,
             })
             .unwrap();
         // light (cheapest on CPU) pinned to CPU, heavy to GPU: both

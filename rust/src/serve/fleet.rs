@@ -157,6 +157,9 @@ pub struct FleetOptions {
     /// optional power cap, watts) on every board.  `None` serves at
     /// full frequency with no energy accounting.
     pub power: Option<PowerConfig>,
+    /// `Some` enables the virtual-time profiler on every board (the
+    /// buffer capacity is per board); see `ClusterOptions::trace`.
+    pub trace: Option<crate::obs::TraceConfig>,
 }
 
 impl FleetOptions {
@@ -173,6 +176,7 @@ impl FleetOptions {
             autoscale: None,
             policy: ClusterPolicy::SparsityAware,
             power: None,
+            trace: None,
         }
     }
 }
@@ -394,6 +398,38 @@ impl FleetSnapshot {
         json::to_string(&self.to_json())
     }
 
+    /// Folded-stack rendering of the whole fleet (one
+    /// `board;model;class;phase count_us` block per board, boards
+    /// labelled by their snapshot's `policy`, e.g. "fleet/board3");
+    /// flamegraph.pl / inferno input.  Empty on untraced runs.
+    pub fn folded_trace(&self) -> String {
+        self.boards.iter().map(|b| b.folded_trace()).collect()
+    }
+
+    /// Chrome trace-event JSON of the whole fleet (Perfetto-loadable;
+    /// `pid` = board index, `ts` = virtual-time µs).
+    /// `{"traceEvents":[]}` on untraced runs.
+    pub fn chrome_trace(&self) -> String {
+        let models: Vec<String> = self
+            .aggregate
+            .per_model
+            .iter()
+            .map(|g| g.label.clone())
+            .collect();
+        let classes: Vec<String> = self
+            .aggregate
+            .per_class
+            .iter()
+            .map(|g| g.label.clone())
+            .collect();
+        let slices: Vec<&[crate::obs::TraceRecord]> = self
+            .boards
+            .iter()
+            .map(|b| b.trace_events.as_slice())
+            .collect();
+        crate::obs::chrome_trace(&slices, &models, &classes)
+    }
+
     /// One-line summary for logs (energy tail only on energy-aware
     /// runs).
     pub fn summary(&self) -> String {
@@ -515,6 +551,7 @@ pub fn run_fleet(
     let cluster_opts = ClusterOptions {
         policy: opts.policy,
         shed: opts.shed,
+        trace: opts.trace,
     };
     // Per-model price tables, probed once so neither the per-arrival
     // routing hot path nor the control loop touches the probe cache:
@@ -891,6 +928,7 @@ fn autoscale_tick(
                 {
                     r.draining = false;
                 }
+                boards[b].trace_scale(now, m, true);
                 events.push(ScaleEvent {
                     t_us: now,
                     model: m,
@@ -922,6 +960,7 @@ fn autoscale_tick(
                         active_from: ready,
                         draining: false,
                     });
+                    boards[b].trace_scale(now, m, true);
                     events.push(ScaleEvent {
                         t_us: now,
                         model: m,
@@ -987,6 +1026,7 @@ fn autoscale_tick(
                 {
                     r.draining = true;
                 }
+                boards[b].trace_scale(now, m, false);
                 events.push(ScaleEvent {
                     t_us: now,
                     model: m,

@@ -53,8 +53,8 @@ pub use slo::{
     AdmissionQueues, EnergySlo, QueuedReq, ShedPolicy, ShedReq, SloClass,
 };
 pub use workload::{
-    merge_arrivals, trace_from_json, trace_to_json, Arrival,
-    ArrivalPattern, Tenant,
+    fit_mmpp, merge_arrivals, trace_from_json, trace_to_json, Arrival,
+    ArrivalPattern, MmppFit, Tenant,
 };
 
 /// A canonical three-model / three-class / four-pattern scenario shared

@@ -45,6 +45,10 @@ pub struct ModelEntry {
     /// exactly once per registry lifetime (so the cache also spans
     /// repeated `run_cluster` calls over the same registry).
     probe_cache: Mutex<HashMap<(Proc, usize), f64>>,
+    /// Memoized DMA fractions keyed like `probe_cache` — a separate
+    /// map so the profiler's [`ModelEntry::dma_fraction`] probes never
+    /// perturb the latency-oracle cache the memoization tests pin.
+    dma_cache: Mutex<HashMap<(Proc, usize), f64>>,
 }
 
 impl ModelEntry {
@@ -78,6 +82,26 @@ impl ModelEntry {
             .unwrap()
             .insert(key, rep.makespan_us);
         Ok(rep.makespan_us)
+    }
+
+    /// Memoized host↔device transfer share of one `batch`-sized
+    /// inference on `proc`'s plan: `transfer_us / makespan_us`,
+    /// clamped to [0, 1] (0 when the probe reports a zero makespan).
+    /// The profiler uses it to split a batch's lane occupancy into
+    /// DMA vs. compute phases; probed once per (placement, batch).
+    pub fn dma_fraction(&self, proc: Proc, batch: usize) -> Result<f64> {
+        let key = (proc, batch);
+        if let Some(&v) = self.dma_cache.lock().unwrap().get(&key) {
+            return Ok(v);
+        }
+        let rep = self.session.probe(self.schedule_for(proc), batch)?;
+        let frac = if rep.makespan_us > 0.0 {
+            (rep.transfer_us / rep.makespan_us).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        self.dma_cache.lock().unwrap().insert(key, frac);
+        Ok(frac)
     }
 
     /// Cheapest makespan (us) of one `batch`-sized inference across
@@ -159,6 +183,7 @@ impl ModelRegistry {
             sparsity,
             intensity,
             probe_cache: Mutex::new(HashMap::new()),
+            dma_cache: Mutex::new(HashMap::new()),
         });
         Ok(self.entries.len() - 1)
     }
@@ -273,6 +298,22 @@ mod tests {
         let _ = e.latency_us(crate::device::Proc::Cpu, 4).unwrap();
         let _ = e.latency_us(p, 8).unwrap();
         assert_eq!(e.probe_cache.lock().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn dma_fraction_is_bounded_and_cached_separately() {
+        let mut reg = ModelRegistry::new();
+        reg.register(session("dma", 2.0, 0.3)).unwrap();
+        let e = reg.get(0);
+        let p = crate::device::Proc::Gpu;
+        let f1 = e.dma_fraction(p, 4).unwrap();
+        let f2 = e.dma_fraction(p, 4).unwrap();
+        assert!((0.0..=1.0).contains(&f1));
+        assert!(f1 > 0.0, "a GPU plan must move some bytes");
+        assert_eq!(f1, f2);
+        assert_eq!(e.dma_cache.lock().unwrap().len(), 1);
+        // Fraction probes never perturb the latency-oracle cache.
+        assert_eq!(e.probe_cache.lock().unwrap().len(), 0);
     }
 
     #[test]

@@ -137,8 +137,27 @@ pub struct PerfSnapshot {
     pub throttle_events: u64,
     /// Per-batch busy intervals for power-timeline reconstruction;
     /// populated only under `PowerConfig::trace` (tests), excluded from
-    /// JSON, and deliberately not merged across boards.
+    /// JSON, deliberately not merged across boards, and bounded at
+    /// `PowerConfig::trace_cap` events (overflow counted in
+    /// [`PerfSnapshot::power_trace_dropped`]).
     pub power_trace: Vec<PowerEvent>,
+    /// Power-trace events dropped once `power_trace` hit its cap
+    /// (counts only; the energy ledger itself stays exact).
+    pub power_trace_dropped: u64,
+    /// Raw profiler records in virtual time (empty unless the run was
+    /// traced via `ClusterOptions::trace` / `FleetOptions::trace`).
+    /// Bounded by `obs::TraceConfig::capacity`; like `power_trace`,
+    /// deliberately not merged across boards — exporters want
+    /// per-board streams.
+    pub trace_events: Vec<crate::obs::TraceRecord>,
+    /// Trace records dropped once `trace_events` hit its buffer cap
+    /// (the [`PerfSnapshot::phases`] accumulators stay exact).
+    pub trace_dropped: u64,
+    /// Exact per-(model, class) virtual-time phase accumulators
+    /// (queue-wait / DMA / compute, all microseconds) plus board
+    /// idle/warm-up/capacity totals; empty (`is_empty()`) unless the
+    /// run was traced.  Merges across boards by summation.
+    pub phases: crate::obs::PhaseBreakdown,
 }
 
 impl PerfSnapshot {
@@ -173,6 +192,10 @@ impl PerfSnapshot {
             soc_w: 0.0,
             throttle_events: 0,
             power_trace: Vec::new(),
+            power_trace_dropped: 0,
+            trace_events: Vec::new(),
+            trace_dropped: 0,
+            phases: crate::obs::PhaseBreakdown::default(),
         }
     }
 
@@ -232,6 +255,11 @@ impl PerfSnapshot {
         self.idle_floor_w += other.idle_floor_w;
         self.soc_w += other.soc_w;
         self.throttle_events += other.throttle_events;
+        // Like power_trace, raw trace_events stay per-board; only the
+        // drop counters and the exact phase accumulators roll up.
+        self.power_trace_dropped += other.power_trace_dropped;
+        self.trace_dropped += other.trace_dropped;
+        self.phases.merge_from(&other.phases);
         if self.governor.is_empty() {
             self.governor = other.governor.clone();
         }
@@ -354,6 +382,20 @@ impl PerfSnapshot {
             o.insert("throttle_events".into(),
                      Value::Num(self.throttle_events as f64));
         }
+        if !self.phases.is_empty() {
+            o.insert("trace_events".into(),
+                     Value::Num(self.trace_events.len() as f64));
+            o.insert("trace_dropped".into(),
+                     Value::Num(self.trace_dropped as f64));
+            o.insert("phase_service_us".into(),
+                     Value::Num(self.phases.service_us()));
+            o.insert("phase_warmup_us".into(),
+                     Value::Num(self.phases.warmup_us));
+            o.insert("phase_idle_us".into(),
+                     Value::Num(self.phases.idle_us));
+            o.insert("phase_capacity_us".into(),
+                     Value::Num(self.phases.capacity_us));
+        }
         o.insert(
             "per_class".into(),
             Value::Arr(self.per_class.iter().map(|g| g.to_json()).collect()),
@@ -368,6 +410,29 @@ impl PerfSnapshot {
     /// [`PerfSnapshot::to_json`] rendered to a string.
     pub fn to_json_string(&self) -> String {
         json::to_string(&self.to_json())
+    }
+
+    /// Folded-stack rendering of this board's phase accumulators
+    /// (`board;model;class;phase count_us` lines, flamegraph.pl /
+    /// inferno compatible; counts are integer microseconds).  The board
+    /// frame is [`PerfSnapshot::policy`].  Empty on untraced runs.
+    pub fn folded_trace(&self) -> String {
+        let models: Vec<String> =
+            self.per_model.iter().map(|g| g.label.clone()).collect();
+        let classes: Vec<String> =
+            self.per_class.iter().map(|g| g.label.clone()).collect();
+        crate::obs::folded(&self.policy, &self.phases, &models, &classes)
+    }
+
+    /// Chrome trace-event JSON of this board's raw records (Perfetto /
+    /// `chrome://tracing` loadable; timestamps are virtual-time
+    /// microseconds, pid 0).  `{"traceEvents":[]}` on untraced runs.
+    pub fn chrome_trace(&self) -> String {
+        let models: Vec<String> =
+            self.per_model.iter().map(|g| g.label.clone()).collect();
+        let classes: Vec<String> =
+            self.per_class.iter().map(|g| g.label.clone()).collect();
+        crate::obs::chrome_trace(&[&self.trace_events], &models, &classes)
     }
 
     /// Per-class console table for the CLI.

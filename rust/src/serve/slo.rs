@@ -249,6 +249,13 @@ impl AdmissionQueues {
         self.total
     }
 
+    /// The shed log's suffix starting at `from` — the entries appended
+    /// since a caller last settled them.  The board pump uses this to
+    /// account (and trace) each shed/expiry exactly once.
+    pub fn shed_since(&self, from: usize) -> &[ShedReq] {
+        &self.shed[from.min(self.shed.len())..]
+    }
+
     /// Outstanding requests queued for one model, O(1).
     pub fn queue_len(&self, model: usize) -> usize {
         self.model_len[model]

@@ -187,6 +187,177 @@ pub fn merge_arrivals(tenants: &[Tenant], seed: u64) -> Vec<Arrival> {
         .collect()
 }
 
+/// MMPP / diurnal parameters recovered from an arrival trace by
+/// [`fit_mmpp`].  All rates are requests per second of virtual time.
+#[derive(Debug, Clone, Copy)]
+pub struct MmppFit {
+    /// Calm-phase arrival rate (from the large inter-arrival cluster).
+    pub rate_lo_per_s: f64,
+    /// Burst-phase arrival rate (from the small inter-arrival cluster);
+    /// `>= rate_lo_per_s` by construction.
+    pub rate_hi_per_s: f64,
+    /// Mean time spent in one phase before switching, seconds.
+    pub mean_dwell_s: f64,
+    /// Overall mean rate, `n / span`.
+    pub base_rate_per_s: f64,
+    /// Relative swing of the dominant rate oscillation, in [0, 1].
+    pub amplitude: f64,
+    /// Period of the dominant rate oscillation, seconds.
+    pub period_s: f64,
+    /// Empirical squared coefficient of variation of the inter-arrival
+    /// gaps: ~1 for Poisson, > 1 for bursty (MMPP-like) traffic.
+    pub cv2: f64,
+}
+
+/// Estimate two-state MMPP plus diurnal parameters from an arrival
+/// trace (microsecond timestamps, ascending — e.g. a replay trace fed
+/// to [`trace_from_json`]), so a captured production stream can be
+/// re-generated synthetically at other loads via
+/// [`ArrivalPattern::Mmpp`] / [`ArrivalPattern::Diurnal`].
+///
+/// Moment- and cluster-based, not maximum likelihood: phase rates come
+/// from a 2-means split of the inter-arrival gaps, the dwell time from
+/// run lengths on the same side of the cluster midpoint, and the
+/// diurnal period from the dominant non-DC bin of a naive DFT over a
+/// binned rate curve.  Exponential gap distributions overlap heavily,
+/// so recovered rates/dwells are indicative (right order of magnitude)
+/// rather than exact; `cv2` is exact by definition.
+///
+/// Returns `None` for traces too short to fit (< 16 arrivals) or with
+/// zero time span.
+pub fn fit_mmpp(arrivals_us: &[f64]) -> Option<MmppFit> {
+    use crate::util::stats;
+    let n = arrivals_us.len();
+    if n < 16 {
+        return None;
+    }
+    let span_us = arrivals_us[n - 1] - arrivals_us[0];
+    if !(span_us > 0.0) {
+        return None;
+    }
+    let gaps: Vec<f64> = arrivals_us
+        .windows(2)
+        .map(|w| (w[1] - w[0]).max(0.0))
+        .collect();
+    let gm = stats::mean(&gaps);
+    if gm <= 0.0 {
+        return None;
+    }
+    let gs = stats::stddev(&gaps);
+    let cv2 = (gs / gm) * (gs / gm);
+
+    // Phase rates: 2-means over the gaps, seeded from the sorted
+    // halves.  Small gaps = burst phase, large gaps = calm phase.
+    let mut sorted = gaps.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut c_small = stats::mean(&sorted[..gaps.len() / 2]);
+    let mut c_large = stats::mean(&sorted[gaps.len() / 2..]);
+    for _ in 0..32 {
+        let thr = 0.5 * (c_small + c_large);
+        let (mut s0, mut n0, mut s1, mut n1) = (0.0, 0usize, 0.0, 0usize);
+        for &g in &gaps {
+            if g <= thr {
+                s0 += g;
+                n0 += 1;
+            } else {
+                s1 += g;
+                n1 += 1;
+            }
+        }
+        if n0 == 0 || n1 == 0 {
+            break;
+        }
+        let (ns, nl) = (s0 / n0 as f64, s1 / n1 as f64);
+        let moved =
+            (ns - c_small).abs() > 1e-9 || (nl - c_large).abs() > 1e-9;
+        c_small = ns;
+        c_large = nl;
+        if !moved {
+            break;
+        }
+    }
+    let rate_hi_per_s = 1e6 / c_small.max(1e-9);
+    let rate_lo_per_s = 1e6 / c_large.max(1e-9);
+
+    // Dwell time: mean duration of runs of gaps on the same side of
+    // the cluster midpoint (each run ~ one phase visit).
+    let thr = 0.5 * (c_small + c_large);
+    let mut dwell_sum_us = 0.0;
+    let mut runs = 0usize;
+    let mut run_us = 0.0;
+    let mut cur_burst = gaps[0] <= thr;
+    for &g in &gaps {
+        let burst = g <= thr;
+        if burst != cur_burst {
+            dwell_sum_us += run_us;
+            runs += 1;
+            run_us = 0.0;
+            cur_burst = burst;
+        }
+        run_us += g;
+    }
+    dwell_sum_us += run_us;
+    runs += 1;
+    let mean_dwell_s = dwell_sum_us / runs as f64 / 1e6;
+
+    // Diurnal component: bin the rate curve, take the dominant non-DC
+    // DFT bin as the period, and read the amplitude off smoothed
+    // extrema (3-bin moving average, robust to bin noise).
+    let k_bins = (n / 8).clamp(8, 256);
+    let mut bins = vec![0.0f64; k_bins];
+    for &t in arrivals_us {
+        let j = (((t - arrivals_us[0]) / span_us) * k_bins as f64) as usize;
+        bins[j.min(k_bins - 1)] += 1.0;
+    }
+    let bin_mean = stats::mean(&bins);
+    let mut best_k = 1usize;
+    let mut best_mag = -1.0f64;
+    for k in 1..=k_bins / 2 {
+        let (mut re, mut im) = (0.0f64, 0.0f64);
+        for (j, &c) in bins.iter().enumerate() {
+            let ph = 2.0 * std::f64::consts::PI * (k * j) as f64
+                / k_bins as f64;
+            re += (c - bin_mean) * ph.cos();
+            im += (c - bin_mean) * ph.sin();
+        }
+        let mag = re * re + im * im;
+        if mag > best_mag {
+            best_mag = mag;
+            best_k = k;
+        }
+    }
+    let span_s = span_us / 1e6;
+    let period_s = span_s / best_k as f64;
+    let smooth: Vec<f64> = (0..k_bins)
+        .map(|j| {
+            (bins[(j + k_bins - 1) % k_bins]
+                + bins[j]
+                + bins[(j + 1) % k_bins])
+                / 3.0
+        })
+        .collect();
+    let (mut mx, mut mn) = (f64::MIN, f64::MAX);
+    for &s in &smooth {
+        mx = mx.max(s);
+        mn = mn.min(s);
+    }
+    let amplitude = if mx + mn > 0.0 {
+        ((mx - mn) / (mx + mn)).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+
+    Some(MmppFit {
+        rate_lo_per_s,
+        rate_hi_per_s,
+        mean_dwell_s,
+        base_rate_per_s: n as f64 / span_s,
+        amplitude,
+        period_s,
+        cv2,
+    })
+}
+
 /// Parse a replayable trace: either `{"arrivals_us": [...]}` or a bare
 /// JSON array of microsecond timestamps.  Every entry must be a number —
 /// a malformed entry is an error, never a silently shorter workload.
@@ -314,6 +485,75 @@ mod tests {
             peak as f64 > 1.5 * trough as f64,
             "peak {peak} trough {trough}"
         );
+    }
+
+    #[test]
+    fn fit_recovers_mmpp_rates_and_burstiness() {
+        let xs = ArrivalPattern::Mmpp {
+            rate_lo_per_s: 20.0,
+            rate_hi_per_s: 500.0,
+            mean_dwell_s: 0.1,
+            n: 4000,
+        }
+        .generate(3);
+        let fit = fit_mmpp(&xs).unwrap();
+        // The fit's cv2 is pinned to the independently computed
+        // empirical CV^2 of the gaps — exact, not approximate.
+        let g = gaps(&xs);
+        let (m, s) = (stats::mean(&g), stats::stddev(&g));
+        let empirical = (s / m) * (s / m);
+        assert!((fit.cv2 - empirical).abs() < 1e-9,
+                "fit cv2 {} vs empirical {}", fit.cv2, empirical);
+        assert!(fit.cv2 > 1.2, "mmpp should be bursty, cv2 {}", fit.cv2);
+        assert!(fit.rate_hi_per_s > 2.0 * fit.rate_lo_per_s,
+                "phases not separated: {} vs {}",
+                fit.rate_hi_per_s, fit.rate_lo_per_s);
+        // Cluster-based recovery is order-of-magnitude, not exact.
+        for (got, want) in [
+            (fit.rate_hi_per_s, 500.0),
+            (fit.rate_lo_per_s, 20.0),
+        ] {
+            let ratio = got / want;
+            assert!(ratio > 0.35 && ratio < 3.0,
+                    "rate {got:.1} vs true {want:.1}");
+        }
+        let dwell_ratio = fit.mean_dwell_s / 0.1;
+        assert!(dwell_ratio > 0.05 && dwell_ratio < 5.0,
+                "dwell {} vs true 0.1", fit.mean_dwell_s);
+    }
+
+    #[test]
+    fn fit_on_poisson_reads_as_non_bursty() {
+        let xs = ArrivalPattern::Poisson { rate_per_s: 100.0, n: 4000 }
+            .generate(11);
+        let fit = fit_mmpp(&xs).unwrap();
+        assert!(fit.cv2 > 0.6 && fit.cv2 < 1.5, "poisson cv2 {}", fit.cv2);
+        let ratio = fit.base_rate_per_s / 100.0;
+        assert!(ratio > 0.5 && ratio < 2.0,
+                "base rate {}", fit.base_rate_per_s);
+        // Too-short traces refuse to fit instead of guessing.
+        assert!(fit_mmpp(&xs[..8]).is_none());
+        assert!(fit_mmpp(&[0.0; 20]).is_none());
+    }
+
+    #[test]
+    fn fit_recovers_diurnal_period_and_amplitude() {
+        let xs = ArrivalPattern::Diurnal {
+            base_rate_per_s: 200.0,
+            amplitude: 0.9,
+            period_s: 0.5,
+            n: 4000,
+        }
+        .generate(5);
+        let fit = fit_mmpp(&xs).unwrap();
+        let ratio = fit.period_s / 0.5;
+        assert!(ratio > 0.5 && ratio < 2.0,
+                "period {} vs true 0.5", fit.period_s);
+        assert!(fit.amplitude > 0.2,
+                "oscillation missed, amplitude {}", fit.amplitude);
+        let base_ratio = fit.base_rate_per_s / 200.0;
+        assert!(base_ratio > 0.5 && base_ratio < 2.0,
+                "base rate {}", fit.base_rate_per_s);
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! Profiler reconciliation invariants — always-on (synthetic models +
+//! checked-in device profiles; no `make artifacts` gating):
+//!
+//! * conservation: every admitted request appears in the trace exactly
+//!   once as served (`QueueWait`), or shed (`Shed` at admission /
+//!   `Expire` in queue); nothing is lost or double-counted, and the
+//!   trace totals pin the snapshot aggregates;
+//! * capacity identity: per-phase sums (service + warm-up + idle)
+//!   reproduce the board's lane-µs capacity to 1e-6 relative;
+//! * power reconciliation: `Throttle` trace events equal the
+//!   snapshot's `throttle_events` on every board and in aggregate;
+//! * bounded buffers: the power busy-interval trace respects its cap
+//!   and counts what it drops; the event ring counts drops too;
+//! * exporters: folded stacks parse line-by-line and the Chrome trace
+//!   is valid JSON with the `ph`/`ts`/`pid` schema Perfetto expects.
+
+use sparoa::api::SessionBuilder;
+use sparoa::bench_support::device_profile;
+use sparoa::device::Proc;
+use sparoa::graph::ModelGraph;
+use sparoa::obs::{TraceConfig, TraceEvent, TraceRecord};
+use sparoa::power::{Governor, PowerConfig, PowerProfile};
+use sparoa::serve::{
+    merge_arrivals, run_cluster, run_fleet, ArrivalPattern,
+    ClusterOptions, ClusterPolicy, FleetOptions, ModelRegistry,
+    PerfSnapshot, ShedPolicy, SloClass, Tenant,
+};
+
+fn registry_of(models: &[(&str, usize, f64, f64)]) -> ModelRegistry {
+    let dev = device_profile("agx_orin");
+    let mut reg = ModelRegistry::new();
+    for (name, blocks, scale, sparsity) in models {
+        let session = SessionBuilder::new()
+            .with_graph(ModelGraph::synthetic(
+                name, *blocks, *scale, *sparsity))
+            .with_device(dev.clone())
+            .policy("greedy")
+            .build()
+            .unwrap();
+        reg.register(session).unwrap();
+    }
+    reg
+}
+
+fn count(events: &[TraceRecord], pred: impl Fn(&TraceEvent) -> bool)
+    -> u64
+{
+    events.iter().filter(|r| pred(&r.event)).count() as u64
+}
+
+/// Overloaded two-model / two-class mix under `RejectNew` (the one
+/// shed policy where "admitted" is monotone: admitted requests are
+/// never evicted, only served or expired — which is what makes the
+/// Admit count verifiable).
+fn overloaded_snapshot() -> PerfSnapshot {
+    let reg = registry_of(&[
+        ("m_big", 6, 3.0, 0.2),
+        ("m_small", 4, 0.4, 0.7),
+    ]);
+    let classes = vec![
+        SloClass::new("hi", 15_000.0, 8, 4.0),
+        SloClass::new("lo", 80_000.0, 16, 1.0),
+    ];
+    let tenants = vec![
+        Tenant {
+            name: "a".into(),
+            model: "m_big".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: 600.0,
+                n: 400,
+            },
+        },
+        Tenant {
+            name: "b".into(),
+            model: "m_small".into(),
+            class: 1,
+            pattern: ArrivalPattern::Mmpp {
+                rate_lo_per_s: 100.0,
+                rate_hi_per_s: 900.0,
+                mean_dwell_s: 0.05,
+                n: 400,
+            },
+        },
+    ];
+    let arrivals = merge_arrivals(&tenants, 23);
+    run_cluster(&reg, &classes, &tenants, &arrivals, &ClusterOptions {
+        policy: ClusterPolicy::SparsityAware,
+        shed: ShedPolicy::RejectNew,
+        trace: Some(TraceConfig::default()),
+    })
+    .unwrap()
+}
+
+#[test]
+fn every_admitted_request_is_accounted_exactly_once() {
+    let snap = overloaded_snapshot();
+    assert_eq!(snap.trace_dropped, 0, "default ring must not drop here");
+    assert!(!snap.trace_events.is_empty());
+    assert!(!snap.phases.is_empty());
+    assert!(snap.total_shed() > 0, "overload must shed");
+
+    let admits =
+        count(&snap.trace_events, |e| matches!(e, TraceEvent::Admit));
+    let waits = count(&snap.trace_events,
+                      |e| matches!(e, TraceEvent::QueueWait { .. }));
+    let sheds =
+        count(&snap.trace_events, |e| matches!(e, TraceEvent::Shed));
+    let expires =
+        count(&snap.trace_events, |e| matches!(e, TraceEvent::Expire));
+
+    let row_served: u64 = snap.phases.rows.iter().map(|r| r.served).sum();
+    let row_shed: u64 = snap.phases.rows.iter().map(|r| r.shed).sum();
+    let row_expired: u64 =
+        snap.phases.rows.iter().map(|r| r.expired).sum();
+
+    // Trace counters == phase accumulators == snapshot aggregates.
+    assert_eq!(waits, snap.total_served());
+    assert_eq!(row_served, snap.total_served());
+    assert_eq!(sheds, row_shed);
+    assert_eq!(expires, row_expired);
+    assert_eq!(row_shed + row_expired, snap.total_shed());
+    // Exactly-once accounting: an admitted request is served or
+    // expires in queue; a rejected one sheds at admission.
+    assert_eq!(admits, waits + expires, "admitted = served + expired");
+    assert_eq!(admits + sheds, snap.total_offered());
+}
+
+fn assert_capacity_identity(snap: &PerfSnapshot, what: &str) {
+    let p = &snap.phases;
+    assert!(p.capacity_us > 0.0, "{what}: no capacity sealed");
+    let accounted = p.service_us() + p.warmup_us + p.idle_us;
+    let rel = (accounted - p.capacity_us).abs() / p.capacity_us;
+    assert!(
+        rel < 1e-6,
+        "{what}: service {} + warmup {} + idle {} != capacity {} \
+         (relative error {rel})",
+        p.service_us(), p.warmup_us, p.idle_us, p.capacity_us
+    );
+    // Per-row split stays self-consistent: dma + compute == service.
+    for r in &p.rows {
+        assert!(r.dma_us >= 0.0 && r.compute_us >= 0.0);
+        assert!(r.queue_wait_us >= 0.0);
+    }
+}
+
+#[test]
+fn phase_sums_reproduce_the_capacity_horizon() {
+    let snap = overloaded_snapshot();
+    assert_capacity_identity(&snap, "run_cluster");
+    // Lane busy time (batches + warm-ups) is exactly what the service
+    // and warm-up phases attribute.
+    let busy = snap.cpu_busy_us + snap.gpu_busy_us;
+    let attributed = snap.phases.service_us() + snap.phases.warmup_us;
+    let rel = (attributed - busy).abs() / busy.max(1e-12);
+    assert!(rel < 1e-6,
+            "attributed {attributed} vs busy {busy} (rel {rel})");
+}
+
+#[test]
+fn disabled_tracer_leaves_no_trace() {
+    let reg = registry_of(&[("m_only", 4, 1.0, 0.4)]);
+    let classes = vec![SloClass::new("c", 50_000.0, 64, 1.0)];
+    let tenants = vec![Tenant {
+        name: "t".into(),
+        model: "m_only".into(),
+        class: 0,
+        pattern: ArrivalPattern::Poisson { rate_per_s: 200.0, n: 150 },
+    }];
+    let arrivals = merge_arrivals(&tenants, 7);
+    let snap = run_cluster(&reg, &classes, &tenants, &arrivals,
+        &ClusterOptions {
+            policy: ClusterPolicy::SparsityAware,
+            shed: ShedPolicy::RejectNew,
+            trace: None,
+        })
+        .unwrap();
+    assert!(snap.trace_events.is_empty());
+    assert_eq!(snap.trace_dropped, 0);
+    assert!(snap.phases.is_empty());
+}
+
+/// The serve_energy fixture, trimmed: one heavy + one light model, a
+/// cap that fits the GPU's mid rung but not its top rung, so
+/// race-to-idle's picks get clamped/deferred throughout the run.
+fn capped_fleet() -> sparoa::serve::FleetSnapshot {
+    let reg = registry_of(&[
+        ("heavy", 8, 6.0, 0.1),
+        ("light", 4, 0.3, 0.75),
+    ]);
+    let heavy = reg.get(0);
+    let cap_b = heavy.gpu_batch_cap.max(1);
+    let heavy_rate =
+        cap_b as f64 / heavy.latency_us(Proc::Gpu, cap_b).unwrap() * 1e6;
+    let heavy_batch_lat = heavy.latency_us(Proc::Gpu, cap_b).unwrap();
+    let classes = vec![
+        SloClass::new("standard", 3.5 * heavy_batch_lat, 256, 2.0),
+        SloClass::new("best-effort", 15.0 * heavy_batch_lat, 512, 1.0),
+    ];
+    let tenants = vec![
+        Tenant {
+            name: "heavy-std".into(),
+            model: "heavy".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: 0.8 * heavy_rate,
+                n: 220,
+            },
+        },
+        Tenant {
+            name: "light-be".into(),
+            model: "light".into(),
+            class: 1,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: 0.8 * heavy_rate,
+                n: 110,
+            },
+        },
+    ];
+    let arrivals = merge_arrivals(&tenants, 17);
+    let profile =
+        PowerProfile::from_device(&device_profile("agx_orin")).unwrap();
+    let cap = profile.soc_static_w
+        + profile.cpu.idle_w
+        + profile.gpu.states[1].busy_power_w()
+        + 0.01;
+    let mut pc = PowerConfig::new(profile, Governor::RaceToIdle);
+    pc.cap_w = Some(cap);
+    pc.trace = true;
+    pc.trace_cap = 4; // force busy-interval trace overflow too
+    let mut opts = FleetOptions::new(2, 2);
+    opts.power = Some(pc);
+    opts.trace = Some(TraceConfig::default());
+    run_fleet(&reg, &classes, &tenants, &arrivals, &opts).unwrap()
+}
+
+#[test]
+fn throttle_trace_reconciles_with_power_accounting() {
+    let snap = capped_fleet();
+    assert!(snap.total_throttles() >= 1,
+            "binding cap must surface throttles");
+    let mut traced = 0u64;
+    for (b, board) in snap.boards.iter().enumerate() {
+        let n = count(&board.trace_events,
+                      |e| matches!(e, TraceEvent::Throttle));
+        assert_eq!(n, board.throttle_events,
+                   "board {b}: trace vs snapshot throttles");
+        assert_eq!(n, board.phases.throttles,
+                   "board {b}: trace vs phase throttles");
+        assert_capacity_identity(board, "fleet board");
+        traced += n;
+    }
+    assert_eq!(traced, snap.total_throttles());
+    assert_eq!(snap.aggregate.phases.throttles, snap.total_throttles());
+}
+
+#[test]
+fn power_trace_is_bounded_and_drops_are_counted() {
+    let snap = capped_fleet();
+    let mut dropped = 0u64;
+    for (b, board) in snap.boards.iter().enumerate() {
+        assert!(board.power_trace.len() <= 4,
+                "board {b}: trace_cap=4 but {} intervals kept",
+                board.power_trace.len());
+        dropped += board.power_trace_dropped;
+    }
+    assert!(dropped > 0,
+            "220+ dispatches against trace_cap=4 must drop intervals");
+    assert_eq!(snap.aggregate.power_trace_dropped, dropped);
+}
+
+#[test]
+fn exporters_emit_wellformed_output() {
+    let snap = overloaded_snapshot();
+
+    // Folded stacks: `frames... count`, count a non-negative integer,
+    // frames ';'-separated with the board label first.
+    let folded = snap.folded_trace();
+    assert!(!folded.trim().is_empty());
+    for line in folded.lines() {
+        let (stack, n) = line.rsplit_once(' ')
+            .unwrap_or_else(|| panic!("unsplittable line `{line}`"));
+        n.parse::<u64>()
+            .unwrap_or_else(|_| panic!("bad count in `{line}`"));
+        assert!(stack.starts_with(&snap.policy),
+                "stack `{stack}` missing board frame");
+    }
+    assert!(folded.lines().any(|l| l.contains(";idle ")),
+            "idle frame missing");
+
+    // Chrome trace: valid JSON, events carry ph/ts/pid.
+    let chrome = snap.chrome_trace();
+    let v = sparoa::util::json::parse(&chrome).expect("invalid JSON");
+    let events = v.get("traceEvents").as_arr().expect("no traceEvents");
+    assert!(!events.is_empty());
+    for e in events {
+        assert!(e.get("ph").as_str().is_some(), "event without ph");
+        assert!(e.get("ts").as_f64().is_some(), "event without ts");
+        assert!(e.get("pid").as_f64().is_some(), "event without pid");
+        assert!(e.get("name").as_str().is_some(), "event without name");
+    }
+}

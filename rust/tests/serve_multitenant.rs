@@ -94,7 +94,7 @@ fn conservation_under_random_mixes() {
             ];
             let arrivals = merge_arrivals(&tenants, seed);
             let snap = run_cluster(&reg, &classes, &tenants, &arrivals,
-                &ClusterOptions { policy, shed })
+                &ClusterOptions { policy, shed, trace: None })
                 .map_err(|e| e.to_string())?;
             let offered = snap.total_offered();
             if offered != arrivals.len() as u64 {
@@ -162,6 +162,7 @@ fn overload_sheds_instead_of_queueing_unboundedly() {
             &ClusterOptions {
                 policy: ClusterPolicy::SparsityAware,
                 shed,
+                trace: None,
             })
             .unwrap();
         assert!(snap.total_shed() > 0,
@@ -198,6 +199,7 @@ fn higher_class_never_does_worse_on_shared_model() {
             &ClusterOptions {
                 policy: ClusterPolicy::SparsityAware,
                 shed,
+                trace: None,
             })
             .unwrap();
         let hi = &snap.per_class[0];
