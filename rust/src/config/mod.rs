@@ -55,6 +55,17 @@ pub struct Config {
     /// flamegraph.pl/inferno collapsed-stack text; `chrome` is Chrome
     /// trace-event JSON loadable in Perfetto / chrome://tracing.
     pub trace_format: String,
+    /// serve-fleet: fault plan JSON file to inject ("" = fault-free).
+    /// See [`crate::faults::FaultPlan::from_json`] for the schema.
+    pub faults: String,
+    /// serve-fleet: mean time to failure, seconds of virtual time
+    /// (0 = no sampled faults).  With `mttr_s` > 0 a crash/rejoin
+    /// schedule is sampled per board from exponential distributions;
+    /// combined with `--faults=FILE` the sampled faults are appended.
+    pub mttf_s: f64,
+    /// serve-fleet: mean time to repair, seconds of virtual time
+    /// (used only when `mttf_s` > 0).
+    pub mttr_s: f64,
 }
 
 impl Default for Config {
@@ -85,6 +96,9 @@ impl Default for Config {
             power_cap_w: 0.0,
             trace_out: String::new(),
             trace_format: "folded".into(),
+            faults: String::new(),
+            mttf_s: 0.0,
+            mttr_s: 0.0,
         }
     }
 }
@@ -195,6 +209,15 @@ impl Config {
                 .as_str()
                 .unwrap_or(&d.trace_format)
                 .into(),
+            faults: v.get("faults").as_str().unwrap_or(&d.faults).into(),
+            mttf_s: check_mean_time(
+                "mttf_s",
+                v.get("mttf_s").as_f64().unwrap_or(d.mttf_s),
+            )?,
+            mttr_s: check_mean_time(
+                "mttr_s",
+                v.get("mttr_s").as_f64().unwrap_or(d.mttr_s),
+            )?,
         })
     }
 
@@ -248,6 +271,13 @@ impl Config {
                 check_trace_format(value)?;
                 self.trace_format = value.into();
             }
+            "faults" => self.faults = value.into(),
+            "mttf_s" => {
+                self.mttf_s = check_mean_time("mttf_s", value.parse()?)?;
+            }
+            "mttr_s" => {
+                self.mttr_s = check_mean_time("mttr_s", value.parse()?)?;
+            }
             other => anyhow::bail!("unknown config key `{other}`"),
         }
         Ok(())
@@ -256,6 +286,15 @@ impl Config {
     pub fn devices_json(&self) -> PathBuf {
         self.artifacts.join("devices.json")
     }
+}
+
+/// Validate an MTTF/MTTR mean: finite and non-negative (0 = off).
+fn check_mean_time(key: &str, v: f64) -> Result<f64> {
+    anyhow::ensure!(
+        v.is_finite() && v >= 0.0,
+        "{key} must be >= 0 seconds (0 = disabled), got `{v}`"
+    );
+    Ok(v)
 }
 
 /// Boolean flag values: bare `--flag` arrives as "true" from the CLI.
@@ -363,6 +402,27 @@ mod tests {
         let cf = Config::from_json(&good_fmt).unwrap();
         assert_eq!(cf.trace_format, "chrome");
         assert_eq!(cf.trace_out, "x.json");
+        // fault-injection knobs
+        assert!(c.faults.is_empty());
+        assert_eq!(c.mttf_s, 0.0);
+        assert_eq!(c.mttr_s, 0.0);
+        c.apply_override("faults", "plan.json").unwrap();
+        assert_eq!(c.faults, "plan.json");
+        c.apply_override("mttf_s", "120").unwrap();
+        c.apply_override("mttr_s", "4.5").unwrap();
+        assert!((c.mttf_s - 120.0).abs() < 1e-12);
+        assert!((c.mttr_s - 4.5).abs() < 1e-12);
+        assert!(c.apply_override("mttf_s", "-1").is_err());
+        assert!(c.apply_override("mttr_s", "inf").is_err());
+        let bad_mttf = json::parse(r#"{"mttf_s": -2.0}"#).unwrap();
+        assert!(Config::from_json(&bad_mttf).is_err());
+        let good_faults = json::parse(
+            r#"{"faults": "f.json", "mttf_s": 60, "mttr_s": 2}"#)
+            .unwrap();
+        let cfj = Config::from_json(&good_faults).unwrap();
+        assert_eq!(cfj.faults, "f.json");
+        assert!((cfj.mttf_s - 60.0).abs() < 1e-12);
+        assert!((cfj.mttr_s - 2.0).abs() < 1e-12);
         // Config files get the same backend validation as the CLI.
         let bad = json::parse(r#"{"backend": "cuda"}"#).unwrap();
         assert!(Config::from_json(&bad).is_err());

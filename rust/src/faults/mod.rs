@@ -1,0 +1,559 @@
+//! Deterministic fault injection for the serving fleet.
+//!
+//! A [`FaultPlan`] is a seeded, virtual-time schedule of board-level
+//! failures delivered into [`crate::serve::run_fleet`]'s event heap:
+//!
+//! * **Fail-stop crashes** ([`Fault::Crash`]): a board goes dark at
+//!   `at_us`, its queued work drains back to the front tier for
+//!   re-placement on survivors, its in-flight batches are lost (and
+//!   retried, deadline permitting), and it optionally rejoins later.
+//! * **Lane loss** ([`Fault::LaneLoss`]): one processor kind dies —
+//!   the canonical case is the GPU dying so the board degrades to
+//!   CPU-only service.  Loss can be permanent or restore later; the
+//!   fleet re-prices the degraded board through the router's
+//!   epoch/dirty-flag machinery.
+//! * **Thermal slow-downs** ([`Fault::Thermal`]): a lane kind's
+//!   latency is scaled by a factor `>= 1` over a window, composing
+//!   multiplicatively with any DVFS rung scaling (see
+//!   [`crate::power`]).
+//!
+//! Plans come from JSON ([`FaultPlan::from_json`]) or from seeded
+//! exponential MTTF/MTTR sampling ([`FaultPlan::sample_mttf_mttr`]);
+//! either way the run is fully deterministic.  [`FaultPlan::none`]
+//! is the empty plan — a fleet run under it is bit-identical to a
+//! run without any fault machinery armed.
+//!
+//! The conservation contract under any plan is exact:
+//! `offered == served + shed + failed` on the merged fleet aggregate
+//! — faults may fail requests, never lose them silently.
+
+use crate::device::Proc;
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+
+/// First retry delay for a request lost in a crashed in-flight batch,
+/// microseconds of virtual time.  Subsequent attempts double the
+/// delay up to [`RETRY_BACKOFF_CAP_US`].
+pub const RETRY_BACKOFF_US: f64 = 1_000.0;
+
+/// Upper bound on the exponential retry backoff, microseconds.
+pub const RETRY_BACKOFF_CAP_US: f64 = 16_000.0;
+
+/// Maximum delivery attempts for one orphaned request before it is
+/// counted failed (bounds retry work under pathological plans).
+pub const MAX_RETRY_ATTEMPTS: u32 = 6;
+
+/// Retry delay before attempt number `attempt` (0-based), microseconds:
+/// exponential backoff from [`RETRY_BACKOFF_US`] capped at
+/// [`RETRY_BACKOFF_CAP_US`].
+pub fn retry_backoff_us(attempt: u32) -> f64 {
+    (RETRY_BACKOFF_US * f64::from(1u32 << attempt.min(10)))
+        .min(RETRY_BACKOFF_CAP_US)
+}
+
+/// One scheduled fault on one board.  All times are microseconds of
+/// virtual time from the start of the run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Fault {
+    /// Fail-stop crash at `at_us`; the board rejoins (empty, replicas
+    /// intact) at `rejoin_us`, or never if `None`.
+    Crash {
+        /// Board index in the fleet.
+        board: usize,
+        /// Crash time, us.
+        at_us: f64,
+        /// Rejoin time, us (`None` = permanent).
+        rejoin_us: Option<f64>,
+    },
+    /// One processor kind's lanes die at `at_us` and restore at
+    /// `restore_us` (`None` = permanent).  In-flight batches on the
+    /// lost lanes are lost; queued work stays and drains through the
+    /// surviving lane kind.
+    LaneLoss {
+        /// Board index in the fleet.
+        board: usize,
+        /// Which lane kind dies.
+        proc: Proc,
+        /// Loss time, us.
+        at_us: f64,
+        /// Restore time, us (`None` = permanent).
+        restore_us: Option<f64>,
+    },
+    /// Thermal slow-down: every dispatch on `proc` between `at_us`
+    /// and `until_us` runs `scale >= 1` times slower (multiplies the
+    /// batch latency before any DVFS rung scaling).
+    Thermal {
+        /// Board index in the fleet.
+        board: usize,
+        /// Which lane kind slows down.
+        proc: Proc,
+        /// Window start, us.
+        at_us: f64,
+        /// Window end, us.
+        until_us: f64,
+        /// Latency multiplier, `>= 1`.
+        scale: f64,
+    },
+}
+
+/// One edge-triggered state change derived from a [`Fault`], delivered
+/// to the fleet loop at `at_us`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultTransition {
+    /// Delivery time, microseconds of virtual time.
+    pub at_us: f64,
+    /// Affected board index.
+    pub board: usize,
+    /// What changes.
+    pub change: FaultChange,
+}
+
+/// The state change a [`FaultTransition`] applies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultChange {
+    /// Fail-stop: the board stops serving and its work drains out.
+    BoardDown,
+    /// The board rejoins empty with its replica set intact.
+    BoardUp,
+    /// All lanes of this processor kind die.
+    LaneDown(Proc),
+    /// The processor kind's lanes restore.
+    LaneUp(Proc),
+    /// Dispatch latency on this kind scales by the factor (`>= 1`).
+    ThermalOn(Proc, f64),
+    /// The thermal window ends (scale back to 1).
+    ThermalOff(Proc),
+}
+
+/// A deterministic schedule of fleet faults.  Build with
+/// [`FaultPlan::none`], [`FaultPlan::from_json`] or
+/// [`FaultPlan::sample_mttf_mttr`]; install via
+/// `FleetOptions::faults`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// The scheduled faults, in no particular order (the fleet sorts
+    /// the derived transitions).
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no fault machinery is armed and the fleet run
+    /// is bit-identical to one without this subsystem.
+    pub fn none() -> Self {
+        FaultPlan { faults: Vec::new() }
+    }
+
+    /// True when the plan schedules nothing.
+    pub fn is_none(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Parse a plan from JSON: `{"faults": [{...}, ...]}` (or a bare
+    /// array), where each entry is one of
+    ///
+    /// ```json
+    /// {"kind": "crash", "board": 1, "at_us": 5e5, "rejoin_us": 1e6}
+    /// {"kind": "lane-loss", "board": 2, "proc": "gpu", "at_us": 2e5}
+    /// {"kind": "thermal", "board": 0, "proc": "gpu",
+    ///  "at_us": 1e5, "until_us": 4e5, "scale": 1.5}
+    /// ```
+    ///
+    /// `rejoin_us` / `restore_us` are optional (absent = permanent).
+    /// Entry errors carry the entry index.
+    pub fn from_json(text: &str) -> Result<FaultPlan> {
+        let v = json::parse(text)
+            .map_err(|e| anyhow::anyhow!("parsing fault plan JSON: {e}"))?;
+        let arr = match &v {
+            Value::Arr(_) => &v,
+            Value::Obj(_) => v.get("faults"),
+            _ => bail!("fault plan must be an array or {{\"faults\": [...]}}"),
+        };
+        let entries = arr
+            .as_arr()
+            .context("fault plan `faults` is not an array")?;
+        let mut faults = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            faults.push(
+                parse_fault(e)
+                    .with_context(|| format!("fault plan entry {i}"))?,
+            );
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Sample a crash/rejoin schedule from exponential MTTF/MTTR
+    /// distributions: each of `n_boards` boards alternates up-time
+    /// (mean `mttf_s` seconds of virtual time) and down-time (mean
+    /// `mttr_s`), seeded by `seed`, until `horizon_us` is covered.
+    /// A crash whose down window would extend past the horizon still
+    /// rejoins (the tail is clamped inside `2 * horizon_us`), so
+    /// sampled plans never leave a board permanently dark.
+    pub fn sample_mttf_mttr(
+        n_boards: usize,
+        mttf_s: f64,
+        mttr_s: f64,
+        horizon_us: f64,
+        seed: u64,
+    ) -> Result<FaultPlan> {
+        ensure!(
+            mttf_s.is_finite() && mttf_s > 0.0,
+            "mttf_s must be positive and finite (got {mttf_s})"
+        );
+        ensure!(
+            mttr_s.is_finite() && mttr_s > 0.0,
+            "mttr_s must be positive and finite (got {mttr_s})"
+        );
+        ensure!(
+            horizon_us.is_finite() && horizon_us > 0.0,
+            "horizon_us must be positive and finite (got {horizon_us})"
+        );
+        let mut faults = Vec::new();
+        for b in 0..n_boards {
+            // Per-board substream so adding boards never perturbs the
+            // schedules of existing ones.
+            let mut rng = Rng::new(
+                seed ^ (b as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            );
+            let mut t = 0.0f64;
+            loop {
+                let up_us = rng.exponential(1.0 / mttf_s) * 1e6;
+                let at = t + up_us;
+                if at >= horizon_us {
+                    break;
+                }
+                let down_us = rng.exponential(1.0 / mttr_s) * 1e6;
+                let rejoin = (at + down_us).min(2.0 * horizon_us);
+                faults.push(Fault::Crash {
+                    board: b,
+                    at_us: at,
+                    rejoin_us: Some(rejoin),
+                });
+                t = rejoin;
+            }
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Validate the plan against a fleet of `n_boards` boards and
+    /// expand it into edge-triggered transitions sorted by delivery
+    /// time.  Errors name the offending fault: out-of-range board
+    /// index, non-finite/negative times, rejoin/restore/until not
+    /// after the start, or thermal scale below 1.
+    pub fn timeline(
+        &self,
+        n_boards: usize,
+    ) -> Result<Vec<FaultTransition>> {
+        let mut out = Vec::with_capacity(2 * self.faults.len());
+        for (i, f) in self.faults.iter().enumerate() {
+            let ctx = || format!("fault {i} ({f:?})");
+            match *f {
+                Fault::Crash { board, at_us, rejoin_us } => {
+                    check_board(board, n_boards).with_context(ctx)?;
+                    check_time(at_us, "at_us").with_context(ctx)?;
+                    out.push(FaultTransition {
+                        at_us,
+                        board,
+                        change: FaultChange::BoardDown,
+                    });
+                    if let Some(r) = rejoin_us {
+                        check_time(r, "rejoin_us").with_context(ctx)?;
+                        ensure!(
+                            r > at_us,
+                            "{}: rejoin_us {} must be after at_us {}",
+                            ctx(), r, at_us
+                        );
+                        out.push(FaultTransition {
+                            at_us: r,
+                            board,
+                            change: FaultChange::BoardUp,
+                        });
+                    }
+                }
+                Fault::LaneLoss { board, proc, at_us, restore_us } => {
+                    check_board(board, n_boards).with_context(ctx)?;
+                    check_time(at_us, "at_us").with_context(ctx)?;
+                    out.push(FaultTransition {
+                        at_us,
+                        board,
+                        change: FaultChange::LaneDown(proc),
+                    });
+                    if let Some(r) = restore_us {
+                        check_time(r, "restore_us").with_context(ctx)?;
+                        ensure!(
+                            r > at_us,
+                            "{}: restore_us {} must be after at_us {}",
+                            ctx(), r, at_us
+                        );
+                        out.push(FaultTransition {
+                            at_us: r,
+                            board,
+                            change: FaultChange::LaneUp(proc),
+                        });
+                    }
+                }
+                Fault::Thermal { board, proc, at_us, until_us, scale } => {
+                    check_board(board, n_boards).with_context(ctx)?;
+                    check_time(at_us, "at_us").with_context(ctx)?;
+                    check_time(until_us, "until_us").with_context(ctx)?;
+                    ensure!(
+                        until_us > at_us,
+                        "{}: until_us {} must be after at_us {}",
+                        ctx(), until_us, at_us
+                    );
+                    ensure!(
+                        scale.is_finite() && scale >= 1.0,
+                        "{}: thermal scale {} must be >= 1",
+                        ctx(), scale
+                    );
+                    out.push(FaultTransition {
+                        at_us,
+                        board,
+                        change: FaultChange::ThermalOn(proc, scale),
+                    });
+                    out.push(FaultTransition {
+                        at_us: until_us,
+                        board,
+                        change: FaultChange::ThermalOff(proc),
+                    });
+                }
+            }
+        }
+        // Stable order: time, then board, so same-time events on
+        // different boards apply deterministically.
+        out.sort_by(|a, b| {
+            a.at_us
+                .total_cmp(&b.at_us)
+                .then(a.board.cmp(&b.board))
+        });
+        Ok(out)
+    }
+}
+
+fn check_board(board: usize, n_boards: usize) -> Result<()> {
+    ensure!(
+        board < n_boards,
+        "board index {board} out of range (fleet has {n_boards})"
+    );
+    Ok(())
+}
+
+fn check_time(t: f64, what: &str) -> Result<()> {
+    ensure!(
+        t.is_finite() && t >= 0.0,
+        "{what} must be finite and non-negative (got {t})"
+    );
+    Ok(())
+}
+
+fn parse_proc(v: &Value) -> Result<Proc> {
+    match v.as_str() {
+        Some("cpu") => Ok(Proc::Cpu),
+        Some("gpu") => Ok(Proc::Gpu),
+        Some(other) => bail!("unknown proc `{other}` (cpu|gpu)"),
+        None => bail!("missing `proc` field (cpu|gpu)"),
+    }
+}
+
+fn req_f64(v: &Value, key: &str) -> Result<f64> {
+    v.get(key)
+        .as_f64()
+        .with_context(|| format!("missing numeric field `{key}`"))
+}
+
+fn opt_f64(v: &Value, key: &str) -> Result<Option<f64>> {
+    match v.get(key) {
+        Value::Null => Ok(None),
+        x => Ok(Some(x.as_f64().with_context(|| {
+            format!("field `{key}` is not a number")
+        })?)),
+    }
+}
+
+fn parse_fault(e: &Value) -> Result<Fault> {
+    let board = e
+        .get("board")
+        .as_usize()
+        .context("missing integer field `board`")?;
+    match e.get("kind").as_str() {
+        Some("crash") => Ok(Fault::Crash {
+            board,
+            at_us: req_f64(e, "at_us")?,
+            rejoin_us: opt_f64(e, "rejoin_us")?,
+        }),
+        Some("lane-loss") => Ok(Fault::LaneLoss {
+            board,
+            proc: parse_proc(e.get("proc"))?,
+            at_us: req_f64(e, "at_us")?,
+            restore_us: opt_f64(e, "restore_us")?,
+        }),
+        Some("thermal") => Ok(Fault::Thermal {
+            board,
+            proc: parse_proc(e.get("proc"))?,
+            at_us: req_f64(e, "at_us")?,
+            until_us: req_f64(e, "until_us")?,
+            scale: req_f64(e, "scale")?,
+        }),
+        Some(other) => {
+            bail!("unknown fault kind `{other}` (crash|lane-loss|thermal)")
+        }
+        None => bail!("missing `kind` field (crash|lane-loss|thermal)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_is_empty_and_timelines_to_nothing() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        assert!(p.timeline(4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip_covers_all_kinds() {
+        let p = FaultPlan::from_json(
+            r#"{"faults": [
+                {"kind": "crash", "board": 1, "at_us": 500000.0,
+                 "rejoin_us": 900000.0},
+                {"kind": "crash", "board": 2, "at_us": 100.0},
+                {"kind": "lane-loss", "board": 0, "proc": "gpu",
+                 "at_us": 200.0, "restore_us": 400.0},
+                {"kind": "thermal", "board": 3, "proc": "cpu",
+                 "at_us": 10.0, "until_us": 20.0, "scale": 1.5}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(p.faults.len(), 4);
+        assert_eq!(
+            p.faults[0],
+            Fault::Crash {
+                board: 1,
+                at_us: 500_000.0,
+                rejoin_us: Some(900_000.0)
+            }
+        );
+        assert_eq!(
+            p.faults[1],
+            Fault::Crash { board: 2, at_us: 100.0, rejoin_us: None }
+        );
+        // A bare array parses too.
+        let q = FaultPlan::from_json(
+            r#"[{"kind": "crash", "board": 0, "at_us": 1.0}]"#,
+        )
+        .unwrap();
+        assert_eq!(q.faults.len(), 1);
+        // The timeline expands windows into paired edges, sorted.
+        let tl = p.timeline(4).unwrap();
+        assert_eq!(tl.len(), 7);
+        assert!(tl.windows(2).all(|w| w[0].at_us <= w[1].at_us));
+        assert_eq!(
+            tl[0].change,
+            FaultChange::ThermalOn(Proc::Cpu, 1.5)
+        );
+    }
+
+    #[test]
+    fn json_errors_carry_entry_index() {
+        let e = FaultPlan::from_json(
+            r#"[{"kind": "crash", "board": 0, "at_us": 1.0},
+                {"kind": "meteor", "board": 1, "at_us": 2.0}]"#,
+        )
+        .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("entry 1"), "{msg}");
+        assert!(msg.contains("meteor"), "{msg}");
+        assert!(FaultPlan::from_json("not json").is_err());
+        assert!(FaultPlan::from_json("42").is_err());
+    }
+
+    #[test]
+    fn timeline_validates_boards_times_and_scales() {
+        let bad_board = FaultPlan {
+            faults: vec![Fault::Crash {
+                board: 9,
+                at_us: 1.0,
+                rejoin_us: None,
+            }],
+        };
+        assert!(bad_board.timeline(4).is_err());
+        let bad_rejoin = FaultPlan {
+            faults: vec![Fault::Crash {
+                board: 0,
+                at_us: 10.0,
+                rejoin_us: Some(5.0),
+            }],
+        };
+        assert!(bad_rejoin.timeline(4).is_err());
+        let bad_scale = FaultPlan {
+            faults: vec![Fault::Thermal {
+                board: 0,
+                proc: Proc::Gpu,
+                at_us: 0.0,
+                until_us: 10.0,
+                scale: 0.5,
+            }],
+        };
+        assert!(bad_scale.timeline(4).is_err());
+        let bad_time = FaultPlan {
+            faults: vec![Fault::Crash {
+                board: 0,
+                at_us: f64::NAN,
+                rejoin_us: None,
+            }],
+        };
+        assert!(bad_time.timeline(4).is_err());
+    }
+
+    #[test]
+    fn mttf_sampling_is_seeded_and_alternates() {
+        let a = FaultPlan::sample_mttf_mttr(4, 0.5, 0.1, 2e6, 42)
+            .unwrap();
+        let b = FaultPlan::sample_mttf_mttr(4, 0.5, 0.1, 2e6, 42)
+            .unwrap();
+        assert_eq!(a, b, "same seed must give the same plan");
+        let c = FaultPlan::sample_mttf_mttr(4, 0.5, 0.1, 2e6, 43)
+            .unwrap();
+        assert_ne!(a, c, "different seed should perturb the plan");
+        assert!(!a.is_none(), "mttf 0.5s over a 2s horizon must crash");
+        // Every sampled crash rejoins, within the clamped tail.
+        for f in &a.faults {
+            match *f {
+                Fault::Crash { at_us, rejoin_us, .. } => {
+                    let r = rejoin_us.expect("sampled crashes rejoin");
+                    assert!(r > at_us && r <= 4e6);
+                    assert!(at_us < 2e6);
+                }
+                _ => panic!("sampler only emits crashes"),
+            }
+        }
+        // Per-board windows never overlap (alternating up/down).
+        for bidx in 0..4 {
+            let mut last = 0.0;
+            for f in &a.faults {
+                if let Fault::Crash { board, at_us, rejoin_us } = *f {
+                    if board == bidx {
+                        assert!(at_us >= last);
+                        last = rejoin_us.unwrap();
+                    }
+                }
+            }
+        }
+        assert!(
+            FaultPlan::sample_mttf_mttr(4, 0.0, 0.1, 1e6, 1).is_err()
+        );
+        assert!(
+            FaultPlan::sample_mttf_mttr(4, 0.5, -1.0, 1e6, 1).is_err()
+        );
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(retry_backoff_us(0), RETRY_BACKOFF_US);
+        assert_eq!(retry_backoff_us(1), 2.0 * RETRY_BACKOFF_US);
+        assert_eq!(retry_backoff_us(10), RETRY_BACKOFF_CAP_US);
+        assert_eq!(retry_backoff_us(31), RETRY_BACKOFF_CAP_US);
+    }
+}

@@ -60,6 +60,15 @@
 //!                      replica autoscaling from per-board attainment /
 //!                      queue-pressure windows (`serve-fleet` CLI,
 //!                      `fig_fleet` bench).
+//!     * `faults`     — deterministic fault injection for the fleet:
+//!                      seeded `FaultPlan`s (JSON or MTTF/MTTR
+//!                      sampling) of fail-stop board crashes with
+//!                      rejoin, lane loss (GPU dies → CPU-only board)
+//!                      and thermal slow-downs, delivered into the
+//!                      fleet event heap with failover re-placement,
+//!                      deadline-aware retry and exact conservation
+//!                      (`serve-fleet --faults/--mttf/--mttr`,
+//!                      `fig_chaos` bench).
 //!     * `power`      — DVFS governor subsystem for the serving tier:
 //!                      per-lane frequency ladders from
 //!                      `config/devices.json`, race-to-idle /
@@ -147,6 +156,7 @@ pub mod config;
 pub mod device;
 pub mod energy;
 pub mod engine;
+pub mod faults;
 pub mod graph;
 pub mod nn;
 pub mod obs;

@@ -24,6 +24,7 @@ use sparoa::api::{BackendChoice, SessionBuilder};
 use sparoa::baselines::{Baseline, ALL};
 use sparoa::bench_support::Table;
 use sparoa::config::Config;
+use sparoa::faults::FaultPlan;
 use sparoa::graph::ModelZoo;
 use sparoa::power::{Governor, PowerConfig, PowerProfile};
 use sparoa::profiler;
@@ -82,6 +83,7 @@ fn usage(cmd: &str) -> String {
              [--governor=race-to-idle|stretch-to-deadline|fixed:N|off] \
              [--power_cap_w=W] \
              [--load=X] [--num_requests=N] [--trace=FILE.json] \
+             [--faults=PLAN.json] [--mttf_s=S --mttr_s=S] \
              [--trace_out=FILE] [--trace_format=folded|chrome] \
              [--json]\n  \
              Distributed multi-board serving: the serve-multi tenant \
@@ -94,6 +96,12 @@ fn usage(cmd: &str) -> String {
              table; --governor=off\n  \
              disables accounting); --power_cap_w bounds per-board \
              instantaneous draw.\n  \
+             --faults injects a deterministic fault plan (board \
+             crashes, lane loss, thermal\n  \
+             slow-downs); --mttf_s/--mttr_s sample seeded crash/rejoin \
+             schedules instead.\n  \
+             Every router arm runs under the same plan, so rows stay \
+             comparable.\n  \
              --trace_out writes a virtual-time execution trace of the \
              configured router's run\n  \
              (folded = flamegraph.pl/inferno stacks, chrome = Perfetto \
@@ -406,6 +414,33 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
         Some(pc)
     };
 
+    // Fault plan: an explicit JSON schedule (--faults=FILE) and/or a
+    // seeded MTTF/MTTR crash/rejoin sample appended on top.  The same
+    // plan is installed into every router arm so rows stay comparable.
+    let mut fault_plan = if cfg.faults.is_empty() {
+        FaultPlan::none()
+    } else {
+        let text = std::fs::read_to_string(&cfg.faults).with_context(
+            || format!("reading fault plan `{}`", cfg.faults))?;
+        FaultPlan::from_json(&text).with_context(
+            || format!("parsing fault plan `{}`", cfg.faults))?
+    };
+    if cfg.mttf_s > 0.0 {
+        anyhow::ensure!(
+            cfg.mttr_s > 0.0,
+            "--mttf_s needs --mttr_s > 0 (mean repair time, seconds)"
+        );
+        let horizon_us = arrivals.last().map_or(0.0, |a| a.at_us);
+        anyhow::ensure!(
+            horizon_us > 0.0,
+            "--mttf_s needs a non-empty arrival stream to size the \
+             sampling horizon"
+        );
+        let sampled = FaultPlan::sample_mttf_mttr(
+            n_boards, cfg.mttf_s, cfg.mttr_s, horizon_us, cfg.seed)?;
+        fault_plan.faults.extend(sampled.faults);
+    }
+
     if !cfg.json {
         println!(
             "fleet — {} boards (1 cpu + 1 gpu lane each), {} models, \
@@ -419,6 +454,22 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
                 _ => String::new(),
             },
         );
+        if !fault_plan.is_none() {
+            println!(
+                "fault plan: {} faults armed ({}{})",
+                fault_plan.faults.len(),
+                if cfg.faults.is_empty() {
+                    "sampled"
+                } else {
+                    cfg.faults.as_str()
+                },
+                if cfg.mttf_s > 0.0 && !cfg.faults.is_empty() {
+                    " + sampled"
+                } else {
+                    ""
+                },
+            );
+        }
     }
 
     // Run all three routers over the same stream for the comparison
@@ -433,6 +484,7 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
         let mut opts = FleetOptions::new(n_boards, registry.len());
         opts.router = router;
         opts.power = power.clone();
+        opts.faults = fault_plan.clone();
         if cfg.autoscale {
             opts.autoscale = Some(AutoscalePolicy::default());
         }

@@ -114,6 +114,25 @@ pub enum TraceEvent {
         /// Span length, µs.
         dur_us: f64,
     },
+    /// A fail-stop fault took this board down (fault layer; in-flight
+    /// batches were retracted, queued work drained to the front tier).
+    BoardDown,
+    /// A crashed board rejoined the fleet and resumed serving.
+    BoardUp,
+    /// A lane-loss fault disabled one of this board's lanes (the board
+    /// degrades to its surviving lanes).
+    LaneDown {
+        /// Index of the lost lane in the board's
+        /// [`crate::serve::LaneMatrix`].
+        lane: u32,
+    },
+    /// A queued request was drained off a crashed board for
+    /// re-placement on a survivor (recorded on the crashed board).
+    Requeue,
+    /// A request lost in a retracted in-flight batch re-entered a
+    /// survivor's queue after the deadline-aware retry check (recorded
+    /// on the destination board).
+    Retry,
 }
 
 /// One buffered event: virtual time, (model, class) attribution
@@ -520,6 +539,13 @@ pub fn chrome_events_into(
             TraceEvent::WarmUp { lane, dur_us } => {
                 ("warmup", Some(lane), Some(dur_us), vec![])
             }
+            TraceEvent::BoardDown => ("board_down", None, None, vec![]),
+            TraceEvent::BoardUp => ("board_up", None, None, vec![]),
+            TraceEvent::LaneDown { lane } => {
+                ("lane_down", Some(lane), None, vec![])
+            }
+            TraceEvent::Requeue => ("requeue", None, None, vec![]),
+            TraceEvent::Retry => ("retry", None, None, vec![]),
         };
         let name = match label(model_labels, r.model) {
             Some(m) => format!("{kind}:{m}"),

@@ -28,6 +28,19 @@
 //! [`PerfSnapshot`](crate::serve::PerfSnapshot) as mJ / mean W /
 //! J-per-inference.  All energies are millijoules, powers watts, times
 //! microseconds.
+//!
+//! # Faults vs. throttles
+//!
+//! The fault layer ([`crate::faults`]) composes with DVFS
+//! multiplicatively: a thermal slow-down scales a lane's *base* latency
+//! before the governor sees it, so `pick_state` and the cap check price
+//! the already-slowed batch, and a throttled rung stacks on top
+//! (`latency = base × thermal_scale × rung_scale`).  Fail-stop crashes
+//! retract in-flight busy intervals through [`BoardPower::retract`] —
+//! energy a batch never finished drawing is refunded, so the mJ ledger
+//! stays exact under any fault plan — while the board's idle/SoC floors
+//! keep accruing over its downtime (a crashed board still draws its
+//! floor until operators power it off; we model it as floor-only).
 
 use crate::device::{DeviceModel, Proc, ProcModel};
 use anyhow::Result;
@@ -512,6 +525,36 @@ impl BoardPower {
     pub(crate) fn max_busy_w(&self, lane: usize) -> f64 {
         self.profile.lane(self.lane_proc[lane]).busy_w(0)
     }
+
+    /// Un-account the tail of a committed busy interval: a crash at
+    /// `cut_us` retracts the batch occupying `lane` until `finish_us`,
+    /// refunding `busy_w` × (finish − max(start, cut)) from the energy
+    /// ledger (the board stopped computing at the crash).  When tracing
+    /// is on, the matching [`PowerEvent`] is truncated to the cut (or
+    /// removed if the batch never started).  The caller rewinds the
+    /// lane's `free` timeline itself.
+    pub(crate) fn retract(&mut self, lane: usize, start_us: f64,
+                          finish_us: f64, busy_w: f64, cut_us: f64) {
+        let cut = cut_us.max(start_us);
+        if finish_us > cut {
+            self.busy_energy_mj -= busy_w * (finish_us - cut) / 1e3;
+        }
+        if self.trace_on {
+            // The retracted dispatch is almost always the lane's most
+            // recent trace entry; search from the back.
+            if let Some(i) = self.trace.iter().rposition(|e| {
+                e.lane == lane
+                    && e.finish_us == finish_us
+                    && e.start_us == start_us
+            }) {
+                if cut > start_us {
+                    self.trace[i].finish_us = cut;
+                } else {
+                    self.trace.remove(i);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -662,6 +705,30 @@ mod tests {
         assert_eq!(bp.trace[0].idle_w, prof.gpu.idle_w);
         assert_eq!(bp.trace[1].start_us, 700.0);
         assert_eq!(bp.trace_dropped, 0);
+    }
+
+    #[test]
+    fn retract_refunds_the_unfinished_tail() {
+        let prof = agx_profile();
+        let mut cfg = PowerConfig::new(prof.clone(), Governor::RaceToIdle);
+        cfg.trace = true;
+        let mut bp = BoardPower::new(&cfg, &[Proc::Gpu]).unwrap();
+        let w = prof.gpu.states[0].busy_power_w();
+        bp.commit(0, 100.0, 600.0, w);
+        bp.commit(0, 700.0, 1200.0, w);
+        let full = bp.busy_energy_mj;
+        // Crash at 900: the second batch ran 200 of its 500 us.
+        bp.retract(0, 700.0, 1200.0, w, 900.0);
+        assert!((bp.busy_energy_mj - (full - w * 300.0 / 1e3)).abs()
+                < 1e-12);
+        assert_eq!(bp.trace.len(), 2);
+        assert_eq!(bp.trace[1].finish_us, 900.0);
+        // Crash before the first batch started: fully refunded,
+        // trace entry removed.
+        bp.retract(0, 100.0, 600.0, w, 50.0);
+        assert!((bp.busy_energy_mj - w * 200.0 / 1e3).abs() < 1e-12);
+        assert_eq!(bp.trace.len(), 1);
+        assert_eq!(bp.trace[0].start_us, 700.0);
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::device::Proc;
 use crate::power::{BoardPower, PowerConfig};
 use crate::serve::registry::ModelRegistry;
 use crate::serve::report::PerfSnapshot;
-use crate::serve::slo::{AdmissionQueues, ShedPolicy, SloClass};
+use crate::serve::slo::{AdmissionQueues, QueuedReq, ShedPolicy, SloClass};
 use crate::serve::workload::{Arrival, Tenant};
 use anyhow::Result;
 use std::cell::Cell;
@@ -244,6 +244,10 @@ pub(crate) struct BoardSim<'a> {
     /// Purely observational: records and accumulators only, never an
     /// input to any scheduling decision.
     tracer: crate::obs::Tracer,
+    /// Fault runtime state (`arm_faults`); `None` boards take no fault
+    /// branches and settle dispatches immediately — bit-identical to
+    /// the pre-fault scheduler.
+    faults: Option<FaultState>,
     #[cfg(debug_assertions)]
     settled: std::collections::HashSet<usize>,
 }
@@ -258,6 +262,52 @@ struct Candidate {
     finish: f64,
     score: f64,
     met_w: f64,
+}
+
+/// A dispatched batch whose settlement is deferred until its finish
+/// time (fault-armed boards only): a crash before `finish_us` retracts
+/// it — the lane occupancy is rewound, committed energy refunded, and
+/// the requests handed back for deadline-aware retry.
+struct InflightBatch {
+    lane: usize,
+    /// Dispatch start, us (virtual time).
+    start_us: f64,
+    /// Scheduled finish, us (virtual time).
+    finish_us: f64,
+    /// Lane draw committed for the interval, watts (0 when the board
+    /// is not energy-aware).
+    busy_w: f64,
+    /// DMA share used for the profiler's phase split (0 untraced).
+    dma_frac: f64,
+    reqs: Vec<QueuedReq>,
+}
+
+/// Runtime fault state of one board, present only when the fleet armed
+/// the board with a non-empty fault plan (`arm_faults`).  Unarmed
+/// boards skip every fault branch and settle dispatches immediately —
+/// the pre-fault, bit-identical path.
+struct FaultState {
+    /// Fail-stop down (crashed, not yet rejoined).
+    down: bool,
+    /// When the current down interval started, us.
+    down_since: f64,
+    /// CPU lanes lost to a lane fault.
+    cpu_down: bool,
+    /// GPU lanes lost to a lane fault.
+    gpu_down: bool,
+    /// Thermal latency multipliers, `[cpu, gpu]` (1.0 = nominal;
+    /// applied to base latency *before* the DVFS governor prices it).
+    thermal: [f64; 2],
+    /// Dispatched, not-yet-settled batches.
+    inflight: Vec<InflightBatch>,
+}
+
+/// Index into [`FaultState::thermal`] for a processor kind.
+fn thermal_idx(p: Proc) -> usize {
+    match p {
+        Proc::Cpu => 0,
+        Proc::Gpu => 1,
+    }
 }
 
 impl<'a> BoardSim<'a> {
@@ -330,6 +380,7 @@ impl<'a> BoardSim<'a> {
                 ),
                 None => crate::obs::Tracer::disabled(),
             },
+            faults: None,
             #[cfg(debug_assertions)]
             settled: std::collections::HashSet::new(),
         })
@@ -447,7 +498,14 @@ impl<'a> BoardSim<'a> {
     /// the warm-up completes (the replica's earliest serving time).
     pub(crate) fn charge_warmup(&mut self, now_us: f64,
                                 warmup_us: f64) -> f64 {
-        let (lane, free) = self.lanes.earliest(Proc::Gpu);
+        // A board whose GPU lanes are lost warms up on a CPU lane
+        // instead (weights still have to land somewhere it can serve
+        // from); with both kinds down the fleet never scales it up.
+        let proc = match &self.faults {
+            Some(fs) if fs.gpu_down && !fs.cpu_down => Proc::Cpu,
+            _ => Proc::Gpu,
+        };
+        let (lane, free) = self.lanes.earliest(proc);
         let start = now_us.max(free);
         self.lanes.occupy(lane, start, start + warmup_us);
         // Warm-ups burn energy at full frequency and are cap-exempt:
@@ -471,6 +529,251 @@ impl<'a> BoardSim<'a> {
         start + warmup_us
     }
 
+    /// Arm the fault layer: dispatches settle at their finish times
+    /// from here on (so a crash can retract them), and the fault
+    /// branches in `pump` become live.  The fleet calls this once per
+    /// board before the first pump iff its fault plan is non-empty —
+    /// an unarmed board runs the pre-fault, bit-identical path.
+    pub(crate) fn arm_faults(&mut self) {
+        self.faults = Some(FaultState {
+            down: false,
+            down_since: 0.0,
+            cpu_down: false,
+            gpu_down: false,
+            thermal: [1.0, 1.0],
+            inflight: Vec::new(),
+        });
+    }
+
+    /// Whether a fail-stop fault currently holds this board down.
+    pub(crate) fn is_down(&self) -> bool {
+        self.faults.as_ref().map_or(false, |f| f.down)
+    }
+
+    /// Settle every deferred batch with `finish_us <= up_to_us`:
+    /// record its requests served (histograms, attainment, phase
+    /// accumulators) exactly as the immediate path would have at
+    /// dispatch.  No-op on unarmed boards.
+    fn settle_inflight(&mut self, up_to_us: f64) {
+        let done: Vec<InflightBatch> = match self.faults.as_mut() {
+            Some(fs) if !fs.inflight.is_empty() => {
+                let mut done = Vec::new();
+                let mut i = 0;
+                while i < fs.inflight.len() {
+                    if fs.inflight[i].finish_us <= up_to_us {
+                        done.push(fs.inflight.swap_remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+                done
+            }
+            _ => return,
+        };
+        for b in &done {
+            self.settle_batch(b);
+        }
+    }
+
+    /// Settle one finished batch's requests as served.
+    fn settle_batch(&mut self, b: &InflightBatch) {
+        let finish = b.finish_us;
+        for r in &b.reqs {
+            #[cfg(debug_assertions)]
+            debug_assert!(self.settled.insert(r.req),
+                          "request {} settled twice (served)", r.req);
+            self.snap.record_served(
+                r.class,
+                r.model,
+                finish - r.arrival_us,
+                finish <= r.deadline_us,
+            );
+            if self.tracer.is_enabled() {
+                let wait = b.start_us - r.arrival_us;
+                let share = (finish - b.start_us) / b.reqs.len() as f64;
+                self.tracer.record(
+                    b.start_us,
+                    r.model as u32,
+                    r.class as u32,
+                    crate::obs::TraceEvent::QueueWait { wait_us: wait },
+                );
+                self.tracer.acc_served(
+                    r.model,
+                    r.class,
+                    wait,
+                    share * b.dma_frac,
+                    share * (1.0 - b.dma_frac),
+                );
+            }
+        }
+    }
+
+    /// Fail-stop crash at `now_us`: settle everything that finished
+    /// first, then retract still-in-flight batches (lane busy time and
+    /// committed energy refunded from the crash instant), drain the
+    /// admission queues, and mark the board down.  Returns
+    /// `(queued, lost)`: requests drained from the queues (for
+    /// front-tier re-placement) and requests lost mid-batch (for
+    /// deadline-aware retry).  Every one of them left this board
+    /// unsettled — it must settle exactly once elsewhere.
+    pub(crate) fn crash(&mut self, now_us: f64)
+        -> (Vec<QueuedReq>, Vec<QueuedReq>)
+    {
+        self.settle_inflight(now_us);
+        self.settle_sheds(now_us);
+        let inflight: Vec<InflightBatch> = self
+            .faults
+            .as_mut()
+            .map(|fs| std::mem::take(&mut fs.inflight))
+            .unwrap_or_default();
+        let mut lost: Vec<QueuedReq> = Vec::new();
+        self.snap.lost_batches += inflight.len() as u64;
+        for b in inflight {
+            let cut = now_us.max(b.start_us);
+            self.lanes.busy[b.lane] -= b.finish_us - cut;
+            if let Some(bp) = self.power.as_mut() {
+                bp.retract(b.lane, b.start_us, b.finish_us, b.busy_w,
+                           now_us);
+            }
+            lost.extend(b.reqs);
+        }
+        // Rewind every lane to idle at the crash instant (this also
+        // cancels pending warm-ups; stale heap entries self-invalidate
+        // once `free` moves).  Warm-up time/energy already spent is
+        // not refunded — the weights really were being loaded.
+        for f in self.lanes.free.iter_mut() {
+            *f = f.min(now_us);
+        }
+        let queued = self.q.drain_all();
+        if let Some(fs) = self.faults.as_mut() {
+            fs.down = true;
+            fs.down_since = now_us;
+        }
+        self.epoch += 1;
+        self.snap.failovers += 1;
+        self.snap.requeued += queued.len() as u64;
+        self.tracer.record(
+            now_us,
+            crate::obs::NONE,
+            crate::obs::NONE,
+            crate::obs::TraceEvent::BoardDown,
+        );
+        for r in &queued {
+            self.tracer.record(
+                now_us,
+                r.model as u32,
+                r.class as u32,
+                crate::obs::TraceEvent::Requeue,
+            );
+        }
+        (queued, lost)
+    }
+
+    /// Rejoin after a crash: the board serves again from `now_us`; the
+    /// down interval is billed to `downtime_us`.
+    pub(crate) fn rejoin(&mut self, now_us: f64) {
+        if let Some(fs) = self.faults.as_mut() {
+            if fs.down {
+                fs.down = false;
+                self.snap.downtime_us += now_us - fs.down_since;
+            }
+        }
+        self.epoch += 1;
+        self.tracer.record(
+            now_us,
+            crate::obs::NONE,
+            crate::obs::NONE,
+            crate::obs::TraceEvent::BoardUp,
+        );
+    }
+
+    /// Lane loss / restore: `down = true` disables every lane of
+    /// `proc` (the board degrades to its surviving lanes) and retracts
+    /// any batch in flight on them, returning the lost requests for
+    /// deadline-aware retry; `down = false` restores the lane kind.
+    pub(crate) fn set_lane_down(&mut self, proc: Proc, down: bool,
+                                now_us: f64) -> Vec<QueuedReq> {
+        self.settle_inflight(now_us);
+        let mut lost: Vec<QueuedReq> = Vec::new();
+        if down {
+            let dead: Vec<InflightBatch> = match self.faults.as_mut() {
+                Some(fs) => {
+                    let (dead, keep) = std::mem::take(&mut fs.inflight)
+                        .into_iter()
+                        .partition(|b| self.lanes.procs[b.lane] == proc);
+                    fs.inflight = keep;
+                    dead
+                }
+                None => Vec::new(),
+            };
+            self.snap.lost_batches += dead.len() as u64;
+            for b in dead {
+                let cut = now_us.max(b.start_us);
+                self.lanes.busy[b.lane] -= b.finish_us - cut;
+                self.lanes.free[b.lane] =
+                    self.lanes.free[b.lane].min(now_us);
+                if let Some(bp) = self.power.as_mut() {
+                    bp.retract(b.lane, b.start_us, b.finish_us,
+                               b.busy_w, now_us);
+                }
+                lost.extend(b.reqs);
+            }
+            for l in 0..self.lanes.procs.len() {
+                if self.lanes.procs[l] == proc {
+                    self.lanes.free[l] = self.lanes.free[l].min(now_us);
+                    self.tracer.record(
+                        now_us,
+                        crate::obs::NONE,
+                        crate::obs::NONE,
+                        crate::obs::TraceEvent::LaneDown {
+                            lane: l as u32,
+                        },
+                    );
+                }
+            }
+        }
+        if let Some(fs) = self.faults.as_mut() {
+            match proc {
+                Proc::Cpu => fs.cpu_down = down,
+                Proc::Gpu => fs.gpu_down = down,
+            }
+        }
+        self.epoch += 1;
+        lost
+    }
+
+    /// Set the thermal latency multiplier for lanes of `proc`
+    /// (`scale >= 1.0`; 1.0 restores nominal speed).  Applied to base
+    /// latency before the DVFS governor prices a dispatch, so a
+    /// throttled rung stacks multiplicatively on top.
+    pub(crate) fn set_thermal(&mut self, proc: Proc, scale: f64) {
+        if let Some(fs) = self.faults.as_mut() {
+            fs.thermal[thermal_idx(proc)] = scale;
+        }
+        self.epoch += 1;
+    }
+
+    /// Re-admit a request failed over from another board, preserving
+    /// its original arrival/deadline and *not* re-counting it as
+    /// admitted (see [`AdmissionQueues::readmit`]).  `retry` marks a
+    /// request lost mid-batch (traced as a `Retry` on this board);
+    /// requeued-from-queue deliveries pass `false`.  Returns whether
+    /// it landed (on `false` it was shed here, which settles it).
+    pub(crate) fn readmit(&mut self, r: QueuedReq, now_us: f64,
+                          retry: bool) -> bool {
+        let landed = self.q.readmit(r);
+        self.epoch += 1;
+        if landed && retry {
+            self.tracer.record(
+                now_us,
+                r.model as u32,
+                r.class as u32,
+                crate::obs::TraceEvent::Retry,
+            );
+        }
+        landed
+    }
+
     /// Dispatch everything worth dispatching at `now_us`: sheds expired
     /// work (dynamic tier), settles shed accounting, then repeatedly
     /// scores every feasible (model, placement, batch) option and
@@ -479,6 +782,15 @@ impl<'a> BoardSim<'a> {
     /// `None` when nothing is queued.
     pub(crate) fn pump(&mut self, now_us: f64) -> Result<Option<f64>> {
         let now = now_us;
+        // Armed boards settle dispatches at their finish times so a
+        // crash can retract what hadn't completed; catch up first so
+        // retraction never claws back genuinely finished work.  A
+        // downed board serves nothing (arrivals keep queueing; the
+        // fleet drains them on the crash transition).
+        self.settle_inflight(now);
+        if self.is_down() {
+            return Ok(None);
+        }
         // The dynamic tier refuses to burn capacity on doomed requests.
         // Expiry is an O(1) head-deadline check when nothing is due,
         // head pops otherwise (see `AdmissionQueues::drop_expired`).
@@ -523,6 +835,17 @@ impl<'a> BoardSim<'a> {
                     std::slice::from_ref(&self.static_lane[m])
                 };
                 for &proc in procs {
+                    // Lost lane kinds are unschedulable until restored.
+                    let proc_up = match &self.faults {
+                        Some(fs) => match proc {
+                            Proc::Cpu => !fs.cpu_down,
+                            Proc::Gpu => !fs.gpu_down,
+                        },
+                        None => true,
+                    };
+                    if !proc_up {
+                        continue;
+                    }
                     let (lane, lane_free) = self.lanes.earliest(proc);
                     let cap = entry.batch_cap(proc).max(1);
                     let start = now.max(lane_free);
@@ -542,7 +865,14 @@ impl<'a> BoardSim<'a> {
                     }
                     sizes.push(qlen.min(cap));
                     for &b in &sizes {
-                        let l = entry.latency_us(proc, b)?;
+                        let mut l = entry.latency_us(proc, b)?;
+                        // Thermal slow-down stretches base latency
+                        // before the governor prices the dispatch.
+                        // Unarmed boards never take this branch, so
+                        // the fault-free path stays bit-identical.
+                        if let Some(fs) = &self.faults {
+                            l *= fs.thermal[thermal_idx(proc)];
+                        }
                         let finish = start + l;
                         let met_w: f64 = self
                             .q
@@ -594,6 +924,14 @@ impl<'a> BoardSim<'a> {
                 }
             }
 
+            // No candidate at all: every schedulable lane kind is
+            // down (unreachable fault-free — queued work always has
+            // at least one placement).  The work stays queued; if no
+            // lane is ever restored, `finish` force-fails it.
+            if best_any.is_none() {
+                return Ok(None);
+            }
+
             // Wait instead of dispatching when nothing is dispatchable
             // now, or when everything dispatchable now is doomed while
             // a busy lane could still meet deadlines once it frees
@@ -634,6 +972,7 @@ impl<'a> BoardSim<'a> {
             // next lane-free event.
             let mut finish = c.finish;
             let mut freq_state = crate::obs::NONE;
+            let mut busy_w = 0.0;
             if let Some(bp) = self.power.as_mut() {
                 let worst = self
                     .q
@@ -647,6 +986,7 @@ impl<'a> BoardSim<'a> {
                                c.finish - c.start, worst) {
                     Some(adm) => {
                         finish = c.start + adm.scaled_lat_us;
+                        busy_w = adm.busy_w;
                         bp.commit(c.lane, c.start, finish, adm.busy_w);
                         freq_state = adm.state as u32;
                         if adm.clamped {
@@ -724,35 +1064,53 @@ impl<'a> BoardSim<'a> {
             } else {
                 0.0
             };
-            for r in &taken {
-                let latency = finish - r.arrival_us;
-                #[cfg(debug_assertions)]
-                debug_assert!(self.settled.insert(r.req),
-                              "request {} settled twice (served)", r.req);
-                self.snap.record_served(
-                    r.class,
-                    r.model,
-                    latency,
-                    finish <= r.deadline_us,
-                );
-                if self.tracer.is_enabled() {
-                    let wait = c.start - r.arrival_us;
-                    let share = (finish - c.start) / taken.len() as f64;
-                    self.tracer.record(
-                        c.start,
-                        r.model as u32,
-                        r.class as u32,
-                        crate::obs::TraceEvent::QueueWait {
-                            wait_us: wait,
-                        },
-                    );
-                    self.tracer.acc_served(
-                        r.model,
+            if let Some(fs) = self.faults.as_mut() {
+                // Armed: settlement is deferred to the batch's finish
+                // time so a fault landing before then can retract it
+                // (crash / lane loss).  `settle_batch` replays exactly
+                // the accounting below, so fault-free armed runs are
+                // still exact — only *when* the counters move differs.
+                fs.inflight.push(InflightBatch {
+                    lane: c.lane,
+                    start_us: c.start,
+                    finish_us: finish,
+                    busy_w,
+                    dma_frac,
+                    reqs: taken,
+                });
+            } else {
+                for r in &taken {
+                    let latency = finish - r.arrival_us;
+                    #[cfg(debug_assertions)]
+                    debug_assert!(self.settled.insert(r.req),
+                                  "request {} settled twice (served)",
+                                  r.req);
+                    self.snap.record_served(
                         r.class,
-                        wait,
-                        share * dma_frac,
-                        share * (1.0 - dma_frac),
+                        r.model,
+                        latency,
+                        finish <= r.deadline_us,
                     );
+                    if self.tracer.is_enabled() {
+                        let wait = c.start - r.arrival_us;
+                        let share =
+                            (finish - c.start) / taken.len() as f64;
+                        self.tracer.record(
+                            c.start,
+                            r.model as u32,
+                            r.class as u32,
+                            crate::obs::TraceEvent::QueueWait {
+                                wait_us: wait,
+                            },
+                        );
+                        self.tracer.acc_served(
+                            r.model,
+                            r.class,
+                            wait,
+                            share * dma_frac,
+                            share * (1.0 - dma_frac),
+                        );
+                    }
                 }
             }
         }
@@ -785,11 +1143,35 @@ impl<'a> BoardSim<'a> {
     /// Seal the run: `now_us` is the driver's final virtual time.
     /// Verifies (debug builds) that every request settled exactly once.
     pub(crate) fn finish(mut self, now_us: f64) -> PerfSnapshot {
+        // Everything still in flight on an armed board completes by
+        // the horizon (the driver only seals after the last finish).
+        self.settle_inflight(f64::INFINITY);
         self.settle_sheds(now_us);
+        if self.faults.is_some() {
+            // Fault backstop: work stranded in the queues of a downed
+            // or fully-degraded board is *failed*, never silently
+            // dropped — conservation stays exact under any plan.
+            for r in self.q.drain_all() {
+                #[cfg(debug_assertions)]
+                debug_assert!(self.settled.insert(r.req),
+                              "request {} settled twice (failed)",
+                              r.req);
+                self.snap.record_failed(r.class, r.model);
+            }
+            if let Some(fs) = &self.faults {
+                if fs.down {
+                    // Crash with no rejoin before the horizon: bill
+                    // the open-ended down interval to the seal time.
+                    self.snap.downtime_us +=
+                        (now_us - fs.down_since).max(0.0);
+                }
+            }
+        }
         #[cfg(debug_assertions)]
         debug_assert_eq!(
             self.settled.len() as u64,
-            self.snap.total_served() + self.snap.total_shed(),
+            self.snap.total_served() + self.snap.total_shed()
+                + self.snap.total_failed(),
             "settlement accounting drifted"
         );
         self.snap.makespan_us = self.last_finish.max(now_us);

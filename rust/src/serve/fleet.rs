@@ -40,13 +40,18 @@
 //! `rust/tests/serve_fleet.rs` property-tests conservation, the
 //! router ordering under skew, and autoscaler convergence/shedding.
 
+use crate::device::Proc;
+use crate::faults::{
+    retry_backoff_us, FaultChange, FaultPlan, FaultTransition,
+    MAX_RETRY_ATTEMPTS,
+};
 use crate::power::PowerConfig;
 use crate::serve::cluster::{
     BoardSim, ClusterOptions, ClusterPolicy, LaneMatrix,
 };
 use crate::serve::registry::ModelRegistry;
 use crate::serve::report::PerfSnapshot;
-use crate::serve::slo::{ShedPolicy, SloClass};
+use crate::serve::slo::{QueuedReq, ShedPolicy, SloClass};
 use crate::serve::workload::{Arrival, Tenant};
 use crate::util::json::{self, Value};
 use anyhow::Result;
@@ -160,6 +165,16 @@ pub struct FleetOptions {
     /// `Some` enables the virtual-time profiler on every board (the
     /// buffer capacity is per board); see `ClusterOptions::trace`.
     pub trace: Option<crate::obs::TraceConfig>,
+    /// Deterministic fault schedule ([`FaultPlan::none`] = fault-free;
+    /// with an empty plan the run is bit-identical to the pre-fault
+    /// path — no board is armed).
+    pub faults: FaultPlan,
+    /// Failover on a board crash (default `true`): drained queue work
+    /// re-routes to survivors immediately and batches lost in flight
+    /// get deadline-aware retries with capped backoff.  `false` is the
+    /// ablation control: every request a crash strands is failed on
+    /// the spot (still conserved — never silently lost).
+    pub failover: bool,
 }
 
 impl FleetOptions {
@@ -177,6 +192,8 @@ impl FleetOptions {
             policy: ClusterPolicy::SparsityAware,
             power: None,
             trace: None,
+            faults: FaultPlan::none(),
+            failover: true,
         }
     }
 }
@@ -278,6 +295,32 @@ impl FleetSnapshot {
     /// Cap-binding events across all boards.
     pub fn total_throttles(&self) -> u64 {
         self.aggregate.throttle_events
+    }
+
+    /// Board crashes absorbed fleet-wide (0 on fault-free runs).
+    pub fn total_failovers(&self) -> u64 {
+        self.aggregate.failovers
+    }
+
+    /// Lost-in-flight requests re-admitted via deadline-aware retry.
+    pub fn total_retries(&self) -> u64 {
+        self.aggregate.retries
+    }
+
+    /// Requests failed under faults (unplaceable or deadline-doomed);
+    /// counted in conservation alongside served and shed.
+    pub fn total_failed(&self) -> u64 {
+        self.aggregate.total_failed()
+    }
+
+    /// Queued requests drained off crashing boards for re-placement.
+    pub fn total_requeued(&self) -> u64 {
+        self.aggregate.requeued
+    }
+
+    /// Summed board down-time, microseconds of virtual time.
+    pub fn total_downtime_us(&self) -> f64 {
+        self.aggregate.downtime_us
     }
 
     /// Mean per-board CPU busy fraction over the makespan, [0, 1].
@@ -456,6 +499,21 @@ impl FleetSnapshot {
                 self.total_throttles()
             ));
         }
+        if self.total_failovers() > 0
+            || self.total_failed() > 0
+            || self.total_retries() > 0
+            || self.total_downtime_us() > 0.0
+        {
+            s.push_str(&format!(
+                " | faults: {} failovers {} requeued {} retries {} \
+                 failed {:.0}ms down",
+                self.total_failovers(),
+                self.total_requeued(),
+                self.total_retries(),
+                self.total_failed(),
+                self.total_downtime_us() / 1e3,
+            ));
+        }
         s
     }
 }
@@ -478,6 +536,122 @@ struct AutoState {
     up_streak: Vec<usize>,
     down_streak: Vec<usize>,
     next_tick_us: f64,
+}
+
+/// The fleet's view of per-board fault state, kept in lock-step with
+/// the transitions it delivers into the boards.  The router, the
+/// retry path and the autoscaler all consult [`Health::avail`] so no
+/// new work is ever steered at a board that cannot serve it.
+struct Health {
+    down: Vec<bool>,
+    cpu_down: Vec<bool>,
+    gpu_down: Vec<bool>,
+}
+
+impl Health {
+    fn healthy(nb: usize) -> Self {
+        Health {
+            down: vec![false; nb],
+            cpu_down: vec![false; nb],
+            gpu_down: vec![false; nb],
+        }
+    }
+
+    /// Can board `b` accept new work right now?  Not crashed, and at
+    /// least one lane kind alive.
+    fn avail(&self, b: usize) -> bool {
+        !self.down[b] && !(self.cpu_down[b] && self.gpu_down[b])
+    }
+
+    /// The batch-1 price table board `b` should quote given its lane
+    /// health (`full` = cheapest placement, `cpu`/`gpu` = single-kind
+    /// tables; empty slices fall back to `full` on fault-free runs).
+    fn price_table<'t>(
+        &self,
+        b: usize,
+        full: &'t [f64],
+        cpu: &'t [f64],
+        gpu: &'t [f64],
+    ) -> &'t [f64] {
+        if self.gpu_down[b] && !self.cpu_down[b] && !cpu.is_empty() {
+            cpu
+        } else if self.cpu_down[b]
+            && !self.gpu_down[b]
+            && !gpu.is_empty()
+        {
+            gpu
+        } else {
+            full
+        }
+    }
+}
+
+/// Orphaned requests awaiting re-placement (crash-drained queue work
+/// and batches lost in flight): a min-heap on delivery time over a
+/// grow-only slab.  Entries are `(request, attempt, lost-in-flight)`.
+struct Pend {
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    pool: Vec<(QueuedReq, u32, bool)>,
+}
+
+impl Pend {
+    fn new() -> Self {
+        Pend { heap: BinaryHeap::new(), pool: Vec::new() }
+    }
+
+    fn push(&mut self, at_us: f64, r: QueuedReq, attempt: u32,
+            retry: bool) {
+        let idx = self.pool.len();
+        self.pool.push((r, attempt, retry));
+        // Non-negative finite times order identically by bits.
+        self.heap.push(Reverse((at_us.to_bits(), idx)));
+    }
+
+    /// Earliest pending delivery time, if any (drives the clock).
+    fn next_at_us(&self) -> Option<f64> {
+        self.heap
+            .peek()
+            .map(|Reverse((bits, _))| f64::from_bits(*bits))
+    }
+
+    /// Pop one entry due at or before `now`, if any.
+    fn pop_due(&mut self, now: f64) -> Option<(QueuedReq, u32, bool)> {
+        match self.heap.peek() {
+            Some(Reverse((bits, _)))
+                if f64::from_bits(*bits) <= now =>
+            {
+                let Reverse((_, idx)) = self.heap.pop().unwrap();
+                Some(self.pool[idx])
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Queue an orphan for a (re)delivery attempt at `at_us`, or fail it
+/// on the front tier when failover is disabled, retries are
+/// exhausted, or even the optimistic batch-1 price `min_price_us`
+/// cannot beat its deadline.  Failed requests are *recorded* — the
+/// conservation identity (offered == served + shed + failed) never
+/// leaks one.
+fn schedule_or_fail(
+    r: QueuedReq,
+    attempt: u32,
+    at_us: f64,
+    retry: bool,
+    failover: bool,
+    min_price_us: f64,
+    pend: &mut Pend,
+    front: &mut PerfSnapshot,
+) {
+    if !failover
+        || attempt >= MAX_RETRY_ATTEMPTS
+        || at_us + min_price_us > r.deadline_us
+    {
+        front.record_failed(r.class, r.model);
+    } else {
+        pend.push(at_us, r, attempt, retry);
+    }
 }
 
 /// Serve a merged multi-tenant arrival stream on a fleet of boards
@@ -548,6 +722,12 @@ pub fn run_fleet(
                         "autoscale hysteresis must be >= 1");
     }
 
+    // Validate and expand the fault plan into time-sorted transitions
+    // up front.  An empty plan arms nothing: the run takes the
+    // pre-fault code path bit-for-bit.
+    let transitions: Vec<FaultTransition> = opts.faults.timeline(nb)?;
+    let fault_on = !transitions.is_empty();
+
     let cluster_opts = ClusterOptions {
         policy: opts.policy,
         shed: opts.shed,
@@ -577,7 +757,44 @@ pub fn run_fleet(
         if let Some(pc) = &opts.power {
             board.set_power(pc)?;
         }
+        if fault_on {
+            board.arm_faults();
+        }
     }
+    // Single-lane-kind price tables for degraded boards (a board whose
+    // GPU lanes died quotes CPU-only batch-1 latencies to the router
+    // and the retry feasibility check).  Probed only when a fault can
+    // actually degrade a board.
+    let lat1_cpu_us: Vec<f64> = if fault_on {
+        registry.lat1_table_for(Proc::Cpu)?
+    } else {
+        Vec::new()
+    };
+    let lat1_gpu_us: Vec<f64> = if fault_on {
+        registry.lat1_table_for(Proc::Gpu)?
+    } else {
+        Vec::new()
+    };
+    let mut health = Health::healthy(nb);
+    let class_labels: Vec<String> =
+        classes.iter().map(|c| c.name.clone()).collect();
+    let model_labels: Vec<String> = registry
+        .entries()
+        .iter()
+        .map(|e| e.name.clone())
+        .collect();
+    // Front-tier accounting: arrivals no live board can accept, and
+    // orphans that exhaust their retries, settle here — so the
+    // conservation identity stays exact even when a model's every
+    // replica is dark.  Merged into the aggregate on faulty runs.
+    let mut front = PerfSnapshot::new(
+        "fleet/front",
+        opts.shed.name(),
+        &class_labels,
+        &model_labels,
+    );
+    let mut pend = Pend::new();
+    let mut ti = 0usize;
 
     let mut rr = vec![0usize; nm];
     let mut auto_state = AutoState {
@@ -614,17 +831,167 @@ pub fn run_fleet(
     let mut wakes: BinaryHeap<Reverse<(u64, usize, u64)>> =
         BinaryHeap::new();
     loop {
+        // Deliver every fault transition due by `now` into its board,
+        // keeping the fleet's health view (and the degraded price
+        // tables) in lock-step.  Crash-drained queue work is
+        // re-placed immediately; batches lost in flight come back as
+        // deadline-aware retries after a capped backoff.
+        while ti < transitions.len() && transitions[ti].at_us <= now {
+            let tr = transitions[ti];
+            ti += 1;
+            let b = tr.board;
+            match tr.change {
+                FaultChange::BoardDown => {
+                    if health.down[b] {
+                        continue; // overlapping plan entry: no-op
+                    }
+                    let (queued, lost) = boards[b].crash(now);
+                    health.down[b] = true;
+                    // Pump the crashed board once (a no-op while
+                    // down): it bumps `wake_gen[b]`, invalidating any
+                    // stale wake-heap entry from before the crash —
+                    // the drained queue can no longer honor it, and a
+                    // live entry at matching generation would pin
+                    // `t_next` at its time forever.
+                    touched[b] = true;
+                    for r in queued {
+                        schedule_or_fail(
+                            r, 0, now, false, opts.failover,
+                            lat1_us[r.model], &mut pend, &mut front,
+                        );
+                    }
+                    for r in lost {
+                        schedule_or_fail(
+                            r, 0, now + retry_backoff_us(0), true,
+                            opts.failover, lat1_us[r.model],
+                            &mut pend, &mut front,
+                        );
+                    }
+                }
+                FaultChange::BoardUp => {
+                    boards[b].rejoin(now);
+                    health.down[b] = false;
+                    touched[b] = true;
+                }
+                FaultChange::LaneDown(p) => {
+                    let lost = boards[b].set_lane_down(p, true, now);
+                    match p {
+                        Proc::Cpu => health.cpu_down[b] = true,
+                        Proc::Gpu => health.gpu_down[b] = true,
+                    }
+                    boards[b].set_price_table(
+                        health
+                            .price_table(b, &lat1_us, &lat1_cpu_us,
+                                         &lat1_gpu_us)
+                            .to_vec(),
+                    );
+                    for r in lost {
+                        schedule_or_fail(
+                            r, 0, now + retry_backoff_us(0), true,
+                            opts.failover, lat1_us[r.model],
+                            &mut pend, &mut front,
+                        );
+                    }
+                    touched[b] = true;
+                }
+                FaultChange::LaneUp(p) => {
+                    boards[b].set_lane_down(p, false, now);
+                    match p {
+                        Proc::Cpu => health.cpu_down[b] = false,
+                        Proc::Gpu => health.gpu_down[b] = false,
+                    }
+                    boards[b].set_price_table(
+                        health
+                            .price_table(b, &lat1_us, &lat1_cpu_us,
+                                         &lat1_gpu_us)
+                            .to_vec(),
+                    );
+                    touched[b] = true;
+                }
+                FaultChange::ThermalOn(p, scale) => {
+                    boards[b].set_thermal(p, scale);
+                    touched[b] = true;
+                }
+                FaultChange::ThermalOff(p) => {
+                    boards[b].set_thermal(p, 1.0);
+                    touched[b] = true;
+                }
+            }
+        }
+        // Re-place orphans whose delivery time has come: route to a
+        // live board if one can still beat the deadline at its priced
+        // batch-1 latency; back off and re-try while hosts are dark;
+        // fail (exactly-once, counted) when the deadline is doomed or
+        // the attempt budget runs out.
+        while let Some((r, attempt, retry)) = pend.pop_due(now) {
+            let m = r.model;
+            eligible_boards_into(m, now, &replicas, &health, &mut elig);
+            if elig.is_empty() {
+                schedule_or_fail(
+                    r,
+                    attempt + 1,
+                    now + retry_backoff_us(attempt),
+                    retry,
+                    opts.failover,
+                    lat1_us[m],
+                    &mut pend,
+                    &mut front,
+                );
+                continue;
+            }
+            let b = route(opts.router, m, now, &boards, &elig,
+                          &mut rr)?;
+            let price = health
+                .price_table(b, &lat1_us, &lat1_cpu_us, &lat1_gpu_us)
+                [m];
+            if now + price > r.deadline_us {
+                // Deadline-aware: no survivor can serve it in time —
+                // fail it now instead of burning survivor capacity.
+                front.record_failed(r.class, r.model);
+                continue;
+            }
+            // A readmit refused by admission control was shed on `b`
+            // (and settles there): conserved either way.
+            if boards[b].readmit(r, now, retry) {
+                touched[b] = true;
+                if retry {
+                    front.retries += 1;
+                }
+            }
+        }
         // Ingest and route everything that has arrived by `now`.
         while ai < arrivals.len() && arrivals[ai].at_us <= now {
             let a = arrivals[ai];
             ai += 1;
             let m = model_of[a.tenant];
-            eligible_boards_into(m, now, &replicas, &mut elig);
+            let class = tenants[a.tenant].class;
+            eligible_boards_into(m, now, &replicas, &health, &mut elig);
+            if elig.is_empty() {
+                // Every host of the model is down: the front tier
+                // owns the request until one returns (or its
+                // deadline dooms it).  Offered is counted here, once.
+                front.record_offered(class, m);
+                let r = QueuedReq {
+                    req: a.req,
+                    tenant: a.tenant,
+                    model: m,
+                    class,
+                    arrival_us: a.at_us,
+                    deadline_us: a.at_us + classes[class].deadline_us,
+                };
+                // First re-placement try after one backoff (orphans
+                // due exactly at `now` were already drained above —
+                // a same-instant entry would stall the clock).
+                schedule_or_fail(
+                    r, 1, now + retry_backoff_us(0), false,
+                    opts.failover, lat1_us[m], &mut pend, &mut front,
+                );
+                continue;
+            }
             let b = route(
                 opts.router, m, now, &boards, &elig, &mut rr,
             )?;
-            boards[b].offer(a.req, a.tenant, m,
-                            tenants[a.tenant].class, a.at_us);
+            boards[b].offer(a.req, a.tenant, m, class, a.at_us);
             touched[b] = true;
         }
         // Autoscaler tick.  The schedule only drives the clock while
@@ -636,8 +1003,8 @@ pub fn run_fleet(
             if now >= auto_state.next_tick_us {
                 autoscale_tick(
                     now, auto, &eff_cost_us, &mut boards,
-                    &mut replicas, &mut auto_state, &mut scale_events,
-                    &mut timeline,
+                    &mut replicas, &health, &mut auto_state,
+                    &mut scale_events, &mut timeline,
                 );
                 auto_state.next_tick_us += auto.interval_us;
                 while auto_state.next_tick_us <= now {
@@ -676,6 +1043,15 @@ pub fn run_fleet(
         if ai < arrivals.len() {
             t_next = t_next.min(arrivals[ai].at_us);
         }
+        // Pending fault transitions and orphan re-deliveries drive
+        // the clock too: a rejoin or a backed-off retry must fire
+        // even when no board has standing work.
+        if ti < transitions.len() {
+            t_next = t_next.min(transitions[ti].at_us);
+        }
+        if let Some(at) = pend.next_at_us() {
+            t_next = t_next.min(at);
+        }
         // Ticks drive the clock only while work is standing; across an
         // idle arrival gap the clock jumps straight to the next
         // arrival (ticks resume there via the catch-up above) instead
@@ -694,13 +1070,6 @@ pub fn run_fleet(
         .into_iter()
         .map(|b| b.finish(now))
         .collect();
-    let class_labels: Vec<String> =
-        classes.iter().map(|c| c.name.clone()).collect();
-    let model_labels: Vec<String> = registry
-        .entries()
-        .iter()
-        .map(|e| e.name.clone())
-        .collect();
     let mut aggregate = PerfSnapshot::new(
         "fleet",
         opts.shed.name(),
@@ -709,6 +1078,11 @@ pub fn run_fleet(
     );
     for snap in &board_snaps {
         aggregate.merge_from(snap);
+    }
+    if fault_on {
+        // Front-tier offered/failed/retry accounting joins the
+        // aggregate so conservation closes over the whole fleet.
+        aggregate.merge_from(&front);
     }
     if opts.autoscale.is_some()
         && timeline
@@ -726,7 +1100,8 @@ pub fn run_fleet(
     debug_assert_eq!(aggregate.total_offered() as usize, arrivals.len(),
                      "router lost requests");
     debug_assert_eq!(
-        aggregate.total_served() + aggregate.total_shed(),
+        aggregate.total_served() + aggregate.total_shed()
+            + aggregate.total_failed(),
         aggregate.total_offered(),
         "fleet conservation drifted"
     );
@@ -781,26 +1156,31 @@ fn count_active(replicas: &[Vec<Replica>], nm: usize) -> Vec<usize> {
 
 /// Collect the boards eligible for a model-`m` request at `now` into
 /// `out` (a scratch buffer reused across arrivals — the routing hot
-/// path allocates nothing): those with an active, non-draining
-/// replica; falls back to boards hosting *any* replica of `m`
-/// (warming or draining) so the request is never lost.
+/// path allocates nothing): available ([`Health::avail`]) boards with
+/// an active, non-draining replica; falls back to available boards
+/// hosting *any* replica of `m` (warming or draining).  Empty only
+/// when every host of `m` is down — the caller must then park the
+/// request on the front tier, never drop it.
 fn eligible_boards_into(
     m: usize,
     now: f64,
     replicas: &[Vec<Replica>],
+    health: &Health,
     out: &mut Vec<usize>,
 ) {
     out.clear();
     for (b, p) in replicas.iter().enumerate() {
-        if p.iter().any(|r| {
-            r.model == m && !r.draining && r.active_from <= now
-        }) {
+        if health.avail(b)
+            && p.iter().any(|r| {
+                r.model == m && !r.draining && r.active_from <= now
+            })
+        {
             out.push(b);
         }
     }
     if out.is_empty() {
         for (b, p) in replicas.iter().enumerate() {
-            if p.iter().any(|r| r.model == m) {
+            if health.avail(b) && p.iter().any(|r| r.model == m) {
                 out.push(b);
             }
         }
@@ -858,6 +1238,7 @@ fn autoscale_tick(
     eff_cost_us: &[f64],
     boards: &mut [BoardSim],
     replicas: &mut [Vec<Replica>],
+    health: &Health,
     state: &mut AutoState,
     events: &mut Vec<ScaleEvent>,
     timeline: &mut Vec<ReplicaSample>,
@@ -919,7 +1300,10 @@ fn autoscale_tick(
             // Cheapest capacity first: a still-warm draining replica is
             // reclaimed by cancelling its drain — no warm-up to pay.
             let undrain = (0..nb).find(|&b| {
-                replicas[b].iter().any(|r| r.model == m && r.draining)
+                health.avail(b)
+                    && replicas[b]
+                        .iter()
+                        .any(|r| r.model == m && r.draining)
             });
             if let Some(b) = undrain {
                 if let Some(r) = replicas[b]
@@ -939,9 +1323,14 @@ fn autoscale_tick(
                 // Otherwise warm a fresh replica on the least-loaded
                 // board (by *current* standing work, the same signal
                 // the cost-aware router uses) without one.
+                // Downtime is lost capacity: a down or fully-degraded
+                // board is never a warm-up target (the replica could
+                // not serve), so the capacity lands on survivors.
                 let mut target: Option<(usize, f64)> = None;
                 for b in 0..nb {
-                    if replicas[b].iter().any(|r| r.model == m) {
+                    if !health.avail(b)
+                        || replicas[b].iter().any(|r| r.model == m)
+                    {
                         continue;
                     }
                     let load_b = boards[b].backlog_residual_us(now);
@@ -1091,6 +1480,8 @@ mod tests {
         assert_eq!(o.router, RouterPolicy::CostAware);
         assert!(o.autoscale.is_none());
         assert!(o.power.is_none(), "energy accounting must be opt-in");
+        assert!(o.faults.is_none(), "fault injection must be opt-in");
+        assert!(o.failover, "failover must default on");
         assert_eq!(o.policy, ClusterPolicy::SparsityAware);
         let covered: Vec<usize> =
             o.placement.iter().flatten().copied().collect();

@@ -26,6 +26,11 @@
 //!   via [`FleetOptions`]), the snapshot also carries joules, mean
 //!   watts and throttle counts, judged against an [`EnergySlo`]
 //!   budget alongside the latency classes.
+//! * Fault injection — a [`crate::faults::FaultPlan`] installed via
+//!   [`FleetOptions::faults`] schedules board crashes, lane loss and
+//!   thermal slow-downs; the fleet drains crashed boards back through
+//!   the front tier with deadline-aware retries, and conservation
+//!   extends to offered == served + shed + failed exactly.
 //!
 //! The `serve-multi` / `serve-fleet` CLI subcommands and the
 //! `fig13_multimodel` / `fig_fleet` benches drive the [`demo`] fleet

@@ -218,6 +218,19 @@ impl ModelRegistry {
             .collect()
     }
 
+    /// Per-model batch-1 latency table (us) restricted to one
+    /// placement, probed once.  The fleet's fault layer prices a
+    /// *degraded* board with it: a board whose GPU lane died quotes
+    /// `lat1_table_for(Proc::Cpu)`, so the cost-aware router and the
+    /// deadline-feasibility retry check both see the surviving lane's
+    /// real price.  Index == registry index.
+    pub fn lat1_table_for(&self, proc: Proc) -> Result<Vec<f64>> {
+        self.entries
+            .iter()
+            .map(|e| e.latency_us(proc, 1))
+            .collect()
+    }
+
     /// Per-model per-request cost (us) at the efficient Alg. 2 batch —
     /// the autoscaler's load-signal table.  Index == registry index.
     pub fn efficient_cost_table(&self) -> Result<Vec<f64>> {
@@ -352,6 +365,13 @@ mod tests {
             assert_eq!(lat1[m],
                        reg.get(m).cheapest_latency_us(1).unwrap());
             assert_eq!(eff[m], reg.get(m).efficient_cost_us().unwrap());
+        }
+        // Per-placement tables bound the cheapest table from above.
+        let cpu = reg.lat1_table_for(Proc::Cpu).unwrap();
+        let gpu = reg.lat1_table_for(Proc::Gpu).unwrap();
+        for m in 0..2 {
+            assert_eq!(lat1[m], cpu[m].min(gpu[m]));
+            assert!(cpu[m] >= lat1[m] && gpu[m] >= lat1[m]);
         }
     }
 }

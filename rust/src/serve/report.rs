@@ -24,6 +24,10 @@ pub struct GroupStats {
     pub shed_admission: u64,
     /// Shed after expiring in queue.
     pub shed_expired: u64,
+    /// Failed under faults: lost in a crash with no feasible retry, or
+    /// stranded on a dead/degraded board (0 on fault-free runs — the
+    /// JSON key is gated on it).
+    pub failed: u64,
     /// End-to-end latency distribution (us) of served requests.
     pub hist: LatencyHistogram,
 }
@@ -38,6 +42,7 @@ impl GroupStats {
             met: 0,
             shed_admission: 0,
             shed_expired: 0,
+            failed: 0,
             hist: LatencyHistogram::new(),
         }
     }
@@ -87,6 +92,9 @@ impl GroupStats {
         o.insert("served".into(), Value::Num(self.served as f64));
         o.insert("met".into(), Value::Num(self.met as f64));
         o.insert("shed".into(), Value::Num(self.shed() as f64));
+        if self.failed > 0 {
+            o.insert("failed".into(), Value::Num(self.failed as f64));
+        }
         o.insert("shed_rate".into(), Value::Num(self.shed_rate()));
         o.insert("attainment".into(), Value::Num(self.attainment()));
         o.insert("latency".into(), self.hist.to_json());
@@ -158,6 +166,25 @@ pub struct PerfSnapshot {
     /// idle/warm-up/capacity totals; empty (`is_empty()`) unless the
     /// run was traced.  Merges across boards by summation.
     pub phases: crate::obs::PhaseBreakdown,
+    /// Board crashes absorbed (one per fail-stop event on this board,
+    /// or the fleet total after merge).  0 on fault-free runs — all
+    /// five fault counters gate the fault JSON keys and summary tail.
+    pub failovers: u64,
+    /// Requests re-dispatched after being lost in a crashed board's
+    /// in-flight batch (counted once per retry attempt that re-entered
+    /// a queue).
+    pub retries: u64,
+    /// In-flight batches retracted by crashes or lane loss (their
+    /// requests were requeued, retried, or failed — never silently
+    /// dropped).
+    pub lost_batches: u64,
+    /// Cumulative board downtime, microseconds of virtual time (sum
+    /// over crash→rejoin intervals; includes the tail to run end for
+    /// boards still down at the end).
+    pub downtime_us: f64,
+    /// Queued (not yet dispatched) requests drained off a crashed board
+    /// and handed back to the front tier for re-placement.
+    pub requeued: u64,
 }
 
 impl PerfSnapshot {
@@ -196,6 +223,11 @@ impl PerfSnapshot {
             trace_events: Vec::new(),
             trace_dropped: 0,
             phases: crate::obs::PhaseBreakdown::default(),
+            failovers: 0,
+            retries: 0,
+            lost_batches: 0,
+            downtime_us: 0.0,
+            requeued: 0,
         }
     }
 
@@ -231,6 +263,16 @@ impl PerfSnapshot {
         }
     }
 
+    /// Count one failed request: lost to a fault with no feasible
+    /// retry (its remaining deadline could not be met on any survivor,
+    /// or its retry budget ran out).  Failed requests stay in the
+    /// conservation identity — offered == served + shed + failed —
+    /// and count against attainment like a shed.
+    pub fn record_failed(&mut self, class: usize, model: usize) {
+        self.per_class[class].failed += 1;
+        self.per_model[model].failed += 1;
+    }
+
     /// Fold another snapshot's counters into this one: counts and busy
     /// times add, latency histograms merge, makespan takes the max.
     /// Group labels must match (same class table / registry) — the
@@ -260,6 +302,14 @@ impl PerfSnapshot {
         self.power_trace_dropped += other.power_trace_dropped;
         self.trace_dropped += other.trace_dropped;
         self.phases.merge_from(&other.phases);
+        // Fault counters sum across boards; downtime is per-board
+        // lost capacity, so it sums too (8 boards down 1 s each is
+        // 8 s of lost board-time).
+        self.failovers += other.failovers;
+        self.retries += other.retries;
+        self.lost_batches += other.lost_batches;
+        self.downtime_us += other.downtime_us;
+        self.requeued += other.requeued;
         if self.governor.is_empty() {
             self.governor = other.governor.clone();
         }
@@ -276,6 +326,7 @@ impl PerfSnapshot {
             dst.met += src.met;
             dst.shed_admission += src.shed_admission;
             dst.shed_expired += src.shed_expired;
+            dst.failed += src.failed;
             dst.hist.merge(&src.hist);
         }
     }
@@ -295,6 +346,23 @@ impl PerfSnapshot {
     /// Requests served within deadline, across all classes.
     pub fn total_met(&self) -> u64 {
         self.per_class.iter().map(|g| g.met).sum()
+    }
+    /// Requests failed under faults, across all classes (0 on
+    /// fault-free runs).
+    pub fn total_failed(&self) -> u64 {
+        self.per_class.iter().map(|g| g.failed).sum()
+    }
+
+    /// Whether any fault accounting is non-zero — gates the fault keys
+    /// out of [`PerfSnapshot::to_json`] and the summary tail, keeping
+    /// fault-free output byte-identical to the pre-fault report.
+    fn fault_on(&self) -> bool {
+        self.failovers != 0
+            || self.retries != 0
+            || self.lost_batches != 0
+            || self.requeued != 0
+            || self.downtime_us != 0.0
+            || self.total_failed() != 0
     }
 
     /// Fraction of all offered requests served within deadline — the
@@ -371,6 +439,18 @@ impl PerfSnapshot {
         o.insert("offered".into(), Value::Num(self.total_offered() as f64));
         o.insert("served".into(), Value::Num(self.total_served() as f64));
         o.insert("shed".into(), Value::Num(self.total_shed() as f64));
+        if self.fault_on() {
+            o.insert("failed".into(),
+                     Value::Num(self.total_failed() as f64));
+            o.insert("failovers".into(),
+                     Value::Num(self.failovers as f64));
+            o.insert("retries".into(), Value::Num(self.retries as f64));
+            o.insert("lost_batches".into(),
+                     Value::Num(self.lost_batches as f64));
+            o.insert("downtime_us".into(), Value::Num(self.downtime_us));
+            o.insert("requeued".into(),
+                     Value::Num(self.requeued as f64));
+        }
         if !self.governor.is_empty() {
             o.insert("governor".into(),
                      Value::Str(self.governor.clone()));
@@ -482,6 +562,18 @@ impl PerfSnapshot {
                 self.throttle_events
             ));
         }
+        if self.fault_on() {
+            s.push_str(&format!(
+                " | faults: {} failovers {} retries {} lost batches \
+                 {} requeued {} failed {:.0}ms down",
+                self.failovers,
+                self.retries,
+                self.lost_batches,
+                self.requeued,
+                self.total_failed(),
+                self.downtime_us / 1e3
+            ));
+        }
         s
     }
 }
@@ -571,6 +663,53 @@ mod tests {
         assert_eq!(a.per_class[0].hist.count()
                    + a.per_class[1].hist.count(), 2);
         assert_eq!(a.per_model[0].hist.count(), 2);
+    }
+
+    #[test]
+    fn fault_fields_merge_and_gate_json_keys() {
+        let labels =
+            (vec!["c".to_string()], vec!["m".to_string()]);
+        let mut a = PerfSnapshot::new("fleet", "reject-new",
+                                      &labels.0, &labels.1);
+        // Fault-free: keys absent from JSON, summary has no tail.
+        let v = json::parse(&a.to_json_string()).unwrap();
+        assert!(v.get("failed").as_f64().is_none());
+        assert!(v.get("failovers").as_f64().is_none());
+        assert!(!a.summary().contains("faults:"));
+
+        let mut b = a.clone();
+        a.record_offered(0, 0);
+        a.record_failed(0, 0);
+        a.failovers = 1;
+        a.retries = 2;
+        a.lost_batches = 1;
+        a.downtime_us = 40_000.0;
+        a.requeued = 3;
+        b.record_offered(0, 0);
+        b.record_served(0, 0, 1_000.0, true);
+        b.failovers = 1;
+        b.downtime_us = 10_000.0;
+        a.merge_from(&b);
+        assert_eq!(a.total_failed(), 1);
+        assert_eq!(a.failovers, 2);
+        assert_eq!(a.retries, 2);
+        assert_eq!(a.lost_batches, 1);
+        assert_eq!(a.requeued, 3);
+        assert!((a.downtime_us - 50_000.0).abs() < 1e-9);
+        // Conservation with the failed arm: offered == served+shed+failed.
+        assert_eq!(a.total_offered(),
+                   a.total_served() + a.total_shed() + a.total_failed());
+        let v = json::parse(&a.to_json_string()).unwrap();
+        assert_eq!(v.get("failed").as_f64().unwrap(), 1.0);
+        assert_eq!(v.get("failovers").as_f64().unwrap(), 2.0);
+        assert_eq!(v.get("retries").as_f64().unwrap(), 2.0);
+        assert_eq!(v.get("requeued").as_f64().unwrap(), 3.0);
+        assert!((v.get("downtime_us").as_f64().unwrap() - 50_000.0)
+                .abs() < 1e-9);
+        // Per-class "failed" key present only where non-zero.
+        assert_eq!(v.get("per_class").idx(0).get("failed")
+                       .as_f64().unwrap(), 1.0);
+        assert!(a.summary().contains("faults: 2 failovers"));
     }
 
     #[test]

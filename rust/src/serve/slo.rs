@@ -463,6 +463,89 @@ impl AdmissionQueues {
         self.earliest_deadline = Some(d);
     }
 
+    /// Drain every queued request, in admission (seq) order, leaving
+    /// the queues empty but the admission/shed logs intact.  The fleet
+    /// failover path uses this when a board crashes (queued work moves
+    /// back to the front tier) — the drained requests keep their
+    /// original `arrival_us`/`deadline_us` and are *not* re-counted as
+    /// admitted when they land on a survivor via
+    /// [`AdmissionQueues::readmit`].
+    pub fn drain_all(&mut self) -> Vec<QueuedReq> {
+        let mut slots: Vec<Slot> = Vec::with_capacity(self.total);
+        for rings in &mut self.rings {
+            for ring in rings {
+                slots.extend(ring.drain(..));
+            }
+        }
+        slots.sort_by_key(|s| s.seq);
+        self.outstanding.iter_mut().for_each(|o| *o = 0);
+        self.model_len.iter_mut().for_each(|l| *l = 0);
+        self.total = 0;
+        self.earliest_deadline = Some(f64::INFINITY);
+        slots.into_iter().map(|s| s.req).collect()
+    }
+
+    /// Re-admit a request drained from another board's queues (its
+    /// original `arrival_us`/`deadline_us` preserved).  Enforces the
+    /// same cap/shed policy as [`AdmissionQueues::offer`] but does NOT
+    /// bump `admitted` — the request was already counted once at its
+    /// first admission, and conservation demands it be counted exactly
+    /// once.  Returns `true` when the request landed in a queue; on
+    /// `false` it was shed at (re-)admission and logged in `shed`.
+    pub fn readmit(&mut self, r: QueuedReq) -> bool {
+        let full = match self.policy {
+            ShedPolicy::RejectNew | ShedPolicy::ShedOldest => {
+                self.outstanding[r.class] >= self.classes[r.class].queue_cap
+            }
+            ShedPolicy::ShedLowestClass => self.total >= self.pool_cap,
+        };
+        if full {
+            let rejected = match self.policy {
+                ShedPolicy::RejectNew => true,
+                ShedPolicy::ShedOldest => {
+                    !self.evict_oldest_of_class(r.class)
+                }
+                ShedPolicy::ShedLowestClass => {
+                    let victim = (r.class..self.classes.len())
+                        .rev()
+                        .find(|&c| self.outstanding[c] > 0);
+                    !matches!(victim,
+                              Some(vc) if self.evict_oldest_of_class(vc))
+                }
+            };
+            if rejected {
+                self.shed.push(ShedReq {
+                    req: r.req,
+                    tenant: r.tenant,
+                    model: r.model,
+                    class: r.class,
+                    at_admission: true,
+                });
+                return false;
+            }
+        }
+        self.outstanding[r.class] += 1;
+        self.model_len[r.model] += 1;
+        self.total += 1;
+        if let Some(d) = self.earliest_deadline {
+            self.earliest_deadline = Some(d.min(r.deadline_us));
+        }
+        let slot = Slot { req: r, seq: self.next_seq };
+        self.next_seq += 1;
+        let ring = &mut self.rings[r.model][r.class];
+        // A failed-over request usually arrived before everything the
+        // survivor has queued since — binary-insert keeps the ring
+        // sorted by (arrival, seq).
+        let i = ring
+            .partition_point(|s| s.req.arrival_us <= r.arrival_us);
+        if i == ring.len() {
+            ring.push_back(slot);
+        } else {
+            ring.insert(i, slot);
+        }
+        true
+    }
+
     /// Remove up to `max` requests of one model for dispatch.  With
     /// `class_order`, higher-priority classes leave the queue first
     /// (FIFO within a class); otherwise strict FIFO.  Head pops in both
@@ -852,6 +935,79 @@ mod tests {
         assert_eq!(q.shed.len(), 2);
         assert_eq!(q.shed[0].req, 0);
         assert_eq!(q.shed[1].req, 1);
+    }
+
+    #[test]
+    fn drain_all_empties_queues_without_touching_the_logs() {
+        let cls = classes();
+        let mut q = AdmissionQueues::new(&cls, ShedPolicy::RejectNew, 2);
+        q.offer(0, 0, 0, 1, 0.0);
+        q.offer(1, 0, 1, 0, 1.0);
+        q.offer(2, 0, 0, 0, 2.0);
+        let drained = q.drain_all();
+        // Admission (seq) order, original timestamps preserved.
+        assert_eq!(drained.iter().map(|r| r.req).collect::<Vec<_>>(),
+                   vec![0, 1, 2]);
+        assert_eq!(drained[0].arrival_us, 0.0);
+        assert_eq!(q.total_queued(), 0);
+        assert_eq!(q.queue_len(0), 0);
+        assert_eq!(q.queue_len(1), 0);
+        assert_eq!(q.admitted, 3, "drain does not un-admit");
+        assert!(q.shed.is_empty(), "drain sheds nothing");
+        // Queues stay usable afterwards.
+        q.offer(3, 0, 0, 0, 3.0);
+        assert_eq!(q.total_queued(), 1);
+        q.drop_expired(1.0);
+        assert!(q.shed.is_empty());
+    }
+
+    #[test]
+    fn readmit_preserves_deadlines_and_skips_the_admitted_count() {
+        let cls = classes();
+        let mut src = AdmissionQueues::new(&cls, ShedPolicy::RejectNew, 1);
+        src.offer(0, 0, 0, 0, 5.0); // deadline 20_005
+        let mut dst = AdmissionQueues::new(&cls, ShedPolicy::RejectNew, 1);
+        dst.offer(7, 0, 0, 0, 100.0);
+        let moved = src.drain_all();
+        assert!(dst.readmit(moved[0]));
+        assert_eq!(dst.admitted, 1, "readmit is not a second admission");
+        assert_eq!(dst.total_queued(), 2);
+        // The failed-over request keeps its original arrival, so it
+        // sorts ahead of the survivor's newer work.
+        let view: Vec<QueuedReq> = dst.dispatch_view(0).copied().collect();
+        assert_eq!(view[0].req, 0);
+        assert_eq!(view[0].arrival_us, 5.0);
+        assert_eq!(view[0].deadline_us, 20_005.0);
+        // And expiry still sees the (older) deadline.
+        dst.drop_expired(20_005.0);
+        assert_eq!(dst.shed.len(), 1);
+        assert_eq!(dst.shed[0].req, 0);
+        assert!(!dst.shed[0].at_admission);
+    }
+
+    #[test]
+    fn readmit_enforces_the_shed_policy() {
+        let cls = classes(); // interactive cap 2
+        let mut q = AdmissionQueues::new(&cls, ShedPolicy::RejectNew, 1);
+        q.offer(0, 0, 0, 0, 0.0);
+        q.offer(1, 0, 0, 0, 1.0);
+        let refugee = QueuedReq {
+            req: 9, tenant: 0, model: 0, class: 0,
+            arrival_us: 0.5, deadline_us: 20_000.5,
+        };
+        assert!(!q.readmit(refugee), "full class rejects under RejectNew");
+        assert_eq!(q.shed.len(), 1);
+        assert_eq!(q.shed[0].req, 9);
+        assert!(q.shed[0].at_admission);
+        assert_eq!(q.total_queued(), 2);
+        // Under ShedOldest the refugee displaces the oldest instead.
+        let mut q2 = AdmissionQueues::new(&cls, ShedPolicy::ShedOldest, 1);
+        q2.offer(0, 0, 0, 0, 0.0);
+        q2.offer(1, 0, 0, 0, 1.0);
+        assert!(q2.readmit(refugee));
+        assert_eq!(q2.shed.len(), 1);
+        assert_eq!(q2.shed[0].req, 0);
+        assert_eq!(q2.total_queued(), 2);
     }
 
     #[test]

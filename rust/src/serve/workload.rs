@@ -223,27 +223,48 @@ pub struct MmppFit {
 /// so recovered rates/dwells are indicative (right order of magnitude)
 /// rather than exact; `cv2` is exact by definition.
 ///
-/// Returns `None` for traces too short to fit (< 16 arrivals) or with
-/// zero time span.
-pub fn fit_mmpp(arrivals_us: &[f64]) -> Option<MmppFit> {
+/// Degenerate traces are structured errors, never NaN parameters:
+/// fewer than 2 arrivals (no inter-arrival gap exists), fewer than 16
+/// (too short to cluster), zero time span (all timestamps identical),
+/// or zero-variance gaps (a perfectly regular trace has no phase
+/// structure to fit — regenerate it as `Poisson` at `n / span`).
+pub fn fit_mmpp(arrivals_us: &[f64]) -> Result<MmppFit> {
     use crate::util::stats;
     let n = arrivals_us.len();
-    if n < 16 {
-        return None;
-    }
+    anyhow::ensure!(
+        n >= 2,
+        "fit_mmpp needs at least 2 arrivals for an inter-arrival \
+         gap; got {n}"
+    );
+    anyhow::ensure!(
+        n >= 16,
+        "fit_mmpp needs at least 16 arrivals to separate phases; \
+         got {n}"
+    );
     let span_us = arrivals_us[n - 1] - arrivals_us[0];
-    if !(span_us > 0.0) {
-        return None;
-    }
+    anyhow::ensure!(
+        span_us > 0.0,
+        "trace spans zero virtual time (all {n} arrivals at the \
+         same timestamp)"
+    );
     let gaps: Vec<f64> = arrivals_us
         .windows(2)
         .map(|w| (w[1] - w[0]).max(0.0))
         .collect();
     let gm = stats::mean(&gaps);
-    if gm <= 0.0 {
-        return None;
-    }
+    anyhow::ensure!(
+        gm > 0.0,
+        "trace inter-arrival gaps have zero mean over a positive \
+         span (non-monotone timestamps?)"
+    );
     let gs = stats::stddev(&gaps);
+    anyhow::ensure!(
+        gs > 0.0,
+        "trace inter-arrival gaps have zero variance (perfectly \
+         regular trace: no burst/calm phases to fit — use a Poisson \
+         pattern at {:.3} req/s instead)",
+        (n - 1) as f64 / (span_us / 1e6)
+    );
     let cv2 = (gs / gm) * (gs / gm);
 
     // Phase rates: 2-means over the gaps, seeded from the sorted
@@ -347,7 +368,7 @@ pub fn fit_mmpp(arrivals_us: &[f64]) -> Option<MmppFit> {
         0.0
     };
 
-    Some(MmppFit {
+    Ok(MmppFit {
         rate_lo_per_s,
         rate_hi_per_s,
         mean_dwell_s,
@@ -359,8 +380,10 @@ pub fn fit_mmpp(arrivals_us: &[f64]) -> Option<MmppFit> {
 }
 
 /// Parse a replayable trace: either `{"arrivals_us": [...]}` or a bare
-/// JSON array of microsecond timestamps.  Every entry must be a number —
-/// a malformed entry is an error, never a silently shorter workload.
+/// JSON array of microsecond timestamps.  Every entry must be a
+/// finite, non-negative number and the timestamps must be ascending —
+/// a malformed or out-of-order entry is an error naming its index,
+/// never a silently shorter (or silently re-sorted) workload.
 pub fn trace_from_json(text: &str) -> Result<ArrivalPattern> {
     let v = json::parse(text)
         .map_err(|e| anyhow::anyhow!("parsing trace JSON: {e}"))?;
@@ -376,12 +399,25 @@ pub fn trace_from_json(text: &str) -> Result<ArrivalPattern> {
         .iter()
         .enumerate()
         .map(|(i, x)| {
-            x.as_f64().with_context(|| {
+            let t = x.as_f64().with_context(|| {
                 format!("trace entry {i} is not a number")
-            })
+            })?;
+            anyhow::ensure!(
+                t.is_finite() && t >= 0.0,
+                "trace entry {i} has negative or non-finite \
+                 timestamp {t}"
+            );
+            Ok(t)
         })
         .collect::<Result<Vec<f64>>>()?;
     anyhow::ensure!(!arr.is_empty(), "trace has no arrivals");
+    for (i, w) in arr.windows(2).enumerate() {
+        anyhow::ensure!(
+            w[1] >= w[0],
+            "trace entry {} is out of order: {} after {}",
+            i + 1, w[1], w[0]
+        );
+    }
     Ok(ArrivalPattern::Trace { arrivals_us: arr })
 }
 
@@ -532,8 +568,57 @@ mod tests {
         assert!(ratio > 0.5 && ratio < 2.0,
                 "base rate {}", fit.base_rate_per_s);
         // Too-short traces refuse to fit instead of guessing.
-        assert!(fit_mmpp(&xs[..8]).is_none());
-        assert!(fit_mmpp(&[0.0; 20]).is_none());
+        assert!(fit_mmpp(&xs[..8]).is_err());
+        assert!(fit_mmpp(&[0.0; 20]).is_err());
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_traces_with_structured_errors() {
+        // Fewer than 2 arrivals: no inter-arrival gap exists.
+        for trace in [&[][..], &[5.0][..]] {
+            let err = fit_mmpp(trace).unwrap_err();
+            assert!(format!("{err:#}").contains("at least 2"),
+                    "unhelpful error: {err:#}");
+        }
+        // Zero-variance gaps (perfectly regular trace): every derived
+        // parameter would be degenerate — the error says what to use
+        // instead, and no NaN escapes.
+        let regular: Vec<f64> = (0..64).map(|i| i as f64 * 100.0).collect();
+        let err = fit_mmpp(&regular).unwrap_err();
+        assert!(format!("{err:#}").contains("zero variance"),
+                "unhelpful error: {err:#}");
+        // Zero span: all timestamps identical.
+        let err = fit_mmpp(&[7.0; 32]).unwrap_err();
+        assert!(format!("{err:#}").contains("zero virtual time"),
+                "unhelpful error: {err:#}");
+        // Healthy traces still fit and stay finite.
+        let xs = ArrivalPattern::Poisson { rate_per_s: 50.0, n: 200 }
+            .generate(1);
+        let fit = fit_mmpp(&xs).unwrap();
+        for x in [
+            fit.rate_lo_per_s, fit.rate_hi_per_s, fit.mean_dwell_s,
+            fit.base_rate_per_s, fit.amplitude, fit.period_s, fit.cv2,
+        ] {
+            assert!(x.is_finite(), "non-finite fit param {x}");
+        }
+    }
+
+    #[test]
+    fn trace_json_rejects_unordered_and_negative_timestamps() {
+        // Out-of-order timestamps name the offending entry index.
+        let err = trace_from_json("[1.0, 5.0, 3.0]").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("entry 2") && msg.contains("out of order"),
+                "unhelpful error: {msg}");
+        // Negative timestamps are rejected by index too.
+        let err =
+            trace_from_json("{\"arrivals_us\": [0.0, -2.5, 3.0]}")
+                .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("entry 1") && msg.contains("negative"),
+                "unhelpful error: {msg}");
+        // Equal adjacent timestamps are legal (simultaneous arrivals).
+        assert!(trace_from_json("[1.0, 1.0, 2.0]").is_ok());
     }
 
     #[test]

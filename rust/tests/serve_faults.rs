@@ -1,0 +1,447 @@
+//! Fault-injection / failover invariants for the fleet — always-on
+//! (synthetic models + checked-in device profiles; no `make artifacts`
+//! gating).
+//!
+//! * bit-identity: with [`FaultPlan::none`] the fault machinery is
+//!   never armed and the fleet report is byte-identical to the default
+//!   path, with or without the failover flag;
+//! * conservation: under randomized fault plans (crashes with and
+//!   without rejoin, lane loss, thermal windows) crossed with every
+//!   shed policy, admitted == served + shed + failed exactly — no
+//!   request is ever silently lost;
+//! * quarantine: the router never dispatches work on a board between
+//!   its crash and its rejoin, and the rejoined board resumes serving;
+//! * exactly-once: every served request has exactly one `QueueWait`
+//!   trace record, so drained/retried requests are never double-served;
+//! * failover value: on an 8-board fleet with a seeded mid-run crash,
+//!   failover (requeue + deadline-aware retry) beats the
+//!   failover-disabled control on SLO attainment — the acceptance
+//!   criterion.
+
+use sparoa::api::SessionBuilder;
+use sparoa::bench_support::{device_profile, prop};
+use sparoa::device::Proc;
+use sparoa::faults::{Fault, FaultPlan};
+use sparoa::graph::ModelGraph;
+use sparoa::obs::{TraceConfig, TraceEvent};
+use sparoa::serve::{
+    merge_arrivals, run_fleet, ArrivalPattern, FleetOptions,
+    FleetSnapshot, ModelRegistry, ShedPolicy, SloClass, Tenant,
+};
+
+/// heavy = 0, mid = 1, light = 2 (the demo fleet's synthetic shapes).
+fn registry3() -> ModelRegistry {
+    let dev = device_profile("agx_orin");
+    let mut reg = ModelRegistry::new();
+    for (name, blocks, scale, sparsity) in [
+        ("heavy", 8, 6.0, 0.1),
+        ("mid", 6, 1.5, 0.45),
+        ("light", 4, 0.3, 0.75),
+    ] {
+        let s = SessionBuilder::new()
+            .with_graph(ModelGraph::synthetic(
+                name, blocks, scale, sparsity))
+            .with_device(dev.clone())
+            .policy("greedy")
+            .build()
+            .unwrap();
+        reg.register(s).unwrap();
+    }
+    reg
+}
+
+/// Per-model calibration: (max req/s of one replica's best lane at the
+/// full Alg.2 batch, batch-1 cheapest latency us, full-batch latency us).
+fn calibrate(reg: &ModelRegistry, m: usize) -> (f64, f64, f64) {
+    let e = reg.get(m);
+    let cap = e.gpu_batch_cap.max(1);
+    let batch_lat = e.latency_us(Proc::Gpu, cap).unwrap();
+    let gpu_rate = cap as f64 / batch_lat * 1e6;
+    let ccap = e.cpu_batch_cap.max(1);
+    let cpu_batch_lat = e.latency_us(Proc::Cpu, ccap).unwrap();
+    let cpu_rate = ccap as f64 / cpu_batch_lat * 1e6;
+    let lat1 = e.cheapest_latency_us(1).unwrap();
+    (gpu_rate.max(cpu_rate), lat1, batch_lat)
+}
+
+/// Interactive / standard / best-effort classes scaled to the heavy
+/// model's full-batch latency (same shape as `serve_fleet.rs`).
+fn classes_for(reg: &ModelRegistry) -> Vec<SloClass> {
+    let (_, heavy_lat1, heavy_batch) = calibrate(reg, 0);
+    let (_, mid_lat1, _) = calibrate(reg, 1);
+    let interactive = (1.2 * heavy_batch).max(4.0 * mid_lat1);
+    let standard = (3.5 * heavy_batch).max(3.0 * heavy_lat1);
+    vec![
+        SloClass::new("interactive", interactive, 128, 4.0),
+        SloClass::new("standard", standard, 256, 2.0),
+        SloClass::new("best-effort", 15.0 * heavy_batch, 512, 1.0),
+    ]
+}
+
+/// Fault-aware conservation: every arrival settles exactly once as
+/// served, shed or failed.  (Per-board balance deliberately not
+/// asserted: a request offered to a crashing board may settle on the
+/// survivor it was re-placed on.)
+fn check_conserved(snap: &FleetSnapshot, n_arrivals: usize) {
+    assert_eq!(snap.aggregate.total_offered() as usize, n_arrivals,
+               "fleet lost or duplicated requests at admission");
+    assert_eq!(
+        snap.aggregate.total_served()
+            + snap.aggregate.total_shed()
+            + snap.total_failed(),
+        snap.aggregate.total_offered(),
+        "conservation broken: served {} + shed {} + failed {} != \
+         offered {}",
+        snap.aggregate.total_served(),
+        snap.aggregate.total_shed(),
+        snap.total_failed(),
+        snap.aggregate.total_offered()
+    );
+}
+
+/// The standard three-tenant stream used by every scenario here:
+/// heavy/standard + mid/interactive + light/best-effort Poisson
+/// streams sized to `frac` of the fleet's per-model hosted capacity.
+fn tenants_at(
+    reg: &ModelRegistry,
+    hosts: usize,
+    frac: f64,
+    n_heavy: usize,
+) -> Vec<Tenant> {
+    let (heavy_rate, _, _) = calibrate(reg, 0);
+    let (mid_rate, _, _) = calibrate(reg, 1);
+    let (light_rate, _, _) = calibrate(reg, 2);
+    let heavy_per_s = frac * hosts as f64 * heavy_rate;
+    let horizon_s = n_heavy as f64 / heavy_per_s;
+    let mid_per_s = 0.18 * hosts as f64 * mid_rate;
+    let light_per_s = 0.05 * hosts as f64 * light_rate;
+    let n_mid = ((mid_per_s * horizon_s) as usize).max(80);
+    let n_light = ((light_per_s * horizon_s) as usize).max(60);
+    vec![
+        Tenant {
+            name: "heavy-std".into(),
+            model: "heavy".into(),
+            class: 1,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: heavy_per_s,
+                n: n_heavy,
+            },
+        },
+        Tenant {
+            name: "mid-inter".into(),
+            model: "mid".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: mid_per_s,
+                n: n_mid,
+            },
+        },
+        Tenant {
+            name: "light-be".into(),
+            model: "light".into(),
+            class: 2,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: light_per_s,
+                n: n_light,
+            },
+        },
+    ]
+}
+
+/// All three models warm on every one of `nb` boards, so a single
+/// crash always leaves survivors hosting every model.
+fn all_on_all(nb: usize) -> Vec<Vec<usize>> {
+    vec![vec![0, 1, 2]; nb]
+}
+
+#[test]
+fn fault_free_plan_is_bit_identical_to_default_path() {
+    // FaultPlan::none() must arm nothing: the report is byte-identical
+    // whether the plan (or the failover ablation flag) is spelled out
+    // or left at the default, and no fault counters leak into it.
+    let reg = registry3();
+    let classes = classes_for(&reg);
+    let tenants = tenants_at(&reg, 3, 0.8, 300);
+    let arrivals = merge_arrivals(&tenants, 17);
+    let run = |faults: FaultPlan, failover: bool| {
+        let opts = FleetOptions {
+            faults,
+            failover,
+            ..FleetOptions::new(3, 3)
+        };
+        run_fleet(&reg, &classes, &tenants, &arrivals, &opts)
+            .unwrap()
+            .to_json_string()
+    };
+    let baseline = run(FaultPlan::none(), true);
+    assert_eq!(baseline, run(FaultPlan::none(), true),
+               "fleet run is not deterministic");
+    assert_eq!(baseline, run(FaultPlan::none(), false),
+               "failover flag changed a fault-free run");
+    assert!(!baseline.contains("failovers"),
+            "fault counters leaked into a fault-free report");
+    assert!(!baseline.contains("downtime_us"),
+            "downtime leaked into a fault-free report");
+}
+
+#[test]
+fn conservation_is_exact_under_randomized_fault_plans() {
+    #[derive(Debug)]
+    struct Case {
+        nb: usize,
+        shed: ShedPolicy,
+        load: f64,
+        seed: u64,
+        failover: bool,
+        crash_board: usize,
+        crash_frac: f64,
+        rejoin: bool,
+        lane_loss: bool,
+        lane_board: usize,
+        lane_gpu: bool,
+        lane_restore: bool,
+        thermal: bool,
+        thermal_scale: f64,
+    }
+    let reg = registry3();
+    let classes = classes_for(&reg);
+    let sheds = [
+        ShedPolicy::RejectNew,
+        ShedPolicy::ShedOldest,
+        ShedPolicy::ShedLowestClass,
+    ];
+    prop::check(
+        "fault-conservation",
+        10,
+        20_260_807,
+        |rng| Case {
+            nb: 2 + rng.below(3),
+            shed: sheds[rng.below(3)],
+            load: rng.range(0.4, 1.8),
+            seed: rng.next_u64() % 10_000,
+            failover: rng.below(2) == 0,
+            crash_board: rng.below(16),
+            crash_frac: rng.range(0.15, 0.6),
+            rejoin: rng.below(2) == 0,
+            lane_loss: rng.below(2) == 0,
+            lane_board: rng.below(16),
+            lane_gpu: rng.below(2) == 0,
+            lane_restore: rng.below(2) == 0,
+            thermal: rng.below(2) == 0,
+            thermal_scale: rng.range(1.2, 2.5),
+        },
+        |c| {
+            let tenants = tenants_at(&reg, c.nb, c.load, 150);
+            let arrivals = merge_arrivals(&tenants, c.seed);
+            let horizon =
+                arrivals.last().map_or(1.0, |a| a.at_us).max(1.0);
+            let mut faults = vec![Fault::Crash {
+                board: c.crash_board % c.nb,
+                at_us: c.crash_frac * horizon,
+                rejoin_us: c
+                    .rejoin
+                    .then_some((c.crash_frac + 0.25) * horizon),
+            }];
+            if c.lane_loss {
+                faults.push(Fault::LaneLoss {
+                    board: c.lane_board % c.nb,
+                    proc: if c.lane_gpu { Proc::Gpu } else { Proc::Cpu },
+                    at_us: 0.2 * horizon,
+                    restore_us: c.lane_restore.then_some(0.6 * horizon),
+                });
+            }
+            if c.thermal {
+                faults.push(Fault::Thermal {
+                    board: (c.crash_board + 1) % c.nb,
+                    proc: Proc::Gpu,
+                    at_us: 0.1 * horizon,
+                    until_us: 0.5 * horizon,
+                    scale: c.thermal_scale,
+                });
+            }
+            let opts = FleetOptions {
+                shed: c.shed,
+                placement: all_on_all(c.nb),
+                faults: FaultPlan { faults },
+                failover: c.failover,
+                ..FleetOptions::new(c.nb, 3)
+            };
+            let snap =
+                run_fleet(&reg, &classes, &tenants, &arrivals, &opts)
+                    .map_err(|e| e.to_string())?;
+            let n = arrivals.len() as u64;
+            if snap.aggregate.total_offered() != n {
+                return Err(format!(
+                    "offered {} != arrivals {n}",
+                    snap.aggregate.total_offered()
+                ));
+            }
+            let settled = snap.aggregate.total_served()
+                + snap.aggregate.total_shed()
+                + snap.total_failed();
+            if settled != n {
+                return Err(format!(
+                    "conservation broken: served {} + shed {} + \
+                     failed {} = {settled} != {n}",
+                    snap.aggregate.total_served(),
+                    snap.aggregate.total_shed(),
+                    snap.total_failed()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn crashed_board_is_quarantined_then_resumes() {
+    // One crash/rejoin on board 1, plan supplied as JSON (the CLI
+    // path), tracing on.  Between BoardDown and BoardUp the board must
+    // never dispatch; after rejoin it must serve again; every served
+    // request must have exactly one QueueWait record (drained/retried
+    // work is never double-served).
+    let reg = registry3();
+    let classes = classes_for(&reg);
+    let nb = 4;
+    let tenants = tenants_at(&reg, nb, 0.65, 1200);
+    let arrivals = merge_arrivals(&tenants, 11);
+    let horizon = arrivals.last().unwrap().at_us;
+    let (crash_us, rejoin_us) = (0.4 * horizon, 0.7 * horizon);
+    let plan = FaultPlan::from_json(&format!(
+        r#"[{{"kind": "crash", "board": 1, "at_us": {crash_us},
+             "rejoin_us": {rejoin_us}}}]"#
+    ))
+    .unwrap();
+    let opts = FleetOptions {
+        placement: all_on_all(nb),
+        trace: Some(TraceConfig::default()),
+        faults: plan,
+        ..FleetOptions::new(nb, 3)
+    };
+    let snap =
+        run_fleet(&reg, &classes, &tenants, &arrivals, &opts).unwrap();
+    check_conserved(&snap, arrivals.len());
+    assert_eq!(snap.total_failovers(), 1, "exactly one crash was armed");
+    assert!(
+        (snap.total_downtime_us() - (rejoin_us - crash_us)).abs() < 1.0,
+        "downtime {} != scheduled window {}",
+        snap.total_downtime_us(),
+        rejoin_us - crash_us
+    );
+
+    for (i, b) in snap.boards.iter().enumerate() {
+        assert_eq!(b.trace_dropped, 0, "board {i} dropped trace records");
+    }
+    let crashed = &snap.boards[1];
+    let t_down = crashed
+        .trace_events
+        .iter()
+        .find(|r| r.event == TraceEvent::BoardDown)
+        .expect("BoardDown was traced")
+        .t_us;
+    let t_up = crashed
+        .trace_events
+        .iter()
+        .find(|r| r.event == TraceEvent::BoardUp)
+        .expect("BoardUp was traced")
+        .t_us;
+    assert!(t_down < t_up, "down at {t_down} not before up at {t_up}");
+    let dispatched_while_down = crashed.trace_events.iter().any(|r| {
+        matches!(r.event, TraceEvent::Dispatch { .. })
+            && r.t_us > t_down
+            && r.t_us < t_up
+    });
+    assert!(!dispatched_while_down,
+            "router dispatched onto a down board");
+    let resumed = crashed.trace_events.iter().any(|r| {
+        matches!(r.event, TraceEvent::Dispatch { .. }) && r.t_us > t_up
+    });
+    assert!(resumed, "rejoined board never dispatched again");
+
+    // The crash had teeth: it stranded queued and/or in-flight work.
+    assert!(
+        snap.total_requeued() + snap.aggregate.lost_batches > 0,
+        "crash stranded nothing (requeued {}, lost batches {})",
+        snap.total_requeued(),
+        snap.aggregate.lost_batches
+    );
+    let requeue_records = crashed
+        .trace_events
+        .iter()
+        .filter(|r| r.event == TraceEvent::Requeue)
+        .count() as u64;
+    assert_eq!(requeue_records, snap.total_requeued(),
+               "Requeue trace records disagree with the counter");
+
+    // Served exactly once: QueueWait is the per-request serve marker.
+    let queue_waits: u64 = snap
+        .boards
+        .iter()
+        .map(|b| {
+            b.trace_events
+                .iter()
+                .filter(|r| {
+                    matches!(r.event, TraceEvent::QueueWait { .. })
+                })
+                .count() as u64
+        })
+        .sum();
+    assert_eq!(queue_waits, snap.aggregate.total_served(),
+               "a request was served zero or multiple times");
+}
+
+#[test]
+fn failover_beats_no_failover_after_a_mid_run_crash() {
+    // The acceptance scenario: 8 boards, a seeded single-board crash
+    // mid-run with late rejoin.  With failover the crashed board's
+    // queued work re-places onto survivors and lost in-flight batches
+    // get deadline-aware retries; the control fails every stranded
+    // request on the spot.  Both conserve exactly; failover must win
+    // on served-within-deadline.
+    let reg = registry3();
+    let classes = classes_for(&reg);
+    let nb = 8;
+    let mut met = std::collections::HashMap::new();
+    let mut fo_requeued = 0u64;
+    for failover in [true, false] {
+        let mut total_met = 0u64;
+        for seed in [3u64, 7u64, 11u64] {
+            let tenants = tenants_at(&reg, nb, 0.7, 1400);
+            let arrivals = merge_arrivals(&tenants, seed);
+            let horizon = arrivals.last().unwrap().at_us;
+            let plan = FaultPlan {
+                faults: vec![Fault::Crash {
+                    board: 3,
+                    at_us: 0.45 * horizon,
+                    rejoin_us: Some(0.8 * horizon),
+                }],
+            };
+            let opts = FleetOptions {
+                placement: all_on_all(nb),
+                faults: plan,
+                failover,
+                ..FleetOptions::new(nb, 3)
+            };
+            let snap =
+                run_fleet(&reg, &classes, &tenants, &arrivals, &opts)
+                    .unwrap();
+            check_conserved(&snap, arrivals.len());
+            assert_eq!(snap.total_failovers(), 1);
+            if failover {
+                fo_requeued += snap.total_requeued();
+            } else {
+                // The control never re-places or retries anything.
+                assert_eq!(snap.total_retries(), 0);
+            }
+            total_met += snap.aggregate.total_met();
+        }
+        met.insert(failover, total_met);
+    }
+    assert!(fo_requeued > 0,
+            "crash never stranded queued work across 3 seeds");
+    assert!(
+        met[&true] > met[&false],
+        "failover met {} <= no-failover met {}",
+        met[&true], met[&false]
+    );
+}
