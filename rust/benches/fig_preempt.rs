@@ -1,0 +1,307 @@
+//! Preemption figure: an overloaded 8-board fleet where a best-effort
+//! flood pins six boards' lanes with long full-cap batches while a
+//! tight-deadline interactive stream round-robins across everything —
+//! the cross-board preemption extension's headline numbers.
+//!
+//! Arms:
+//! * `off` — run-to-completion (bit-identical to the pre-preemption
+//!   path; its report carries no preempt counters);
+//! * `deadline-burn` — boards cancel a lower-class in-flight batch
+//!   when an interactive head would otherwise burn its deadline; the
+//!   victim's requests re-queue with arrival/deadline preserved and
+//!   the cancelled tail is refunded from lane time and energy;
+//! * `burn-plus-steal` — adds the fleet's work-stealing pass: queued
+//!   (never dispatched) work stranded behind a stalled board's batches
+//!   re-places onto cheaper boards through the price tables (the two
+//!   interactive-only boards make the steal path deterministic here).
+//!
+//! Every arm is checked for exact conservation: offered == served +
+//! shed + failed, preempted and stolen requests settle exactly once.
+//! The virtual-time fleet is deterministic, so every number is
+//! machine-independent.  Full runs write the measured lines to
+//! `BENCH_preempt.json`; `--ci` re-checks conservation, requires
+//! DeadlineBurn to strictly beat Off on interactive attainment, caps
+//! preempted waste at 10% of served busy time, and gates the
+//! burn/off attainment ratio against the committed baseline.
+
+use sparoa::bench_support::{baseline, Table};
+use sparoa::device::Proc;
+use sparoa::serve::{
+    demo, merge_arrivals, run_fleet, ArrivalPattern, FleetOptions,
+    FleetSnapshot, PreemptionPolicy, RouterPolicy, SloClass, Tenant,
+};
+
+const BOARDS: usize = 8;
+/// Boards hosting the flood model; the remaining boards host only the
+/// interactive model and sit near-idle — the steal destinations.
+const FLOOD_HOSTS: usize = 6;
+/// Flood arrival rate as a multiple of its hosts' aggregate capacity.
+const OVERLOAD: f64 = 1.7;
+const N_FLOOD: usize = 700;
+const SEED: u64 = 29;
+/// `--ci` cap on lane time wasted on cancelled batch prefixes,
+/// as a fraction of the fleet's served busy time.
+const CI_WASTE_FRAC: f64 = 0.10;
+/// `--ci` budget on the burn/off interactive-attainment ratio drift
+/// against the committed baseline.
+const CI_RATIO_BUDGET: f64 = 1.05;
+const CI_NUM_KEY: &str = "attain_hi_burn";
+const CI_DEN_KEY: &str = "attain_hi_off";
+
+struct Arm {
+    policy: PreemptionPolicy,
+    snap: FleetSnapshot,
+}
+
+fn conserved(name: &str, snap: &FleetSnapshot, n: usize) -> bool {
+    let offered = snap.aggregate.total_offered();
+    let settled = snap.aggregate.total_served()
+        + snap.aggregate.total_shed()
+        + snap.total_failed();
+    if offered as usize != n || settled != offered {
+        eprintln!(
+            "fig_preempt conservation broken in `{name}`: {n} \
+             arrivals, offered {offered}, served {} + shed {} + \
+             failed {} = {settled}",
+            snap.aggregate.total_served(),
+            snap.aggregate.total_shed(),
+            snap.total_failed()
+        );
+        return false;
+    }
+    true
+}
+
+/// Interactive-class (class 0) deadline attainment.
+fn hi_attain(snap: &FleetSnapshot) -> f64 {
+    let g = &snap.aggregate.per_class[0];
+    g.met as f64 / g.offered.max(1) as f64
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let ci = args.iter().any(|a| a == "--ci");
+
+    let device = "agx_orin";
+    let registry = demo::registry(&sparoa::artifacts_dir(), device)
+        .expect("building demo registry");
+
+    // Calibrate the roles instead of hard-coding indices, so the arms
+    // keep their shape on both the synthetic and artifact registries:
+    // the flood model is the one with the longest full-cap batch, the
+    // interactive model the one with the cheapest batch-1 latency.
+    let cal: Vec<(f64, f64, f64)> = (0..registry.len())
+        .map(|m| {
+            let e = registry.get(m);
+            let cap = e.gpu_batch_cap.max(1);
+            let batch_lat = e.latency_us(Proc::Gpu, cap).unwrap();
+            let rate = cap as f64 / batch_lat * 1e6;
+            (rate, e.cheapest_latency_us(1).unwrap(), batch_lat)
+        })
+        .collect();
+    let flood = (0..cal.len())
+        .max_by(|&a, &b| cal[a].2.total_cmp(&cal[b].2))
+        .unwrap();
+    let inter = (0..cal.len())
+        .min_by(|&a, &b| cal[a].1.total_cmp(&cal[b].1))
+        .unwrap();
+    assert_ne!(flood, inter, "degenerate registry: one model is both \
+                              the flood and the interactive role");
+    let (flood_rate, _, flood_batch) = cal[flood];
+    let (inter_rate, inter_lat1, _) = cal[inter];
+
+    // The interactive weight outranks a full flood batch (preemption
+    // only cancels a victim whose still-meetable weight is below the
+    // rescued class weight); its deadline sits well under the flood
+    // batch runtime so queued heads genuinely burn behind one.
+    let fe = registry.get(flood);
+    let cap_w = fe.gpu_batch_cap.max(fe.cpu_batch_cap) as f64;
+    let deadline_us = (10.0 * inter_lat1)
+        .min(0.5 * flood_batch)
+        .max(1.05 * inter_lat1);
+    let classes = vec![
+        SloClass::new("interactive", deadline_us, 128, cap_w + 64.0),
+        SloClass::new("best-effort", 20.0 * flood_batch, 512, 1.0),
+    ];
+    let flood_per_s = OVERLOAD * FLOOD_HOSTS as f64 * flood_rate;
+    let horizon_s = N_FLOOD as f64 / flood_per_s;
+    let inter_per_s = 0.35 * inter_rate;
+    let n_inter = ((inter_per_s * horizon_s) as usize).max(150);
+    let tenants = vec![
+        Tenant {
+            name: "flood-be".into(),
+            model: registry.get(flood).name.clone(),
+            class: 1,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: flood_per_s,
+                n: N_FLOOD,
+            },
+        },
+        Tenant {
+            name: "interactive".into(),
+            model: registry.get(inter).name.clone(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: inter_per_s,
+                n: n_inter,
+            },
+        },
+    ];
+    let arrivals = merge_arrivals(&tenants, SEED);
+
+    // Boards 0..FLOOD_HOSTS host everything; the rest host only the
+    // interactive model.  Round-robin routing sends interactive work
+    // onto the flooded boards too, where it burns (or gets stolen).
+    let mut placement: Vec<Vec<usize>> = Vec::new();
+    for b in 0..BOARDS {
+        placement.push(if b < FLOOD_HOSTS {
+            (0..registry.len()).collect()
+        } else {
+            vec![inter]
+        });
+    }
+    let run = |policy: PreemptionPolicy| -> FleetSnapshot {
+        let opts = FleetOptions {
+            router: RouterPolicy::RoundRobin,
+            placement: placement.clone(),
+            preempt: policy,
+            ..FleetOptions::new(BOARDS, registry.len())
+        };
+        run_fleet(&registry, &classes, &tenants, &arrivals, &opts)
+            .expect("fleet run")
+    };
+    let arms: Vec<Arm> = [
+        PreemptionPolicy::Off,
+        PreemptionPolicy::DeadlineBurn,
+        PreemptionPolicy::BurnPlusSteal,
+    ]
+    .into_iter()
+    .map(|policy| Arm { policy, snap: run(policy) })
+    .collect();
+
+    let mut ok = true;
+    for a in &arms {
+        ok &= conserved(a.policy.name(), &a.snap, arrivals.len());
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "preempt — {BOARDS} boards ({FLOOD_HOSTS} flooded x\
+             {OVERLOAD:.1}) on {device}, {} requests",
+            arrivals.len()
+        ),
+        &["arm", "interactive attain", "attainment", "served",
+          "preempted", "stolen", "waste ms"],
+    );
+    for a in &arms {
+        t.row(vec![
+            a.policy.name().into(),
+            format!("{:.1}%", 100.0 * hi_attain(&a.snap)),
+            format!("{:.1}%", 100.0 * a.snap.aggregate_attainment()),
+            a.snap.aggregate.total_served().to_string(),
+            a.snap.total_preemptions().to_string(),
+            a.snap.total_steals().to_string(),
+            format!("{:.1}", a.snap.total_preempt_waste_us() / 1e3),
+        ]);
+    }
+    t.print();
+
+    let (off, burn, steal) =
+        (&arms[0].snap, &arms[1].snap, &arms[2].snap);
+    println!(
+        "\ncancelling best-effort batches rescues interactive \
+         deadlines: attainment {:.1}% (off) -> {:.1}% (deadline-burn, \
+         {} preemptions, {:.1} ms wasted) -> {:.1}% (burn-plus-steal, \
+         {} stolen).",
+        100.0 * hi_attain(off),
+        100.0 * hi_attain(burn),
+        burn.total_preemptions(),
+        burn.total_preempt_waste_us() / 1e3,
+        100.0 * hi_attain(steal),
+        steal.total_steals(),
+    );
+
+    let lines: Vec<(String, f64)> = vec![
+        ("attain_hi_off".into(), hi_attain(off)),
+        ("attain_hi_burn".into(), hi_attain(burn)),
+        ("attain_hi_steal".into(), hi_attain(steal)),
+        ("attain_all_off".into(), off.aggregate_attainment()),
+        ("attain_all_burn".into(), burn.aggregate_attainment()),
+        ("served_off".into(), off.aggregate.total_served() as f64),
+        ("served_burn".into(), burn.aggregate.total_served() as f64),
+        ("preemptions_burn".into(), burn.total_preemptions() as f64),
+        ("steals_steal".into(), steal.total_steals() as f64),
+        ("waste_ms_burn".into(),
+         burn.total_preempt_waste_us() / 1e3),
+    ];
+
+    let path = sparoa::repo_root().join("BENCH_preempt.json");
+    if ci {
+        // Hard invariants — the PR acceptance criteria, deterministic
+        // on any runner.
+        let mut bad = Vec::new();
+        if !ok {
+            bad.push("conservation failed in at least one arm".into());
+        }
+        if off.total_preemptions() != 0 || off.total_steals() != 0 {
+            bad.push("the off arm preempted or stole".into());
+        }
+        if burn.total_preemptions() == 0 {
+            bad.push("deadline-burn never preempted".into());
+        }
+        if burn.total_steals() != 0 {
+            bad.push("deadline-burn stole work".into());
+        }
+        if steal.total_steals() == 0 {
+            bad.push("burn-plus-steal never stole".into());
+        }
+        if hi_attain(burn) <= hi_attain(off) {
+            bad.push(format!(
+                "deadline-burn interactive attainment {:.4} <= off \
+                 {:.4}",
+                hi_attain(burn),
+                hi_attain(off)
+            ));
+        }
+        for a in &arms[1..] {
+            let busy = a.snap.aggregate.cpu_busy_us
+                + a.snap.aggregate.gpu_busy_us;
+            let waste = a.snap.total_preempt_waste_us();
+            if waste > CI_WASTE_FRAC * busy {
+                bad.push(format!(
+                    "{}: preempt waste {waste:.0}us > {:.0}% of \
+                     {busy:.0}us busy",
+                    a.policy.name(),
+                    100.0 * CI_WASTE_FRAC
+                ));
+            }
+        }
+        if !bad.is_empty() {
+            for b in &bad {
+                eprintln!("fig_preempt invariant failed: {b}");
+            }
+            std::process::exit(1);
+        }
+        // Then the committed-baseline drift gate (refuses a missing or
+        // bootstrap-placeholder baseline — CI regenerates one first).
+        let Some((_, old_ratio)) =
+            baseline::committed(&path, CI_NUM_KEY, CI_DEN_KEY)
+        else {
+            baseline::refuse(&path, "fig_preempt", CI_NUM_KEY,
+                             CI_DEN_KEY);
+        };
+        let new_ratio = hi_attain(burn) / hi_attain(off).max(1e-12);
+        baseline::gate_ratio(
+            "fig_preempt",
+            &format!("{CI_NUM_KEY}/{CI_DEN_KEY}"),
+            new_ratio,
+            old_ratio,
+            CI_RATIO_BUDGET,
+        );
+    } else {
+        if !ok {
+            std::process::exit(1);
+        }
+        baseline::write(&path, "preempt", &lines);
+    }
+}

@@ -66,6 +66,10 @@ pub struct Config {
     /// serve-fleet: mean time to repair, seconds of virtual time
     /// (used only when `mttf_s` > 0).
     pub mttr_s: f64,
+    /// serve-fleet: preemption / work re-placement policy
+    /// (off | deadline-burn | burn-plus-steal).  `off` keeps the
+    /// run-to-completion path bit-identical to earlier releases.
+    pub preempt: String,
 }
 
 impl Default for Config {
@@ -99,8 +103,19 @@ impl Default for Config {
             faults: String::new(),
             mttf_s: 0.0,
             mttr_s: 0.0,
+            preempt: "off".into(),
         }
     }
+}
+
+/// Validate a `preempt` spelling: anything
+/// [`crate::serve::PreemptionPolicy::parse`] accepts.
+fn check_preempt(s: &str) -> Result<()> {
+    anyhow::ensure!(
+        crate::serve::PreemptionPolicy::parse(s).is_some(),
+        "preempt must be off|deadline-burn|burn-plus-steal, got `{s}`"
+    );
+    Ok(())
 }
 
 /// Validate a `governor` spelling: `off` or anything
@@ -153,6 +168,9 @@ impl Config {
         }
         if let Some(f) = v.get("trace_format").as_str() {
             check_trace_format(f)?;
+        }
+        if let Some(p) = v.get("preempt").as_str() {
+            check_preempt(p)?;
         }
         let d = Config::default();
         Ok(Config {
@@ -218,6 +236,11 @@ impl Config {
                 "mttr_s",
                 v.get("mttr_s").as_f64().unwrap_or(d.mttr_s),
             )?,
+            preempt: v
+                .get("preempt")
+                .as_str()
+                .unwrap_or(&d.preempt)
+                .into(),
         })
     }
 
@@ -277,6 +300,10 @@ impl Config {
             }
             "mttr_s" => {
                 self.mttr_s = check_mean_time("mttr_s", value.parse()?)?;
+            }
+            "preempt" => {
+                check_preempt(value)?;
+                self.preempt = value.into();
             }
             other => anyhow::bail!("unknown config key `{other}`"),
         }
@@ -423,6 +450,19 @@ mod tests {
         assert_eq!(cfj.faults, "f.json");
         assert!((cfj.mttf_s - 60.0).abs() < 1e-12);
         assert!((cfj.mttr_s - 2.0).abs() < 1e-12);
+        // preemption knob
+        assert_eq!(c.preempt, "off");
+        c.apply_override("preempt", "deadline-burn").unwrap();
+        assert_eq!(c.preempt, "deadline-burn");
+        c.apply_override("preempt", "burn-plus-steal").unwrap();
+        assert_eq!(c.preempt, "burn-plus-steal");
+        assert!(c.apply_override("preempt", "always").is_err());
+        let bad_preempt = json::parse(r#"{"preempt": "dice"}"#).unwrap();
+        assert!(Config::from_json(&bad_preempt).is_err());
+        let good_preempt =
+            json::parse(r#"{"preempt": "deadline-burn"}"#).unwrap();
+        assert_eq!(Config::from_json(&good_preempt).unwrap().preempt,
+                   "deadline-burn");
         // Config files get the same backend validation as the CLI.
         let bad = json::parse(r#"{"backend": "cuda"}"#).unwrap();
         assert!(Config::from_json(&bad).is_err());

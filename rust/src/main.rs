@@ -84,6 +84,7 @@ fn usage(cmd: &str) -> String {
              [--power_cap_w=W] \
              [--load=X] [--num_requests=N] [--trace=FILE.json] \
              [--faults=PLAN.json] [--mttf_s=S --mttr_s=S] \
+             [--preempt=off|deadline-burn|burn-plus-steal] \
              [--trace_out=FILE] [--trace_format=folded|chrome] \
              [--json]\n  \
              Distributed multi-board serving: the serve-multi tenant \
@@ -102,6 +103,10 @@ fn usage(cmd: &str) -> String {
              schedules instead.\n  \
              Every router arm runs under the same plan, so rows stay \
              comparable.\n  \
+             --preempt arms deadline-burn batch preemption (and, with \
+             burn-plus-steal,\n  \
+             cross-board work stealing); off is bit-identical to \
+             run-to-completion.\n  \
              --trace_out writes a virtual-time execution trace of the \
              configured router's run\n  \
              (folded = flamegraph.pl/inferno stacks, chrome = Perfetto \
@@ -397,6 +402,14 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
         format!("router must be round-robin|jsq|cost-aware, got `{}`",
                 cfg.router)
     })?;
+    let preempt = sparoa::serve::PreemptionPolicy::parse(&cfg.preempt)
+        .with_context(|| {
+            format!(
+                "preempt must be off|deadline-burn|burn-plus-steal, \
+                 got `{}`",
+                cfg.preempt
+            )
+        })?;
 
     // Energy accounting is on unless --governor=off: the boards' DVFS
     // ladders come from the same calibrated device profile the demo
@@ -444,7 +457,8 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
     if !cfg.json {
         println!(
             "fleet — {} boards (1 cpu + 1 gpu lane each), {} models, \
-             load x{:.1}, {} requests, autoscale {}, governor {}{}",
+             load x{:.1}, {} requests, autoscale {}, governor {}{}, \
+             preempt {}",
             n_boards, registry.len(), cfg.load, arrivals.len(),
             if cfg.autoscale { "on" } else { "off" },
             if cfg.governor == "off" { "off" } else { &cfg.governor },
@@ -453,6 +467,7 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
                     format!(", cap {w:.1} W/board"),
                 _ => String::new(),
             },
+            preempt.name(),
         );
         if !fault_plan.is_none() {
             println!(
@@ -485,6 +500,7 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
         opts.router = router;
         opts.power = power.clone();
         opts.faults = fault_plan.clone();
+        opts.preempt = preempt;
         if cfg.autoscale {
             opts.autoscale = Some(AutoscalePolicy::default());
         }

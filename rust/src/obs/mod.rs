@@ -133,6 +133,25 @@ pub enum TraceEvent {
     /// survivor's queue after the deadline-aware retry check (recorded
     /// on the destination board).
     Retry,
+    /// An in-flight batch was voluntarily cancelled to rescue a
+    /// higher-class deadline (preemption): the lane and its committed
+    /// energy were refunded from the cancel point and the batch's
+    /// requests re-queued with arrival/deadline preserved.  Recorded
+    /// once per cancelled batch on the preempting board, so the event
+    /// count reconciles 1:1 with the snapshot's `preemptions`.
+    Preempt {
+        /// Lane index the cancelled batch occupied.
+        lane: u32,
+    },
+    /// The work-stealing pass re-placed one model's queued (never
+    /// dispatched) requests onto another board (recorded once per
+    /// drain on the victim board; each moved request additionally
+    /// records a [`TraceEvent::Requeue`] there).  Σ `n` reconciles
+    /// 1:1 with the snapshot's `steals`.
+    Steal {
+        /// Requests moved by this drain.
+        n: u32,
+    },
 }
 
 /// One buffered event: virtual time, (model, class) attribution
@@ -546,6 +565,12 @@ pub fn chrome_events_into(
             }
             TraceEvent::Requeue => ("requeue", None, None, vec![]),
             TraceEvent::Retry => ("retry", None, None, vec![]),
+            TraceEvent::Preempt { lane } => {
+                ("preempt", Some(lane), None, vec![])
+            }
+            TraceEvent::Steal { n } => {
+                ("steal", None, None, vec![("n", n as f64)])
+            }
         };
         let name = match label(model_labels, r.model) {
             Some(m) => format!("{kind}:{m}"),

@@ -88,6 +88,65 @@ impl Default for ClusterOptions {
     }
 }
 
+/// Preemption / work re-placement policy for the serving tier
+/// (installed per run via `FleetOptions::preempt` or the
+/// `serve-fleet --preempt=POLICY` flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptionPolicy {
+    /// Never preempt: dispatched batches always run to completion.
+    /// Byte-identical output to the pre-preemption scheduler — the
+    /// default.
+    #[default]
+    Off,
+    /// A board may cancel an in-flight strictly-lower-class batch when
+    /// a queued higher-class request's deadline would otherwise burn
+    /// waiting for a lane: the lane's unexecuted tail and its
+    /// committed energy are refunded from the cancel instant
+    /// (microseconds of virtual time) and the batch's requests
+    /// re-queued with their original arrival/deadline preserved.
+    DeadlineBurn,
+    /// [`PreemptionPolicy::DeadlineBurn`] plus fleet-level work
+    /// stealing: queued (never dispatched) work stalled behind a
+    /// long-running batch is re-placed onto idle or cheaper boards,
+    /// scored through the router's cost-aware price tables.
+    BurnPlusSteal,
+}
+
+impl PreemptionPolicy {
+    /// Parse a CLI/config spelling: `off`, `deadline-burn`,
+    /// `burn-steal` / `burn-plus-steal`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(PreemptionPolicy::Off),
+            "deadline-burn" => Some(PreemptionPolicy::DeadlineBurn),
+            "burn-steal" | "burn-plus-steal" => {
+                Some(PreemptionPolicy::BurnPlusSteal)
+            }
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (accepted back by
+    /// [`PreemptionPolicy::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            PreemptionPolicy::Off => "off",
+            PreemptionPolicy::DeadlineBurn => "deadline-burn",
+            PreemptionPolicy::BurnPlusSteal => "burn-plus-steal",
+        }
+    }
+
+    /// Whether board-level deadline-burn preemption is armed.
+    pub fn preempts(self) -> bool {
+        self != PreemptionPolicy::Off
+    }
+
+    /// Whether fleet-level work stealing is armed.
+    pub fn steals(self) -> bool {
+        self == PreemptionPolicy::BurnPlusSteal
+    }
+}
+
 /// How many independent execution lanes of each processor type a board
 /// exposes.  The classic SparOA board is [`LaneMatrix::duo`] (one CPU
 /// lane + one GPU lane); multi-accelerator boards widen either side.
@@ -248,6 +307,10 @@ pub(crate) struct BoardSim<'a> {
     /// branches and settle dispatches immediately — bit-identical to
     /// the pre-fault scheduler.
     faults: Option<FaultState>,
+    /// Voluntary preemption policy (`arm_preemption`); `Off` boards
+    /// skip the burn check entirely — bit-identical to the
+    /// pre-preemption scheduler.
+    preempt: PreemptionPolicy,
     #[cfg(debug_assertions)]
     settled: std::collections::HashSet<usize>,
 }
@@ -381,6 +444,7 @@ impl<'a> BoardSim<'a> {
                 None => crate::obs::Tracer::disabled(),
             },
             faults: None,
+            preempt: PreemptionPolicy::Off,
             #[cfg(debug_assertions)]
             settled: std::collections::HashSet::new(),
         })
@@ -545,9 +609,80 @@ impl<'a> BoardSim<'a> {
         });
     }
 
+    /// Arm voluntary preemption (`DeadlineBurn` / `BurnPlusSteal`):
+    /// the burn check in `pump` becomes live, and the in-flight ledger
+    /// is installed (via [`BoardSim::arm_faults`]) if a fault plan
+    /// hasn't already done so — settlement defers to batch finish
+    /// times so a preemption can retract a running batch.  Deferral is
+    /// value-exact (`settle_batch` replays the immediate path's
+    /// accounting); `Off` boards are never armed and keep the
+    /// byte-identical immediate path.
+    pub(crate) fn arm_preemption(&mut self, policy: PreemptionPolicy) {
+        self.preempt = policy;
+        if policy.preempts() && self.faults.is_none() {
+            self.arm_faults();
+        }
+    }
+
     /// Whether a fail-stop fault currently holds this board down.
     pub(crate) fn is_down(&self) -> bool {
         self.faults.as_ref().map_or(false, |f| f.down)
+    }
+
+    /// Microseconds until this board could next start *any* dispatch:
+    /// the min over schedulable lanes of (free-at − `now_us`), 0 when
+    /// a lane is free now, `INFINITY` when every lane kind is down.
+    /// The fleet's work-stealing pass compares this stall against
+    /// other boards' priced backlogs.
+    pub(crate) fn stall_us(&self, now_us: f64) -> f64 {
+        let mut best = f64::INFINITY;
+        for (l, &p) in self.lanes.procs.iter().enumerate() {
+            let up = match &self.faults {
+                Some(fs) => match p {
+                    Proc::Cpu => !fs.cpu_down,
+                    Proc::Gpu => !fs.gpu_down,
+                },
+                None => true,
+            };
+            if up {
+                best = best.min((self.lanes.free[l] - now_us).max(0.0));
+            }
+        }
+        best
+    }
+
+    /// Drain every queued (never dispatched) request of `model` for
+    /// re-placement on another board (work stealing): counts them as
+    /// `steals`, traces one [`crate::obs::TraceEvent::Steal`] per
+    /// drain plus one [`crate::obs::TraceEvent::Requeue`] per moved
+    /// request, and bumps the mutation epoch.  `now_us` timestamps the
+    /// trace events.  The drained requests keep their original
+    /// arrival/deadline and re-enter the destination board via
+    /// [`BoardSim::readmit`] without being re-counted as admitted.
+    pub(crate) fn steal_queue(&mut self, model: usize, now_us: f64)
+        -> Vec<QueuedReq>
+    {
+        let stolen = self.q.drain_model(model);
+        if stolen.is_empty() {
+            return stolen;
+        }
+        self.epoch += 1;
+        self.snap.steals += stolen.len() as u64;
+        self.tracer.record(
+            now_us,
+            model as u32,
+            crate::obs::NONE,
+            crate::obs::TraceEvent::Steal { n: stolen.len() as u32 },
+        );
+        for r in &stolen {
+            self.tracer.record(
+                now_us,
+                r.model as u32,
+                r.class as u32,
+                crate::obs::TraceEvent::Requeue,
+            );
+        }
+        stolen
     }
 
     /// Settle every deferred batch with `finish_us <= up_to_us`:
@@ -774,6 +909,135 @@ impl<'a> BoardSim<'a> {
         landed
     }
 
+    /// `DeadlineBurn` core: cancel one in-flight strictly-lower-class
+    /// batch when that rescues a queued higher-class request whose
+    /// deadline (µs of virtual time) would burn waiting for a lane,
+    /// and the rescued class weight exceeds the deadline weight the
+    /// victim would still meet by finishing.  The victim's unexecuted
+    /// lane tail and committed energy are refunded from `now_us`
+    /// exactly like a crash retract; the already-executed prefix stays
+    /// billed as lane busy time and is accumulated into
+    /// `preempt_waste_us`.  The victim's requests re-enter this
+    /// board's queues with arrival/deadline preserved.  Returns
+    /// whether a batch was preempted — callers loop until quiescent,
+    /// so one pump can free several lanes.
+    fn preempt_for_deadlines(&mut self, now_us: f64) -> Result<bool> {
+        match &self.faults {
+            Some(fs) if !fs.down && !fs.inflight.is_empty() => {}
+            _ => return Ok(false),
+        }
+        if self.q.total_queued() == 0 {
+            return Ok(false);
+        }
+        // (inflight index, still-meetable weight, start µs) of the
+        // cheapest victim found across every burning queue head.
+        let mut victim: Option<(usize, f64, f64)> = None;
+        for m in 0..self.registry.len() {
+            if self.q.queue_len(m) == 0 {
+                continue;
+            }
+            let head = match self.q.dispatch_view(m).next() {
+                Some(r) => *r,
+                None => continue,
+            };
+            let rescue_w = self.classes[head.class].weight;
+            let entry = self.registry.get(m);
+            // The head is "burning" only when no alive lane kind can
+            // meet its deadline by dispatching now or by waiting for
+            // its earliest lane — but freeing a lane now still could.
+            let mut patient = false;
+            let mut burn = [false; 2];
+            for proc in [Proc::Cpu, Proc::Gpu] {
+                let fs = self.faults.as_ref().expect("armed above");
+                let up = match proc {
+                    Proc::Cpu => !fs.cpu_down,
+                    Proc::Gpu => !fs.gpu_down,
+                };
+                if !up {
+                    continue;
+                }
+                let lat1 = entry.latency_us(proc, 1)?
+                    * fs.thermal[thermal_idx(proc)];
+                if now_us + lat1 > head.deadline_us {
+                    continue; // unservable even on a free lane
+                }
+                let (_, free) = self.lanes.earliest(proc);
+                if free <= now_us || free + lat1 <= head.deadline_us {
+                    patient = true; // the dispatcher handles it unaided
+                    break;
+                }
+                burn[thermal_idx(proc)] = true;
+            }
+            if patient {
+                continue;
+            }
+            let fs = self.faults.as_ref().expect("armed above");
+            for (i, b) in fs.inflight.iter().enumerate() {
+                if !burn[thermal_idx(self.lanes.procs[b.lane])] {
+                    continue;
+                }
+                let bclass = b.reqs.iter().map(|r| r.class).min()
+                    .expect("dispatched batches are never empty");
+                // Only strictly lower-priority batches are fair game.
+                if bclass <= head.class {
+                    continue;
+                }
+                // Deadline weight the victim still delivers by running
+                // to completion; preempting must beat it.
+                let remaining_w: f64 = b.reqs.iter()
+                    .filter(|r| r.deadline_us >= b.finish_us)
+                    .map(|r| self.classes[r.class].weight)
+                    .sum();
+                if remaining_w >= rescue_w {
+                    continue;
+                }
+                // Cheapest victim first: least still-meetable weight,
+                // then least already-executed (wasted) lane time.
+                let better = match victim {
+                    None => true,
+                    Some((_, w, s)) => remaining_w < w
+                        || (remaining_w == w && b.start_us > s),
+                };
+                if better {
+                    victim = Some((i, remaining_w, b.start_us));
+                }
+            }
+        }
+        let Some((i, _, _)) = victim else {
+            return Ok(false);
+        };
+        let b = self.faults.as_mut().expect("armed above")
+            .inflight.swap_remove(i);
+        // Refund the unexecuted tail exactly like a crash retract; the
+        // executed prefix stays billed as busy lane time.
+        let cut = now_us.max(b.start_us);
+        self.lanes.busy[b.lane] -= b.finish_us - cut;
+        self.lanes.free[b.lane] = self.lanes.free[b.lane].min(now_us);
+        if let Some(bp) = self.power.as_mut() {
+            bp.retract(b.lane, b.start_us, b.finish_us, b.busy_w,
+                       now_us);
+        }
+        self.snap.preemptions += 1;
+        self.snap.preempt_waste_us += cut - b.start_us;
+        self.tracer.record(
+            now_us,
+            b.reqs.first()
+                .map_or(crate::obs::NONE, |r| r.model as u32),
+            b.reqs.iter().map(|r| r.class as u32).min()
+                .unwrap_or(crate::obs::NONE),
+            crate::obs::TraceEvent::Preempt { lane: b.lane as u32 },
+        );
+        for r in b.reqs {
+            // Original arrival/deadline preserved, not re-counted as
+            // admitted; a refused readmission sheds here and settles
+            // through `settle_sheds` right after.
+            self.q.readmit(r);
+        }
+        self.epoch += 1;
+        self.settle_sheds(now_us);
+        Ok(true)
+    }
+
     /// Dispatch everything worth dispatching at `now_us`: sheds expired
     /// work (dynamic tier), settles shed accounting, then repeatedly
     /// scores every feasible (model, placement, batch) option and
@@ -802,6 +1066,12 @@ impl<'a> BoardSim<'a> {
             }
         }
         self.settle_sheds(now);
+        // Voluntary preemption (DeadlineBurn / BurnPlusSteal): rescue
+        // burning higher-class deadlines before scoring dispatches, so
+        // a freed lane is visible to this pump's candidates.
+        if self.preempt.preempts() {
+            while self.preempt_for_deadlines(now)? {}
+        }
         loop {
             if self.q.total_queued() == 0 {
                 return Ok(None);
@@ -1556,5 +1826,180 @@ mod tests {
         }
         assert!(met[1] as f64 >= met[0] as f64 * 0.9,
                 "wider board met {} << duo {}", met[1], met[0]);
+    }
+
+    #[test]
+    fn deadline_burn_preempts_to_rescue_high_class() {
+        let reg = registry();
+        let mk_cls = |d_hi: f64| vec![
+            SloClass::new("hi", d_hi, 64, 100.0),
+            SloClass::new("lo", 10_000_000.0, 256, 1.0),
+        ];
+        // Probe run (no preemption, same dispatch decisions): measure
+        // how long the heavy batches pin both lanes so the rescue
+        // deadline can be sized to provably burn without a preemption.
+        let probe_cls = mk_cls(30_000.0);
+        let mut probe = BoardSim::new(
+            &reg, &probe_cls, &ClusterOptions::default(),
+            LaneMatrix::duo(), "t")
+            .unwrap();
+        let mut t = 0.0;
+        let mut next_id = 0;
+        for _ in 0..3 {
+            for _ in 0..8 {
+                probe.offer(next_id, 0, 0, 1, t);
+                next_id += 1;
+            }
+            probe.pump(t).unwrap();
+            t += 1.0;
+        }
+        let t1 = t;
+        let min_free = probe.lanes.free.iter().cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!(min_free > t1 + 1_000.0,
+                "24 heavy requests should pin both lanes well past \
+                 t1 = {} (min_free {})", t1, min_free);
+        let lat1_min = [Proc::Cpu, Proc::Gpu]
+            .into_iter()
+            .map(|p| reg.get(1).latency_us(p, 1).unwrap())
+            .fold(f64::INFINITY, f64::min);
+        // Feasible on a free lane now (lat1_min <= d_hi) but not on
+        // any lane busy until min_free — the burn window.
+        let d_hi = lat1_min + 0.5 * (min_free - t1);
+
+        let cls = mk_cls(d_hi);
+        let mut board = BoardSim::new(
+            &reg, &cls, &ClusterOptions::default(), LaneMatrix::duo(),
+            "t")
+            .unwrap();
+        board.arm_preemption(PreemptionPolicy::DeadlineBurn);
+        let mut t = 0.0;
+        let mut next_id = 0;
+        for _ in 0..3 {
+            for _ in 0..8 {
+                board.offer(next_id, 0, 0, 1, t);
+                next_id += 1;
+            }
+            board.pump(t).unwrap();
+            t += 1.0;
+        }
+        // One interactive request on the cheap model: both lanes are
+        // pinned by weight-1 batches, so DeadlineBurn must cancel one.
+        board.offer(next_id, 0, 1, 0, t1);
+        board.pump(t1).unwrap();
+        assert_eq!(board.snap.preemptions, 1,
+                   "exactly one batch preempted");
+        assert!(board.snap.preempt_waste_us > 0.0,
+                "the cancelled batch had executed a prefix");
+        let mut now = t1;
+        loop {
+            match board.pump(now).unwrap() {
+                None => break,
+                Some(w) => now = w,
+            }
+        }
+        let snap = board.finish(now);
+        assert_eq!(snap.total_served() + snap.total_shed(),
+                   snap.total_offered());
+        assert_eq!(snap.total_offered(), 25);
+        assert_eq!(snap.per_class[0].met, 1,
+                   "the rescued interactive deadline must be met");
+        assert_eq!(snap.per_class[1].offered, 24);
+        assert_eq!(snap.preemptions, 1);
+        assert!(snap.preempt_waste_us > 0.0);
+    }
+
+    #[test]
+    fn dormant_deadline_burn_is_byte_identical_to_off() {
+        // Arming preemption defers settlement through the in-flight
+        // ledger but must stay value-exact when no preemption fires:
+        // a single-class stream (no higher class to rescue) produces a
+        // byte-identical snapshot JSON.
+        let reg = registry();
+        let cls = classes();
+        let tenants = vec![Tenant {
+            name: "t".into(),
+            model: "light".into(),
+            class: 1,
+            pattern: ArrivalPattern::Poisson { rate_per_s: 40.0, n: 120 },
+        }];
+        let arrivals = merge_arrivals(&tenants, 7);
+        let run = |arm: bool| {
+            let mut board = BoardSim::new(
+                &reg, &cls, &ClusterOptions::default(),
+                LaneMatrix::duo(), "t")
+                .unwrap();
+            if arm {
+                board.arm_preemption(PreemptionPolicy::DeadlineBurn);
+            }
+            let mut now = 0.0;
+            let mut ai = 0;
+            loop {
+                while ai < arrivals.len() && arrivals[ai].at_us <= now {
+                    let a = arrivals[ai];
+                    ai += 1;
+                    board.offer(a.req, a.tenant, 1, 1, a.at_us);
+                }
+                match board.pump(now).unwrap() {
+                    None => {
+                        if ai >= arrivals.len() {
+                            break;
+                        }
+                        now = arrivals[ai].at_us;
+                    }
+                    Some(w) => {
+                        now = if ai < arrivals.len() {
+                            w.min(arrivals[ai].at_us)
+                        } else {
+                            w
+                        };
+                    }
+                }
+            }
+            board.finish(now).to_json_string()
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn steal_queue_drains_counts_and_preserves_identity() {
+        let reg = registry();
+        let cls = classes();
+        let mut a = BoardSim::new(
+            &reg, &cls, &ClusterOptions::default(), LaneMatrix::duo(),
+            "a")
+            .unwrap();
+        let mut b = BoardSim::new(
+            &reg, &cls, &ClusterOptions::default(), LaneMatrix::duo(),
+            "b")
+            .unwrap();
+        // Queue work on A without pumping — never dispatched.
+        for i in 0..5 {
+            a.offer(i, 0, 0, 1, 10.0 * i as f64);
+        }
+        for i in 5..8 {
+            a.offer(i, 0, 1, 1, 5.0);
+        }
+        let stolen = a.steal_queue(0, 60.0);
+        assert_eq!(stolen.len(), 5);
+        assert_eq!(a.snap.steals, 5);
+        assert_eq!(a.q.queue_len(0), 0, "stolen model fully drained");
+        assert_eq!(a.q.queue_len(1), 3, "other model untouched");
+        // Draining the other model again is a no-op steal-wise.
+        assert!(a.steal_queue(0, 61.0).is_empty());
+        assert_eq!(a.snap.steals, 5);
+        for (i, r) in stolen.iter().enumerate() {
+            assert_eq!(r.req, i);
+            assert_eq!(r.arrival_us, 10.0 * i as f64,
+                       "original arrival preserved");
+            assert_eq!(r.deadline_us,
+                       r.arrival_us + cls[1].deadline_us,
+                       "original deadline preserved");
+            assert!(b.readmit(*r, 60.0, false));
+        }
+        assert_eq!(b.q.queue_len(0), 5);
+        // Stolen requests land on the thief without an offered bump —
+        // conservation stays anchored to the victim's ledger.
+        assert_eq!(b.snap.total_offered(), 0);
     }
 }

@@ -48,6 +48,7 @@ use crate::faults::{
 use crate::power::PowerConfig;
 use crate::serve::cluster::{
     BoardSim, ClusterOptions, ClusterPolicy, LaneMatrix,
+    PreemptionPolicy,
 };
 use crate::serve::registry::ModelRegistry;
 use crate::serve::report::PerfSnapshot;
@@ -175,6 +176,12 @@ pub struct FleetOptions {
     /// ablation control: every request a crash strands is failed on
     /// the spot (still conserved — never silently lost).
     pub failover: bool,
+    /// Preemption / work re-placement policy
+    /// ([`PreemptionPolicy::Off`] = run-to-completion, bit-identical
+    /// to the pre-preemption path; `DeadlineBurn` arms board-level
+    /// batch cancellation; `BurnPlusSteal` adds the fleet's
+    /// work-stealing pass).
+    pub preempt: PreemptionPolicy,
 }
 
 impl FleetOptions {
@@ -194,6 +201,7 @@ impl FleetOptions {
             trace: None,
             faults: FaultPlan::none(),
             failover: true,
+            preempt: PreemptionPolicy::Off,
         }
     }
 }
@@ -321,6 +329,25 @@ impl FleetSnapshot {
     /// Summed board down-time, microseconds of virtual time.
     pub fn total_downtime_us(&self) -> f64 {
         self.aggregate.downtime_us
+    }
+
+    /// In-flight batches voluntarily cancelled fleet-wide to rescue
+    /// higher-class deadlines (0 unless preemption is armed).
+    pub fn total_preemptions(&self) -> u64 {
+        self.aggregate.preemptions
+    }
+
+    /// Queued requests re-placed between boards by the work-stealing
+    /// pass (0 unless `BurnPlusSteal`).
+    pub fn total_steals(&self) -> u64 {
+        self.aggregate.steals
+    }
+
+    /// Lane time executed by batches that were later preempted,
+    /// microseconds of virtual time — capacity billed as busy but
+    /// never served.
+    pub fn total_preempt_waste_us(&self) -> f64 {
+        self.aggregate.preempt_waste_us
     }
 
     /// Mean per-board CPU busy fraction over the makespan, [0, 1].
@@ -512,6 +539,14 @@ impl FleetSnapshot {
                 self.total_retries(),
                 self.total_failed(),
                 self.total_downtime_us() / 1e3,
+            ));
+        }
+        if self.total_preemptions() > 0 || self.total_steals() > 0 {
+            s.push_str(&format!(
+                " | preempt: {} preempted {} stolen {:.1}ms wasted",
+                self.total_preemptions(),
+                self.total_steals(),
+                self.total_preempt_waste_us() / 1e3,
             ));
         }
         s
@@ -760,6 +795,9 @@ pub fn run_fleet(
         if fault_on {
             board.arm_faults();
         }
+        if opts.preempt.preempts() {
+            board.arm_preemption(opts.preempt);
+        }
     }
     // Single-lane-kind price tables for degraded boards (a board whose
     // GPU lanes died quotes CPU-only batch-1 latencies to the router
@@ -994,6 +1032,12 @@ pub fn run_fleet(
             boards[b].offer(a.req, a.tenant, m, class, a.at_us);
             touched[b] = true;
         }
+        // BurnPlusSteal: after routing fresh arrivals, re-place work
+        // stranded behind long-running batches onto cheaper boards.
+        if opts.preempt.steals() {
+            steal_pass(now, &mut boards, &replicas, &health, &lat1_us,
+                       &mut elig, &mut touched);
+        }
         // Autoscaler tick.  The schedule only drives the clock while
         // work is standing (see below), so after an idle gap in the
         // arrival stream `next_tick_us` may lie far in the past: fire
@@ -1152,6 +1196,82 @@ fn count_active(replicas: &[Vec<Replica>], nm: usize) -> Vec<usize> {
         }
     }
     counts
+}
+
+/// The `BurnPlusSteal` work-stealing pass, run once per clock step at
+/// wake-up-heap granularity: for every stalled victim board (every
+/// schedulable lane busy strictly past `now` — detected through the
+/// same lane state the epoch-cached backlog estimates price) with
+/// queued work, re-place each queued model's never-dispatched
+/// requests onto the cheapest other eligible board.  A move happens
+/// only when the thief's priced backlog plus the model's batch-1
+/// latency (`lat1_us`, microseconds) undercuts *half* the victim's
+/// stall — factor-2 hysteresis, so marginal moves never ping-pong
+/// work between boards.  Stolen requests keep their original
+/// arrival/deadline and are never re-counted as admitted (see
+/// [`BoardSim::steal_queue`] / [`BoardSim::readmit`]); crashed or
+/// quarantined boards are excluded as thieves by
+/// [`eligible_boards_into`] and never scanned as victims.  The pend
+/// heap is untouched: stealing moves only work still owned by a
+/// board's admission queues, so a crash-drained request can never be
+/// both re-pended and stolen.
+fn steal_pass(
+    now: f64,
+    boards: &mut [BoardSim],
+    replicas: &[Vec<Replica>],
+    health: &Health,
+    lat1_us: &[f64],
+    elig: &mut Vec<usize>,
+    touched: &mut [bool],
+) {
+    for v in 0..boards.len() {
+        if health.down[v] || boards[v].total_queued() == 0 {
+            continue;
+        }
+        let stall = boards[v].stall_us(now);
+        if stall <= 0.0 {
+            continue; // a lane is free: the victim can dispatch now
+        }
+        for m in 0..lat1_us.len() {
+            if boards[v].queue_len(m) == 0 {
+                continue;
+            }
+            eligible_boards_into(m, now, replicas, health, elig);
+            elig.retain(|&b| b != v);
+            if elig.is_empty() {
+                continue;
+            }
+            let best = elig
+                .iter()
+                .map(|&b| boards[b].backlog_residual_us(now))
+                .fold(f64::INFINITY, f64::min);
+            // Factor-2 hysteresis: move only when the thief is
+            // decisively cheaper than waiting out the stall.  (An
+            // infinite stall — every lane kind down — always loses,
+            // so stranded work on a degraded board escapes.)
+            if 2.0 * (best + lat1_us[m]) >= stall {
+                continue;
+            }
+            let stolen = boards[v].steal_queue(m, now);
+            touched[v] = true;
+            for r in stolen {
+                // Re-pick per request: each readmit bumps the thief's
+                // epoch, so a large drain re-prices as it spreads.
+                let mut tb = elig[0];
+                let mut tb_score = f64::INFINITY;
+                for &b in elig.iter() {
+                    let s = boards[b].backlog_residual_us(now);
+                    if s < tb_score {
+                        tb = b;
+                        tb_score = s;
+                    }
+                }
+                // A refused readmit sheds on the thief: conserved.
+                boards[tb].readmit(r, now, false);
+                touched[tb] = true;
+            }
+        }
+    }
 }
 
 /// Collect the boards eligible for a model-`m` request at `now` into

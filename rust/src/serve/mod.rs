@@ -47,6 +47,7 @@ pub mod workload;
 
 pub use cluster::{
     run_cluster, ClusterOptions, ClusterPolicy, LaneMatrix,
+    PreemptionPolicy,
 };
 pub use fleet::{
     run_fleet, spread_placement, AutoscalePolicy, FleetOptions,

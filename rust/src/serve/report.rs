@@ -185,6 +185,19 @@ pub struct PerfSnapshot {
     /// Queued (not yet dispatched) requests drained off a crashed board
     /// and handed back to the front tier for re-placement.
     pub requeued: u64,
+    /// In-flight batches voluntarily cancelled to rescue a
+    /// higher-class deadline (preemption; their requests were requeued
+    /// with arrival/deadline preserved).  0 with
+    /// `PreemptionPolicy::Off` — all three preemption counters gate
+    /// the preempt JSON keys and summary tail.
+    pub preemptions: u64,
+    /// Queued (never dispatched) requests re-placed onto another board
+    /// by the work-stealing pass (counted on the victim board).
+    pub steals: u64,
+    /// Lane-time executed on batches that were later preempted,
+    /// microseconds of virtual time (the work stayed billed as lane
+    /// busy time but produced no served request).
+    pub preempt_waste_us: f64,
 }
 
 impl PerfSnapshot {
@@ -228,6 +241,9 @@ impl PerfSnapshot {
             lost_batches: 0,
             downtime_us: 0.0,
             requeued: 0,
+            preemptions: 0,
+            steals: 0,
+            preempt_waste_us: 0.0,
         }
     }
 
@@ -310,6 +326,9 @@ impl PerfSnapshot {
         self.lost_batches += other.lost_batches;
         self.downtime_us += other.downtime_us;
         self.requeued += other.requeued;
+        self.preemptions += other.preemptions;
+        self.steals += other.steals;
+        self.preempt_waste_us += other.preempt_waste_us;
         if self.governor.is_empty() {
             self.governor = other.governor.clone();
         }
@@ -363,6 +382,16 @@ impl PerfSnapshot {
             || self.requeued != 0
             || self.downtime_us != 0.0
             || self.total_failed() != 0
+    }
+
+    /// Whether any preemption accounting is non-zero — gates the
+    /// preempt keys out of [`PerfSnapshot::to_json`] and the summary
+    /// tail, keeping `PreemptionPolicy::Off` output byte-identical to
+    /// the pre-preemption report.
+    fn preempt_on(&self) -> bool {
+        self.preemptions != 0
+            || self.steals != 0
+            || self.preempt_waste_us != 0.0
     }
 
     /// Fraction of all offered requests served within deadline — the
@@ -450,6 +479,13 @@ impl PerfSnapshot {
             o.insert("downtime_us".into(), Value::Num(self.downtime_us));
             o.insert("requeued".into(),
                      Value::Num(self.requeued as f64));
+        }
+        if self.preempt_on() {
+            o.insert("preemptions".into(),
+                     Value::Num(self.preemptions as f64));
+            o.insert("steals".into(), Value::Num(self.steals as f64));
+            o.insert("preempt_waste_us".into(),
+                     Value::Num(self.preempt_waste_us));
         }
         if !self.governor.is_empty() {
             o.insert("governor".into(),
@@ -572,6 +608,14 @@ impl PerfSnapshot {
                 self.requeued,
                 self.total_failed(),
                 self.downtime_us / 1e3
+            ));
+        }
+        if self.preempt_on() {
+            s.push_str(&format!(
+                " | preempt: {} preempted {} stolen {:.1}ms wasted",
+                self.preemptions,
+                self.steals,
+                self.preempt_waste_us / 1e3
             ));
         }
         s
@@ -710,6 +754,39 @@ mod tests {
         assert_eq!(v.get("per_class").idx(0).get("failed")
                        .as_f64().unwrap(), 1.0);
         assert!(a.summary().contains("faults: 2 failovers"));
+    }
+
+    #[test]
+    fn preempt_fields_merge_and_gate_json_keys() {
+        let labels =
+            (vec!["c".to_string()], vec!["m".to_string()]);
+        let mut a = PerfSnapshot::new("fleet", "reject-new",
+                                      &labels.0, &labels.1);
+        // Preemption never fired: keys absent, summary has no tail.
+        let v = json::parse(&a.to_json_string()).unwrap();
+        assert!(v.get("preemptions").as_f64().is_none());
+        assert!(v.get("steals").as_f64().is_none());
+        assert!(v.get("preempt_waste_us").as_f64().is_none());
+        assert!(!a.summary().contains("preempt:"));
+
+        let mut b = a.clone();
+        a.preemptions = 2;
+        a.preempt_waste_us = 1_500.0;
+        b.preemptions = 1;
+        b.steals = 4;
+        b.preempt_waste_us = 500.0;
+        a.merge_from(&b);
+        assert_eq!(a.preemptions, 3);
+        assert_eq!(a.steals, 4);
+        assert!((a.preempt_waste_us - 2_000.0).abs() < 1e-9);
+        let v = json::parse(&a.to_json_string()).unwrap();
+        assert_eq!(v.get("preemptions").as_f64().unwrap(), 3.0);
+        assert_eq!(v.get("steals").as_f64().unwrap(), 4.0);
+        assert!((v.get("preempt_waste_us").as_f64().unwrap()
+                 - 2_000.0).abs() < 1e-9);
+        // Preemption alone never drags the fault keys in.
+        assert!(v.get("failovers").as_f64().is_none());
+        assert!(a.summary().contains("preempt: 3 preempted 4 stolen"));
     }
 
     #[test]

@@ -485,6 +485,37 @@ impl AdmissionQueues {
         slots.into_iter().map(|s| s.req).collect()
     }
 
+    /// Drain every queued request of one model, in admission (seq)
+    /// order — the work-stealing analogue of
+    /// [`AdmissionQueues::drain_all`].  The drained requests keep
+    /// their original `arrival_us`/`deadline_us` (microseconds of
+    /// virtual time) and re-enter another board via
+    /// [`AdmissionQueues::readmit`] without being re-counted as
+    /// admitted.  Ownership stays exclusive: a request lives in
+    /// exactly one board's rings *or* the fleet's pend-heap, so work
+    /// drained by a crash (and re-pended for retry) can never also be
+    /// stolen from here — stealing only ever sees requests a board
+    /// currently holds.
+    pub fn drain_model(&mut self, model: usize) -> Vec<QueuedReq> {
+        let mut slots: Vec<Slot> =
+            Vec::with_capacity(self.model_len[model]);
+        for ring in &mut self.rings[model] {
+            slots.extend(ring.drain(..));
+        }
+        slots.sort_by_key(|s| s.seq);
+        for s in &slots {
+            self.outstanding[s.req.class] -= 1;
+        }
+        self.total -= slots.len();
+        self.model_len[model] = 0;
+        if !slots.is_empty() {
+            // Removal can only raise the earliest deadline; recompute
+            // lazily like `account_removed`.
+            self.earliest_deadline = None;
+        }
+        slots.into_iter().map(|s| s.req).collect()
+    }
+
     /// Re-admit a request drained from another board's queues (its
     /// original `arrival_us`/`deadline_us` preserved).  Enforces the
     /// same cap/shed policy as [`AdmissionQueues::offer`] but does NOT
@@ -959,6 +990,33 @@ mod tests {
         assert_eq!(q.total_queued(), 1);
         q.drop_expired(1.0);
         assert!(q.shed.is_empty());
+    }
+
+    #[test]
+    fn drain_model_scopes_the_drain_and_keeps_accounting_exact() {
+        let cls = classes();
+        let mut q = AdmissionQueues::new(&cls, ShedPolicy::RejectNew, 2);
+        q.offer(0, 0, 0, 1, 0.0);
+        q.offer(1, 0, 1, 0, 1.0);
+        q.offer(2, 0, 0, 0, 2.0);
+        let stolen = q.drain_model(0);
+        // Admission (seq) order, original timestamps preserved; the
+        // other model's queue is untouched.
+        assert_eq!(stolen.iter().map(|r| r.req).collect::<Vec<_>>(),
+                   vec![0, 2]);
+        assert_eq!(stolen[0].arrival_us, 0.0);
+        assert_eq!(q.queue_len(0), 0);
+        assert_eq!(q.queue_len(1), 1);
+        assert_eq!(q.total_queued(), 1);
+        assert_eq!(q.admitted, 3, "stealing does not un-admit");
+        assert!(q.shed.is_empty(), "stealing sheds nothing");
+        // Expiry accounting survives the lazy earliest-deadline reset.
+        q.drop_expired(20_001.0);
+        assert_eq!(q.shed.len(), 1);
+        assert_eq!(q.shed[0].req, 1);
+        assert_eq!(q.total_queued(), 0);
+        // Draining an already-empty model is a no-op.
+        assert!(q.drain_model(0).is_empty());
     }
 
     #[test]

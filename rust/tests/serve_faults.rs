@@ -26,7 +26,8 @@ use sparoa::graph::ModelGraph;
 use sparoa::obs::{TraceConfig, TraceEvent};
 use sparoa::serve::{
     merge_arrivals, run_fleet, ArrivalPattern, FleetOptions,
-    FleetSnapshot, ModelRegistry, ShedPolicy, SloClass, Tenant,
+    FleetSnapshot, ModelRegistry, PreemptionPolicy, ShedPolicy,
+    SloClass, Tenant,
 };
 
 /// heavy = 0, mid = 1, light = 2 (the demo fleet's synthetic shapes).
@@ -444,4 +445,150 @@ fn failover_beats_no_failover_after_a_mid_run_crash() {
         "failover met {} <= no-failover met {}",
         met[&true], met[&false]
     );
+}
+
+/// Classes where voluntary preemption can actually fire: the
+/// interactive weight outranks a *full* best-effort batch (the burn
+/// check only cancels a victim whose still-meetable weight is below
+/// the rescued class weight, and a full batch of weight-1 requests
+/// totals batch-cap) and the interactive deadline sits far below a
+/// heavy batch's runtime so queued heads genuinely burn behind one.
+fn classes_rescue(reg: &ModelRegistry) -> Vec<SloClass> {
+    let (_, heavy_lat1, heavy_batch) = calibrate(reg, 0);
+    let (_, light_lat1, _) = calibrate(reg, 2);
+    let cap_w = reg.get(0).gpu_batch_cap.max(reg.get(0).cpu_batch_cap)
+        as f64;
+    vec![
+        SloClass::new("interactive", 10.0 * light_lat1, 128,
+                      cap_w + 64.0),
+        SloClass::new(
+            "standard",
+            (3.5 * heavy_batch).max(3.0 * heavy_lat1),
+            256,
+            2.0,
+        ),
+        SloClass::new("best-effort", 20.0 * heavy_batch, 512, 1.0),
+    ]
+}
+
+#[test]
+fn crash_racing_preemption_settles_exactly_once() {
+    // Preemption × faults interaction: a seeded crash lands inside an
+    // active preemption window (the overloaded run preempts
+    // continuously from the start) with BurnPlusSteal armed.  Drained,
+    // retried, preempted AND stolen requests must all settle exactly
+    // once — the in-flight ledger is shared between the crash and
+    // preempt retract paths, so a batch cancelled by one must be
+    // invisible to the other — and the quarantined board must never be
+    // a steal destination while down.
+    let reg = registry3();
+    let classes = classes_rescue(&reg);
+    let nb = 4;
+    // Heavy best-effort flood at 1.8x hosted capacity pins lanes with
+    // long weight-1 batches; a light interactive trickle burns behind
+    // them.
+    let (heavy_rate, _, _) = calibrate(&reg, 0);
+    let (light_rate, _, _) = calibrate(&reg, 2);
+    let n_heavy = 450usize;
+    let heavy_per_s = 1.8 * nb as f64 * heavy_rate;
+    let horizon_s = n_heavy as f64 / heavy_per_s;
+    let light_per_s = 0.10 * nb as f64 * light_rate;
+    let n_light = ((light_per_s * horizon_s) as usize).max(120);
+    let tenants = vec![
+        Tenant {
+            name: "heavy-be".into(),
+            model: "heavy".into(),
+            class: 2,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: heavy_per_s,
+                n: n_heavy,
+            },
+        },
+        Tenant {
+            name: "light-int".into(),
+            model: "light".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: light_per_s,
+                n: n_light,
+            },
+        },
+    ];
+    let arrivals = merge_arrivals(&tenants, 19);
+    let horizon = arrivals.last().unwrap().at_us;
+    let (crash_us, rejoin_us) = (0.45 * horizon, 0.75 * horizon);
+    let plan = FaultPlan {
+        faults: vec![Fault::Crash {
+            board: 1,
+            at_us: crash_us,
+            rejoin_us: Some(rejoin_us),
+        }],
+    };
+    let opts = FleetOptions {
+        preempt: PreemptionPolicy::BurnPlusSteal,
+        placement: all_on_all(nb),
+        trace: Some(TraceConfig::default()),
+        faults: plan,
+        ..FleetOptions::new(nb, 3)
+    };
+    let snap =
+        run_fleet(&reg, &classes, &tenants, &arrivals, &opts).unwrap();
+    check_conserved(&snap, arrivals.len());
+    assert_eq!(snap.total_failovers(), 1, "exactly one crash was armed");
+    assert!(snap.total_preemptions() > 0,
+            "overloaded run never preempted — the race is vacuous");
+    for (i, b) in snap.boards.iter().enumerate() {
+        assert_eq!(b.trace_dropped, 0, "board {i} dropped trace records");
+    }
+    // The crash really raced preemption churn: cancellations happened
+    // before the scheduled crash instant.
+    let preempts_before = snap
+        .boards
+        .iter()
+        .flat_map(|b| b.trace_events.iter())
+        .any(|r| {
+            matches!(r.event, TraceEvent::Preempt { .. })
+                && r.t_us < crash_us
+        });
+    assert!(preempts_before, "no preemption fired before the crash");
+
+    // Served exactly once: QueueWait is the per-request serve marker,
+    // covering drained, retried, preempted and stolen requests alike.
+    let queue_waits: u64 = snap
+        .boards
+        .iter()
+        .map(|b| {
+            b.trace_events
+                .iter()
+                .filter(|r| {
+                    matches!(r.event, TraceEvent::QueueWait { .. })
+                })
+                .count() as u64
+        })
+        .sum();
+    assert_eq!(queue_waits, snap.aggregate.total_served(),
+               "a request was served zero or multiple times");
+
+    // Quarantine: a down board is excluded from steal destinations, so
+    // nothing may dispatch on it between its down and up markers.
+    let crashed = &snap.boards[1];
+    let t_down = crashed
+        .trace_events
+        .iter()
+        .find(|r| r.event == TraceEvent::BoardDown)
+        .expect("BoardDown was traced")
+        .t_us;
+    let t_up = crashed
+        .trace_events
+        .iter()
+        .find(|r| r.event == TraceEvent::BoardUp)
+        .expect("BoardUp was traced")
+        .t_us;
+    let dispatched_while_down = crashed.trace_events.iter().any(|r| {
+        matches!(r.event, TraceEvent::Dispatch { .. })
+            && r.t_us > t_down
+            && r.t_us < t_up
+    });
+    assert!(!dispatched_while_down,
+            "work was stolen onto (or dispatched by) a down board");
 }

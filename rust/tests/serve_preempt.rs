@@ -1,0 +1,515 @@
+//! Differential scheduling invariants for cross-board preemption +
+//! work re-placement — always-on (synthetic models + checked-in device
+//! profiles; no `make artifacts` gating).
+//!
+//! * bit-stability: `PreemptionPolicy::Off` runs are byte-identical to
+//!   the default path (and deterministic), and no preempt counters
+//!   leak into their JSON;
+//! * conservation: randomized workloads × all three policies × all
+//!   three routers keep `offered == served + shed + failed` exact with
+//!   preemptions and steals active (the per-request settled-set
+//!   `debug_assert` inside the board additionally panics the test
+//!   binary if any preempted request were ever settled twice);
+//! * exactly-once: every served request has exactly one `QueueWait`
+//!   trace record even on runs where batches were preempted and work
+//!   was stolen between boards;
+//! * energy: the per-board energy ledger still equals the
+//!   busy-interval trace integral after preemption retracts/refunds
+//!   (the `serve_energy.rs` reconciliation, now with retired batches);
+//! * value: `DeadlineBurn` strictly beats `Off` on interactive-class
+//!   attainment under overload across 3 seeds — the acceptance
+//!   criterion;
+//! * pend-heap × steal race: a mid-run crash (drain + re-pend + retry)
+//!   concurrent with `BurnPlusSteal` stealing still settles every
+//!   request exactly once — stealing only moves work owned by a
+//!   board's admission queues, never the fleet's pend heap.
+
+use sparoa::api::SessionBuilder;
+use sparoa::bench_support::{device_profile, prop};
+use sparoa::device::Proc;
+use sparoa::faults::{Fault, FaultPlan};
+use sparoa::graph::ModelGraph;
+use sparoa::obs::{TraceConfig, TraceEvent};
+use sparoa::power::{Governor, PowerConfig, PowerProfile};
+use sparoa::serve::{
+    merge_arrivals, run_fleet, ArrivalPattern, FleetOptions,
+    FleetSnapshot, ModelRegistry, PerfSnapshot, PreemptionPolicy,
+    RouterPolicy, SloClass, Tenant,
+};
+
+/// heavy = 0, mid = 1, light = 2 (the demo fleet's synthetic shapes).
+fn registry3() -> ModelRegistry {
+    let dev = device_profile("agx_orin");
+    let mut reg = ModelRegistry::new();
+    for (name, blocks, scale, sparsity) in [
+        ("heavy", 8, 6.0, 0.1),
+        ("mid", 6, 1.5, 0.45),
+        ("light", 4, 0.3, 0.75),
+    ] {
+        let s = SessionBuilder::new()
+            .with_graph(ModelGraph::synthetic(
+                name, blocks, scale, sparsity))
+            .with_device(dev.clone())
+            .policy("greedy")
+            .build()
+            .unwrap();
+        reg.register(s).unwrap();
+    }
+    reg
+}
+
+/// Per-model calibration: (max req/s of one replica's best lane at the
+/// full Alg.2 batch, batch-1 cheapest latency us, full-batch latency us).
+fn calibrate(reg: &ModelRegistry, m: usize) -> (f64, f64, f64) {
+    let e = reg.get(m);
+    let cap = e.gpu_batch_cap.max(1);
+    let batch_lat = e.latency_us(Proc::Gpu, cap).unwrap();
+    let gpu_rate = cap as f64 / batch_lat * 1e6;
+    let ccap = e.cpu_batch_cap.max(1);
+    let cpu_batch_lat = e.latency_us(Proc::Cpu, ccap).unwrap();
+    let cpu_rate = ccap as f64 / cpu_batch_lat * 1e6;
+    let lat1 = e.cheapest_latency_us(1).unwrap();
+    (gpu_rate.max(cpu_rate), lat1, batch_lat)
+}
+
+/// Classes tuned so preemption has teeth.  The interactive deadline
+/// sits far below a heavy best-effort batch's runtime (so an
+/// interactive head genuinely burns behind one), and the interactive
+/// weight outranks a *full* best-effort batch: the burn check only
+/// cancels a victim whose still-meetable weight (at most batch-cap ×
+/// 1.0) is below the rescued class weight.
+fn classes_preempt(reg: &ModelRegistry) -> Vec<SloClass> {
+    let (_, heavy_lat1, heavy_batch) = calibrate(reg, 0);
+    let (_, light_lat1, _) = calibrate(reg, 2);
+    let cap_w = reg.get(0).gpu_batch_cap.max(reg.get(0).cpu_batch_cap)
+        as f64;
+    vec![
+        SloClass::new("interactive", 10.0 * light_lat1, 128,
+                      cap_w + 64.0),
+        SloClass::new(
+            "standard",
+            (3.5 * heavy_batch).max(3.0 * heavy_lat1),
+            256,
+            2.0,
+        ),
+        SloClass::new("best-effort", 20.0 * heavy_batch, 512, 1.0),
+    ]
+}
+
+/// The preemption stress mix: a heavy best-effort flood at `frac` of
+/// the fleet's hosted capacity (long weight-1 batches that pin lanes)
+/// plus a light interactive trickle whose tight deadlines burn behind
+/// them.
+fn overload_tenants(
+    reg: &ModelRegistry,
+    hosts: usize,
+    frac: f64,
+    n_heavy: usize,
+) -> Vec<Tenant> {
+    let (heavy_rate, _, _) = calibrate(reg, 0);
+    let (light_rate, _, _) = calibrate(reg, 2);
+    let heavy_per_s = frac * hosts as f64 * heavy_rate;
+    let horizon_s = n_heavy as f64 / heavy_per_s;
+    let light_per_s = 0.10 * hosts as f64 * light_rate;
+    let n_light = ((light_per_s * horizon_s) as usize).max(120);
+    vec![
+        Tenant {
+            name: "heavy-be".into(),
+            model: "heavy".into(),
+            class: 2,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: heavy_per_s,
+                n: n_heavy,
+            },
+        },
+        Tenant {
+            name: "light-int".into(),
+            model: "light".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: light_per_s,
+                n: n_light,
+            },
+        },
+    ]
+}
+
+/// All three models warm on every board: steals and crash failovers
+/// always have an eligible destination.
+fn all_on_all(nb: usize) -> Vec<Vec<usize>> {
+    vec![vec![0, 1, 2]; nb]
+}
+
+fn check_conserved(snap: &FleetSnapshot, n_arrivals: usize) {
+    assert_eq!(snap.aggregate.total_offered() as usize, n_arrivals,
+               "fleet lost or duplicated requests at admission");
+    assert_eq!(
+        snap.aggregate.total_served()
+            + snap.aggregate.total_shed()
+            + snap.total_failed(),
+        snap.aggregate.total_offered(),
+        "conservation broken: served {} + shed {} + failed {} != \
+         offered {}",
+        snap.aggregate.total_served(),
+        snap.aggregate.total_shed(),
+        snap.total_failed(),
+        snap.aggregate.total_offered()
+    );
+}
+
+#[test]
+fn off_policy_is_byte_stable_and_leaks_no_preempt_keys() {
+    // `Off` must arm nothing: the report is byte-identical whether the
+    // policy is spelled out or left at the default, the run is
+    // deterministic, and no preempt counters appear in its JSON.
+    let reg = registry3();
+    let classes = classes_preempt(&reg);
+    let tenants = overload_tenants(&reg, 3, 1.2, 220);
+    let arrivals = merge_arrivals(&tenants, 17);
+    let run = |preempt: PreemptionPolicy| {
+        let opts = FleetOptions {
+            preempt,
+            placement: all_on_all(3),
+            ..FleetOptions::new(3, 3)
+        };
+        run_fleet(&reg, &classes, &tenants, &arrivals, &opts)
+            .unwrap()
+            .to_json_string()
+    };
+    let default_opts = FleetOptions {
+        placement: all_on_all(3),
+        ..FleetOptions::new(3, 3)
+    };
+    let baseline =
+        run_fleet(&reg, &classes, &tenants, &arrivals, &default_opts)
+            .unwrap()
+            .to_json_string();
+    assert_eq!(baseline, run(PreemptionPolicy::Off),
+               "explicit Off differs from the default path");
+    assert_eq!(baseline, run(PreemptionPolicy::Off),
+               "Off run is not deterministic");
+    assert!(!baseline.contains("preemptions"),
+            "preempt counters leaked into an Off report");
+    assert!(!baseline.contains("preempt_waste_us"),
+            "preempt waste leaked into an Off report");
+    assert!(!baseline.contains("\"steals\""),
+            "steal counters leaked into an Off report");
+}
+
+#[test]
+fn conservation_exact_across_policies_and_routers() {
+    #[derive(Debug)]
+    struct Case {
+        nb: usize,
+        router: RouterPolicy,
+        preempt: PreemptionPolicy,
+        frac: f64,
+        seed: u64,
+    }
+    let reg = registry3();
+    let classes = classes_preempt(&reg);
+    let routers = [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::JoinShortestQueue,
+        RouterPolicy::CostAware,
+    ];
+    let policies = [
+        PreemptionPolicy::Off,
+        PreemptionPolicy::DeadlineBurn,
+        PreemptionPolicy::BurnPlusSteal,
+    ];
+    let mut preempting_runs = 0usize;
+    prop::check(
+        "preempt-conservation",
+        9,
+        20_260_807,
+        |rng| Case {
+            nb: 2 + rng.below(3),
+            router: routers[rng.below(3)],
+            preempt: policies[rng.below(3)],
+            frac: rng.range(0.8, 2.2),
+            seed: rng.next_u64() % 10_000,
+        },
+        |c| {
+            let tenants = overload_tenants(&reg, c.nb, c.frac, 150);
+            let arrivals = merge_arrivals(&tenants, c.seed);
+            let opts = FleetOptions {
+                router: c.router,
+                preempt: c.preempt,
+                placement: all_on_all(c.nb),
+                ..FleetOptions::new(c.nb, 3)
+            };
+            let snap =
+                run_fleet(&reg, &classes, &tenants, &arrivals, &opts)
+                    .map_err(|e| e.to_string())?;
+            let n = arrivals.len() as u64;
+            if snap.aggregate.total_offered() != n {
+                return Err(format!(
+                    "offered {} != arrivals {n}",
+                    snap.aggregate.total_offered()
+                ));
+            }
+            let settled = snap.aggregate.total_served()
+                + snap.aggregate.total_shed()
+                + snap.total_failed();
+            if settled != n {
+                return Err(format!(
+                    "conservation broken: served {} + shed {} + \
+                     failed {} = {settled} != {n}",
+                    snap.aggregate.total_served(),
+                    snap.aggregate.total_shed(),
+                    snap.total_failed()
+                ));
+            }
+            // Policy gating: counters only move when armed.
+            match c.preempt {
+                PreemptionPolicy::Off => {
+                    if snap.total_preemptions() != 0
+                        || snap.total_steals() != 0
+                        || snap.total_preempt_waste_us() != 0.0
+                    {
+                        return Err("Off run preempted or stole".into());
+                    }
+                }
+                PreemptionPolicy::DeadlineBurn => {
+                    if snap.total_steals() != 0 {
+                        return Err(
+                            "DeadlineBurn run stole work".into());
+                    }
+                }
+                PreemptionPolicy::BurnPlusSteal => {}
+            }
+            if snap.total_preemptions() > 0 {
+                preempting_runs += 1;
+            }
+            Ok(())
+        },
+    );
+    assert!(preempting_runs > 0,
+            "no randomized case ever preempted — the suite is vacuous");
+}
+
+#[test]
+fn preempting_run_serves_every_request_exactly_once() {
+    // Exactly-once under preemption: QueueWait is the per-request
+    // serve marker; a preempted-then-requeued request must produce
+    // exactly one, and the run must actually preempt to count.
+    let reg = registry3();
+    let classes = classes_preempt(&reg);
+    let nb = 3;
+    let tenants = overload_tenants(&reg, nb, 1.8, 400);
+    let arrivals = merge_arrivals(&tenants, 11);
+    let opts = FleetOptions {
+        preempt: PreemptionPolicy::DeadlineBurn,
+        placement: all_on_all(nb),
+        trace: Some(TraceConfig::default()),
+        ..FleetOptions::new(nb, 3)
+    };
+    let snap =
+        run_fleet(&reg, &classes, &tenants, &arrivals, &opts).unwrap();
+    check_conserved(&snap, arrivals.len());
+    assert!(snap.total_preemptions() > 0,
+            "overload run never preempted");
+    assert!(snap.total_preempt_waste_us() > 0.0,
+            "preemptions reported but no waste accrued");
+    for (i, b) in snap.boards.iter().enumerate() {
+        assert_eq!(b.trace_dropped, 0, "board {i} dropped trace records");
+    }
+    let queue_waits: u64 = snap
+        .boards
+        .iter()
+        .map(|b| {
+            b.trace_events
+                .iter()
+                .filter(|r| {
+                    matches!(r.event, TraceEvent::QueueWait { .. })
+                })
+                .count() as u64
+        })
+        .sum();
+    assert_eq!(queue_waits, snap.aggregate.total_served(),
+               "a request was served zero or multiple times");
+}
+
+#[test]
+fn energy_ledger_reconciles_after_preemption_retracts() {
+    // The serve_energy.rs reconciliation, now with retracted batches:
+    // BoardPower::retract must refund the cancelled tail from both the
+    // ledger and the busy-interval trace so they still agree exactly.
+    let reg = registry3();
+    let classes = classes_preempt(&reg);
+    let nb = 3;
+    let tenants = overload_tenants(&reg, nb, 1.8, 350);
+    let arrivals = merge_arrivals(&tenants, 29);
+    let profile =
+        PowerProfile::from_device(&device_profile("agx_orin")).unwrap();
+    let mut pc = PowerConfig::new(profile, Governor::RaceToIdle);
+    pc.trace = true;
+    let opts = FleetOptions {
+        preempt: PreemptionPolicy::DeadlineBurn,
+        placement: all_on_all(nb),
+        power: Some(pc),
+        ..FleetOptions::new(nb, 3)
+    };
+    let snap =
+        run_fleet(&reg, &classes, &tenants, &arrivals, &opts).unwrap();
+    check_conserved(&snap, arrivals.len());
+    assert!(snap.total_preemptions() > 0,
+            "no preemption fired — the retract path went unexercised");
+    for (i, board) in snap.boards.iter().enumerate() {
+        assert_eq!(board.power_trace_dropped, 0,
+                   "board {i} dropped busy intervals — raise trace_cap");
+        let busy_mj: f64 = board
+            .power_trace
+            .iter()
+            .map(|e| e.busy_w * (e.finish_us - e.start_us))
+            .sum::<f64>()
+            / 1e3;
+        if busy_mj > 0.0 {
+            let rel = (board.busy_energy_mj - busy_mj).abs()
+                / busy_mj.abs().max(1e-12);
+            assert!(rel < 1e-6,
+                    "board {i} busy ledger {} != trace {busy_mj}",
+                    board.busy_energy_mj);
+        }
+        let integral = integrate_board(board);
+        let denom =
+            board.energy_mj.abs().max(integral.abs()).max(1e-12);
+        assert!(
+            ((board.energy_mj - integral) / denom).abs() < 1e-6,
+            "board {i} energy {} != integral {integral}",
+            board.energy_mj
+        );
+    }
+}
+
+/// Integrate one board's power timeline from its busy-interval trace
+/// (same reconstruction as `serve_energy.rs`).  Returns mJ.
+fn integrate_board(snap: &PerfSnapshot) -> f64 {
+    let over_floor: f64 = snap
+        .power_trace
+        .iter()
+        .map(|e| (e.busy_w - e.idle_w) * (e.finish_us - e.start_us))
+        .sum();
+    (over_floor + (snap.idle_floor_w + snap.soc_w)
+        * snap.power_horizon_us)
+        / 1e3
+}
+
+#[test]
+fn deadline_burn_beats_off_on_high_class_attainment() {
+    // The acceptance scenario: under overload, cancelling weight-1
+    // best-effort batches must strictly lift interactive attainment
+    // over run-to-completion, across 3 seeds.
+    let reg = registry3();
+    let classes = classes_preempt(&reg);
+    let nb = 4;
+    let mut hi_met = std::collections::HashMap::new();
+    let mut burn_preemptions = 0u64;
+    for preempt in [PreemptionPolicy::Off, PreemptionPolicy::DeadlineBurn]
+    {
+        let mut met = 0u64;
+        for seed in [3u64, 7u64, 11u64] {
+            let tenants = overload_tenants(&reg, nb, 1.8, 500);
+            let arrivals = merge_arrivals(&tenants, seed);
+            let opts = FleetOptions {
+                preempt,
+                placement: all_on_all(nb),
+                ..FleetOptions::new(nb, 3)
+            };
+            let snap =
+                run_fleet(&reg, &classes, &tenants, &arrivals, &opts)
+                    .unwrap();
+            check_conserved(&snap, arrivals.len());
+            if preempt.preempts() {
+                burn_preemptions += snap.total_preemptions();
+            } else {
+                assert_eq!(snap.total_preemptions(), 0);
+            }
+            met += snap.aggregate.per_class[0].met;
+        }
+        hi_met.insert(preempt.name(), met);
+    }
+    assert!(burn_preemptions > 0,
+            "DeadlineBurn never fired across 3 overload seeds");
+    assert!(
+        hi_met["deadline-burn"] > hi_met["off"],
+        "DeadlineBurn interactive met {} <= Off {}",
+        hi_met["deadline-burn"], hi_met["off"]
+    );
+}
+
+#[test]
+fn pend_heap_and_steal_race_settles_exactly_once() {
+    // Regression for the drain/steal double-count risk: a mid-run
+    // crash drains a board's queues into the fleet pend heap (and
+    // retries its lost batches) while BurnPlusSteal keeps stealing
+    // queued work between survivor boards.  Ownership must stay
+    // exclusive — every request settles exactly once and conservation
+    // stays exact.
+    let reg = registry3();
+    let classes = classes_preempt(&reg);
+    let nb = 4;
+    let tenants = overload_tenants(&reg, nb, 1.6, 500);
+    let arrivals = merge_arrivals(&tenants, 13);
+    let horizon = arrivals.last().unwrap().at_us;
+    let plan = FaultPlan {
+        faults: vec![Fault::Crash {
+            board: 1,
+            at_us: 0.4 * horizon,
+            rejoin_us: Some(0.7 * horizon),
+        }],
+    };
+    let opts = FleetOptions {
+        preempt: PreemptionPolicy::BurnPlusSteal,
+        placement: all_on_all(nb),
+        faults: plan,
+        trace: Some(TraceConfig::default()),
+        ..FleetOptions::new(nb, 3)
+    };
+    let snap =
+        run_fleet(&reg, &classes, &tenants, &arrivals, &opts).unwrap();
+    check_conserved(&snap, arrivals.len());
+    assert_eq!(snap.total_failovers(), 1);
+    assert!(snap.total_requeued() + snap.aggregate.lost_batches > 0,
+            "crash stranded nothing — the race never happened");
+    for (i, b) in snap.boards.iter().enumerate() {
+        assert_eq!(b.trace_dropped, 0, "board {i} dropped trace records");
+    }
+    let queue_waits: u64 = snap
+        .boards
+        .iter()
+        .map(|b| {
+            b.trace_events
+                .iter()
+                .filter(|r| {
+                    matches!(r.event, TraceEvent::QueueWait { .. })
+                })
+                .count() as u64
+        })
+        .sum();
+    assert_eq!(queue_waits, snap.aggregate.total_served(),
+               "a request was served zero or multiple times");
+    // Quarantine: the crashed board is never a steal destination (no
+    // Dispatch lands on it between its down and up markers).
+    let crashed = &snap.boards[1];
+    let t_down = crashed
+        .trace_events
+        .iter()
+        .find(|r| r.event == TraceEvent::BoardDown)
+        .expect("BoardDown was traced")
+        .t_us;
+    let t_up = crashed
+        .trace_events
+        .iter()
+        .find(|r| r.event == TraceEvent::BoardUp)
+        .expect("BoardUp was traced")
+        .t_us;
+    let dispatched_while_down = crashed.trace_events.iter().any(|r| {
+        matches!(r.event, TraceEvent::Dispatch { .. })
+            && r.t_us > t_down
+            && r.t_us < t_up
+    });
+    assert!(!dispatched_while_down,
+            "work was stolen onto (or dispatched by) a down board");
+}
