@@ -1,0 +1,367 @@
+//! Tail-tolerance figure: a fleet where two boards gray-fail —
+//! thermally stretched to ~3x their advertised latency for most of the
+//! run while staying up and accepting work — the failure mode a
+//! liveness check never sees.  The tail extension's headline numbers.
+//!
+//! Arms:
+//! * `off` — no detection, no hedging (bit-identical to the pre-tail
+//!   path; its report carries no tail counters);
+//! * `breaker` — the gray-failure detector (realized-vs-predicted
+//!   dispatch-latency EWMA) trips a per-board circuit breaker; open
+//!   boards leave routing/steal/autoscale placement and recover
+//!   through low-rate probe dispatches;
+//! * `hedge+breaker` — adds hedged dispatch: a deadline-at-risk
+//!   interactive head is re-offered to the next-cheapest routable
+//!   board, the first finish wins and the loser is cancelled through
+//!   the in-flight ledger (lane time and energy refunded, duplicate
+//!   work billed as `hedge_waste_us`).
+//!
+//! Every arm runs the same three seeds and is checked for exact
+//! conservation: offered == served + shed + failed, hedged requests
+//! settle exactly once.  The virtual-time fleet is deterministic, so
+//! every number is machine-independent.  Full runs write the measured
+//! lines to `BENCH_tail.json`; `--ci` re-checks conservation, requires
+//! hedge+breaker to strictly beat the control on interactive
+//! attainment, caps hedge waste at 15% of served busy time, and gates
+//! the hedge/off attainment ratio against the committed baseline.
+
+use sparoa::bench_support::{baseline, Table};
+use sparoa::device::Proc;
+use sparoa::faults::{Fault, FaultPlan};
+use sparoa::serve::{
+    demo, merge_arrivals, run_fleet, ArrivalPattern, FleetOptions,
+    FleetSnapshot, RouterPolicy, SloClass, TailParams, TailPolicy,
+    Tenant,
+};
+
+const BOARDS: usize = 6;
+/// Boards gray-failing through the thermal window.
+const GRAY_BOARDS: [usize; 2] = [0, 1];
+/// Latency stretch on the gray boards (well past the detector's 1.4x
+/// suspect factor).
+const GRAY_SCALE: f64 = 2.8;
+/// Flood arrival rate as a multiple of the fleet's aggregate capacity
+/// — near saturation, so a stretched board builds real queues.
+const LOAD: f64 = 0.95;
+const N_FLOOD: usize = 500;
+const SEEDS: [u64; 3] = [3, 7, 11];
+/// `--ci` cap on lane time burned on cancelled losers and duplicate
+/// hedge finishes, as a fraction of the fleet's served busy time.
+const CI_WASTE_FRAC: f64 = 0.15;
+/// `--ci` budget on the hedge/off interactive-attainment ratio drift
+/// against the committed baseline.
+const CI_RATIO_BUDGET: f64 = 1.05;
+const CI_NUM_KEY: &str = "attain_hi_hedge";
+const CI_DEN_KEY: &str = "attain_hi_off";
+
+const ARMS: [TailPolicy; 3] = [
+    TailPolicy::OFF,
+    TailPolicy { hedge: false, breaker: true },
+    TailPolicy { hedge: true, breaker: true },
+];
+
+struct Arm {
+    tail: TailPolicy,
+    /// One snapshot per seed.
+    snaps: Vec<FleetSnapshot>,
+    n_arrivals: Vec<usize>,
+}
+
+fn conserved(name: &str, snap: &FleetSnapshot, n: usize) -> bool {
+    let offered = snap.aggregate.total_offered();
+    let settled = snap.aggregate.total_served()
+        + snap.aggregate.total_shed()
+        + snap.total_failed();
+    if offered as usize != n || settled != offered {
+        eprintln!(
+            "fig_tail conservation broken in `{name}`: {n} arrivals, \
+             offered {offered}, served {} + shed {} + failed {} = \
+             {settled}",
+            snap.aggregate.total_served(),
+            snap.aggregate.total_shed(),
+            snap.total_failed()
+        );
+        return false;
+    }
+    true
+}
+
+/// Interactive-class (class 0) deadline attainment over all seeds.
+fn hi_attain(arm: &Arm) -> f64 {
+    let (met, offered) = arm.snaps.iter().fold((0u64, 0u64), |(m, o), s| {
+        let g = &s.aggregate.per_class[0];
+        (m + g.met, o + g.offered)
+    });
+    met as f64 / offered.max(1) as f64
+}
+
+fn sum<T: Fn(&FleetSnapshot) -> f64>(arm: &Arm, f: T) -> f64 {
+    arm.snaps.iter().map(f).sum()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let ci = args.iter().any(|a| a == "--ci");
+
+    let device = "agx_orin";
+    let registry = demo::registry(&sparoa::artifacts_dir(), device)
+        .expect("building demo registry");
+
+    // Calibrate the roles (works on both the synthetic and artifact
+    // registries): the flood model has the longest full-cap batch, the
+    // interactive model the cheapest batch-1 latency.
+    let cal: Vec<(f64, f64, f64)> = (0..registry.len())
+        .map(|m| {
+            let e = registry.get(m);
+            let cap = e.gpu_batch_cap.max(1);
+            let batch_lat = e.latency_us(Proc::Gpu, cap).unwrap();
+            let rate = cap as f64 / batch_lat * 1e6;
+            (rate, e.cheapest_latency_us(1).unwrap(), batch_lat)
+        })
+        .collect();
+    let flood = (0..cal.len())
+        .max_by(|&a, &b| cal[a].2.total_cmp(&cal[b].2))
+        .unwrap();
+    let inter = (0..cal.len())
+        .min_by(|&a, &b| cal[a].1.total_cmp(&cal[b].1))
+        .unwrap();
+    assert_ne!(flood, inter, "degenerate registry: one model is both \
+                              the flood and the interactive role");
+    let (flood_rate, _, flood_batch) = cal[flood];
+    let (inter_rate, inter_lat1, _) = cal[inter];
+
+    // The interactive deadline is a modest multiple of its batch-1
+    // latency: beatable on a healthy board, doomed behind a stretched
+    // one — the hedge's decision margin.
+    let deadline_us = (12.0 * inter_lat1).max(1.05 * inter_lat1);
+    let classes = vec![
+        SloClass::new("interactive", deadline_us, 128, 4.0),
+        SloClass::new("best-effort", 20.0 * flood_batch, 512, 1.0),
+    ];
+    let flood_per_s = LOAD * BOARDS as f64 * flood_rate;
+    let horizon_s = N_FLOOD as f64 / flood_per_s;
+    let inter_per_s = 0.35 * inter_rate;
+    let n_inter = ((inter_per_s * horizon_s) as usize).max(150);
+    let tenants = vec![
+        Tenant {
+            name: "flood-be".into(),
+            model: registry.get(flood).name.clone(),
+            class: 1,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: flood_per_s,
+                n: N_FLOOD,
+            },
+        },
+        Tenant {
+            name: "interactive".into(),
+            model: registry.get(inter).name.clone(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: inter_per_s,
+                n: n_inter,
+            },
+        },
+    ];
+
+    // Every model on every board: hedges and breaker re-routing always
+    // have an eligible destination.  Round-robin keeps sending fresh
+    // work onto the gray boards until the breaker learns better.
+    let placement: Vec<Vec<usize>> =
+        vec![(0..registry.len()).collect(); BOARDS];
+    // Breaker timescales sized to the bench horizon (the defaults suit
+    // the longer demo workloads).
+    let params = TailParams {
+        open_cooldown_us: 8_000.0,
+        probe_interval_us: 2_000.0,
+        ..TailParams::default()
+    };
+    let run = |tail: TailPolicy, seed: u64| -> (FleetSnapshot, usize) {
+        let arrivals = merge_arrivals(&tenants, seed);
+        let horizon = arrivals.last().expect("arrivals").at_us;
+        let faults = FaultPlan {
+            faults: GRAY_BOARDS
+                .iter()
+                .flat_map(|&b| {
+                    [Proc::Gpu, Proc::Cpu].into_iter().map(move |p| {
+                        Fault::Thermal {
+                            board: b,
+                            proc: p,
+                            at_us: 0.15 * horizon,
+                            until_us: 0.75 * horizon,
+                            scale: GRAY_SCALE,
+                        }
+                    })
+                })
+                .collect(),
+        };
+        let opts = FleetOptions {
+            router: RouterPolicy::RoundRobin,
+            placement: placement.clone(),
+            tail,
+            tail_params: params,
+            faults,
+            ..FleetOptions::new(BOARDS, registry.len())
+        };
+        let snap =
+            run_fleet(&registry, &classes, &tenants, &arrivals, &opts)
+                .expect("fleet run");
+        (snap, arrivals.len())
+    };
+    let arms: Vec<Arm> = ARMS
+        .into_iter()
+        .map(|tail| {
+            let (snaps, n_arrivals) = SEEDS
+                .iter()
+                .map(|&s| run(tail, s))
+                .unzip();
+            Arm { tail, snaps, n_arrivals }
+        })
+        .collect();
+
+    let mut ok = true;
+    for a in &arms {
+        for (s, &n) in a.snaps.iter().zip(&a.n_arrivals) {
+            ok &= conserved(a.tail.name(), s, n);
+        }
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "tail — {BOARDS} boards ({} gray-failing x{GRAY_SCALE:.1} \
+             latency) on {device}, {} seeds",
+            GRAY_BOARDS.len(),
+            SEEDS.len()
+        ),
+        &["arm", "interactive attain", "served", "opens", "probes",
+          "hedges (won)", "hedge waste ms"],
+    );
+    for a in &arms {
+        t.row(vec![
+            a.tail.name().into(),
+            format!("{:.1}%", 100.0 * hi_attain(a)),
+            format!("{:.0}",
+                    sum(a, |s| s.aggregate.total_served() as f64)),
+            format!("{:.0}",
+                    sum(a, |s| s.total_breaker_opens() as f64)),
+            format!("{:.0}", sum(a, |s| s.total_probes() as f64)),
+            format!(
+                "{:.0} ({:.0})",
+                sum(a, |s| s.total_hedges() as f64),
+                sum(a, |s| s.total_hedge_wins() as f64)
+            ),
+            format!("{:.1}",
+                    sum(a, |s| s.total_hedge_waste_us()) / 1e3),
+        ]);
+    }
+    t.print();
+
+    let (off, brk, hedge) = (&arms[0], &arms[1], &arms[2]);
+    println!(
+        "\ngray boards poison the tail until the breaker benches them \
+         and hedges rescue at-risk heads: interactive attainment \
+         {:.1}% (off) -> {:.1}% (breaker, {:.0} opens) -> {:.1}% \
+         (hedge+breaker, {:.0} hedges, {:.1} ms duplicate work).",
+        100.0 * hi_attain(off),
+        100.0 * hi_attain(brk),
+        sum(brk, |s| s.total_breaker_opens() as f64),
+        100.0 * hi_attain(hedge),
+        sum(hedge, |s| s.total_hedges() as f64),
+        sum(hedge, |s| s.total_hedge_waste_us()) / 1e3,
+    );
+
+    let lines: Vec<(String, f64)> = vec![
+        ("attain_hi_off".into(), hi_attain(off)),
+        ("attain_hi_breaker".into(), hi_attain(brk)),
+        ("attain_hi_hedge".into(), hi_attain(hedge)),
+        ("served_off".into(),
+         sum(off, |s| s.aggregate.total_served() as f64)),
+        ("served_hedge".into(),
+         sum(hedge, |s| s.aggregate.total_served() as f64)),
+        ("opens_breaker".into(),
+         sum(brk, |s| s.total_breaker_opens() as f64)),
+        ("probes_breaker".into(),
+         sum(brk, |s| s.total_probes() as f64)),
+        ("hedges_hedge".into(),
+         sum(hedge, |s| s.total_hedges() as f64)),
+        ("hedge_wins_hedge".into(),
+         sum(hedge, |s| s.total_hedge_wins() as f64)),
+        ("waste_ms_hedge".into(),
+         sum(hedge, |s| s.total_hedge_waste_us()) / 1e3),
+    ];
+
+    let path = sparoa::repo_root().join("BENCH_tail.json");
+    if ci {
+        // Hard invariants — the PR acceptance criteria, deterministic
+        // on any runner.
+        let mut bad = Vec::new();
+        if !ok {
+            bad.push("conservation failed in at least one arm".into());
+        }
+        for s in &off.snaps {
+            if s.total_suspects() != 0
+                || s.total_breaker_opens() != 0
+                || s.total_probes() != 0
+                || s.total_hedges() != 0
+                || s.total_hedge_waste_us() != 0.0
+            {
+                bad.push("the off arm detected or hedged".into());
+                break;
+            }
+        }
+        if sum(brk, |s| s.total_breaker_opens() as f64) == 0.0 {
+            bad.push("breaker arm never opened a breaker".into());
+        }
+        if sum(brk, |s| s.total_hedges() as f64) != 0.0 {
+            bad.push("breaker-only arm hedged".into());
+        }
+        if sum(hedge, |s| s.total_hedges() as f64) == 0.0 {
+            bad.push("hedge arm never hedged".into());
+        }
+        if hi_attain(hedge) <= hi_attain(off) {
+            bad.push(format!(
+                "hedge+breaker interactive attainment {:.4} <= off \
+                 {:.4}",
+                hi_attain(hedge),
+                hi_attain(off)
+            ));
+        }
+        let busy = sum(hedge, |s| {
+            s.aggregate.cpu_busy_us + s.aggregate.gpu_busy_us
+        });
+        let waste = sum(hedge, |s| s.total_hedge_waste_us());
+        if waste > CI_WASTE_FRAC * busy {
+            bad.push(format!(
+                "hedge waste {waste:.0}us > {:.0}% of {busy:.0}us \
+                 served busy time",
+                100.0 * CI_WASTE_FRAC
+            ));
+        }
+        if !bad.is_empty() {
+            for b in &bad {
+                eprintln!("fig_tail invariant failed: {b}");
+            }
+            std::process::exit(1);
+        }
+        // Then the committed-baseline drift gate (refuses a missing or
+        // bootstrap-placeholder baseline — CI regenerates one first).
+        let Some((_, old_ratio)) =
+            baseline::committed(&path, CI_NUM_KEY, CI_DEN_KEY)
+        else {
+            baseline::refuse(&path, "fig_tail", CI_NUM_KEY,
+                             CI_DEN_KEY);
+        };
+        let new_ratio = hi_attain(hedge) / hi_attain(off).max(1e-12);
+        baseline::gate_ratio(
+            "fig_tail",
+            &format!("{CI_NUM_KEY}/{CI_DEN_KEY}"),
+            new_ratio,
+            old_ratio,
+            CI_RATIO_BUDGET,
+        );
+    } else {
+        if !ok {
+            std::process::exit(1);
+        }
+        baseline::write(&path, "tail", &lines);
+    }
+}

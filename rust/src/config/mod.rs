@@ -70,6 +70,14 @@ pub struct Config {
     /// (off | deadline-burn | burn-plus-steal).  `off` keeps the
     /// run-to-completion path bit-identical to earlier releases.
     pub preempt: String,
+    /// serve-fleet: hedged dispatch for deadline-at-risk interactive
+    /// requests (on | off).  `off` keeps the single-copy dispatch
+    /// path bit-identical to earlier releases.
+    pub hedge: String,
+    /// serve-fleet: gray-failure circuit breaker per board
+    /// (on | off).  `off` keeps routing/steal/autoscale placement
+    /// bit-identical to earlier releases.
+    pub breaker: String,
 }
 
 impl Default for Config {
@@ -104,8 +112,19 @@ impl Default for Config {
             mttf_s: 0.0,
             mttr_s: 0.0,
             preempt: "off".into(),
+            hedge: "off".into(),
+            breaker: "off".into(),
         }
     }
+}
+
+/// Validate an on/off tail-tolerance switch (`hedge`, `breaker`).
+fn check_on_off(key: &str, s: &str) -> Result<()> {
+    anyhow::ensure!(
+        matches!(s, "on" | "off"),
+        "{key} must be on|off, got `{s}`"
+    );
+    Ok(())
 }
 
 /// Validate a `preempt` spelling: anything
@@ -171,6 +190,12 @@ impl Config {
         }
         if let Some(p) = v.get("preempt").as_str() {
             check_preempt(p)?;
+        }
+        if let Some(h) = v.get("hedge").as_str() {
+            check_on_off("hedge", h)?;
+        }
+        if let Some(b) = v.get("breaker").as_str() {
+            check_on_off("breaker", b)?;
         }
         let d = Config::default();
         Ok(Config {
@@ -241,6 +266,12 @@ impl Config {
                 .as_str()
                 .unwrap_or(&d.preempt)
                 .into(),
+            hedge: v.get("hedge").as_str().unwrap_or(&d.hedge).into(),
+            breaker: v
+                .get("breaker")
+                .as_str()
+                .unwrap_or(&d.breaker)
+                .into(),
         })
     }
 
@@ -304,6 +335,14 @@ impl Config {
             "preempt" => {
                 check_preempt(value)?;
                 self.preempt = value.into();
+            }
+            "hedge" => {
+                check_on_off("hedge", value)?;
+                self.hedge = value.into();
+            }
+            "breaker" => {
+                check_on_off("breaker", value)?;
+                self.breaker = value.into();
             }
             other => anyhow::bail!("unknown config key `{other}`"),
         }
@@ -463,6 +502,22 @@ mod tests {
             json::parse(r#"{"preempt": "deadline-burn"}"#).unwrap();
         assert_eq!(Config::from_json(&good_preempt).unwrap().preempt,
                    "deadline-burn");
+        // tail-tolerance knobs
+        assert_eq!(c.hedge, "off");
+        assert_eq!(c.breaker, "off");
+        c.apply_override("hedge", "on").unwrap();
+        assert_eq!(c.hedge, "on");
+        c.apply_override("breaker", "on").unwrap();
+        assert_eq!(c.breaker, "on");
+        assert!(c.apply_override("hedge", "maybe").is_err());
+        assert!(c.apply_override("breaker", "1").is_err());
+        let bad_hedge = json::parse(r#"{"hedge": "always"}"#).unwrap();
+        assert!(Config::from_json(&bad_hedge).is_err());
+        let good_tail = json::parse(
+            r#"{"hedge": "on", "breaker": "on"}"#).unwrap();
+        let ct = Config::from_json(&good_tail).unwrap();
+        assert_eq!(ct.hedge, "on");
+        assert_eq!(ct.breaker, "on");
         // Config files get the same backend validation as the CLI.
         let bad = json::parse(r#"{"backend": "cuda"}"#).unwrap();
         assert!(Config::from_json(&bad).is_err());

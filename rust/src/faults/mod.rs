@@ -52,6 +52,17 @@ pub fn retry_backoff_us(attempt: u32) -> f64 {
         .min(RETRY_BACKOFF_CAP_US)
 }
 
+/// [`retry_backoff_us`] with seeded jitter in `[0.75, 1.25)` of the
+/// base delay.  Deterministic jitter from the run's own RNG stream —
+/// never wall clock — de-synchronises retry herds (every request
+/// orphaned by one crash would otherwise re-arrive at the same
+/// instant) while keeping runs replayable: the same seed draws the
+/// same delays.  Fault-free, tail-off runs never reach a call site,
+/// so their output is byte-identical to the un-jittered schedule.
+pub fn jittered_backoff_us(attempt: u32, rng: &mut Rng) -> f64 {
+    retry_backoff_us(attempt) * (0.75 + 0.5 * rng.f64())
+}
+
 /// One scheduled fault on one board.  All times are microseconds of
 /// virtual time from the start of the run.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -555,5 +566,28 @@ mod tests {
         assert_eq!(retry_backoff_us(1), 2.0 * RETRY_BACKOFF_US);
         assert_eq!(retry_backoff_us(10), RETRY_BACKOFF_CAP_US);
         assert_eq!(retry_backoff_us(31), RETRY_BACKOFF_CAP_US);
+    }
+
+    #[test]
+    fn jittered_backoff_stays_in_band_and_replays() {
+        let mut rng = Rng::new(42);
+        for attempt in 0..8 {
+            let base = retry_backoff_us(attempt);
+            let j = jittered_backoff_us(attempt, &mut rng);
+            assert!(
+                j >= 0.75 * base && j < 1.25 * base,
+                "jitter out of band: {j} vs base {base}"
+            );
+        }
+        // Same seed, same stream: replayable by construction.
+        let a: Vec<f64> = {
+            let mut r = Rng::new(7);
+            (0..4).map(|i| jittered_backoff_us(i, &mut r)).collect()
+        };
+        let b: Vec<f64> = {
+            let mut r = Rng::new(7);
+            (0..4).map(|i| jittered_backoff_us(i, &mut r)).collect()
+        };
+        assert_eq!(a, b);
     }
 }

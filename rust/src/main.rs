@@ -85,6 +85,7 @@ fn usage(cmd: &str) -> String {
              [--load=X] [--num_requests=N] [--trace=FILE.json] \
              [--faults=PLAN.json] [--mttf_s=S --mttr_s=S] \
              [--preempt=off|deadline-burn|burn-plus-steal] \
+             [--hedge=on|off] [--breaker=on|off] \
              [--trace_out=FILE] [--trace_format=folded|chrome] \
              [--json]\n  \
              Distributed multi-board serving: the serve-multi tenant \
@@ -107,6 +108,13 @@ fn usage(cmd: &str) -> String {
              burn-plus-steal,\n  \
              cross-board work stealing); off is bit-identical to \
              run-to-completion.\n  \
+             --breaker arms gray-failure detection with a per-board \
+             circuit breaker\n  \
+             (Closed/Open/Probation); --hedge re-offers \
+             deadline-at-risk interactive\n  \
+             requests to a second board, first finish wins.  Both \
+             default off\n  \
+             (bit-identical to single-copy dispatch).\n  \
              --trace_out writes a virtual-time execution trace of the \
              configured router's run\n  \
              (folded = flamegraph.pl/inferno stacks, chrome = Perfetto \
@@ -410,6 +418,11 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
                 cfg.preempt
             )
         })?;
+    // Tail-tolerance switches (validated on|off by config).
+    let tail = sparoa::serve::TailPolicy {
+        hedge: cfg.hedge == "on",
+        breaker: cfg.breaker == "on",
+    };
 
     // Energy accounting is on unless --governor=off: the boards' DVFS
     // ladders come from the same calibrated device profile the demo
@@ -458,7 +471,7 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
         println!(
             "fleet — {} boards (1 cpu + 1 gpu lane each), {} models, \
              load x{:.1}, {} requests, autoscale {}, governor {}{}, \
-             preempt {}",
+             preempt {}, tail {}",
             n_boards, registry.len(), cfg.load, arrivals.len(),
             if cfg.autoscale { "on" } else { "off" },
             if cfg.governor == "off" { "off" } else { &cfg.governor },
@@ -468,6 +481,7 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
                 _ => String::new(),
             },
             preempt.name(),
+            tail.name(),
         );
         if !fault_plan.is_none() {
             println!(
@@ -501,6 +515,7 @@ fn serve_fleet(cfg: &Config) -> Result<()> {
         opts.power = power.clone();
         opts.faults = fault_plan.clone();
         opts.preempt = preempt;
+        opts.tail = tail;
         if cfg.autoscale {
             opts.autoscale = Some(AutoscalePolicy::default());
         }

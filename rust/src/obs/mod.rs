@@ -152,6 +152,31 @@ pub enum TraceEvent {
         /// Requests moved by this drain.
         n: u32,
     },
+    /// The gray-failure detector flagged this board suspect: its EWMA
+    /// of realized/predicted dispatch latency stayed inflated for K
+    /// consecutive batches.  Recorded once per episode on the suspect
+    /// board; reconciles 1:1 with the snapshot's `suspects`.
+    Suspect,
+    /// The circuit breaker opened (first trip or a failed probe
+    /// re-opening it): the board leaves routing/steal/autoscale
+    /// placement until probation.  Reconciles 1:1 with `breaker_opens`.
+    BreakerOpen,
+    /// Probation completed: the breaker closed and the board is fully
+    /// routable again.
+    BreakerClose,
+    /// A probation probe dispatch was admitted to this board (the
+    /// routed request itself is the probe).  Reconciles 1:1 with the
+    /// snapshot's `probes`.
+    Probe,
+    /// An at-risk request was hedged: a clone was offered to another
+    /// board (recorded on the board receiving the clone).  Reconciles
+    /// 1:1 with the snapshot's `hedges`.
+    Hedge,
+    /// The losing copy of a hedged request was cancelled after the
+    /// winner finished: in-flight lane time and committed energy were
+    /// refunded (or the queued clone purged), with any duplicate
+    /// executed work billed to `hedge_waste_us`.
+    HedgeCancel,
 }
 
 /// One buffered event: virtual time, (model, class) attribution
@@ -570,6 +595,18 @@ pub fn chrome_events_into(
             }
             TraceEvent::Steal { n } => {
                 ("steal", None, None, vec![("n", n as f64)])
+            }
+            TraceEvent::Suspect => ("suspect", None, None, vec![]),
+            TraceEvent::BreakerOpen => {
+                ("breaker_open", None, None, vec![])
+            }
+            TraceEvent::BreakerClose => {
+                ("breaker_close", None, None, vec![])
+            }
+            TraceEvent::Probe => ("probe", None, None, vec![]),
+            TraceEvent::Hedge => ("hedge", None, None, vec![]),
+            TraceEvent::HedgeCancel => {
+                ("hedge_cancel", None, None, vec![])
             }
         };
         let name = match label(model_labels, r.model) {

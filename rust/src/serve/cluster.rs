@@ -311,6 +311,10 @@ pub(crate) struct BoardSim<'a> {
     /// skip the burn check entirely — bit-identical to the
     /// pre-preemption scheduler.
     preempt: PreemptionPolicy,
+    /// Tail-tolerance hooks (`arm_tail`); `None` boards emit no
+    /// detector samples and divert nothing — bit-identical to the
+    /// pre-tail scheduler.
+    tail: Option<BoardTailHooks>,
     #[cfg(debug_assertions)]
     settled: std::collections::HashSet<usize>,
 }
@@ -342,7 +346,73 @@ struct InflightBatch {
     busy_w: f64,
     /// DMA share used for the profiler's phase split (0 untraced).
     dma_frac: f64,
+    /// Gray-failure detector inputs (tail-armed boards only, else 0):
+    /// the pre-thermal base latency the router's price tables are
+    /// built from, and the thermally stretched latency actually
+    /// scheduled (pre-governor — a DVFS stretch is chosen, not a
+    /// failure).  Their ratio is exactly the inflation the price
+    /// tables cannot see.
+    pred_us: f64,
+    real_us: f64,
+    /// This batch is a probation probe (first dispatch after the
+    /// fleet admitted a probe to this board).
+    probe: bool,
     reqs: Vec<QueuedReq>,
+}
+
+/// One realized-vs-predicted latency sample from a settled batch on a
+/// tail-armed board, drained each fleet iteration into the
+/// gray-failure detector ([`crate::serve::tail::TailState`]).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct TailSample {
+    /// Pre-thermal base latency of the batch, us.
+    pub(crate) pred_us: f64,
+    /// Thermally stretched (pre-governor) latency, us.
+    pub(crate) real_us: f64,
+    /// The batch was a probation probe.
+    pub(crate) probe: bool,
+}
+
+/// Terminal outcome of a hedge-marked request, diverted from the
+/// board's settle paths into the tail outbox: the fleet's first-wins
+/// reconciliation (not the board) decides which copy settles.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum HedgeOutcome {
+    /// The copy finished inside a served batch.
+    Served {
+        /// The request (original identity: arrival/deadline preserved).
+        r: QueuedReq,
+        /// Batch dispatch start, us.
+        start_us: f64,
+        /// Batch finish, us.
+        finish_us: f64,
+        /// Per-request lane-time share of the batch, us.
+        share_us: f64,
+        /// DMA fraction for the profiler's phase split.
+        dma_frac: f64,
+    },
+    /// The copy died unserved (shed at re-admission or expired in
+    /// queue; crash/lane losses are filtered fleet-side instead).
+    Dead {
+        /// Global request id.
+        req: usize,
+    },
+}
+
+/// Board-side tail-tolerance hooks (`arm_tail`): detector samples,
+/// hedge marks and the hedged-outcome outbox.  `None` boards take no
+/// tail branches — the byte-identical legacy path.
+#[derive(Debug, Default)]
+struct BoardTailHooks {
+    /// Samples from settled batches, drained by the fleet.
+    samples: Vec<TailSample>,
+    /// Request ids whose settlement the fleet's hedge reconciliation
+    /// owns (both copies of a hedged request are marked).
+    marks: std::collections::HashSet<usize>,
+    /// Diverted terminal outcomes of marked requests.
+    outbox: Vec<HedgeOutcome>,
+    /// The next dispatched batch is a probation probe.
+    probe_pending: bool,
 }
 
 /// Runtime fault state of one board, present only when the fleet armed
@@ -445,6 +515,7 @@ impl<'a> BoardSim<'a> {
             },
             faults: None,
             preempt: PreemptionPolicy::Off,
+            tail: None,
             #[cfg(debug_assertions)]
             settled: std::collections::HashSet::new(),
         })
@@ -624,6 +695,20 @@ impl<'a> BoardSim<'a> {
         }
     }
 
+    /// Arm the tail-tolerance hooks: dispatched batches carry
+    /// realized-vs-predicted detector samples, hedge-marked requests
+    /// divert their terminal outcomes to the fleet, and the in-flight
+    /// ledger is installed (via [`BoardSim::arm_faults`]) if a fault
+    /// plan hasn't already done so — a hedge cancellation must be able
+    /// to retract a running batch.  Unarmed boards keep the
+    /// byte-identical pre-tail path.
+    pub(crate) fn arm_tail(&mut self) {
+        self.tail = Some(BoardTailHooks::default());
+        if self.faults.is_none() {
+            self.arm_faults();
+        }
+    }
+
     /// Whether a fail-stop fault currently holds this board down.
     pub(crate) fn is_down(&self) -> bool {
         self.faults.as_ref().map_or(false, |f| f.down)
@@ -662,7 +747,26 @@ impl<'a> BoardSim<'a> {
     pub(crate) fn steal_queue(&mut self, model: usize, now_us: f64)
         -> Vec<QueuedReq>
     {
-        let stolen = self.q.drain_model(model);
+        let mut stolen = self.q.drain_model(model);
+        // Hedge-marked requests must not change boards: the fleet's
+        // first-wins reconciliation keys each copy to the board it was
+        // marked on.  Put them straight back and steal only the rest.
+        if let Some(h) = &self.tail {
+            if stolen.iter().any(|r| h.marks.contains(&r.req)) {
+                let (kept, rest): (Vec<_>, Vec<_>) = stolen
+                    .into_iter()
+                    .partition(|r| h.marks.contains(&r.req));
+                for r in kept {
+                    let landed = self.q.readmit(r);
+                    debug_assert!(
+                        landed,
+                        "re-queuing a hedge-marked request must not shed"
+                    );
+                    let _ = landed;
+                }
+                stolen = rest;
+            }
+        }
         if stolen.is_empty() {
             return stolen;
         }
@@ -685,11 +789,282 @@ impl<'a> BoardSim<'a> {
         stolen
     }
 
+    /// Mark `req`: its terminal outcome (serve/shed) diverts to the
+    /// tail outbox instead of settling — the fleet's hedge
+    /// reconciliation owns it.  No-op on unarmed boards.
+    pub(crate) fn tail_mark(&mut self, req: usize) {
+        if let Some(h) = self.tail.as_mut() {
+            h.marks.insert(req);
+        }
+    }
+
+    /// Drop the hedge mark for `req` (copy resolved or dead).
+    pub(crate) fn tail_unmark(&mut self, req: usize) {
+        if let Some(h) = self.tail.as_mut() {
+            h.marks.remove(&req);
+        }
+    }
+
+    /// Whether `req` is hedge-marked on this board.
+    pub(crate) fn tail_is_marked(&self, req: usize) -> bool {
+        self.tail.as_ref().map_or(false, |h| h.marks.contains(&req))
+    }
+
+    /// Drain the detector samples accumulated since the last drain.
+    pub(crate) fn tail_take_samples(&mut self) -> Vec<TailSample> {
+        self.tail
+            .as_mut()
+            .map(|h| std::mem::take(&mut h.samples))
+            .unwrap_or_default()
+    }
+
+    /// Drain the diverted hedge outcomes since the last drain.
+    pub(crate) fn tail_take_outcomes(&mut self) -> Vec<HedgeOutcome> {
+        self.tail
+            .as_mut()
+            .map(|h| std::mem::take(&mut h.outbox))
+            .unwrap_or_default()
+    }
+
+    /// Queued (never dispatched) requests of `model` in dispatch
+    /// order — the fleet's hedge pass scans these for at-risk
+    /// interactive work.
+    pub(crate) fn queued_of_model(
+        &self,
+        model: usize,
+    ) -> impl Iterator<Item = &QueuedReq> + '_ {
+        self.q.dispatch_view(model)
+    }
+
+    /// The detector flagged this board suspect.
+    pub(crate) fn note_suspect(&mut self, now_us: f64) {
+        self.snap.suspects += 1;
+        self.tracer.record(
+            now_us,
+            crate::obs::NONE,
+            crate::obs::NONE,
+            crate::obs::TraceEvent::Suspect,
+        );
+    }
+
+    /// The circuit breaker opened on this board.
+    pub(crate) fn note_breaker_open(&mut self, now_us: f64) {
+        self.snap.breaker_opens += 1;
+        self.tracer.record(
+            now_us,
+            crate::obs::NONE,
+            crate::obs::NONE,
+            crate::obs::TraceEvent::BreakerOpen,
+        );
+    }
+
+    /// The circuit breaker closed again (probes recovered).
+    pub(crate) fn note_breaker_close(&mut self, now_us: f64) {
+        self.tracer.record(
+            now_us,
+            crate::obs::NONE,
+            crate::obs::NONE,
+            crate::obs::TraceEvent::BreakerClose,
+        );
+    }
+
+    /// A probation probe was admitted to this board: count it and flag
+    /// the next dispatched batch as the probe sample.
+    pub(crate) fn note_probe(&mut self, now_us: f64) {
+        self.snap.probes += 1;
+        if let Some(h) = self.tail.as_mut() {
+            h.probe_pending = true;
+        }
+        self.tracer.record(
+            now_us,
+            crate::obs::NONE,
+            crate::obs::NONE,
+            crate::obs::TraceEvent::Probe,
+        );
+    }
+
+    /// A hedge clone was re-offered to this board.
+    pub(crate) fn note_hedge(
+        &mut self,
+        now_us: f64,
+        model: usize,
+        class: usize,
+    ) {
+        self.snap.hedges += 1;
+        self.tracer.record(
+            now_us,
+            model as u32,
+            class as u32,
+            crate::obs::TraceEvent::Hedge,
+        );
+    }
+
+    /// Settle the winning copy of a hedged request as served on this
+    /// board — the fleet's first-wins reconciliation picked it.
+    /// Replays exactly what the unmarked settle path would have done,
+    /// plus the `hedge_wins` counter when the clone (not the original
+    /// placement) won.
+    pub(crate) fn finalize_hedge_served(
+        &mut self,
+        r: &QueuedReq,
+        start_us: f64,
+        finish_us: f64,
+        share_us: f64,
+        dma_frac: f64,
+        clone_won: bool,
+    ) {
+        #[cfg(debug_assertions)]
+        debug_assert!(self.settled.insert(r.req),
+                      "request {} settled twice (hedge win)", r.req);
+        self.snap.record_served(
+            r.class,
+            r.model,
+            finish_us - r.arrival_us,
+            finish_us <= r.deadline_us,
+        );
+        if clone_won {
+            self.snap.hedge_wins += 1;
+        }
+        if self.tracer.is_enabled() {
+            let wait = start_us - r.arrival_us;
+            self.tracer.record(
+                start_us,
+                r.model as u32,
+                r.class as u32,
+                crate::obs::TraceEvent::QueueWait { wait_us: wait },
+            );
+            self.tracer.acc_served(
+                r.model,
+                r.class,
+                wait,
+                share_us * dma_frac,
+                share_us * (1.0 - dma_frac),
+            );
+        }
+        self.tail_unmark(r.req);
+    }
+
+    /// Cancel the running batch carrying the losing copy of a hedged
+    /// request: refund the unexecuted lane tail and committed energy
+    /// exactly like a preemption, bill the executed prefix to
+    /// `hedge_waste_us`, re-queue the batch-mates (arrival/deadline
+    /// preserved), and drop the loser unsettled — the winner already
+    /// served it.  Returns false when no in-flight batch holds `req`.
+    pub(crate) fn hedge_cancel_inflight(
+        &mut self,
+        req: usize,
+        now_us: f64,
+    ) -> bool {
+        let idx = self.faults.as_ref().and_then(|fs| {
+            fs.inflight
+                .iter()
+                .position(|b| b.reqs.iter().any(|r| r.req == req))
+        });
+        let Some(i) = idx else { return false };
+        let b = self
+            .faults
+            .as_mut()
+            .expect("in-flight ledger present")
+            .inflight
+            .swap_remove(i);
+        let cut = now_us.max(b.start_us);
+        self.lanes.busy[b.lane] -= b.finish_us - cut;
+        self.lanes.free[b.lane] = self.lanes.free[b.lane].min(now_us);
+        if let Some(bp) = self.power.as_mut() {
+            bp.retract(b.lane, b.start_us, b.finish_us, b.busy_w,
+                       now_us);
+        }
+        self.snap.hedge_waste_us += cut - b.start_us;
+        for r in b.reqs {
+            if r.req == req {
+                self.tracer.record(
+                    now_us,
+                    r.model as u32,
+                    r.class as u32,
+                    crate::obs::TraceEvent::HedgeCancel,
+                );
+                continue;
+            }
+            // Batch-mates re-enter this board's queues; refusals shed
+            // (or divert, if they are themselves hedge-marked) via the
+            // settle below.
+            self.q.readmit(r);
+            self.tracer.record(
+                now_us,
+                r.model as u32,
+                r.class as u32,
+                crate::obs::TraceEvent::Requeue,
+            );
+        }
+        self.epoch += 1;
+        self.settle_sheds(now_us);
+        self.tail_unmark(req);
+        true
+    }
+
+    /// Remove a still-queued hedge-marked request (the losing copy)
+    /// from the admission queues without settling it — the winner
+    /// already served it.  Returns false when `req` is not queued here.
+    pub(crate) fn hedge_purge_queued(
+        &mut self,
+        req: usize,
+        model: usize,
+        now_us: f64,
+    ) -> bool {
+        if !self.q.dispatch_view(model).any(|r| r.req == req) {
+            return false;
+        }
+        let drained = self.q.drain_model(model);
+        let mut purged = None;
+        for r in drained {
+            if r.req == req {
+                purged = Some(r);
+                continue;
+            }
+            let landed = self.q.readmit(r);
+            debug_assert!(
+                landed,
+                "re-queuing around a hedge purge must not shed"
+            );
+            let _ = landed;
+        }
+        self.epoch += 1;
+        if let Some(r) = purged {
+            self.tracer.record(
+                now_us,
+                r.model as u32,
+                r.class as u32,
+                crate::obs::TraceEvent::HedgeCancel,
+            );
+            self.tail_unmark(req);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Bill the duplicate executed share of a hedge copy whose batch
+    /// finished after the winner settled (both copies completed in the
+    /// same reconciliation round): its lane time was really spent, but
+    /// the service it produced is a duplicate.
+    pub(crate) fn bill_hedge_waste(&mut self, share_us: f64,
+                                   now_us: f64) {
+        self.snap.hedge_waste_us += share_us;
+        self.tracer.record(
+            now_us,
+            crate::obs::NONE,
+            crate::obs::NONE,
+            crate::obs::TraceEvent::HedgeCancel,
+        );
+    }
+
     /// Settle every deferred batch with `finish_us <= up_to_us`:
     /// record its requests served (histograms, attainment, phase
     /// accumulators) exactly as the immediate path would have at
-    /// dispatch.  No-op on unarmed boards.
-    fn settle_inflight(&mut self, up_to_us: f64) {
+    /// dispatch.  No-op on unarmed boards.  `pub(crate)` so the fleet
+    /// can force end-of-run settlement (`INFINITY`) before its final
+    /// hedge reconciliation.
+    pub(crate) fn settle_inflight(&mut self, up_to_us: f64) {
         let done: Vec<InflightBatch> = match self.faults.as_mut() {
             Some(fs) if !fs.inflight.is_empty() => {
                 let mut done = Vec::new();
@@ -710,10 +1085,36 @@ impl<'a> BoardSim<'a> {
         }
     }
 
-    /// Settle one finished batch's requests as served.
+    /// Settle one finished batch's requests as served.  On tail-armed
+    /// boards the batch also emits one realized-vs-predicted detector
+    /// sample, and hedge-marked requests are diverted to the outbox
+    /// instead of settling — the fleet's first-wins reconciliation
+    /// owns their settlement.
     fn settle_batch(&mut self, b: &InflightBatch) {
+        if let Some(h) = self.tail.as_mut() {
+            if b.pred_us > 0.0 {
+                h.samples.push(TailSample {
+                    pred_us: b.pred_us,
+                    real_us: b.real_us,
+                    probe: b.probe,
+                });
+            }
+        }
         let finish = b.finish_us;
         for r in &b.reqs {
+            if let Some(h) = self.tail.as_mut() {
+                if h.marks.contains(&r.req) {
+                    h.outbox.push(HedgeOutcome::Served {
+                        r: *r,
+                        start_us: b.start_us,
+                        finish_us: finish,
+                        share_us: (finish - b.start_us)
+                            / b.reqs.len() as f64,
+                        dma_frac: b.dma_frac,
+                    });
+                    continue;
+                }
+            }
             #[cfg(debug_assertions)]
             debug_assert!(self.settled.insert(r.req),
                           "request {} settled twice (served)", r.req);
@@ -1334,6 +1735,22 @@ impl<'a> BoardSim<'a> {
             } else {
                 0.0
             };
+            // Tail detector sample for this dispatch: predicted is the
+            // pre-thermal base latency the router's price tables see,
+            // realized is the thermally stretched candidate latency
+            // (pre-governor: a DVFS stretch is chosen, not a gray
+            // failure).  Unarmed boards compute nothing here.
+            let (pred_us, real_us, probe) = match self.tail.as_mut() {
+                Some(h) => {
+                    let p = std::mem::take(&mut h.probe_pending);
+                    (
+                        self.registry.get(c.m).latency_us(c.proc, c.b)?,
+                        c.finish - c.start,
+                        p,
+                    )
+                }
+                None => (0.0, 0.0, false),
+            };
             if let Some(fs) = self.faults.as_mut() {
                 // Armed: settlement is deferred to the batch's finish
                 // time so a fault landing before then can retract it
@@ -1346,6 +1763,9 @@ impl<'a> BoardSim<'a> {
                     finish_us: finish,
                     busy_w,
                     dma_frac,
+                    pred_us,
+                    real_us,
+                    probe,
                     reqs: taken,
                 });
             } else {
@@ -1391,6 +1811,16 @@ impl<'a> BoardSim<'a> {
     /// trace events (sheds surface at the pump that settles them).
     fn settle_sheds(&mut self, now_us: f64) {
         for &s in self.q.shed_since(self.shed_seen) {
+            if let Some(h) = self.tail.as_mut() {
+                // A hedge-marked copy that sheds (re-admission refusal
+                // or queue expiry) is a copy death, not a shed: the
+                // request may still be served by its twin.  Divert to
+                // the fleet's reconciliation.
+                if h.marks.contains(&s.req) {
+                    h.outbox.push(HedgeOutcome::Dead { req: s.req });
+                    continue;
+                }
+            }
             #[cfg(debug_assertions)]
             debug_assert!(self.settled.insert(s.req),
                           "request {} settled twice (shed)", s.req);

@@ -42,22 +42,26 @@
 
 use crate::device::Proc;
 use crate::faults::{
-    retry_backoff_us, FaultChange, FaultPlan, FaultTransition,
+    jittered_backoff_us, FaultChange, FaultPlan, FaultTransition,
     MAX_RETRY_ATTEMPTS,
 };
 use crate::power::PowerConfig;
 use crate::serve::cluster::{
-    BoardSim, ClusterOptions, ClusterPolicy, LaneMatrix,
+    BoardSim, ClusterOptions, ClusterPolicy, HedgeOutcome, LaneMatrix,
     PreemptionPolicy,
 };
 use crate::serve::registry::ModelRegistry;
 use crate::serve::report::PerfSnapshot;
 use crate::serve::slo::{QueuedReq, ShedPolicy, SloClass};
+use crate::serve::tail::{
+    BreakerState, TailParams, TailPolicy, TailState,
+};
 use crate::serve::workload::{Arrival, Tenant};
 use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
 use anyhow::Result;
 use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap};
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
 
 /// Front-tier request placement policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -182,6 +186,14 @@ pub struct FleetOptions {
     /// batch cancellation; `BurnPlusSteal` adds the fleet's
     /// work-stealing pass).
     pub preempt: PreemptionPolicy,
+    /// Tail-tolerance policy ([`TailPolicy::OFF`] = bit-identical
+    /// pre-tail path): `breaker` arms the gray-failure detector and
+    /// per-board circuit breaker, `hedge` arms deadline-at-risk
+    /// hedged dispatch with first-wins cancellation.
+    pub tail: TailPolicy,
+    /// Detector / breaker / probe tuning (inert while `tail` is fully
+    /// off).
+    pub tail_params: TailParams,
 }
 
 impl FleetOptions {
@@ -202,6 +214,8 @@ impl FleetOptions {
             faults: FaultPlan::none(),
             failover: true,
             preempt: PreemptionPolicy::Off,
+            tail: TailPolicy::OFF,
+            tail_params: TailParams::default(),
         }
     }
 }
@@ -348,6 +362,38 @@ impl FleetSnapshot {
     /// never served.
     pub fn total_preempt_waste_us(&self) -> f64 {
         self.aggregate.preempt_waste_us
+    }
+
+    /// Gray-failure detector suspect flags fleet-wide (0 unless the
+    /// tail layer is armed).
+    pub fn total_suspects(&self) -> u64 {
+        self.aggregate.suspects
+    }
+
+    /// Circuit-breaker open transitions fleet-wide.
+    pub fn total_breaker_opens(&self) -> u64 {
+        self.aggregate.breaker_opens
+    }
+
+    /// Probation probes admitted fleet-wide.
+    pub fn total_probes(&self) -> u64 {
+        self.aggregate.probes
+    }
+
+    /// Hedge clones dispatched fleet-wide.
+    pub fn total_hedges(&self) -> u64 {
+        self.aggregate.hedges
+    }
+
+    /// Hedged requests whose clone (not the original placement) won.
+    pub fn total_hedge_wins(&self) -> u64 {
+        self.aggregate.hedge_wins
+    }
+
+    /// Duplicate lane time executed by losing hedge copies,
+    /// microseconds of virtual time.
+    pub fn total_hedge_waste_us(&self) -> f64 {
+        self.aggregate.hedge_waste_us
     }
 
     /// Mean per-board CPU busy fraction over the makespan, [0, 1].
@@ -549,6 +595,22 @@ impl FleetSnapshot {
                 self.total_preempt_waste_us() / 1e3,
             ));
         }
+        if self.total_suspects() > 0
+            || self.total_breaker_opens() > 0
+            || self.total_probes() > 0
+            || self.total_hedges() > 0
+        {
+            s.push_str(&format!(
+                " | tail: {} suspects {} opens {} probes {} hedges \
+                 ({} won) {:.1}ms hedge waste",
+                self.total_suspects(),
+                self.total_breaker_opens(),
+                self.total_probes(),
+                self.total_hedges(),
+                self.total_hedge_wins(),
+                self.total_hedge_waste_us() / 1e3,
+            ));
+        }
         s
     }
 }
@@ -570,7 +632,30 @@ struct AutoState {
     prev_met: Vec<u64>,
     up_streak: Vec<usize>,
     down_streak: Vec<usize>,
+    /// Per-board `preempt_waste_us` at the previous tick, so each
+    /// window's fresh waste can inflate the queue-pressure signal.
+    prev_waste: Vec<f64>,
     next_tick_us: f64,
+}
+
+/// One outstanding hedged request: both copies (original placement
+/// and clone) are hedge-marked on their boards, so their terminal
+/// outcomes divert to the boards' tail outboxes instead of settling.
+/// The first `Served` outcome wins and settles exactly once; the
+/// losing copy is cancelled (in-flight retract / queue purge) or
+/// billed as duplicate waste if it raced to completion.  `copies`
+/// counts marks still standing; the entry retires at zero.
+struct HedgeEntry {
+    /// Original request identity (arrival/deadline preserved).
+    r: QueuedReq,
+    /// Board the request was first placed on.
+    orig_board: usize,
+    /// Board the hedge clone was re-offered to.
+    clone_board: usize,
+    /// Copies not yet resolved (served, cancelled, or dead).
+    copies: u32,
+    /// Board whose copy settled the request, once decided.
+    winner: Option<usize>,
 }
 
 /// The fleet's view of per-board fault state, kept in lock-step with
@@ -798,6 +883,9 @@ pub fn run_fleet(
         if opts.preempt.preempts() {
             board.arm_preemption(opts.preempt);
         }
+        if opts.tail.enabled() {
+            board.arm_tail();
+        }
     }
     // Single-lane-kind price tables for degraded boards (a board whose
     // GPU lanes died quotes CPU-only batch-1 latencies to the router
@@ -840,10 +928,24 @@ pub fn run_fleet(
         prev_met: vec![0; nm],
         up_streak: vec![0; nm],
         down_streak: vec![0; nm],
+        prev_waste: vec![0.0; nb],
         next_tick_us: opts
             .autoscale
             .map_or(f64::INFINITY, |a| a.interval_us),
     };
+    // Tail-tolerance state: the gray-failure detector + circuit
+    // breakers (fleet-side) and the outstanding-hedge table.  `None`
+    // keeps every tail branch dead — byte-identical output.
+    let mut tail = opts
+        .tail
+        .enabled()
+        .then(|| TailState::new(opts.tail, opts.tail_params, nb));
+    let mut hedges: HashMap<usize, HedgeEntry> = HashMap::new();
+    // Deterministic jitter stream for retry backoffs: simultaneous
+    // failovers de-synchronize instead of re-offering in waves.
+    // Fault-free, breaker-closed runs never reach a backoff site, so
+    // they never draw from it — byte-stable.
+    let mut backoff_rng = Rng::new(0xbacc_0ff5 ^ opts.tail_params.seed);
     let mut scale_events: Vec<ScaleEvent> = Vec::new();
     let mut timeline: Vec<ReplicaSample> = Vec::new();
     if opts.autoscale.is_some() {
@@ -893,15 +995,40 @@ pub fn run_fleet(
                     // `t_next` at its time forever.
                     touched[b] = true;
                     for r in queued {
+                        // A hedge-marked copy drained off the crash
+                        // is a copy death, not an orphan: its twin
+                        // may still serve the request.
+                        if boards[b].tail_is_marked(r.req) {
+                            resolve_hedge_outcome(
+                                b, HedgeOutcome::Dead { req: r.req },
+                                now, &mut boards, &mut hedges,
+                                opts.failover, &lat1_us, &mut pend,
+                                &mut front, &mut touched,
+                                &mut backoff_rng,
+                            );
+                            continue;
+                        }
                         schedule_or_fail(
                             r, 0, now, false, opts.failover,
                             lat1_us[r.model], &mut pend, &mut front,
                         );
                     }
                     for r in lost {
+                        if boards[b].tail_is_marked(r.req) {
+                            resolve_hedge_outcome(
+                                b, HedgeOutcome::Dead { req: r.req },
+                                now, &mut boards, &mut hedges,
+                                opts.failover, &lat1_us, &mut pend,
+                                &mut front, &mut touched,
+                                &mut backoff_rng,
+                            );
+                            continue;
+                        }
                         schedule_or_fail(
-                            r, 0, now + retry_backoff_us(0), true,
-                            opts.failover, lat1_us[r.model],
+                            r, 0,
+                            now + jittered_backoff_us(
+                                0, &mut backoff_rng),
+                            true, opts.failover, lat1_us[r.model],
                             &mut pend, &mut front,
                         );
                     }
@@ -924,9 +1051,21 @@ pub fn run_fleet(
                             .to_vec(),
                     );
                     for r in lost {
+                        if boards[b].tail_is_marked(r.req) {
+                            resolve_hedge_outcome(
+                                b, HedgeOutcome::Dead { req: r.req },
+                                now, &mut boards, &mut hedges,
+                                opts.failover, &lat1_us, &mut pend,
+                                &mut front, &mut touched,
+                                &mut backoff_rng,
+                            );
+                            continue;
+                        }
                         schedule_or_fail(
-                            r, 0, now + retry_backoff_us(0), true,
-                            opts.failover, lat1_us[r.model],
+                            r, 0,
+                            now + jittered_backoff_us(
+                                0, &mut backoff_rng),
+                            true, opts.failover, lat1_us[r.model],
                             &mut pend, &mut front,
                         );
                     }
@@ -956,6 +1095,11 @@ pub fn run_fleet(
                 }
             }
         }
+        // Breaker cooldowns due by `now` move Open boards into
+        // Probation (their probe clock starts at `now`).
+        if let Some(t) = tail.as_mut() {
+            t.advance(now);
+        }
         // Re-place orphans whose delivery time has come: route to a
         // live board if one can still beat the deadline at its priced
         // batch-1 latency; back off and re-try while hosts are dark;
@@ -963,12 +1107,14 @@ pub fn run_fleet(
         // the attempt budget runs out.
         while let Some((r, attempt, retry)) = pend.pop_due(now) {
             let m = r.model;
-            eligible_boards_into(m, now, &replicas, &health, &mut elig);
+            eligible_boards_into(m, now, &replicas, &health,
+                                 tail.as_ref(), &mut elig);
             if elig.is_empty() {
                 schedule_or_fail(
                     r,
                     attempt + 1,
-                    now + retry_backoff_us(attempt),
+                    now + jittered_backoff_us(attempt,
+                                              &mut backoff_rng),
                     retry,
                     opts.failover,
                     lat1_us[m],
@@ -979,6 +1125,12 @@ pub fn run_fleet(
             }
             let b = route(opts.router, m, now, &boards, &elig,
                           &mut rr)?;
+            if let Some(t) = tail.as_mut() {
+                if t.is_probe(b) {
+                    t.consume_probe(b, now);
+                    boards[b].note_probe(now);
+                }
+            }
             let price = health
                 .price_table(b, &lat1_us, &lat1_cpu_us, &lat1_gpu_us)
                 [m];
@@ -1003,7 +1155,8 @@ pub fn run_fleet(
             ai += 1;
             let m = model_of[a.tenant];
             let class = tenants[a.tenant].class;
-            eligible_boards_into(m, now, &replicas, &health, &mut elig);
+            eligible_boards_into(m, now, &replicas, &health,
+                                 tail.as_ref(), &mut elig);
             if elig.is_empty() {
                 // Every host of the model is down: the front tier
                 // owns the request until one returns (or its
@@ -1021,22 +1174,41 @@ pub fn run_fleet(
                 // due exactly at `now` were already drained above —
                 // a same-instant entry would stall the clock).
                 schedule_or_fail(
-                    r, 1, now + retry_backoff_us(0), false,
-                    opts.failover, lat1_us[m], &mut pend, &mut front,
+                    r, 1,
+                    now + jittered_backoff_us(0, &mut backoff_rng),
+                    false, opts.failover, lat1_us[m], &mut pend,
+                    &mut front,
                 );
                 continue;
             }
             let b = route(
                 opts.router, m, now, &boards, &elig, &mut rr,
             )?;
+            if let Some(t) = tail.as_mut() {
+                if t.is_probe(b) {
+                    t.consume_probe(b, now);
+                    boards[b].note_probe(now);
+                }
+            }
             boards[b].offer(a.req, a.tenant, m, class, a.at_us);
             touched[b] = true;
         }
         // BurnPlusSteal: after routing fresh arrivals, re-place work
         // stranded behind long-running batches onto cheaper boards.
         if opts.preempt.steals() {
-            steal_pass(now, &mut boards, &replicas, &health, &lat1_us,
-                       &mut elig, &mut touched);
+            steal_pass(now, &mut boards, &replicas, &health,
+                       tail.as_ref(), &lat1_us, &mut elig,
+                       &mut touched);
+        }
+        // Hedged dispatch: clone deadline-at-risk interactive requests
+        // onto the next-cheapest routable board; the first finish wins
+        // (reconciled after the pump phase below).
+        if opts.tail.hedge {
+            hedge_pass(
+                now, &mut boards, &replicas, &health,
+                tail.as_ref().expect("tail armed when hedging"),
+                &lat1_us, &mut elig, &mut hedges, &mut touched,
+            );
         }
         // Autoscaler tick.  The schedule only drives the clock while
         // work is standing (see below), so after an idle gap in the
@@ -1047,8 +1219,8 @@ pub fn run_fleet(
             if now >= auto_state.next_tick_us {
                 autoscale_tick(
                     now, auto, &eff_cost_us, &mut boards,
-                    &mut replicas, &health, &mut auto_state,
-                    &mut scale_events, &mut timeline,
+                    &mut replicas, &health, tail.as_ref(),
+                    &mut auto_state, &mut scale_events, &mut timeline,
                 );
                 auto_state.next_tick_us += auto.interval_us;
                 while auto_state.next_tick_us <= now {
@@ -1071,6 +1243,31 @@ pub fn run_fleet(
                 wakes.push(Reverse((wake.to_bits(), b, wake_gen[b])));
             }
             standing += board.total_queued();
+        }
+        // Tail bookkeeping: feed the detector from this step's settled
+        // batches, then reconcile diverted hedge outcomes — the first
+        // finish wins, the loser is cancelled with its lane tail and
+        // energy refunded.  A cancellation frees lanes or re-queues
+        // batch-mates at `now`, so affected boards re-pump inside this
+        // same clock step; the drain loops until no outcome surfaces.
+        if let Some(t) = tail.as_mut() {
+            while drain_tail(
+                now, &mut boards, t, &mut hedges, opts.failover,
+                &lat1_us, &mut pend, &mut front, &mut touched,
+                &mut backoff_rng,
+            ) {
+                for b in 0..nb {
+                    if touched[b] {
+                        touched[b] = false;
+                        wake_gen[b] += 1;
+                        if let Some(wake) = boards[b].pump(now)? {
+                            wakes.push(Reverse((
+                                wake.to_bits(), b, wake_gen[b],
+                            )));
+                        }
+                    }
+                }
+            }
         }
         // Clock advance: earliest live board wake from the heap,
         // merged with the next arrival and (while work is standing)
@@ -1096,6 +1293,12 @@ pub fn run_fleet(
         if let Some(at) = pend.next_at_us() {
             t_next = t_next.min(at);
         }
+        // An Open breaker's cooldown expiry must fire even on an
+        // otherwise idle fleet, or a recovered board would never
+        // re-enter probation.
+        if let Some(t) = &tail {
+            t_next = t_next.min(t.next_event_us());
+        }
         // Ticks drive the clock only while work is standing; across an
         // idle arrival gap the clock jumps straight to the next
         // arrival (ticks resume there via the catch-up above) instead
@@ -1108,6 +1311,48 @@ pub fn run_fleet(
         }
         debug_assert!(t_next > now, "fleet clock must advance");
         now = t_next;
+    }
+    // Tail epilogue: force-settle anything still in flight, run a
+    // final reconciliation, then resolve entries stranded by degraded
+    // boards — the clone is purged so it can never settle a second
+    // copy, and an unserved original either falls to its board's
+    // fault backstop (still queued: failed there) or is failed on the
+    // front tier here.  Settlement stays exactly-once either way.
+    if let Some(t) = tail.as_mut() {
+        for board in boards.iter_mut() {
+            board.settle_inflight(f64::INFINITY);
+        }
+        while drain_tail(
+            now, &mut boards, t, &mut hedges, opts.failover, &lat1_us,
+            &mut pend, &mut front, &mut touched, &mut backoff_rng,
+        ) {}
+        let leftovers: Vec<usize> = hedges.keys().copied().collect();
+        for req in leftovers {
+            let e = hedges.remove(&req).expect("hedge entry");
+            boards[e.clone_board].hedge_purge_queued(req, e.r.model,
+                                                     now);
+            boards[e.clone_board].tail_unmark(req);
+            boards[e.orig_board].tail_unmark(req);
+            if e.winner.is_some() {
+                // A copy settled; a still-queued losing original must
+                // not also fail in the backstop.
+                boards[e.orig_board].hedge_purge_queued(
+                    req, e.r.model, now);
+            } else {
+                let orig_queued = boards[e.orig_board]
+                    .queued_of_model(e.r.model)
+                    .any(|q| q.req == req);
+                if !orig_queued {
+                    front.record_failed(e.r.class, e.r.model);
+                }
+            }
+        }
+        // Orphans still pending re-delivery when the clock drained
+        // are out of chances: fail them on the front tier so the
+        // conservation identity closes.
+        while let Some((r, _, _)) = pend.pop_due(f64::INFINITY) {
+            front.record_failed(r.class, r.model);
+        }
     }
     // Seal per-board snapshots and merge the aggregate.
     let board_snaps: Vec<PerfSnapshot> = boards
@@ -1123,9 +1368,12 @@ pub fn run_fleet(
     for snap in &board_snaps {
         aggregate.merge_from(snap);
     }
-    if fault_on {
+    if fault_on || opts.tail.enabled() {
         // Front-tier offered/failed/retry accounting joins the
         // aggregate so conservation closes over the whole fleet.
+        // Tail runs need it too: a request whose every hedge copy
+        // dies (or whose hosts are all breaker-Open past its
+        // deadline) settles as failed on the front tier.
         aggregate.merge_from(&front);
     }
     if opts.autoscale.is_some()
@@ -1220,6 +1468,7 @@ fn steal_pass(
     boards: &mut [BoardSim],
     replicas: &[Vec<Replica>],
     health: &Health,
+    tail: Option<&TailState>,
     lat1_us: &[f64],
     elig: &mut Vec<usize>,
     touched: &mut [bool],
@@ -1236,8 +1485,16 @@ fn steal_pass(
             if boards[v].queue_len(m) == 0 {
                 continue;
             }
-            eligible_boards_into(m, now, replicas, health, elig);
-            elig.retain(|&b| b != v);
+            eligible_boards_into(m, now, replicas, health, tail,
+                                 elig);
+            // Thieves must be breaker-Closed: a Probation board
+            // admits only its metered probes, never a bulk steal.
+            elig.retain(|&b| {
+                b != v
+                    && tail.map_or(true, |t| {
+                        t.breaker(b) == BreakerState::Closed
+                    })
+            });
             if elig.is_empty() {
                 continue;
             }
@@ -1274,23 +1531,289 @@ fn steal_pass(
     }
 }
 
+/// The hedged-dispatch pass, run once per clock step after routing
+/// and stealing: scan every board's queued class-0 (interactive)
+/// requests; when one's projected completion on its current board —
+/// standing priced backlog plus the model's batch-1 price — can no
+/// longer make its deadline, re-offer a clone to the cheapest other
+/// routable board, but only if that board's own projection still
+/// beats the deadline (a hopeless clone would just burn capacity).
+/// Both copies are hedge-marked so their terminal outcomes divert to
+/// the boards' tail outboxes; `resolve_hedge_outcome` settles the
+/// first finish and cancels the loser.  The clone enters admission
+/// like a failover readmit — never re-counted as offered/admitted —
+/// and a request is hedged at most once while its entry stands.
+#[allow(clippy::too_many_arguments)]
+fn hedge_pass(
+    now: f64,
+    boards: &mut [BoardSim],
+    replicas: &[Vec<Replica>],
+    health: &Health,
+    tail: &TailState,
+    lat1_us: &[f64],
+    elig: &mut Vec<usize>,
+    hedges: &mut HashMap<usize, HedgeEntry>,
+    touched: &mut [bool],
+) {
+    for v in 0..boards.len() {
+        if health.down[v] || boards[v].total_queued() == 0 {
+            continue;
+        }
+        let backlog = boards[v].backlog_residual_us(now);
+        for m in 0..lat1_us.len() {
+            if boards[v].queue_len(m) == 0 {
+                continue;
+            }
+            // Collect first: marking and re-offering mutate boards,
+            // so the queue iterator must not stay borrowed.
+            let at_risk: Vec<QueuedReq> = boards[v]
+                .queued_of_model(m)
+                .filter(|r| {
+                    r.class == 0
+                        && !hedges.contains_key(&r.req)
+                        && now + backlog + lat1_us[m] > r.deadline_us
+                })
+                .copied()
+                .collect();
+            if at_risk.is_empty() {
+                continue;
+            }
+            eligible_boards_into(m, now, replicas, health, Some(tail),
+                                 elig);
+            elig.retain(|&b| b != v);
+            if elig.is_empty() {
+                continue;
+            }
+            for r in at_risk {
+                // Next-cheapest board: standing work plus price.
+                // Re-picked per request — each clone bumps its
+                // target's epoch, so a burst spreads.
+                let mut tb = elig[0];
+                let mut tb_score = f64::INFINITY;
+                for &b in elig.iter() {
+                    let s = boards[b].backlog_residual_us(now)
+                        + lat1_us[m];
+                    if s < tb_score {
+                        tb = b;
+                        tb_score = s;
+                    }
+                }
+                if now + tb_score >= r.deadline_us {
+                    continue; // no board projects to save it
+                }
+                boards[v].tail_mark(r.req);
+                boards[tb].tail_mark(r.req);
+                hedges.insert(r.req, HedgeEntry {
+                    r,
+                    orig_board: v,
+                    clone_board: tb,
+                    copies: 2,
+                    winner: None,
+                });
+                // A refused readmit sheds hedge-marked on `tb`; the
+                // diverted death resolves the entry at the next
+                // drain.
+                if boards[tb].readmit(r, now, false) {
+                    boards[tb].note_hedge(now, m, r.class);
+                }
+                touched[tb] = true;
+                touched[v] = true;
+            }
+        }
+    }
+}
+
+/// Apply one diverted hedge outcome.  The first `Served` settles the
+/// request (exactly once) on its board; the losing copy is eagerly
+/// cancelled — retracted mid-flight with lane/energy refunds, or
+/// purged from its queue — and if it already finished in the same
+/// reconciliation round, its later outcome is billed as duplicate
+/// waste instead.  When every copy dies unserved, the request returns
+/// to the front tier's deadline-aware retry path (or fails there,
+/// counted — conservation never leaks).
+#[allow(clippy::too_many_arguments)]
+fn resolve_hedge_outcome(
+    b: usize,
+    o: HedgeOutcome,
+    now: f64,
+    boards: &mut [BoardSim],
+    hedges: &mut HashMap<usize, HedgeEntry>,
+    failover: bool,
+    lat1_us: &[f64],
+    pend: &mut Pend,
+    front: &mut PerfSnapshot,
+    touched: &mut [bool],
+    rng: &mut Rng,
+) {
+    match o {
+        HedgeOutcome::Served {
+            r,
+            start_us,
+            finish_us,
+            share_us,
+            dma_frac,
+        } => {
+            let Some(e) = hedges.get_mut(&r.req) else {
+                // Defensive: a mark without an entry settles normally.
+                boards[b].finalize_hedge_served(
+                    &r, start_us, finish_us, share_us, dma_frac,
+                    false,
+                );
+                return;
+            };
+            if e.winner.is_some() {
+                // The twin already settled: this copy's service is a
+                // duplicate.  Its lane time was really spent — bill
+                // the per-request share as hedge waste and drop it.
+                e.copies = e.copies.saturating_sub(1);
+                let gone = e.copies == 0;
+                boards[b].bill_hedge_waste(share_us, now);
+                boards[b].tail_unmark(r.req);
+                if gone {
+                    hedges.remove(&r.req);
+                }
+                return;
+            }
+            // First finish wins.
+            e.winner = Some(b);
+            e.copies = e.copies.saturating_sub(1);
+            let clone_won = b == e.clone_board;
+            let loser = if clone_won {
+                e.orig_board
+            } else {
+                e.clone_board
+            };
+            let loser_pending = e.copies > 0;
+            boards[b].finalize_hedge_served(
+                &r, start_us, finish_us, share_us, dma_frac,
+                clone_won,
+            );
+            touched[b] = true;
+            let mut resolved = !loser_pending;
+            if loser_pending
+                && (boards[loser].hedge_cancel_inflight(r.req, now)
+                    || boards[loser].hedge_purge_queued(
+                        r.req, r.model, now))
+            {
+                // Eager first-wins cancellation; if neither path finds
+                // the copy it is racing us (settled this same round or
+                // already dead) and its own outcome will resolve it.
+                touched[loser] = true;
+                resolved = true;
+            }
+            if resolved {
+                // The loser copy was cancelled (unmarked — it will
+                // emit no further outcome), so the entry is settled.
+                hedges.remove(&r.req);
+            }
+        }
+        HedgeOutcome::Dead { req } => {
+            boards[b].tail_unmark(req);
+            let Some(e) = hedges.get_mut(&req) else { return };
+            e.copies = e.copies.saturating_sub(1);
+            if e.copies == 0 {
+                let entry = hedges.remove(&req).expect("entry");
+                if entry.winner.is_none() {
+                    // Both copies died unserved: back to the front
+                    // tier's deadline-aware retry (jittered backoff
+                    // keeps the clock strictly advancing).
+                    schedule_or_fail(
+                        entry.r,
+                        1,
+                        now + jittered_backoff_us(0, rng),
+                        true,
+                        failover,
+                        lat1_us[entry.r.model],
+                        pend,
+                        front,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Drain detector samples and diverted hedge outcomes from every
+/// board into the tail state.  Returns true when any hedge outcome
+/// was applied — the caller re-pumps the touched boards and drains
+/// again until the step quiesces.
+#[allow(clippy::too_many_arguments)]
+fn drain_tail(
+    now: f64,
+    boards: &mut [BoardSim],
+    t: &mut TailState,
+    hedges: &mut HashMap<usize, HedgeEntry>,
+    failover: bool,
+    lat1_us: &[f64],
+    pend: &mut Pend,
+    front: &mut PerfSnapshot,
+    touched: &mut [bool],
+    rng: &mut Rng,
+) -> bool {
+    for b in 0..boards.len() {
+        for s in boards[b].tail_take_samples() {
+            let v =
+                t.note_sample(b, s.pred_us, s.real_us, s.probe, now);
+            if v.suspect {
+                boards[b].note_suspect(now);
+            }
+            if v.opened {
+                boards[b].note_breaker_open(now);
+            }
+            if v.closed {
+                boards[b].note_breaker_close(now);
+            }
+        }
+    }
+    let mut progressed = false;
+    for b in 0..boards.len() {
+        for o in boards[b].tail_take_outcomes() {
+            progressed = true;
+            resolve_hedge_outcome(
+                b, o, now, boards, hedges, failover, lat1_us, pend,
+                front, touched, rng,
+            );
+        }
+    }
+    progressed
+}
+
+/// The autoscaler's queue-pressure scale-up trigger: standing backlog
+/// per replica, inflated by the control window's preemption waste per
+/// replica (capacity burned by cancelled batches re-queues as demand
+/// the backlog term alone undercounts), against the pressure fraction
+/// of one control interval.
+pub(crate) fn pressure_signal(
+    backlog_us: f64,
+    waste_per_replica_us: f64,
+    pressure: f64,
+    interval_us: f64,
+) -> bool {
+    backlog_us + waste_per_replica_us > pressure * interval_us
+}
+
 /// Collect the boards eligible for a model-`m` request at `now` into
 /// `out` (a scratch buffer reused across arrivals — the routing hot
 /// path allocates nothing): available ([`Health::avail`]) boards with
 /// an active, non-draining replica; falls back to available boards
-/// hosting *any* replica of `m` (warming or draining).  Empty only
-/// when every host of `m` is down — the caller must then park the
-/// request on the front tier, never drop it.
+/// hosting *any* replica of `m` (warming or draining).  When the tail
+/// layer is armed, breaker-Open boards are excluded exactly like
+/// unavailable ones and Probation boards admit work only while a
+/// probe is due ([`TailState::routable`]).  Empty only when every
+/// host of `m` is dark — the caller must then park the request on the
+/// front tier, never drop it.
 fn eligible_boards_into(
     m: usize,
     now: f64,
     replicas: &[Vec<Replica>],
     health: &Health,
+    tail: Option<&TailState>,
     out: &mut Vec<usize>,
 ) {
     out.clear();
     for (b, p) in replicas.iter().enumerate() {
         if health.avail(b)
+            && tail.map_or(true, |t| t.routable(b, now))
             && p.iter().any(|r| {
                 r.model == m && !r.draining && r.active_from <= now
             })
@@ -1300,7 +1823,10 @@ fn eligible_boards_into(
     }
     if out.is_empty() {
         for (b, p) in replicas.iter().enumerate() {
-            if health.avail(b) && p.iter().any(|r| r.model == m) {
+            if health.avail(b)
+                && tail.map_or(true, |t| t.routable(b, now))
+                && p.iter().any(|r| r.model == m)
+            {
                 out.push(b);
             }
         }
@@ -1359,6 +1885,7 @@ fn autoscale_tick(
     boards: &mut [BoardSim],
     replicas: &mut [Vec<Replica>],
     health: &Health,
+    tail: Option<&TailState>,
     state: &mut AutoState,
     events: &mut Vec<ScaleEvent>,
     timeline: &mut Vec<ReplicaSample>,
@@ -1370,6 +1897,17 @@ fn autoscale_tick(
         plist.retain(|r| !(r.draining && boards[b].queue_len(r.model) == 0));
     }
     let counts = count_active(replicas, nm);
+    // Preemption waste accrued since the last control tick, per
+    // board.  Cancelled-batch work re-queues as demand, so a board
+    // bleeding capacity to preemption is under more pressure than its
+    // backlog alone shows (ROADMAP follow-up).  Preempt-off runs see
+    // an all-zero delta — the signal is byte-inert there.
+    let mut dw = vec![0.0; nb];
+    for b in 0..nb {
+        let w = boards[b].snapshot().preempt_waste_us;
+        dw[b] = (w - state.prev_waste[b]).max(0.0);
+        state.prev_waste[b] = w;
+    }
     let max_per_model = if auto.max_per_model == 0 {
         nb
     } else {
@@ -1400,7 +1938,20 @@ fn autoscale_tick(
             boards.iter().map(|b| b.queue_len(m)).sum();
         let backlog_us =
             queued as f64 * eff_cost / counts[m].max(1) as f64;
-        let pressured = backlog_us > auto.pressure * auto.interval_us;
+        let waste_us: f64 = (0..nb)
+            .filter(|&b| {
+                replicas[b]
+                    .iter()
+                    .any(|r| r.model == m && !r.draining)
+            })
+            .map(|b| dw[b])
+            .sum();
+        let pressured = pressure_signal(
+            backlog_us,
+            waste_us / counts[m].max(1) as f64,
+            auto.pressure,
+            auto.interval_us,
+        );
 
         // Scale up: unhealthy window or standing pressure.  The streak
         // is not reset after acting — while the signal persists the
@@ -1421,6 +1972,7 @@ fn autoscale_tick(
             // reclaimed by cancelling its drain — no warm-up to pay.
             let undrain = (0..nb).find(|&b| {
                 health.avail(b)
+                    && tail.map_or(true, |t| t.routable(b, now))
                     && replicas[b]
                         .iter()
                         .any(|r| r.model == m && r.draining)
@@ -1448,7 +2000,11 @@ fn autoscale_tick(
                 // not serve), so the capacity lands on survivors.
                 let mut target: Option<(usize, f64)> = None;
                 for b in 0..nb {
+                    // Breaker-Open boards are masked from placement
+                    // exactly like quarantined ones: warming capacity
+                    // onto a gray-failing board would strand it.
                     if !health.avail(b)
+                        || !tail.map_or(true, |t| t.routable(b, now))
                         || replicas[b].iter().any(|r| r.model == m)
                     {
                         continue;
@@ -1603,11 +2159,25 @@ mod tests {
         assert!(o.faults.is_none(), "fault injection must be opt-in");
         assert!(o.failover, "failover must default on");
         assert_eq!(o.policy, ClusterPolicy::SparsityAware);
+        assert!(!o.tail.enabled(), "tail tolerance must be opt-in");
+        assert_eq!(o.tail, TailPolicy::OFF);
         let covered: Vec<usize> =
             o.placement.iter().flatten().copied().collect();
         assert!(covered.contains(&0) && covered.contains(&1));
         let a = AutoscalePolicy::default();
         assert!(a.hysteresis >= 1 && a.interval_us > 0.0);
         assert!(a.down_load < a.up_attainment);
+    }
+
+    /// ROADMAP follow-up: preemption waste feeds the scale-up
+    /// pressure signal.  A backlog below the threshold on its own
+    /// must cross it once the control window's per-replica waste is
+    /// added — and a quiet board must stay quiet.
+    #[test]
+    fn preempt_waste_inflates_scale_up_pressure() {
+        // Threshold: 0.6 * 50ms = 30ms of standing work.
+        assert!(!pressure_signal(25_000.0, 0.0, 0.6, 50_000.0));
+        assert!(pressure_signal(25_000.0, 10_000.0, 0.6, 50_000.0));
+        assert!(!pressure_signal(0.0, 0.0, 0.6, 50_000.0));
     }
 }

@@ -31,6 +31,12 @@
 //!   thermal slow-downs; the fleet drains crashed boards back through
 //!   the front tier with deadline-aware retries, and conservation
 //!   extends to offered == served + shed + failed exactly.
+//! * Tail tolerance — [`TailPolicy`] (via [`FleetOptions::tail`])
+//!   arms a gray-failure detector (per-board EWMA of realized vs
+//!   predicted dispatch latency), a per-board circuit breaker
+//!   (`Closed → Open → Probation` with seeded probe dispatches), and
+//!   hedged dispatch for deadline-at-risk interactive requests with
+//!   first-wins cancellation through the in-flight ledger (tail).
 //!
 //! The `serve-multi` / `serve-fleet` CLI subcommands and the
 //! `fig13_multimodel` / `fig_fleet` benches drive the [`demo`] fleet
@@ -43,6 +49,7 @@ pub mod fleet;
 pub mod registry;
 pub mod report;
 pub mod slo;
+pub mod tail;
 pub mod workload;
 
 pub use cluster::{
@@ -58,6 +65,7 @@ pub use report::{GroupStats, PerfSnapshot};
 pub use slo::{
     AdmissionQueues, EnergySlo, QueuedReq, ShedPolicy, ShedReq, SloClass,
 };
+pub use tail::{TailParams, TailPolicy};
 pub use workload::{
     fit_mmpp, merge_arrivals, trace_from_json, trace_to_json, Arrival,
     ArrivalPattern, MmppFit, Tenant,

@@ -198,6 +198,24 @@ pub struct PerfSnapshot {
     /// microseconds of virtual time (the work stayed billed as lane
     /// busy time but produced no served request).
     pub preempt_waste_us: f64,
+    /// Boards flagged suspect by the gray-failure detector (one per
+    /// sustained realized-vs-predicted inflation episode).  0 with
+    /// `--hedge=off --breaker=off` — all six tail counters gate the
+    /// tail JSON keys and summary tail.
+    pub suspects: u64,
+    /// Circuit-breaker trips (first opens plus failed-probe re-opens).
+    pub breaker_opens: u64,
+    /// Probation probe dispatches admitted (the routed request itself
+    /// is the probe).
+    pub probes: u64,
+    /// At-risk requests hedged: clones offered to a second board.
+    pub hedges: u64,
+    /// Hedges whose clone finished first (the original was cancelled).
+    pub hedge_wins: u64,
+    /// Lane-time executed on losing hedge copies, microseconds of
+    /// virtual time (duplicate work: billed as lane busy time but
+    /// produced no served request beyond the winner's).
+    pub hedge_waste_us: f64,
 }
 
 impl PerfSnapshot {
@@ -244,6 +262,12 @@ impl PerfSnapshot {
             preemptions: 0,
             steals: 0,
             preempt_waste_us: 0.0,
+            suspects: 0,
+            breaker_opens: 0,
+            probes: 0,
+            hedges: 0,
+            hedge_wins: 0,
+            hedge_waste_us: 0.0,
         }
     }
 
@@ -329,6 +353,12 @@ impl PerfSnapshot {
         self.preemptions += other.preemptions;
         self.steals += other.steals;
         self.preempt_waste_us += other.preempt_waste_us;
+        self.suspects += other.suspects;
+        self.breaker_opens += other.breaker_opens;
+        self.probes += other.probes;
+        self.hedges += other.hedges;
+        self.hedge_wins += other.hedge_wins;
+        self.hedge_waste_us += other.hedge_waste_us;
         if self.governor.is_empty() {
             self.governor = other.governor.clone();
         }
@@ -392,6 +422,19 @@ impl PerfSnapshot {
         self.preemptions != 0
             || self.steals != 0
             || self.preempt_waste_us != 0.0
+    }
+
+    /// Whether any tail-tolerance accounting is non-zero — gates the
+    /// tail keys out of [`PerfSnapshot::to_json`] and the summary
+    /// tail, keeping `--hedge=off --breaker=off` output byte-identical
+    /// to the pre-tail report.
+    fn tail_on(&self) -> bool {
+        self.suspects != 0
+            || self.breaker_opens != 0
+            || self.probes != 0
+            || self.hedges != 0
+            || self.hedge_wins != 0
+            || self.hedge_waste_us != 0.0
     }
 
     /// Fraction of all offered requests served within deadline — the
@@ -486,6 +529,18 @@ impl PerfSnapshot {
             o.insert("steals".into(), Value::Num(self.steals as f64));
             o.insert("preempt_waste_us".into(),
                      Value::Num(self.preempt_waste_us));
+        }
+        if self.tail_on() {
+            o.insert("suspects".into(),
+                     Value::Num(self.suspects as f64));
+            o.insert("breaker_opens".into(),
+                     Value::Num(self.breaker_opens as f64));
+            o.insert("probes".into(), Value::Num(self.probes as f64));
+            o.insert("hedges".into(), Value::Num(self.hedges as f64));
+            o.insert("hedge_wins".into(),
+                     Value::Num(self.hedge_wins as f64));
+            o.insert("hedge_waste_us".into(),
+                     Value::Num(self.hedge_waste_us));
         }
         if !self.governor.is_empty() {
             o.insert("governor".into(),
@@ -616,6 +671,18 @@ impl PerfSnapshot {
                 self.preemptions,
                 self.steals,
                 self.preempt_waste_us / 1e3
+            ));
+        }
+        if self.tail_on() {
+            s.push_str(&format!(
+                " | tail: {} suspects {} opens {} probes {} hedges \
+                 ({} won) {:.1}ms hedge waste",
+                self.suspects,
+                self.breaker_opens,
+                self.probes,
+                self.hedges,
+                self.hedge_wins,
+                self.hedge_waste_us / 1e3
             ));
         }
         s
@@ -787,6 +854,53 @@ mod tests {
         // Preemption alone never drags the fault keys in.
         assert!(v.get("failovers").as_f64().is_none());
         assert!(a.summary().contains("preempt: 3 preempted 4 stolen"));
+    }
+
+    #[test]
+    fn tail_fields_merge_and_gate_json_keys() {
+        let labels =
+            (vec!["c".to_string()], vec!["m".to_string()]);
+        let mut a = PerfSnapshot::new("fleet", "reject-new",
+                                      &labels.0, &labels.1);
+        // Tail machinery never fired: keys absent, summary untouched.
+        let v = json::parse(&a.to_json_string()).unwrap();
+        assert!(v.get("suspects").as_f64().is_none());
+        assert!(v.get("breaker_opens").as_f64().is_none());
+        assert!(v.get("probes").as_f64().is_none());
+        assert!(v.get("hedges").as_f64().is_none());
+        assert!(v.get("hedge_wins").as_f64().is_none());
+        assert!(v.get("hedge_waste_us").as_f64().is_none());
+        assert!(!a.summary().contains("tail:"));
+
+        let mut b = a.clone();
+        a.suspects = 1;
+        a.breaker_opens = 2;
+        a.probes = 3;
+        a.hedge_waste_us = 800.0;
+        b.suspects = 1;
+        b.hedges = 5;
+        b.hedge_wins = 2;
+        b.hedge_waste_us = 200.0;
+        a.merge_from(&b);
+        assert_eq!(a.suspects, 2);
+        assert_eq!(a.breaker_opens, 2);
+        assert_eq!(a.probes, 3);
+        assert_eq!(a.hedges, 5);
+        assert_eq!(a.hedge_wins, 2);
+        assert!((a.hedge_waste_us - 1_000.0).abs() < 1e-9);
+        let v = json::parse(&a.to_json_string()).unwrap();
+        assert_eq!(v.get("suspects").as_f64().unwrap(), 2.0);
+        assert_eq!(v.get("breaker_opens").as_f64().unwrap(), 2.0);
+        assert_eq!(v.get("probes").as_f64().unwrap(), 3.0);
+        assert_eq!(v.get("hedges").as_f64().unwrap(), 5.0);
+        assert_eq!(v.get("hedge_wins").as_f64().unwrap(), 2.0);
+        assert!((v.get("hedge_waste_us").as_f64().unwrap() - 1_000.0)
+                .abs() < 1e-9);
+        // The tail keys never drag the fault or preempt keys in.
+        assert!(v.get("failovers").as_f64().is_none());
+        assert!(v.get("preemptions").as_f64().is_none());
+        assert!(a.summary().contains(
+            "tail: 2 suspects 2 opens 3 probes 5 hedges (2 won)"));
     }
 
     #[test]

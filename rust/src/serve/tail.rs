@@ -1,0 +1,542 @@
+//! Tail tolerance for the serving fleet: gray-failure detection,
+//! per-board circuit breakers, and hedged dispatch.
+//!
+//! PR 8's fault layer handles *fail-stop* crashes — a board that goes
+//! dark is quarantined by `Health` and its work fails over.  A
+//! thermally throttled board is a **gray failure**: it keeps accepting
+//! and serving work, just slower than the router's installed price
+//! tables believe, so interactive requests burn deadlines there
+//! silently.  This module closes that gap with three cooperating
+//! mechanisms, all fleet-side and fully deterministic in virtual time:
+//!
+//! * **Gray-failure detector** — a per-board EWMA of the realized /
+//!   predicted dispatch-latency ratio.  Predicted latency is the
+//!   pre-thermal base latency the price tables are built from;
+//!   realized latency is what the batch actually took (thermal
+//!   stretch included, DVFS excluded — the governor's stretching is
+//!   *chosen*, not a failure).  A board goes *suspect* when the EWMA
+//!   exceeds [`TailParams::suspect_factor`] for
+//!   [`TailParams::suspect_k`] consecutive inflated batches.
+//! * **Circuit breaker** — per board, `Closed → Open → Probation →
+//!   Closed`.  `Open` removes the board from routing, stealing and
+//!   autoscale placement exactly like quarantine (without marking it
+//!   `down`; its standing queue keeps draining).  After a cooldown it
+//!   enters `Probation`, where it is routable only at seeded, jittered
+//!   probe instants — the request routed then *is* the probe, and its
+//!   realized-vs-predicted sample decides recovery or re-opening.
+//! * **Hedged dispatch** — when a queued interactive request's wait
+//!   makes its deadline at-risk on its assigned board, the fleet
+//!   re-offers a clone to the next-cheapest eligible board.  First
+//!   finish wins; the loser is cancelled through the in-flight ledger
+//!   and `BoardPower::retract` (lane time and energy refunded), with
+//!   the duplicate executed work billed to `hedge_waste_us`.  The
+//!   settled-set guarantee (each request settles exactly once) holds
+//!   even when both copies race a crash or a preemption — see
+//!   `serve/fleet.rs` for the reconciliation protocol.
+//!
+//! With `--hedge=off --breaker=off` nothing here is armed and the
+//! fleet output is byte-identical to the pre-tail scheduler
+//! (differentially pinned by `rust/tests/serve_tail.rs`).
+
+use crate::util::rng::Rng;
+
+/// Which tail-tolerance mechanisms a fleet run arms.  [`TailPolicy::OFF`]
+/// (the default) arms nothing and keeps the byte-identical legacy path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TailPolicy {
+    /// Hedge at-risk interactive requests onto a second board.
+    pub hedge: bool,
+    /// Run the circuit breaker (Open/Probation route gating).  The
+    /// gray-failure detector runs whenever either flag is set.
+    pub breaker: bool,
+}
+
+impl TailPolicy {
+    /// Everything off: no detector, no breaker, no hedging.
+    pub const OFF: TailPolicy = TailPolicy { hedge: false, breaker: false };
+
+    /// Whether any tail machinery is armed at all.
+    pub fn enabled(self) -> bool {
+        self.hedge || self.breaker
+    }
+
+    /// Canonical display name (`off` | `hedge` | `breaker` |
+    /// `hedge+breaker`).
+    pub fn name(self) -> &'static str {
+        match (self.hedge, self.breaker) {
+            (false, false) => "off",
+            (true, false) => "hedge",
+            (false, true) => "breaker",
+            (true, true) => "hedge+breaker",
+        }
+    }
+}
+
+impl Default for TailPolicy {
+    fn default() -> Self {
+        TailPolicy::OFF
+    }
+}
+
+/// Detector / breaker / hedging tuning knobs.  All times are
+/// microseconds of virtual time; the defaults are sized for the demo
+/// fleet's 20 ms interactive deadline.
+#[derive(Debug, Clone, Copy)]
+pub struct TailParams {
+    /// EWMA smoothing for the realized/predicted latency ratio.
+    pub ewma_alpha: f64,
+    /// Inflation ratio above which a batch counts as inflated and the
+    /// EWMA marks the board suspect.
+    pub suspect_factor: f64,
+    /// Consecutive inflated batches required before flagging.
+    pub suspect_k: u32,
+    /// How long an `Open` breaker holds the board unroutable before
+    /// probation begins, us.
+    pub open_cooldown_us: f64,
+    /// Mean spacing between probation probes, us (jittered per probe
+    /// from the seeded substream).
+    pub probe_interval_us: f64,
+    /// Consecutive good probes required to close the breaker.
+    pub probe_close_after: u32,
+    /// Seed for the per-board probe-jitter substreams.
+    pub seed: u64,
+}
+
+impl Default for TailParams {
+    fn default() -> Self {
+        TailParams {
+            ewma_alpha: 0.3,
+            suspect_factor: 1.4,
+            suspect_k: 3,
+            open_cooldown_us: 50_000.0,
+            probe_interval_us: 20_000.0,
+            probe_close_after: 2,
+            seed: 0x7a11,
+        }
+    }
+}
+
+/// Circuit-breaker state of one board.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BreakerState {
+    /// Healthy: routable, samples feed the detector.
+    Closed,
+    /// Tripped: unroutable until `until_us`, then probation.
+    Open {
+        /// When the cooldown ends and probation begins, us.
+        until_us: f64,
+    },
+    /// Recovering: routable only at probe instants.
+    Probation,
+}
+
+/// What one detector sample concluded (all flags false for the common
+/// healthy sample).  The fleet maps these onto board counters and
+/// trace events.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SampleVerdict {
+    /// The board was newly flagged suspect by this sample.
+    pub suspect: bool,
+    /// The breaker transitioned to `Open` (first trip or a failed
+    /// probe re-opening it).
+    pub opened: bool,
+    /// The breaker closed (probation completed).
+    pub closed: bool,
+}
+
+/// Per-board detector + breaker runtime.
+#[derive(Debug, Clone)]
+struct BoardTail {
+    /// EWMA of realized/predicted latency, starts at 1.0 (nominal).
+    ewma: f64,
+    /// Consecutive inflated (ratio > factor) samples.
+    streak: u32,
+    state: BreakerState,
+    /// Next instant a probation probe may be routed, us.
+    next_probe_us: f64,
+    /// Consecutive good probes in the current probation.
+    good_probes: u32,
+    /// Latched once flagged; re-arms when the EWMA recovers (or the
+    /// breaker closes), so one sustained episode counts one suspect.
+    flagged: bool,
+    /// Seeded substream for probe-spacing jitter.
+    rng: Rng,
+}
+
+/// Fleet-side tail-tolerance state: one detector/breaker per board.
+/// Built only when [`TailPolicy::enabled`]; the fleet loop consults it
+/// for routing eligibility, feeds it realized/predicted samples from
+/// batch finishes, and merges its next breaker deadline into the
+/// virtual clock.
+#[derive(Debug)]
+pub struct TailState {
+    policy: TailPolicy,
+    params: TailParams,
+    boards: Vec<BoardTail>,
+}
+
+impl TailState {
+    /// Build tail state for `n_boards` boards.  Each board gets its own
+    /// jitter substream so adding boards never perturbs existing ones
+    /// (same splitmix spread as `FaultPlan::sample_mttf_mttr`).
+    pub fn new(policy: TailPolicy, params: TailParams,
+               n_boards: usize) -> Self {
+        TailState {
+            policy,
+            params,
+            boards: (0..n_boards)
+                .map(|b| BoardTail {
+                    ewma: 1.0,
+                    streak: 0,
+                    state: BreakerState::Closed,
+                    next_probe_us: 0.0,
+                    good_probes: 0,
+                    flagged: false,
+                    rng: Rng::new(
+                        params.seed
+                            ^ (b as u64)
+                                .wrapping_mul(0x9E3779B97F4A7C15),
+                    ),
+                })
+                .collect(),
+        }
+    }
+
+    /// The armed policy.
+    pub fn policy(&self) -> TailPolicy {
+        self.policy
+    }
+
+    /// The breaker state of one board.
+    pub fn breaker(&self, b: usize) -> BreakerState {
+        self.boards[b].state
+    }
+
+    /// Deliver cooldown expiries due by `now_us`: every `Open` board
+    /// whose `until_us` has passed enters `Probation` with its first
+    /// probe allowed immediately.  Call once per fleet-loop iteration
+    /// before routing.
+    pub fn advance(&mut self, now_us: f64) {
+        for bt in &mut self.boards {
+            if let BreakerState::Open { until_us } = bt.state {
+                if until_us <= now_us {
+                    bt.state = BreakerState::Probation;
+                    bt.good_probes = 0;
+                    bt.next_probe_us = now_us;
+                }
+            }
+        }
+    }
+
+    /// Earliest future breaker deadline (an `Open` cooldown expiring),
+    /// or `INFINITY`.  Merged into the fleet clock so probation begins
+    /// on time even when no other event is due.
+    pub fn next_event_us(&self) -> f64 {
+        self.boards
+            .iter()
+            .filter_map(|bt| match bt.state {
+                BreakerState::Open { until_us } => Some(until_us),
+                _ => None,
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Whether the router (and the stealing / autoscale passes) may
+    /// place work on board `b` at `now_us`.  `Open` boards are never
+    /// routable; `Probation` boards only at/after their probe instant.
+    pub fn routable(&self, b: usize, now_us: f64) -> bool {
+        if !self.policy.breaker {
+            return true;
+        }
+        match self.boards[b].state {
+            BreakerState::Closed => true,
+            BreakerState::Open { .. } => false,
+            BreakerState::Probation => {
+                self.boards[b].next_probe_us <= now_us
+            }
+        }
+    }
+
+    /// Whether a request routed to board `b` right now would be a
+    /// probation probe (the caller must then [`TailState::consume_probe`]).
+    pub fn is_probe(&self, b: usize) -> bool {
+        self.policy.breaker
+            && self.boards[b].state == BreakerState::Probation
+    }
+
+    /// Consume the probe slot just used on board `b`: schedule the
+    /// next probe one jittered interval out, keeping probation
+    /// low-rate and deterministic.
+    pub fn consume_probe(&mut self, b: usize, now_us: f64) {
+        let p = self.params.probe_interval_us;
+        let bt = &mut self.boards[b];
+        bt.next_probe_us =
+            now_us + p * (0.75 + 0.5 * bt.rng.f64());
+    }
+
+    /// Feed one realized/predicted latency sample from a batch finish
+    /// on board `b`.  `probe` marks a batch dispatched as a probation
+    /// probe; non-probe samples arriving while the breaker is not
+    /// `Closed` are leftovers from before the trip and are ignored.
+    /// Returns what (if anything) changed so the caller can count and
+    /// trace it.
+    pub fn note_sample(&mut self, b: usize, pred_us: f64, real_us: f64,
+                       probe: bool, now_us: f64) -> SampleVerdict {
+        let mut v = SampleVerdict::default();
+        if pred_us <= 0.0 || !real_us.is_finite() {
+            return v;
+        }
+        let ratio = real_us / pred_us;
+        let p = self.params;
+        let bt = &mut self.boards[b];
+        if probe {
+            if bt.state != BreakerState::Probation {
+                return v; // stale probe (breaker already moved on)
+            }
+            if ratio <= p.suspect_factor {
+                bt.good_probes += 1;
+                if bt.good_probes >= p.probe_close_after {
+                    bt.state = BreakerState::Closed;
+                    bt.ewma = 1.0;
+                    bt.streak = 0;
+                    bt.flagged = false;
+                    v.closed = true;
+                }
+            } else {
+                // A bad probe re-opens for another full cooldown.
+                bt.state = BreakerState::Open {
+                    until_us: now_us + p.open_cooldown_us,
+                };
+                bt.good_probes = 0;
+                v.opened = true;
+            }
+            return v;
+        }
+        if bt.state != BreakerState::Closed {
+            return v; // pre-trip leftovers settle without effect
+        }
+        bt.ewma = p.ewma_alpha * ratio + (1.0 - p.ewma_alpha) * bt.ewma;
+        if ratio > p.suspect_factor {
+            bt.streak += 1;
+        } else {
+            bt.streak = 0;
+        }
+        if bt.flagged && bt.ewma <= p.suspect_factor {
+            // The episode ended on its own (detector-only mode, or a
+            // thermal window closing before the breaker armed).
+            bt.flagged = false;
+        }
+        if !bt.flagged
+            && bt.ewma > p.suspect_factor
+            && bt.streak >= p.suspect_k
+        {
+            bt.flagged = true;
+            v.suspect = true;
+            if self.policy.breaker {
+                bt.state = BreakerState::Open {
+                    until_us: now_us + p.open_cooldown_us,
+                };
+                v.opened = true;
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed() -> TailState {
+        TailState::new(
+            TailPolicy { hedge: false, breaker: true },
+            TailParams::default(),
+            2,
+        )
+    }
+
+    #[test]
+    fn policy_names_and_enablement() {
+        assert_eq!(TailPolicy::OFF.name(), "off");
+        assert!(!TailPolicy::OFF.enabled());
+        assert_eq!(TailPolicy::default(), TailPolicy::OFF);
+        let hb = TailPolicy { hedge: true, breaker: true };
+        assert_eq!(hb.name(), "hedge+breaker");
+        assert!(hb.enabled());
+        assert_eq!(
+            TailPolicy { hedge: true, breaker: false }.name(),
+            "hedge"
+        );
+        assert_eq!(
+            TailPolicy { hedge: false, breaker: true }.name(),
+            "breaker"
+        );
+    }
+
+    #[test]
+    fn sustained_inflation_flags_once_and_opens_the_breaker() {
+        let mut t = armed();
+        let mut opened_at = None;
+        for i in 0..10 {
+            let v = t.note_sample(0, 100.0, 200.0, false, i as f64);
+            if v.opened {
+                assert!(v.suspect, "the trip is the suspect flag");
+                assert!(opened_at.is_none(), "one episode, one open");
+                opened_at = Some(i);
+            }
+        }
+        // EWMA(2.0) crosses 1.4 within the first few samples and the
+        // streak gate requires >= 3 inflated batches.
+        let k = opened_at.expect("sustained 2x inflation must trip");
+        assert!(k >= 2, "streak gate demands k consecutive samples");
+        assert!(matches!(t.breaker(0), BreakerState::Open { .. }));
+        assert!(!t.routable(0, 1e9), "open is never routable");
+        // The healthy board is untouched.
+        assert_eq!(t.breaker(1), BreakerState::Closed);
+        assert!(t.routable(1, 0.0));
+    }
+
+    #[test]
+    fn one_bad_batch_does_not_flag() {
+        let mut t = armed();
+        let v = t.note_sample(0, 100.0, 500.0, false, 0.0);
+        assert_eq!(v, SampleVerdict::default());
+        // Recovery resets the streak.
+        t.note_sample(0, 100.0, 300.0, false, 1.0);
+        let v = t.note_sample(0, 100.0, 100.0, false, 2.0);
+        assert!(!v.suspect);
+        assert_eq!(t.breaker(0), BreakerState::Closed);
+    }
+
+    #[test]
+    fn cooldown_probation_and_recovery_roundtrip() {
+        let mut t = armed();
+        for i in 0..6 {
+            t.note_sample(0, 100.0, 200.0, false, 1_000.0 + i as f64);
+        }
+        let BreakerState::Open { until_us } = t.breaker(0) else {
+            panic!("must be open");
+        };
+        assert_eq!(t.next_event_us(), until_us);
+        // Before the cooldown: still open, advance is a no-op.
+        t.advance(until_us - 1.0);
+        assert!(matches!(t.breaker(0), BreakerState::Open { .. }));
+        // At the cooldown: probation, probe allowed immediately.
+        t.advance(until_us);
+        assert_eq!(t.breaker(0), BreakerState::Probation);
+        assert_eq!(t.next_event_us(), f64::INFINITY);
+        assert!(t.routable(0, until_us));
+        assert!(t.is_probe(0));
+        t.consume_probe(0, until_us);
+        assert!(
+            !t.routable(0, until_us),
+            "probe slot consumed: unroutable until the next instant"
+        );
+        // Non-probe leftovers from before the trip change nothing.
+        let v = t.note_sample(0, 100.0, 900.0, false, until_us + 1.0);
+        assert_eq!(v, SampleVerdict::default());
+        assert_eq!(t.breaker(0), BreakerState::Probation);
+        // Two good probes close it.
+        let v = t.note_sample(0, 100.0, 105.0, true, until_us + 2.0);
+        assert!(!v.closed);
+        let v = t.note_sample(0, 100.0, 105.0, true, until_us + 3.0);
+        assert!(v.closed);
+        assert_eq!(t.breaker(0), BreakerState::Closed);
+        assert!(t.routable(0, until_us + 3.0));
+    }
+
+    #[test]
+    fn bad_probe_reopens_for_another_cooldown() {
+        let mut t = armed();
+        for i in 0..6 {
+            t.note_sample(0, 100.0, 200.0, false, i as f64);
+        }
+        let BreakerState::Open { until_us } = t.breaker(0) else {
+            panic!("must be open");
+        };
+        t.advance(until_us);
+        let v = t.note_sample(0, 100.0, 400.0, true, until_us + 5.0);
+        assert!(v.opened && !v.closed && !v.suspect);
+        match t.breaker(0) {
+            BreakerState::Open { until_us: u } => {
+                assert_eq!(
+                    u,
+                    until_us + 5.0
+                        + TailParams::default().open_cooldown_us
+                );
+            }
+            s => panic!("expected re-open, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn detector_only_mode_flags_but_never_gates_routing() {
+        let mut t = TailState::new(
+            TailPolicy { hedge: true, breaker: false },
+            TailParams::default(),
+            1,
+        );
+        let mut suspects = 0;
+        for i in 0..8 {
+            let v = t.note_sample(0, 100.0, 200.0, false, i as f64);
+            assert!(!v.opened && !v.closed);
+            suspects += v.suspect as u32;
+        }
+        assert_eq!(suspects, 1, "one episode, one suspect");
+        assert_eq!(t.breaker(0), BreakerState::Closed);
+        assert!(t.routable(0, 0.0));
+        assert!(!t.is_probe(0));
+        // Recovery re-arms the latch: a second episode counts again.
+        for i in 0..12 {
+            t.note_sample(0, 100.0, 100.0, false, 100.0 + i as f64);
+        }
+        let mut again = 0;
+        for i in 0..8 {
+            again += t
+                .note_sample(0, 100.0, 200.0, false, 200.0 + i as f64)
+                .suspect as u32;
+        }
+        assert_eq!(again, 1, "recovered board can be re-flagged");
+    }
+
+    #[test]
+    fn probe_jitter_is_seeded_deterministic() {
+        let mk = || {
+            let mut t = armed();
+            for i in 0..6 {
+                t.note_sample(0, 100.0, 200.0, false, i as f64);
+            }
+            let BreakerState::Open { until_us } = t.breaker(0) else {
+                panic!()
+            };
+            t.advance(until_us);
+            t.consume_probe(0, until_us);
+            t.boards[0].next_probe_us
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a, b, "same seed, same probe schedule");
+        let p = TailParams::default().probe_interval_us;
+        // Jitter stays inside [0.75, 1.25) intervals past `now`.
+        let base = a - p * 0.75;
+        assert!(base >= 0.0 && a <= base + p * 1.25);
+    }
+
+    #[test]
+    fn degenerate_samples_are_ignored() {
+        let mut t = armed();
+        assert_eq!(
+            t.note_sample(0, 0.0, 100.0, false, 0.0),
+            SampleVerdict::default()
+        );
+        assert_eq!(
+            t.note_sample(0, -5.0, 100.0, false, 0.0),
+            SampleVerdict::default()
+        );
+        assert_eq!(
+            t.note_sample(0, 100.0, f64::NAN, false, 0.0),
+            SampleVerdict::default()
+        );
+        assert_eq!(t.breaker(0), BreakerState::Closed);
+    }
+}

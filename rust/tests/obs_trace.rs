@@ -17,6 +17,7 @@
 use sparoa::api::SessionBuilder;
 use sparoa::bench_support::device_profile;
 use sparoa::device::Proc;
+use sparoa::faults::{Fault, FaultPlan};
 use sparoa::graph::ModelGraph;
 use sparoa::obs::{TraceConfig, TraceEvent, TraceRecord};
 use sparoa::power::{Governor, PowerConfig, PowerProfile};
@@ -24,7 +25,7 @@ use sparoa::serve::{
     merge_arrivals, run_cluster, run_fleet, ArrivalPattern,
     ClusterOptions, ClusterPolicy, FleetOptions, ModelRegistry,
     PerfSnapshot, PreemptionPolicy, RouterPolicy, ShedPolicy, SloClass,
-    Tenant,
+    TailParams, TailPolicy, Tenant,
 };
 
 fn registry_of(models: &[(&str, usize, f64, f64)]) -> ModelRegistry {
@@ -453,4 +454,160 @@ fn preempt_and_steal_traces_reconcile_with_counters() {
         assert_eq!(queue_waits, snap.aggregate.total_served(),
                    "{what}: a request was served zero or multiple times");
     }
+}
+
+/// Hedging-friendly traced fleet: heavy + light on all three boards,
+/// board 0 thermally stretched through the middle of the run so the
+/// detector trips its breaker and deadline-at-risk interactive heads
+/// hedge onto the healthy boards.
+fn hedging_fleet() -> sparoa::serve::FleetSnapshot {
+    let reg = registry_of(&[
+        ("heavy", 8, 6.0, 0.1),
+        ("light", 4, 0.3, 0.75),
+    ]);
+    let heavy = reg.get(0);
+    let cap_b = heavy.gpu_batch_cap.max(1);
+    let heavy_batch_lat = heavy.latency_us(Proc::Gpu, cap_b).unwrap();
+    let heavy_rate = cap_b as f64 / heavy_batch_lat * 1e6;
+    let light = reg.get(1);
+    let lcap = light.gpu_batch_cap.max(1);
+    let light_rate =
+        lcap as f64 / light.latency_us(Proc::Gpu, lcap).unwrap() * 1e6;
+    let light_lat1 = light.cheapest_latency_us(1).unwrap();
+    let classes = vec![
+        SloClass::new("interactive", 12.0 * light_lat1, 128, 4.0),
+        SloClass::new("best-effort", 20.0 * heavy_batch_lat, 512, 1.0),
+    ];
+    let n_heavy = 300usize;
+    let heavy_per_s = 1.0 * 3.0 * heavy_rate;
+    let horizon_s = n_heavy as f64 / heavy_per_s;
+    let light_per_s = 0.6 * light_rate;
+    let n_light = ((light_per_s * horizon_s) as usize).max(150);
+    let tenants = vec![
+        Tenant {
+            name: "heavy-be".into(),
+            model: "heavy".into(),
+            class: 1,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: heavy_per_s,
+                n: n_heavy,
+            },
+        },
+        Tenant {
+            name: "light-int".into(),
+            model: "light".into(),
+            class: 0,
+            pattern: ArrivalPattern::Poisson {
+                rate_per_s: light_per_s,
+                n: n_light,
+            },
+        },
+    ];
+    let arrivals = merge_arrivals(&tenants, 37);
+    let horizon = arrivals.last().unwrap().at_us;
+    let plan = FaultPlan {
+        faults: vec![
+            Fault::Thermal {
+                board: 0,
+                proc: Proc::Gpu,
+                at_us: 0.15 * horizon,
+                until_us: 0.75 * horizon,
+                scale: 2.8,
+            },
+            Fault::Thermal {
+                board: 0,
+                proc: Proc::Cpu,
+                at_us: 0.15 * horizon,
+                until_us: 0.75 * horizon,
+                scale: 2.8,
+            },
+        ],
+    };
+    let opts = FleetOptions {
+        router: RouterPolicy::RoundRobin,
+        placement: vec![vec![0, 1]; 3],
+        tail: TailPolicy { hedge: true, breaker: true },
+        tail_params: TailParams {
+            open_cooldown_us: 8_000.0,
+            probe_interval_us: 2_000.0,
+            ..TailParams::default()
+        },
+        faults: plan,
+        trace: Some(TraceConfig::default()),
+        ..FleetOptions::new(3, 2)
+    };
+    run_fleet(&reg, &classes, &tenants, &arrivals, &opts).unwrap()
+}
+
+#[test]
+fn tail_traces_reconcile_with_counters() {
+    let snap = hedging_fleet();
+    assert_eq!(
+        snap.aggregate.total_served() + snap.aggregate.total_shed()
+            + snap.total_failed(),
+        snap.aggregate.total_offered(),
+        "tail: conservation broken"
+    );
+    assert!(snap.total_hedges() > 0, "fixture never hedged");
+    assert!(snap.total_breaker_opens() > 0,
+            "fixture never opened a breaker");
+    assert!(snap.total_probes() > 0, "fixture never probed");
+    let mut hedge_n = 0u64;
+    let mut probe_n = 0u64;
+    for (i, b) in snap.boards.iter().enumerate() {
+        assert_eq!(b.trace_dropped, 0,
+                   "board {i} dropped trace records");
+        // Tail events reconcile per board, not just in sum: the Hedge
+        // record lands on the clone's board, the Probe on the probed
+        // board, Suspect/BreakerOpen on the gray-failing board.
+        let h = count(&b.trace_events,
+                      |e| matches!(e, TraceEvent::Hedge));
+        assert_eq!(h, b.hedges, "board {i}: Hedge trace vs counter");
+        hedge_n += h;
+        let p = count(&b.trace_events,
+                      |e| matches!(e, TraceEvent::Probe));
+        assert_eq!(p, b.probes, "board {i}: Probe trace vs counter");
+        probe_n += p;
+        assert_eq!(
+            count(&b.trace_events,
+                  |e| matches!(e, TraceEvent::Suspect)),
+            b.suspects,
+            "board {i}: Suspect trace vs counter"
+        );
+        assert_eq!(
+            count(&b.trace_events,
+                  |e| matches!(e, TraceEvent::BreakerOpen)),
+            b.breaker_opens,
+            "board {i}: BreakerOpen trace vs counter"
+        );
+        // Capacity identity grown by the hedge ledger: a cancelled
+        // loser's executed prefix (and a duplicate finish's batch
+        // share) stays billed as lane busy time but settles nothing —
+        // the wasted lane-us reappear as hedge_waste_us.
+        let ph = &b.phases;
+        let accounted = ph.service_us() + ph.warmup_us + ph.idle_us
+            + b.preempt_waste_us + b.hedge_waste_us;
+        let rel = (accounted - ph.capacity_us).abs() / ph.capacity_us;
+        assert!(
+            rel < 1e-6,
+            "board {i}: service {} + warmup {} + idle {} + preempt \
+             waste {} + hedge waste {} != capacity {} (rel {rel})",
+            ph.service_us(), ph.warmup_us, ph.idle_us,
+            b.preempt_waste_us, b.hedge_waste_us, ph.capacity_us
+        );
+    }
+    assert_eq!(hedge_n, snap.total_hedges(),
+               "Hedge trace records vs fleet counter");
+    assert_eq!(probe_n, snap.total_probes(),
+               "Probe trace records vs fleet counter");
+    // Hedged work still serves exactly once fleet-wide.
+    let queue_waits: u64 = snap
+        .boards
+        .iter()
+        .map(|b| count(&b.trace_events, |e| {
+            matches!(e, TraceEvent::QueueWait { .. })
+        }))
+        .sum();
+    assert_eq!(queue_waits, snap.aggregate.total_served(),
+               "a hedged request was served zero or multiple times");
 }
